@@ -1,0 +1,120 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * recursion (Algorithm 2) vs single-level (Algorithm 1)
+//! * PCM-FW permutation unit on/off (paper §III-C motivation)
+//! * PCM-MP comparator tree vs serial reduction (Fig. 5e)
+//! * HBM3 load/compute prefetch on/off (dataflow step 3ii)
+//! * tile-limit sweep (why 1024, §III-A)
+//!
+//!     cargo bench --bench ablation
+
+use rapid_graph::coordinator::config::{Mode, SystemConfig};
+use rapid_graph::coordinator::executor::Executor;
+use rapid_graph::graph::generators::{self, Topology, Weights};
+use rapid_graph::util::table::{fmt_energy, fmt_ratio, fmt_time, Table};
+
+fn run(cfg: &SystemConfig, g: &rapid_graph::CsrGraph) -> (f64, f64, usize) {
+    let ex = Executor::new(cfg.clone()).unwrap();
+    let r = ex.run(g).unwrap();
+    (r.sim.seconds, r.sim.joules, r.final_n)
+}
+
+fn main() {
+    let n = 65_536;
+    let g = generators::generate(
+        Topology::OgbnProxy,
+        n,
+        25.25,
+        Weights::Uniform(1.0, 8.0),
+        7,
+    );
+    println!(
+        "workload: OGBN-proxy n={} m={} (estimate mode; trace identical to functional)\n",
+        g.n(),
+        g.m()
+    );
+    let mut base_cfg = SystemConfig::default();
+    base_cfg.mode = Mode::Estimate;
+    let (base_s, base_j, _) = run(&base_cfg, &g);
+
+    let mut t = Table::new(
+        "ablations (vs full RAPID-Graph config)",
+        &["config", "time", "energy", "slowdown", "energy cost"],
+    );
+    t.row(&[
+        "full system".into(),
+        fmt_time(base_s),
+        fmt_energy(base_j),
+        "1x".into(),
+        "1x".into(),
+    ]);
+
+    // recursion off (Algorithm 1): giant terminal boundary solve
+    let mut cfg = base_cfg.clone();
+    cfg.max_depth = 1;
+    let (s, j, final_n) = run(&cfg, &g);
+    t.row(&[
+        format!("no recursion (Alg 1, final dense n={final_n})"),
+        fmt_time(s),
+        fmt_energy(j),
+        fmt_ratio(s / base_s),
+        fmt_ratio(j / base_j),
+    ]);
+
+    // permutation unit off
+    let mut cfg = base_cfg.clone();
+    cfg.hw.permutation_unit = false;
+    let (s, j, _) = run(&cfg, &g);
+    t.row(&[
+        "no permutation unit (row-by-row DMA)".into(),
+        fmt_time(s),
+        fmt_energy(j),
+        fmt_ratio(s / base_s),
+        fmt_ratio(j / base_j),
+    ]);
+
+    // comparator tree off
+    let mut cfg = base_cfg.clone();
+    cfg.hw.comparator_tree = false;
+    let (s, j, _) = run(&cfg, &g);
+    t.row(&[
+        "no comparator tree (serial min)".into(),
+        fmt_time(s),
+        fmt_energy(j),
+        fmt_ratio(s / base_s),
+        fmt_ratio(j / base_j),
+    ]);
+
+    // prefetch off
+    let mut cfg = base_cfg.clone();
+    cfg.hw.prefetch = false;
+    let (s, j, _) = run(&cfg, &g);
+    t.row(&[
+        "no HBM prefetch (loads serialize)".into(),
+        fmt_time(s),
+        fmt_energy(j),
+        fmt_ratio(s / base_s),
+        fmt_ratio(j / base_j),
+    ]);
+    t.print();
+
+    // tile-limit sweep (paper §III-A: why 1024)
+    let mut t = Table::new(
+        "tile-limit sweep (paper fixes 1024 = PCM array dimension)",
+        &["tile limit", "time", "energy", "depth", "final_n"],
+    );
+    for tile in [256usize, 512, 1024] {
+        let mut cfg = base_cfg.clone();
+        cfg.tile_limit = tile;
+        let ex = Executor::new(cfg).unwrap();
+        let r = ex.run(&g).unwrap();
+        t.row(&[
+            tile.to_string(),
+            fmt_time(r.sim.seconds),
+            fmt_energy(r.sim.joules),
+            r.depth.to_string(),
+            r.final_n.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,115 @@
+//! Kernel micro-benchmarks: native rust vs PJRT (AOT JAX/Pallas) tile
+//! engines for FW blocks and min-plus merges, across size classes.
+//!
+//! This quantifies the L3 hot path (the functional backend) and the
+//! PJRT dispatch overhead — see EXPERIMENTS.md §Perf.
+//!
+//!     make artifacts && cargo bench --bench kernels
+
+use rapid_graph::apsp::backend::{NativeBackend, TileBackend};
+use rapid_graph::apsp::floyd_warshall;
+use rapid_graph::graph::generators::{self, Weights};
+use rapid_graph::runtime::PjrtRuntime;
+use rapid_graph::util::bench::{bench, BenchOpts};
+use rapid_graph::util::rng::Rng;
+use rapid_graph::util::table::{fmt_time, Table};
+
+fn main() {
+    let runtime = PjrtRuntime::load_default().ok();
+    if runtime.is_none() {
+        println!("note: artifacts missing, PJRT columns skipped (run `make artifacts`)\n");
+    }
+
+    // ---- FW blocks
+    let mut t = Table::new(
+        "FW block kernels (one full pass, per call)",
+        &["n", "native serial", "native parallel", "pjrt", "native Gmadd/s"],
+    );
+    for &n in &[128usize, 256, 512, 1024] {
+        let g = generators::newman_watts_strogatz(n, 5, 0.1, Weights::Uniform(1.0, 5.0), n as u64);
+        let base = g.to_dense();
+        let opts = if n >= 512 { BenchOpts::quick() } else { BenchOpts::default() };
+
+        let m_serial = bench(opts, || {
+            let mut d = base.clone();
+            floyd_warshall::fw_rowwise(&mut d);
+            std::hint::black_box(d.get(0, 1));
+        });
+        let m_par = bench(opts, || {
+            let mut d = base.clone();
+            floyd_warshall::fw_parallel(&mut d);
+            std::hint::black_box(d.get(0, 1));
+        });
+        let pjrt_cell = if let Some(rt) = &runtime {
+            let m = bench(opts, || {
+                let mut d = base.clone();
+                rt.fw_block(&mut d).unwrap();
+                std::hint::black_box(d.get(0, 1));
+            });
+            fmt_time(m.mean_secs())
+        } else {
+            "-".to_string()
+        };
+        let gmadds = (n as f64).powi(3) / m_par.mean_secs() / 1e9;
+        t.row(&[
+            n.to_string(),
+            fmt_time(m_serial.mean_secs()),
+            fmt_time(m_par.mean_secs()),
+            pjrt_cell,
+            format!("{gmadds:.2}"),
+        ]);
+    }
+    t.print();
+
+    // ---- min-plus merges
+    let mut t = Table::new(
+        "min-plus merge kernels (C = min(C, A (+) B), per call)",
+        &["m=k=n", "native serial", "native parallel", "pjrt"],
+    );
+    let be = NativeBackend;
+    for &n in &[128usize, 256, 512, 1024] {
+        let mut rng = Rng::new(n as u64);
+        let gen = |rng: &mut Rng| -> Vec<f32> {
+            (0..n * n)
+                .map(|_| {
+                    if rng.gen_bool(0.2) {
+                        f32::INFINITY
+                    } else {
+                        rng.gen_f32_range(0.0, 9.0)
+                    }
+                })
+                .collect()
+        };
+        let a = gen(&mut rng);
+        let b = gen(&mut rng);
+        let c0 = vec![f32::INFINITY; n * n];
+        let opts = if n >= 512 { BenchOpts::quick() } else { BenchOpts::default() };
+        let m_serial = bench(opts, || {
+            let mut c = c0.clone();
+            rapid_graph::apsp::minplus::minplus_into(&mut c, &a, &b, n, n, n);
+            std::hint::black_box(c[0]);
+        });
+        let m_par = bench(opts, || {
+            let mut c = c0.clone();
+            be.minplus_into(&mut c, &a, &b, n, n, n);
+            std::hint::black_box(c[0]);
+        });
+        let pjrt_cell = if let Some(rt) = &runtime {
+            let m = bench(opts, || {
+                let mut c = c0.clone();
+                rt.minplus_into(&mut c, &a, &b, n, n, n).unwrap();
+                std::hint::black_box(c[0]);
+            });
+            fmt_time(m.mean_secs())
+        } else {
+            "-".to_string()
+        };
+        t.row(&[
+            n.to_string(),
+            fmt_time(m_serial.mean_secs()),
+            fmt_time(m_par.mean_secs()),
+            pjrt_cell,
+        ]);
+    }
+    t.print();
+}

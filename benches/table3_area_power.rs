@@ -1,0 +1,36 @@
+//! Table III reproduction: area and power breakdown per PCM unit (FW
+//! and MP flavors), plus the §IV-B system-level components and derived
+//! die totals.
+//!
+//!     cargo bench --bench table3_area_power
+
+use rapid_graph::bench::figures;
+use rapid_graph::sim::area;
+use rapid_graph::sim::params::HwParams;
+
+fn main() {
+    println!("=== Table II: PCM cell parameters (Sb2Te3/Ge4Sb6Te7 SLC) ===");
+    let p = HwParams::default();
+    println!("  reset/set time        : {} ns / {} ns", p.pcm_write_ns, p.pcm_write_ns);
+    println!("  programming energy    : {} pJ", p.pcm_program_pj);
+    println!("  clock cycle           : {} ns ({} MHz)", 1e9 / p.clock_hz, p.clock_hz / 1e6);
+    println!("  unit dimension        : {0} x {0}", p.unit_dim);
+    println!("  units per tile        : {}", p.units_per_tile);
+    println!("  tiles per die         : {}\n", p.tiles_per_die);
+
+    println!("=== Table III: area/power per PCM unit ===\n");
+    for t in figures::table3() {
+        t.print();
+    }
+
+    println!("derived die-level totals:");
+    for unit in [area::pcm_fw_unit(), area::pcm_mp_unit()] {
+        println!(
+            "  {} die: {:.0} mm^2 across {} tiles x {} units",
+            unit.die,
+            area::die_area_mm2(&p, &unit),
+            p.tiles_per_die,
+            p.units_per_tile
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Quickstart: the smallest complete RAPID-Graph run.
+//!
+//! Generates a clustered graph, runs the full pipeline (recursive
+//! partitioning -> in-tile FW -> boundary solve -> injection -> merges),
+//! validates a few distances against Dijkstra, and prints the modeled
+//! PIM time/energy report.
+//!
+//!     cargo run --release --example quickstart
+
+use rapid_graph::coordinator::{config::SystemConfig, executor::Executor, report};
+use rapid_graph::graph::generators::{self, Topology, Weights};
+
+fn main() -> anyhow::Result<()> {
+    // a 5k-vertex clustered graph (OGBN-like community structure)
+    let g = generators::generate(
+        Topology::OgbnProxy,
+        5_000,
+        16.0,
+        Weights::Uniform(1.0, 10.0),
+        42,
+    );
+    println!(
+        "graph: {} vertices, {} edges, avg degree {:.1}\n",
+        g.n(),
+        g.m(),
+        g.avg_degree()
+    );
+
+    // default config = the paper's hardware (1024-vertex PCM tiles,
+    // 2x 2GB PCM dies, HBM3, FeNAND), functional mode, native backend
+    let cfg = SystemConfig::default();
+    let ex = Executor::new(cfg)?;
+    let result = ex.run(&g)?;
+    print!("{}", report::render(&result));
+
+    // ask for some shortest paths directly
+    let plan = ex.plan(&g);
+    let backend = rapid_graph::apsp::backend::NativeBackend;
+    let sol = rapid_graph::apsp::recursive::solve(
+        &g,
+        &plan,
+        Some(&backend),
+        rapid_graph::apsp::recursive::SolveOptions::default(),
+    );
+    println!("\nsample shortest-path queries:");
+    for (u, v) in [(0usize, 4999usize), (17, 2500), (100, 101)] {
+        println!("  d({u} -> {v}) = {}", sol.query(u, v));
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Road-network scenario — the paper's urban-planning / transportation
+//! motivation ([1], [2]): exact all-pairs travel times over a city-scale
+//! road grid, then route queries between districts.
+//!
+//!     cargo run --release --example road_network
+
+use rapid_graph::apsp::backend::NativeBackend;
+use rapid_graph::apsp::recursive::{solve, SolveOptions};
+use rapid_graph::apsp::validate::validate_sampled;
+use rapid_graph::coordinator::config::SystemConfig;
+use rapid_graph::coordinator::{executor::Executor, report};
+use rapid_graph::graph::generators::{self, Weights};
+use rapid_graph::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    // 120 x 120 road grid: ~14.4k intersections, edge weight = minutes
+    let (rows, cols) = (120usize, 120usize);
+    let g = generators::grid2d(rows, cols, Weights::Uniform(0.5, 4.0), 7);
+    println!(
+        "road network: {} intersections, {} road segments\n",
+        g.n(),
+        g.m() / 2
+    );
+
+    let cfg = SystemConfig::default();
+    let ex = Executor::new(cfg)?;
+    let run = ex.run(&g)?;
+    print!("{}", report::render(&run));
+
+    // exact travel-time queries between districts (grid corners/center)
+    let plan = ex.plan(&g);
+    let backend = NativeBackend;
+    let sol = solve(&g, &plan, Some(&backend), SolveOptions::default());
+    let at = |r: usize, c: usize| r * cols + c;
+    let spots = [
+        ("NW depot", at(2, 3)),
+        ("NE mall", at(4, cols - 5)),
+        ("center hospital", at(rows / 2, cols / 2)),
+        ("SW school", at(rows - 6, 5)),
+        ("SE stadium", at(rows - 3, cols - 4)),
+    ];
+    let mut t = Table::new(
+        "exact travel times between districts (minutes)",
+        &["from \\ to", spots[0].0, spots[1].0, spots[2].0, spots[3].0, spots[4].0],
+    );
+    for (name, u) in &spots {
+        let mut row = vec![name.to_string()];
+        for (_, v) in &spots {
+            row.push(format!("{:.1}", sol.query(*u, *v)));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    let v = validate_sampled(&g, &sol, 16, 32, 1e-3, 5);
+    println!(
+        "validation: {} samples, {} mismatches -> {}",
+        v.checked,
+        v.mismatches,
+        if v.ok(1e-3) { "EXACT" } else { "FAILED" }
+    );
+    assert!(v.ok(1e-3));
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Scalability sweep (Fig. 9 style, runnable in seconds): size, degree
+//! and topology sensitivity of the modeled RAPID-Graph hardware, using
+//! estimate mode (identical trace/cost to functional mode).
+//!
+//!     cargo run --release --example scalability_sweep [--full]
+
+use rapid_graph::bench::figures;
+use rapid_graph::baselines::gpu;
+use rapid_graph::coordinator::config::SystemConfig;
+use rapid_graph::graph::generators::Topology;
+use rapid_graph::util::table::{fmt_ratio, fmt_time};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = SystemConfig::default();
+
+    let sizes: &[usize] = if full {
+        &[1024, 4096, 16_384, 65_536, 262_144, 1_048_576]
+    } else {
+        &[1024, 4096, 16_384, 65_536]
+    };
+    let (t, series) = figures::fig9_size(&cfg, sizes);
+    t.print();
+    // linearity check: time per vertex across the sweep
+    println!("modeled seconds per vertex (flat = linear scaling):");
+    for (n, s) in &series {
+        println!("  n={n:>9}: {:.3e} s/vertex", s / *n as f64);
+    }
+    println!();
+
+    figures::fig9_degree(&cfg, 32_768, &[12.5, 25.25, 50.0]).print();
+
+    let (t, secs) = figures::fig9_topology(
+        &cfg,
+        if full { 131_072 } else { 32_768 },
+        &[Topology::Nws, Topology::OgbnProxy, Topology::Er],
+    );
+    t.print();
+    println!(
+        "topology penalty (ER vs NWS): {}",
+        fmt_ratio(secs[2] / secs[0])
+    );
+    let h = gpu::h100().cost(32_768);
+    println!(
+        "(H100 reference at 32.8k: {} — topology-insensitive)",
+        fmt_time(h.seconds)
+    );
+}

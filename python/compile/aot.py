@@ -1,0 +1,82 @@
+"""AOT lowering: JAX/Pallas tile computations -> HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+HLO text through the `xla` crate's PJRT CPU client. HLO *text* (not
+serialized HloModuleProto) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (one per tile size class, paper tile limit = 1024):
+  fw_block_{n}.hlo.txt   fw_tile  : f32[n,n] -> (f32[n,n],)
+  minplus_{n}.hlo.txt    mp_tile  : f32[n,n] x3 -> (f32[n,n],)
+  manifest.json          machine-readable index for the rust loader
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+SIZES = [64, 128, 256, 512, 1024]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fw(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jax.numpy.float32)
+    return to_hlo_text(jax.jit(model.fw_tile).lower(spec))
+
+
+def lower_minplus(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jax.numpy.float32)
+    return to_hlo_text(jax.jit(model.mp_tile).lower(spec, spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in SIZES),
+        help="comma-separated tile sizes",
+    )
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out, exist_ok=True)
+
+    artifacts = []
+    for n in sizes:
+        for kind, lower in (("fw", lower_fw), ("minplus", lower_minplus)):
+            name = f"fw_block_{n}.hlo.txt" if kind == "fw" else f"minplus_{n}.hlo.txt"
+            path = os.path.join(args.out, name)
+            text = lower(n)
+            with open(path, "w") as f:
+                f.write(text)
+            artifacts.append({"kind": kind, "n": n, "path": name})
+            print(f"wrote {name} ({len(text)} chars)", file=sys.stderr)
+
+    manifest = {
+        "artifacts": artifacts,
+        "jax_version": jax.__version__,
+        "interchange": "hlo-text",
+        "return_tuple": True,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(artifacts)} artifacts", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

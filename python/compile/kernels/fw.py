@@ -1,0 +1,61 @@
+"""Layer-1 Pallas kernel: in-place Floyd-Warshall over one tile block.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's PCM-FW
+tile peels the pivot row/column into Panel_Row / Panel_Col and updates the
+Main_Block with one bit-serial add + one bit-serial min per pivot
+(Fig. 6b/c). On a vector machine the same insight becomes a rank-1
+min-plus outer update: broadcast the pivot row against the pivot column
+and take the elementwise minimum with the block. The block stays resident
+(VMEM on a real TPU; the paper's PCM array) across all n pivots — the
+grid axis *is* the pivot loop, and `input_output_aliases` gives the same
+in-place semantics as the paper's selective sign-bit write.
+
+The kernel is lowered with ``interpret=True`` so it compiles to plain HLO
+the CPU PJRT client can execute (a real-TPU build would emit a Mosaic
+custom-call instead; see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fw_pivot_kernel(d_ref, o_ref):
+    """One pivot step: O = min(D, D[:, k] + D[k, :]).
+
+    d_ref is the aliased input block (same buffer as o_ref); reading
+    o_ref gives the current state after previous pivots because pallas
+    grid steps execute sequentially.
+    """
+    k = pl.program_id(0)
+    d = o_ref[...]
+    # Panel extraction (paper Fig. 6b): pivot row and mirrored pivot col.
+    row_k = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=0)  # (1, n)
+    col_k = jax.lax.dynamic_slice_in_dim(d, k, 1, axis=1)  # (n, 1)
+    # Main_Block update: one add, one min (Fig. 6c).
+    o_ref[...] = jnp.minimum(d, col_k + row_k)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fw_block(d, interpret=True):
+    """Full Floyd-Warshall pass over a square f32 block, in place.
+
+    Args:
+      d: (n, n) float32 distance block; +inf marks "no edge". The
+        diagonal must be 0 for the pivot-peeling identity to hold (the
+        paper's remapping makes the same assumption: "diagonal pivot
+        elements p_k always have zero distance").
+    Returns:
+      The exact all-pairs shortest-path matrix of the block.
+    """
+    n = d.shape[0]
+    assert d.shape == (n, n), f"square block required, got {d.shape}"
+    return pl.pallas_call(
+        _fw_pivot_kernel,
+        grid=(n,),
+        out_shape=jax.ShapeDtypeStruct((n, n), d.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(d)

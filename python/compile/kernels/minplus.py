@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernel: blocked min-plus (tropical) matmul.
+
+The paper's PCM-MP tile streams 1024-wide rows through bit-serial adders
+and a 6-level comparator tree (Fig. 5e / 6d). The TPU-shaped equivalent
+tiles C over a (i, j, k) grid: each grid step loads an (bm, bk) A-tile
+and (bk, bn) B-tile into VMEM, evaluates all bm*bk*bn min-add candidates,
+and lane-reduces over k — the comparator tree becomes `jnp.min` over the
+contraction axis, and the paper's compare-and-swap selective write
+becomes the accumulating `minimum` against the aliased C block.
+
+C is aliased in/out, so the op computes C = min(C, A (+) B) — the
+accumulate form Algorithm 1 step 4 needs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _minplus_kernel(c_in_ref, a_ref, b_ref, c_ref):
+    del c_in_ref  # aliased with c_ref; reads go through c_ref
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    # all candidates for this k-tile, reduced over the contraction axis
+    cand = jnp.min(a[:, :, None] + b[None, :, :], axis=1)  # (bm, bn)
+    c_ref[...] = jnp.minimum(c_ref[...], cand)
+
+
+def _tile(n, pref):
+    """Largest divisor of n that is <= pref (shapes here are powers of
+    two, so this returns pref for n >= pref)."""
+    t = min(n, pref)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minplus_accum(c, a, b, interpret=True):
+    """C = min(C, A (+) B) for row-major f32 matrices.
+
+    Args:
+      c: (m, n) accumulator (+inf where nothing merged yet).
+      a: (m, k), b: (k, n).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n), f"dims: {a.shape} x {b.shape} -> {c.shape}"
+    bm = _tile(m, 128)
+    bn = _tile(n, 128)
+    # bk = 128 keeps the (bm, bk, bn) candidate tensor at 8 MB while
+    # cutting grid-step count 4x vs bk=32 — the dominant cost under the
+    # XLA CPU while-loop (EXPERIMENTS.md §Perf L1/L2)
+    bk = _tile(k, 128)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(c, a, b)

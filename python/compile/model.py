@@ -1,0 +1,29 @@
+"""Layer-2 JAX model: the tile-granular compute graph the rust
+coordinator executes through PJRT.
+
+Two exported computations, one per PIM die:
+
+* ``fw_tile``    — full Floyd-Warshall over one tile block
+                   (the PCM-FW die's job, paper Fig. 6c).
+* ``mp_tile``    — accumulating min-plus product C = min(C, A (+) B)
+                   (one stage of the PCM-MP die's two-stage merge,
+                   Fig. 6d; the coordinator chains two calls for the
+                   full merge, exactly as the hardware does).
+
+Both call the Layer-1 Pallas kernels, so the kernels lower into the same
+HLO module that ships to rust. Python never runs at serve time — these
+functions exist to be AOT-lowered by ``aot.py``.
+"""
+
+from .kernels import fw as fw_kernel
+from .kernels import minplus as mp_kernel
+
+
+def fw_tile(d):
+    """APSP of one dense tile block (n x n, f32, +inf = no edge)."""
+    return (fw_kernel.fw_block(d),)
+
+
+def mp_tile(c, a, b):
+    """One accumulating min-plus stage over square tile blocks."""
+    return (mp_kernel.minplus_accum(c, a, b),)

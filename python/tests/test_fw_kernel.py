@@ -1,0 +1,103 @@
+"""Pallas FW kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import fw, ref
+
+INF = np.float32(np.inf)
+
+
+def random_dist_block(rng, n, inf_frac=0.5, wmax=10.0):
+    """Random distance block: +inf off-diagonal holes, zero diagonal."""
+    d = rng.uniform(0.5, wmax, size=(n, n)).astype(np.float32)
+    holes = rng.uniform(size=(n, n)) < inf_frac
+    d[holes] = INF
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def numpy_fw(d):
+    d = d.copy()
+    n = d.shape[0]
+    for k in range(n):
+        d = np.minimum(d, d[:, k : k + 1] + d[k : k + 1, :])
+    return d
+
+
+@pytest.mark.parametrize("n", [2, 3, 8, 16, 33, 64])
+def test_matches_numpy_oracle(n):
+    rng = np.random.default_rng(n)
+    d = random_dist_block(rng, n)
+    got = np.asarray(fw.fw_block(jnp.asarray(d)))
+    want = numpy_fw(d)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [4, 32, 100])
+def test_matches_jnp_reference(n):
+    rng = np.random.default_rng(n + 1000)
+    d = random_dist_block(rng, n, inf_frac=0.3)
+    got = np.asarray(fw.fw_block(jnp.asarray(d)))
+    want = np.asarray(ref.fw_reference(jnp.asarray(d)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_disconnected_stays_inf():
+    d = np.full((6, 6), INF, np.float32)
+    np.fill_diagonal(d, 0.0)
+    got = np.asarray(fw.fw_block(jnp.asarray(d)))
+    assert np.isinf(got[np.triu_indices(6, 1)]).all()
+    assert (np.diag(got) == 0).all()
+
+
+def test_known_three_node_shortcut():
+    d = np.array(
+        [[0, 1, 5], [INF, 0, 2], [INF, INF, 0]],
+        np.float32,
+    )
+    got = np.asarray(fw.fw_block(jnp.asarray(d)))
+    assert got[0, 2] == 3.0  # via vertex 1
+    assert np.isinf(got[2, 0])  # directed
+
+
+def test_idempotent():
+    rng = np.random.default_rng(7)
+    d = random_dist_block(rng, 24)
+    once = np.asarray(fw.fw_block(jnp.asarray(d)))
+    twice = np.asarray(fw.fw_block(jnp.asarray(once)))
+    np.testing.assert_allclose(once, twice, rtol=1e-6, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(min_value=2, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+    inf_frac=st.floats(min_value=0.0, max_value=0.95),
+)
+def test_hypothesis_sweep(n, seed, inf_frac):
+    rng = np.random.default_rng(seed)
+    d = random_dist_block(rng, n, inf_frac=inf_frac)
+    got = np.asarray(fw.fw_block(jnp.asarray(d)))
+    want = numpy_fw(d)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # triangle inequality on finite entries
+    for k in range(n):
+        cand = got[:, k : k + 1] + got[k : k + 1, :]
+        assert (got <= cand + 1e-4).all() | np.isinf(cand).any()
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    n=st.sampled_from([3, 7, 16]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_symmetric_input_symmetric_output(n, seed):
+    rng = np.random.default_rng(seed)
+    d = random_dist_block(rng, n, inf_frac=0.4)
+    d = np.minimum(d, d.T)  # symmetrize
+    got = np.asarray(fw.fw_block(jnp.asarray(d)))
+    np.testing.assert_allclose(got, got.T, rtol=1e-6)

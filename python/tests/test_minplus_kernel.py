@@ -1,0 +1,121 @@
+"""Pallas min-plus kernel vs oracle, including ragged/padded shapes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import minplus, ref
+
+INF = np.float32(np.inf)
+
+
+def rand(rng, shape, inf_frac=0.3, wmax=9.0):
+    x = rng.uniform(0.0, wmax, size=shape).astype(np.float32)
+    x[rng.uniform(size=shape) < inf_frac] = INF
+    return x
+
+
+def numpy_minplus(c, a, b):
+    cand = (a[:, :, None] + b[None, :, :]).min(axis=1)
+    return np.minimum(c, cand)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(2, 2, 2), (4, 8, 4), (16, 16, 16), (32, 64, 32), (128, 128, 128), (5, 3, 7)],
+)
+def test_matches_numpy(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a, b = rand(rng, (m, k)), rand(rng, (k, n))
+    c = rand(rng, (m, n), inf_frac=0.7)
+    got = np.asarray(minplus.minplus_accum(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, numpy_minplus(c, a, b), rtol=1e-6, atol=1e-6)
+
+
+def test_accumulates_against_existing():
+    c = np.array([[1.0]], np.float32)
+    a = np.array([[2.0]], np.float32)
+    b = np.array([[3.0]], np.float32)
+    got = np.asarray(minplus.minplus_accum(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b)))
+    assert got[0, 0] == 1.0  # existing 1 < 5
+
+
+def test_all_inf_identity():
+    rng = np.random.default_rng(1)
+    c = rand(rng, (8, 8), inf_frac=0.0)
+    a = np.full((8, 8), INF, np.float32)
+    b = rand(rng, (8, 8))
+    got = np.asarray(minplus.minplus_accum(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got, c)
+
+
+def test_matches_jnp_reference_large():
+    rng = np.random.default_rng(2)
+    m = k = n = 256
+    a, b = rand(rng, (m, k)), rand(rng, (k, n))
+    c = np.full((m, n), INF, np.float32)
+    got = np.asarray(minplus.minplus_accum(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b)))
+    want = np.asarray(ref.minplus_reference(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_padding_with_inf_is_safe():
+    """Padding A/B/C to tile size with +inf must not change the valid
+    corner — the property the rust runtime's padding relies on."""
+    rng = np.random.default_rng(3)
+    m, k, n = 10, 13, 9
+    a, b = rand(rng, (m, k)), rand(rng, (k, n))
+    c = np.full((m, n), INF, np.float32)
+    small = numpy_minplus(c, a, b)
+
+    P = 32
+    ap = np.full((P, P), INF, np.float32)
+    bp = np.full((P, P), INF, np.float32)
+    cp = np.full((P, P), INF, np.float32)
+    ap[:m, :k], bp[:k, :n] = a, b
+    got = np.asarray(
+        minplus.minplus_accum(jnp.asarray(cp), jnp.asarray(ap), jnp.asarray(bp))
+    )
+    np.testing.assert_allclose(got[:m, :n], small, rtol=1e-6, atol=1e-6)
+    assert np.isinf(got[m:, :]).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 24),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31),
+    inf_frac=st.floats(0.0, 1.0),
+)
+def test_hypothesis_sweep(m, k, n, seed, inf_frac):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, (m, k), inf_frac), rand(rng, (k, n), inf_frac)
+    c = rand(rng, (m, n), inf_frac=0.8)
+    got = np.asarray(minplus.minplus_accum(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, numpy_minplus(c, a, b), rtol=1e-6, atol=1e-6)
+
+
+def test_two_stage_merge_composes():
+    """Chaining two kernel calls == the paper's two-stage merge."""
+    rng = np.random.default_rng(5)
+    m, b1, b2, n = 8, 4, 6, 10
+    a = rand(rng, (m, b1))
+    db = rand(rng, (b1, b2))
+    bb = rand(rng, (b2, n))
+    s1 = np.asarray(
+        minplus.minplus_accum(
+            jnp.full((m, b2), INF), jnp.asarray(a), jnp.asarray(db)
+        )
+    )
+    s2 = np.asarray(
+        minplus.minplus_accum(
+            jnp.full((m, n), INF), jnp.asarray(s1), jnp.asarray(bb)
+        )
+    )
+    want = np.asarray(
+        ref.two_stage_reference(jnp.asarray(a), jnp.asarray(db), jnp.asarray(bb))
+    )
+    np.testing.assert_allclose(s2, want, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,75 @@
+"""L2 model shape checks + AOT lowering smoke tests."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_fw_tile_returns_tuple():
+    d = jnp.zeros((8, 8), jnp.float32)
+    out = model.fw_tile(d)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (8, 8)
+
+
+def test_mp_tile_returns_tuple():
+    x = jnp.zeros((8, 8), jnp.float32)
+    out = model.mp_tile(x, x, x)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (8, 8)
+
+
+@pytest.mark.parametrize("n", [64, 128])
+def test_lowered_fw_has_expected_signature(n):
+    text = aot.lower_fw(n)
+    assert f"f32[{n},{n}]" in text
+    assert "ENTRY" in text
+
+
+@pytest.mark.parametrize("n", [64])
+def test_lowered_minplus_has_expected_signature(n):
+    text = aot.lower_minplus(n)
+    # three params of the same shape
+    assert text.count(f"f32[{n},{n}]") >= 3
+
+
+def test_lowering_deterministic():
+    assert aot.lower_fw(64) == aot.lower_fw(64)
+
+
+def test_manifest_written(tmp_path):
+    import subprocess
+    import sys
+    import os
+
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--sizes", "64"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__))),
+        env=env,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    kinds = {(a["kind"], a["n"]) for a in manifest["artifacts"]}
+    assert kinds == {("fw", 64), ("minplus", 64)}
+    for a in manifest["artifacts"]:
+        assert (out / a["path"]).exists()
+
+
+def test_fw_tile_numerics_through_jit():
+    rng = np.random.default_rng(0)
+    d = rng.uniform(1, 5, (16, 16)).astype(np.float32)
+    np.fill_diagonal(d, 0)
+    got = np.asarray(model.fw_tile(jnp.asarray(d))[0])
+    # brute-force check
+    want = d.copy()
+    for k in range(16):
+        want = np.minimum(want, want[:, k : k + 1] + want[k : k + 1, :])
+    np.testing.assert_allclose(got, want, rtol=1e-6)

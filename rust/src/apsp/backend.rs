@@ -1,0 +1,243 @@
+//! Tile compute backends: who actually executes an FW pass or MP merge.
+//!
+//! * [`NativeBackend`] — multithreaded rust kernels (always available).
+//! * `runtime::PjrtBackend` — the AOT-compiled JAX/Pallas HLO artifacts
+//!   executed through PJRT (the three-layer architecture's L1/L2).
+//!
+//! The recursive solver is generic over this trait, so the same
+//! algorithm code runs against either engine and tests can assert they
+//! agree bit-for-bit on semiring results.
+
+use crate::apsp::{floyd_warshall, minplus};
+use crate::graph::dense::DistMatrix;
+
+/// A tile-granular compute engine.
+pub trait TileBackend: Sync {
+    /// In-place Floyd–Warshall over a dense block (<= tile-size + eps;
+    /// backends may pad internally).
+    fn fw(&self, d: &mut DistMatrix);
+
+    /// `C = min(C, A (+) B)` over rectangular row-major buffers.
+    fn minplus_into(&self, c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize);
+
+    fn name(&self) -> &'static str;
+
+    /// Largest block `fw`/`minplus_into` accept directly (`None` =
+    /// unlimited). Larger FW solves are composed by
+    /// [`fw_blocked`] from tile-sized calls — exactly how the PCM dies
+    /// handle a terminal boundary graph bigger than one array.
+    fn max_block(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Blocked Floyd–Warshall composed from tile-granular `fw` +
+/// `minplus_into` calls (Katz–Kider scheme): for each diagonal block k —
+/// (1) FW the diagonal block, (2) relax row/column panels against it,
+/// (3) min-plus-update the remainder. Exact for any backend whose two
+/// primitives are exact.
+pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
+    let n = d.n();
+    if n <= block {
+        return be.fw(d);
+    }
+    let nb = n.div_ceil(block);
+    let dim = |i: usize| -> usize { (n - i * block).min(block) };
+    // extract a (rows x cols) block at block-coords (bi, bj)
+    let get = |d: &DistMatrix, bi: usize, bj: usize| -> Vec<f32> {
+        let (r0, c0) = (bi * block, bj * block);
+        let (rs, cs) = (dim(bi), dim(bj));
+        let mut out = vec![0f32; rs * cs];
+        for r in 0..rs {
+            out[r * cs..(r + 1) * cs].copy_from_slice(&d.row(r0 + r)[c0..c0 + cs]);
+        }
+        out
+    };
+    let put = |d: &mut DistMatrix, bi: usize, bj: usize, v: &[f32]| {
+        let (r0, c0) = (bi * block, bj * block);
+        let (rs, cs) = (dim(bi), dim(bj));
+        debug_assert_eq!(v.len(), rs * cs);
+        for r in 0..rs {
+            d.row_mut(r0 + r)[c0..c0 + cs].copy_from_slice(&v[r * cs..(r + 1) * cs]);
+        }
+    };
+    for k in 0..nb {
+        let ks = dim(k);
+        // (1) diagonal block
+        let mut diag = DistMatrix::from_vec(ks, get(d, k, k));
+        be.fw(&mut diag);
+        let diag = diag.into_vec();
+        put(d, k, k, &diag);
+        // (2) row panels: D[k][j] = min(D[k][j], diag (+) D[k][j])
+        for j in 0..nb {
+            if j == k {
+                continue;
+            }
+            let js = dim(j);
+            let mut panel = get(d, k, j);
+            let orig = panel.clone();
+            be.minplus_into(&mut panel, &diag, &orig, ks, ks, js);
+            put(d, k, j, &panel);
+        }
+        //     column panels: D[i][k] = min(D[i][k], D[i][k] (+) diag)
+        for i in 0..nb {
+            if i == k {
+                continue;
+            }
+            let is = dim(i);
+            let mut panel = get(d, i, k);
+            let orig = panel.clone();
+            be.minplus_into(&mut panel, &orig, &diag, is, ks, ks);
+            put(d, i, k, &panel);
+        }
+        // (3) outer update: D[i][j] = min(D[i][j], D[i][k] (+) D[k][j])
+        for i in 0..nb {
+            if i == k {
+                continue;
+            }
+            let is = dim(i);
+            let col_panel = get(d, i, k);
+            for j in 0..nb {
+                if j == k {
+                    continue;
+                }
+                let js = dim(j);
+                let row_panel = get(d, k, j);
+                let mut blk = get(d, i, j);
+                be.minplus_into(&mut blk, &col_panel, &row_panel, is, ks, js);
+                put(d, i, j, &blk);
+            }
+        }
+    }
+}
+
+/// FW dispatch that respects the backend's block limit.
+pub fn fw_any(be: &dyn TileBackend, d: &mut DistMatrix) {
+    match be.max_block() {
+        Some(mx) if d.n() > mx => fw_blocked(be, d, mx),
+        _ => be.fw(d),
+    }
+}
+
+/// Pure-rust parallel backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl TileBackend for NativeBackend {
+    fn fw(&self, d: &mut DistMatrix) {
+        floyd_warshall::fw_parallel(d);
+    }
+
+    fn minplus_into(&self, c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        minplus::minplus_into_parallel(c, a, b, m, k, n);
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Serial reference backend (tests).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SerialBackend;
+
+impl TileBackend for SerialBackend {
+    fn fw(&self, d: &mut DistMatrix) {
+        floyd_warshall::fw_rowwise(d);
+    }
+
+    fn minplus_into(&self, c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        minplus::minplus_into(c, a, b, m, k, n);
+    }
+
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+    use crate::INF;
+
+    #[test]
+    fn backends_agree_on_fw() {
+        let g = generators::random_connected(90, 200, Weights::Uniform(0.5, 4.0), 1);
+        let base = g.to_dense();
+        let mut a = base.clone();
+        NativeBackend.fw(&mut a);
+        let mut b = base.clone();
+        SerialBackend.fw(&mut b);
+        assert_eq!(a.max_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn fw_blocked_matches_direct() {
+        for (n, block) in [(50usize, 16usize), (64, 32), (97, 32), (130, 64)] {
+            let g = generators::random_connected(n, 2 * n, Weights::Uniform(0.5, 4.0), n as u64);
+            let mut direct = g.to_dense();
+            SerialBackend.fw(&mut direct);
+            let mut blocked = g.to_dense();
+            fw_blocked(&SerialBackend, &mut blocked, block);
+            let diff = direct.max_diff(&blocked);
+            assert!(diff < 1e-4, "n={n} block={block}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn fw_any_respects_limit() {
+        struct Limited;
+        impl TileBackend for Limited {
+            fn fw(&self, d: &mut DistMatrix) {
+                assert!(d.n() <= 32, "fw called with n={} > limit", d.n());
+                crate::apsp::floyd_warshall::fw_rowwise(d);
+            }
+            fn minplus_into(
+                &self,
+                c: &mut [f32],
+                a: &[f32],
+                b: &[f32],
+                m: usize,
+                k: usize,
+                n: usize,
+            ) {
+                assert!(m <= 32 && k <= 32 && n <= 32);
+                crate::apsp::minplus::minplus_into(c, a, b, m, k, n);
+            }
+            fn name(&self) -> &'static str {
+                "limited"
+            }
+            fn max_block(&self) -> Option<usize> {
+                Some(32)
+            }
+        }
+        let g = generators::random_connected(90, 200, Weights::Uniform(0.5, 3.0), 5);
+        let mut via_limited = g.to_dense();
+        fw_any(&Limited, &mut via_limited);
+        let mut direct = g.to_dense();
+        SerialBackend.fw(&mut direct);
+        assert!(via_limited.max_diff(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn backends_agree_on_minplus() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let (m, k, n) = (33usize, 47usize, 29usize);
+        let mk: Vec<f32> = (0..m * k)
+            .map(|_| {
+                if rng.gen_bool(0.3) {
+                    INF
+                } else {
+                    rng.gen_f32_range(0.0, 9.0)
+                }
+            })
+            .collect();
+        let kn: Vec<f32> = (0..k * n).map(|_| rng.gen_f32_range(0.0, 9.0)).collect();
+        let mut c1 = vec![INF; m * n];
+        let mut c2 = c1.clone();
+        NativeBackend.minplus_into(&mut c1, &mk, &kn, m, k, n);
+        SerialBackend.minplus_into(&mut c2, &mk, &kn, m, k, n);
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,142 @@
+//! Repeated Dijkstra (paper §I: "super-quadratic complexity with poor
+//! memory locality") — used here as the *exactness oracle* for every
+//! other APSP implementation, and as the algorithm the PIM-APSP baseline
+//! [16] accelerates.
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
+use crate::util::threads;
+use crate::INF;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// f32 wrapper with a total order for the heap.
+#[derive(PartialEq, PartialOrd)]
+struct TotalF32(f32);
+impl Eq for TotalF32 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for TotalF32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Single-source shortest paths from `src` (binary-heap Dijkstra).
+/// Requires non-negative weights (guaranteed by `CsrGraph::validate`).
+pub fn sssp(g: &CsrGraph, src: usize) -> Vec<f32> {
+    let n = g.n();
+    let mut dist = vec![INF; n];
+    let mut done = vec![false; n];
+    let mut heap: BinaryHeap<Reverse<(TotalF32, u32)>> = BinaryHeap::new();
+    dist[src] = 0.0;
+    heap.push(Reverse((TotalF32(0.0), src as u32)));
+    while let Some(Reverse((TotalF32(d), v))) = heap.pop() {
+        let v = v as usize;
+        if done[v] {
+            continue;
+        }
+        done[v] = true;
+        for (u, w) in g.neighbors(v) {
+            let cand = d + w;
+            if cand < dist[u] {
+                dist[u] = cand;
+                heap.push(Reverse((TotalF32(cand), u as u32)));
+            }
+        }
+    }
+    dist
+}
+
+/// Full APSP by repeated Dijkstra, parallel over sources.
+pub fn apsp(g: &CsrGraph) -> DistMatrix {
+    let n = g.n();
+    let mut out = DistMatrix::new_inf(n);
+    {
+        let data = out.as_mut_slice();
+        let rows = std::sync::Mutex::new(data.chunks_mut(n).enumerate().collect::<Vec<_>>());
+        threads::par_for(n, |_| {
+            let item = rows.lock().unwrap().pop();
+            if let Some((src, row)) = item {
+                row.copy_from_slice(&sssp(g, src));
+            }
+        });
+    }
+    out
+}
+
+/// Distances from a sampled set of sources: `(sources, rows)` where
+/// `rows[s]` is the distance vector from `sources[s]`. The scalable
+/// validation path for graphs whose full n^2 matrix does not fit.
+pub fn sampled_rows(g: &CsrGraph, sources: &[usize]) -> Vec<Vec<f32>> {
+    threads::par_map(sources.len(), |s| sssp(g, sources[s]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::floyd_warshall;
+    use crate::graph::generators::{self, Weights};
+
+    #[test]
+    fn line_graph_distances() {
+        let g = CsrGraph::from_undirected_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 4.0)],
+        );
+        let d = sssp(&g, 0);
+        assert_eq!(d, vec![0.0, 1.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn unreachable_is_inf() {
+        let g = CsrGraph::from_undirected_edges(3, &[(0, 1, 1.0)]);
+        let d = sssp(&g, 0);
+        assert_eq!(d[1], 1.0);
+        assert!(d[2].is_infinite());
+    }
+
+    #[test]
+    fn prefers_multi_hop_when_shorter() {
+        let g = CsrGraph::from_edges(3, &[(0, 2, 10.0), (0, 1, 3.0), (1, 2, 3.0)]);
+        assert_eq!(sssp(&g, 0)[2], 6.0);
+    }
+
+    #[test]
+    fn apsp_matches_fw() {
+        for seed in 0..4 {
+            let g = generators::random_connected(70, 150, Weights::Uniform(0.5, 5.0), seed);
+            let dij = apsp(&g);
+            let mut fw = g.to_dense();
+            floyd_warshall::fw_parallel(&mut fw);
+            let diff = dij.max_diff(&fw);
+            assert!(diff < 1e-4, "seed {seed}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn apsp_matches_fw_disconnected() {
+        let g = CsrGraph::from_undirected_edges(
+            6,
+            &[(0, 1, 1.0), (1, 2, 1.0), (3, 4, 1.0), (4, 5, 1.0)],
+        );
+        let dij = apsp(&g);
+        let mut fw = g.to_dense();
+        floyd_warshall::fw_rowwise(&mut fw);
+        assert_eq!(dij.max_diff(&fw), 0.0);
+    }
+
+    #[test]
+    fn sampled_rows_match_full() {
+        let g = generators::newman_watts_strogatz(120, 4, 0.1, Weights::Uniform(1.0, 3.0), 8);
+        let full = apsp(&g);
+        let sources = vec![0usize, 17, 63, 119];
+        let rows = sampled_rows(&g, &sources);
+        for (s, &src) in sources.iter().enumerate() {
+            for j in 0..g.n() {
+                let a = rows[s][j];
+                let b = full.get(src, j);
+                assert!((a - b).abs() < 1e-5 || (a.is_infinite() && b.is_infinite()));
+            }
+        }
+    }
+}

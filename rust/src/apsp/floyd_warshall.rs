@@ -1,0 +1,285 @@
+//! Floyd–Warshall kernels (paper §II-B1).
+//!
+//! `D[i][j] = min(D[i][j], D[i][k] + D[k][j])` for every pivot `k` — the
+//! dense dynamic program the PCM-FW die executes in-place. Three
+//! implementations with identical results:
+//!
+//! * [`fw_inplace`] — straightforward triple loop (reference).
+//! * [`fw_rowwise`] — pivot-row snapshot + vectorizable inner loop; this
+//!   is the same "Panel_Row broadcast into the Main_Block" structure the
+//!   paper's remapping uses (Fig. 6b), expressed for a CPU cache.
+//! * [`fw_parallel`] — `fw_rowwise` with the row sweep fanned out across
+//!   threads per pivot (used by the native tile backend and the CPU
+//!   baseline).
+
+use crate::graph::dense::DistMatrix;
+use crate::util::threads;
+
+/// Reference triple-loop FW. O(n^3) time, in-place.
+pub fn fw_inplace(d: &mut DistMatrix) {
+    let n = d.n();
+    for k in 0..n {
+        for i in 0..n {
+            let dik = d.get(i, k);
+            if !(dik < f32::INFINITY) {
+                continue;
+            }
+            for j in 0..n {
+                let cand = dik + d.get(k, j);
+                if cand < d.get(i, j) {
+                    d.set(i, j, cand);
+                }
+            }
+        }
+    }
+}
+
+/// Row-wise FW: snapshot the pivot row once per `k`, then stream every
+/// row `i` against it. The inner loop is a pure `min(a, b + c)` map that
+/// the compiler auto-vectorizes.
+pub fn fw_rowwise(d: &mut DistMatrix) {
+    let n = d.n();
+    let mut row_k = vec![0f32; n];
+    for k in 0..n {
+        row_k.copy_from_slice(d.row(k));
+        let data = d.as_mut_slice();
+        for i in 0..n {
+            let row_i = &mut data[i * n..(i + 1) * n];
+            let dik = row_i[k];
+            if !(dik < f32::INFINITY) {
+                continue;
+            }
+            relax_row(row_i, dik, &row_k);
+        }
+    }
+}
+
+/// One FW row update: `row_i[j] = min(row_i[j], dik + row_k[j])`.
+/// `dik` must be finite. This is the hot loop of the whole crate.
+///
+/// Branchless form: `f32::min` compiles to `minps` so LLVM vectorizes
+/// the whole loop (the earlier `if cand < row_i[j]` store-guard blocked
+/// vectorization — 2x slower; EXPERIMENTS.md §Perf). NaN caveat does not
+/// apply: `dik` is finite and `row_k[j]` is never NaN, so `cand` is
+/// never NaN. `min(x, inf+w) = x` keeps infinity semantics.
+#[inline]
+pub fn relax_row(row_i: &mut [f32], dik: f32, row_k: &[f32]) {
+    debug_assert_eq!(row_i.len(), row_k.len());
+    let m = row_i.len().min(row_k.len());
+    let (ri, rk) = (&mut row_i[..m], &row_k[..m]);
+    for j in 0..m {
+        ri[j] = ri[j].min(dik + rk[j]);
+    }
+}
+
+/// Parallel FW: worker threads are spawned once for the whole solve and
+/// synchronize per pivot with a barrier (two barriers per pivot: one
+/// after the pivot-row snapshot, one after the row sweep). Spawning per
+/// pivot would cost more than the pivot itself — see EXPERIMENTS.md
+/// §Perf. Matches `fw_rowwise` bit-for-bit (same per-row operation
+/// order).
+pub fn fw_parallel(d: &mut DistMatrix) {
+    let n = d.n();
+    let workers = threads::num_threads().min(n / 128).max(1);
+    if n < 384 || workers == 1 {
+        return fw_rowwise(d);
+    }
+    let data_ptr = d.as_mut_slice().as_mut_ptr() as usize;
+    let row_k = vec![0f32; n];
+    let row_k_ptr = row_k.as_ptr() as usize;
+    let barrier = std::sync::Barrier::new(workers);
+    // static row ranges per worker
+    let rows_per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let barrier = &barrier;
+            s.spawn(move || {
+                let lo = w * rows_per;
+                let hi = ((w + 1) * rows_per).min(n);
+                // SAFETY: workers write disjoint row ranges; the shared
+                // pivot-row buffer is written only by worker 0, between
+                // two barriers that order it against all reads.
+                let data = data_ptr as *mut f32;
+                let row_k = row_k_ptr as *mut f32;
+                for k in 0..n {
+                    // close the previous pivot's sweep before snapshotting
+                    // row k (its owner may still be relaxing it)
+                    barrier.wait();
+                    if w == 0 {
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(data.add(k * n), row_k, n);
+                        }
+                    }
+                    barrier.wait();
+                    let row_k_slice =
+                        unsafe { std::slice::from_raw_parts(row_k as *const f32, n) };
+                    for i in lo..hi {
+                        let row_i =
+                            unsafe { std::slice::from_raw_parts_mut(data.add(i * n), n) };
+                        let dik = row_i[k];
+                        if dik < f32::INFINITY {
+                            relax_row(row_i, dik, row_k_slice);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    drop(row_k);
+}
+
+/// FW with a panel decomposition (paper Fig. 6b): the pivot row and
+/// column are peeled into panels, and the main block is updated with one
+/// add + one min per pivot. Functionally identical to `fw_rowwise`; kept
+/// as the direct software analogue of the PCM-FW tile schedule so the
+/// simulator's op costs map 1:1 onto code.
+pub fn fw_panel(d: &mut DistMatrix) {
+    let n = d.n();
+    let mut panel_row = vec![0f32; n];
+    let mut panel_col = vec![0f32; n];
+    for k in 0..n {
+        // Panel extraction (permutation unit, Fig. 5d)
+        panel_row.copy_from_slice(d.row(k));
+        for i in 0..n {
+            panel_col[i] = d.get(i, k);
+        }
+        // Main_Block update: Temp = Panel_Col + Panel_Row (bit-serial
+        // add), then selective write where Temp < Main_Block (bit-serial
+        // min via sign bit). Pivot row/col are also updated through the
+        // same pass (d[k][k] = 0 keeps them fixed).
+        let data = d.as_mut_slice();
+        for i in 0..n {
+            let dik = panel_col[i];
+            if !(dik < f32::INFINITY) {
+                continue;
+            }
+            relax_row(&mut data[i * n..(i + 1) * n], dik, &panel_row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+    use crate::INF;
+
+    fn fw_all(d: &DistMatrix) -> Vec<DistMatrix> {
+        let mut a = d.clone();
+        fw_inplace(&mut a);
+        let mut b = d.clone();
+        fw_rowwise(&mut b);
+        let mut c = d.clone();
+        fw_parallel(&mut c);
+        let mut e = d.clone();
+        fw_panel(&mut e);
+        vec![a, b, c, e]
+    }
+
+    #[test]
+    fn tiny_known_answer() {
+        // 0 -1-> 1 -2-> 2, plus direct 0->2 weight 5 (shortcut via 1 = 3)
+        let mut d = DistMatrix::new_diag0(3);
+        d.set(0, 1, 1.0);
+        d.set(1, 2, 2.0);
+        d.set(0, 2, 5.0);
+        let out = fw_all(&d);
+        for m in &out {
+            assert_eq!(m.get(0, 2), 3.0);
+            assert_eq!(m.get(0, 1), 1.0);
+            assert!(m.get(2, 0).is_infinite()); // directed
+        }
+    }
+
+    #[test]
+    fn disconnected_stays_inf() {
+        let d = DistMatrix::new_diag0(4);
+        for m in fw_all(&d) {
+            for i in 0..4 {
+                for j in 0..4 {
+                    if i == j {
+                        assert_eq!(m.get(i, j), 0.0);
+                    } else {
+                        assert_eq!(m.get(i, j), INF);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn implementations_agree_random() {
+        for seed in 0..3 {
+            let g = generators::random_connected(60, 120, Weights::Uniform(0.5, 3.0), seed);
+            let d = g.to_dense();
+            let out = fw_all(&d);
+            for m in &out[1..] {
+                assert_eq!(out[0].max_diff(m), 0.0, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_on_larger_matrix() {
+        let g = generators::newman_watts_strogatz(400, 5, 0.1, Weights::Uniform(1.0, 9.0), 5);
+        let d = g.to_dense();
+        let mut a = d.clone();
+        fw_rowwise(&mut a);
+        let mut b = d.clone();
+        fw_parallel(&mut b);
+        assert_eq!(a.max_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        // FW(FW(D)) == FW(D): the DP fixed point (up to f32 summation
+        // order — a second pass may re-derive a path with different
+        // rounding, so allow one ulp-scale epsilon)
+        let g = generators::random_connected(40, 80, Weights::Uniform(0.5, 2.0), 7);
+        let mut d = g.to_dense();
+        fw_rowwise(&mut d);
+        let once = d.clone();
+        fw_rowwise(&mut d);
+        assert!(once.max_diff(&d) < 1e-5);
+    }
+
+    #[test]
+    fn triangle_inequality_holds() {
+        let g = generators::random_connected(50, 100, Weights::Uniform(0.5, 2.0), 9);
+        let mut d = g.to_dense();
+        fw_parallel(&mut d);
+        let n = d.n();
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let lhs = d.get(i, j);
+                    let rhs = d.get(i, k) + d.get(k, j);
+                    assert!(
+                        lhs <= rhs + 1e-4,
+                        "triangle violated: d[{i}][{j}]={lhs} > {rhs}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn undirected_input_gives_symmetric_output() {
+        let g = generators::newman_watts_strogatz(80, 3, 0.2, Weights::Uniform(1.0, 4.0), 3);
+        let mut d = g.to_dense();
+        fw_parallel(&mut d);
+        for i in 0..80 {
+            for j in 0..80 {
+                assert_eq!(d.get(i, j), d.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn relax_row_vector_semantics() {
+        let mut row_i = vec![10.0, INF, 3.0, 0.0];
+        let row_k = vec![1.0, 2.0, INF, -0.0];
+        relax_row(&mut row_i, 4.0, &row_k);
+        assert_eq!(row_i, vec![5.0, 6.0, 3.0, 0.0]);
+    }
+}

@@ -1,0 +1,236 @@
+//! Min-plus (tropical) matrix products — the MP kernel the PCM-MP die
+//! executes (paper §III-D, Fig. 6d): `C[m][n] = min(C[m][n],
+//! min_k(A[m][k] + B[k][n]))`.
+//!
+//! Matrices here are rectangular row-major `&[f32]` slices with explicit
+//! dims, because the cross-component merges operate on `|C| x |B|` strips
+//! rather than square tiles.
+
+use crate::util::threads;
+
+/// `C = min(C, A (+) B)` where `A` is `m x k`, `B` is `k x n`, `C` is
+/// `m x n`, all row-major. Accumulating (keeps existing C entries).
+///
+/// Loop order is i-k-j with a row snapshot of `B[k]`, the min-plus
+/// analogue of the cache-friendly GEMM ikj order; the inner loop
+/// auto-vectorizes like `floyd_warshall::relax_row`.
+pub fn minplus_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A dims");
+    assert_eq!(b.len(), k * n, "B dims");
+    assert_eq!(c.len(), m * n, "C dims");
+    for i in 0..m {
+        let row_a = &a[i * k..(i + 1) * k];
+        let row_c = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in row_a.iter().enumerate() {
+            if !(aik < f32::INFINITY) {
+                continue;
+            }
+            let row_b = &b[kk * n..(kk + 1) * n];
+            crate::apsp::floyd_warshall::relax_row(row_c, aik, row_b);
+        }
+    }
+}
+
+/// Parallel `minplus_into` (rows of C split across workers).
+pub fn minplus_into_parallel(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m * n < 64 * 64 {
+        return minplus_into(c, a, b, m, k, n);
+    }
+    let workers = threads::num_threads();
+    let rows_per = m.div_ceil(workers * 4).max(8);
+    threads::par_chunks_mut(c, rows_per * n, |chunk_idx, rows| {
+        let i0 = chunk_idx * rows_per;
+        for (di, row_c) in rows.chunks_mut(n).enumerate() {
+            let i = i0 + di;
+            let row_a = &a[i * k..(i + 1) * k];
+            for (kk, &aik) in row_a.iter().enumerate() {
+                if !(aik < f32::INFINITY) {
+                    continue;
+                }
+                let row_b = &b[kk * n..(kk + 1) * n];
+                crate::apsp::floyd_warshall::relax_row(row_c, aik, row_b);
+            }
+        }
+    });
+}
+
+/// Fresh min-plus product `A (+) B` (C initialized to +inf).
+pub fn minplus(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![f32::INFINITY; m * n];
+    minplus_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// Two-stage MP merge (paper Fig. 6d): `min_{i,j}(A[m,i] + DB[i,j] +
+/// B[j,n])` computed as `(A (+) DB) (+) B`. This is the PCM-MP tile's
+/// whole job in Step 4 of Algorithm 1/2.
+pub fn two_stage_merge(
+    a: &[f32],
+    db: &[f32],
+    b: &[f32],
+    m: usize,
+    b1: usize,
+    b2: usize,
+    n: usize,
+) -> Vec<f32> {
+    let stage1 = minplus(a, db, m, b1, b2);
+    minplus(&stage1, b, m, b2, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::INF;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![INF; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    let cand = a[i * k + kk] + b[kk * n + j];
+                    if cand < c[i * n + j] {
+                        c[i * n + j] = cand;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_mat(rng: &mut Rng, len: usize, inf_frac: f64) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if rng.gen_bool(inf_frac) {
+                    INF
+                } else {
+                    rng.gen_f32_range(0.0, 10.0)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn known_small_product() {
+        // A = [[1, INF], [2, 3]]; B = [[10, 20], [30, 40]]
+        let a = vec![1.0, INF, 2.0, 3.0];
+        let b = vec![10.0, 20.0, 30.0, 40.0];
+        let c = minplus(&a, &b, 2, 2, 2);
+        assert_eq!(c, vec![11.0, 21.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn matches_naive_random() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(5usize, 7usize, 3usize), (16, 16, 16), (1, 9, 4), (8, 1, 8)] {
+            let a = rand_mat(&mut rng, m * k, 0.2);
+            let b = rand_mat(&mut rng, k * n, 0.2);
+            let expect = naive(&a, &b, m, k, n);
+            assert_eq!(minplus(&a, &b, m, k, n), expect);
+            let mut c2 = vec![INF; m * n];
+            minplus_into_parallel(&mut c2, &a, &b, m, k, n);
+            assert_eq!(c2, expect);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_large() {
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (130usize, 90usize, 110usize);
+        let a = rand_mat(&mut rng, m * k, 0.3);
+        let b = rand_mat(&mut rng, k * n, 0.3);
+        let mut c1 = rand_mat(&mut rng, m * n, 0.5);
+        let mut c2 = c1.clone();
+        minplus_into(&mut c1, &a, &b, m, k, n);
+        minplus_into_parallel(&mut c2, &a, &b, m, k, n);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn accumulates_existing_minimum() {
+        let a = vec![5.0];
+        let b = vec![5.0];
+        let mut c = vec![3.0];
+        minplus_into(&mut c, &a, &b, 1, 1, 1);
+        assert_eq!(c, vec![3.0]); // existing 3 < 10
+        let mut c = vec![30.0];
+        minplus_into(&mut c, &a, &b, 1, 1, 1);
+        assert_eq!(c, vec![10.0]);
+    }
+
+    #[test]
+    fn all_inf_propagates() {
+        let a = vec![INF; 4];
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let c = minplus(&a, &b, 2, 2, 2);
+        assert!(c.iter().all(|x| x.is_infinite()));
+    }
+
+    #[test]
+    fn two_stage_matches_composed() {
+        let mut rng = Rng::new(7);
+        let (m, b1, b2, n) = (6usize, 4usize, 5usize, 7usize);
+        let a = rand_mat(&mut rng, m * b1, 0.2);
+        let db = rand_mat(&mut rng, b1 * b2, 0.2);
+        let b = rand_mat(&mut rng, b2 * n, 0.2);
+        let got = two_stage_merge(&a, &db, &b, m, b1, b2, n);
+        // brute force
+        for i in 0..m {
+            for j in 0..n {
+                let mut best = INF;
+                for x in 0..b1 {
+                    for y in 0..b2 {
+                        let cand = a[i * b1 + x] + db[x * b2 + y] + b[y * n + j];
+                        if cand < best {
+                            best = cand;
+                        }
+                    }
+                }
+                let g = got[i * n + j];
+                assert!(
+                    (g - best).abs() < 1e-4 || (g.is_infinite() && best.is_infinite()),
+                    "({i},{j}): {g} vs {best}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn minplus_associativity_property() {
+        // (A ⊗ B) ⊗ C == A ⊗ (B ⊗ C) — semiring associativity
+        crate::util::prop::assert_prop(
+            20,
+            |r| {
+                let (m, k, l, n) = (
+                    1 + r.gen_range(6),
+                    1 + r.gen_range(6),
+                    1 + r.gen_range(6),
+                    1 + r.gen_range(6),
+                );
+                let mut rr = r.fork();
+                (
+                    rand_mat(&mut rr, m * k, 0.2),
+                    rand_mat(&mut rr, k * l, 0.2),
+                    rand_mat(&mut rr, l * n, 0.2),
+                    (m, k, l, n),
+                )
+            },
+            |(a, b, c, (m, k, l, n))| {
+                let ab = minplus(a, b, *m, *k, *l);
+                let left = minplus(&ab, c, *m, *l, *n);
+                let bc = minplus(b, c, *k, *l, *n);
+                let right = minplus(a, &bc, *m, *k, *n);
+                for (x, y) in left.iter().zip(&right) {
+                    let ok = (x - y).abs() < 1e-3 || (x.is_infinite() && y.is_infinite());
+                    if !ok {
+                        return Err(format!("{x} != {y}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

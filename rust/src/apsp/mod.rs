@@ -1,0 +1,22 @@
+//! APSP algorithm library: the paper's recursive partitioned APSP
+//! (Algorithms 1 & 2) plus every kernel and baseline it builds on.
+//!
+//! * [`floyd_warshall`] — classic / row-vectorized / parallel FW (§II-B1).
+//! * [`dijkstra`] — repeated Dijkstra: the exactness oracle.
+//! * [`minplus`] — min-plus (tropical) matrix products (MP kernels).
+//! * [`plan`] — recursion-aware partition planning (topology only).
+//! * [`partitioned`] — single-level partitioned APSP (Algorithm 1).
+//! * [`recursive`] — recursive partitioned APSP (Algorithm 2) over a
+//!   pluggable [`backend::TileBackend`].
+//! * [`trace`] — the operation trace consumed by the PIM simulator.
+//! * [`validate`] — cross-implementation validation helpers.
+
+pub mod backend;
+pub mod dijkstra;
+pub mod floyd_warshall;
+pub mod minplus;
+pub mod partitioned;
+pub mod plan;
+pub mod recursive;
+pub mod trace;
+pub mod validate;

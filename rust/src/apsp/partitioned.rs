@@ -1,0 +1,202 @@
+//! Single-level partitioned APSP — the paper's Algorithm 1 (the [10]
+//! four-stage scheme), implemented *independently* of the recursive
+//! machinery as a cross-validation oracle: it uses the generic
+//! `partition::boundary` helpers and dense FW directly, so a bug in the
+//! plan/recursion code cannot hide in both implementations.
+
+use super::floyd_warshall::fw_parallel;
+use super::minplus::two_stage_merge;
+use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
+use crate::partition::boundary::{boundary_graph, build_components};
+use crate::partition::partition_by_max_size;
+use crate::INF;
+
+/// Exact APSP via Algorithm 1: partition once, solve the boundary graph
+/// with one dense FW (whatever its size), inject, merge. Materializes
+/// the full n x n result — small/medium graphs only.
+pub fn partitioned_apsp(g: &CsrGraph, tile_limit: usize, seed: u64) -> DistMatrix {
+    let n = g.n();
+    if n <= tile_limit {
+        let mut d = g.to_dense();
+        fw_parallel(&mut d);
+        return d;
+    }
+    // ---- preprocessing: partition + boundary structure (topology
+    // affinity — distances are not affinities, see plan::build_plan)
+    let unit = CsrGraph {
+        rowptr: g.rowptr.clone(),
+        col: g.col.clone(),
+        val: vec![1.0; g.m()],
+    };
+    let p = partition_by_max_size(&unit, tile_limit, seed);
+    let cs = build_components(g, &p);
+
+    // ---- Step 1: local APSP per component (intra edges only)
+    let mut d_intra: Vec<DistMatrix> = cs
+        .components
+        .iter()
+        .enumerate()
+        .map(|(ci, c)| {
+            let mut d = DistMatrix::new_diag0(c.n());
+            let pos: std::collections::HashMap<u32, usize> = c
+                .verts
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v, i))
+                .collect();
+            for (i, &v) in c.verts.iter().enumerate() {
+                for (u, w) in g.neighbors(v as usize) {
+                    if cs.comp_of[u] == ci as u32 {
+                        d.relax(i, pos[&(u as u32)], w);
+                    }
+                }
+            }
+            fw_parallel(&mut d);
+            d
+        })
+        .collect();
+
+    // ---- Step 2: boundary-graph APSP (single dense FW)
+    let nb = cs.n_boundary();
+    let db = if nb > 0 {
+        let gb = boundary_graph(g, &cs, &|ci, bi, bj| d_intra[ci].get(bi, bj));
+        let mut db = gb.to_dense();
+        fw_parallel(&mut db);
+        db
+    } else {
+        DistMatrix::new_inf(0)
+    };
+
+    // boundary-graph ids per component (prefix offsets: boundary ids are
+    // assigned component-major by build_components)
+    let mut group_start = Vec::with_capacity(cs.components.len());
+    let mut acc = 0usize;
+    for c in &cs.components {
+        group_start.push(acc);
+        acc += c.n_boundary;
+    }
+
+    // ---- Step 3: boundary injection + FW rerun
+    for (ci, c) in cs.components.iter().enumerate() {
+        let b = c.n_boundary;
+        if b == 0 {
+            continue;
+        }
+        let gs = group_start[ci];
+        let dc = &mut d_intra[ci];
+        for i in 0..b {
+            for j in 0..b {
+                dc.relax(i, j, db.get(gs + i, gs + j));
+            }
+        }
+        fw_parallel(dc);
+    }
+
+    // ---- assemble intra entries
+    let mut out = DistMatrix::new_inf(n);
+    for (ci, c) in cs.components.iter().enumerate() {
+        let dc = &d_intra[ci];
+        for (i, &u) in c.verts.iter().enumerate() {
+            for (j, &v) in c.verts.iter().enumerate() {
+                let val = dc.get(i, j);
+                if val < out.get(u as usize, v as usize) {
+                    out.set(u as usize, v as usize, val);
+                }
+            }
+        }
+    }
+
+    // ---- Step 4: cross-component MP merges
+    let k = cs.components.len();
+    for c1 in 0..k {
+        let comp1 = &cs.components[c1];
+        let (n1, b1) = (comp1.n(), comp1.n_boundary);
+        if b1 == 0 {
+            continue;
+        }
+        let gs1 = group_start[c1];
+        let d1 = &d_intra[c1];
+        let mut a = vec![INF; n1 * b1];
+        for i in 0..n1 {
+            a[i * b1..(i + 1) * b1].copy_from_slice(&d1.row(i)[..b1]);
+        }
+        for c2 in 0..k {
+            if c1 == c2 {
+                continue;
+            }
+            let comp2 = &cs.components[c2];
+            let (n2, b2) = (comp2.n(), comp2.n_boundary);
+            if b2 == 0 {
+                continue;
+            }
+            let gs2 = group_start[c2];
+            let mut dbb = vec![INF; b1 * b2];
+            for i in 0..b1 {
+                for j in 0..b2 {
+                    dbb[i * b2 + j] = db.get(gs1 + i, gs2 + j);
+                }
+            }
+            let d2 = &d_intra[c2];
+            let mut bmat = vec![INF; b2 * n2];
+            for j in 0..b2 {
+                bmat[j * n2..(j + 1) * n2].copy_from_slice(d2.row(j));
+            }
+            let strip = two_stage_merge(&a, &dbb, &bmat, n1, b1, b2, n2);
+            for (i, &u) in comp1.verts.iter().enumerate() {
+                for (j, &v) in comp2.verts.iter().enumerate() {
+                    let val = strip[i * n2 + j];
+                    if val < out.get(u as usize, v as usize) {
+                        out.set(u as usize, v as usize, val);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::dijkstra;
+    use crate::graph::generators::{self, Weights};
+
+    #[test]
+    fn matches_dijkstra_nws() {
+        let g = generators::newman_watts_strogatz(160, 3, 0.15, Weights::Uniform(1.0, 5.0), 1);
+        let got = partitioned_apsp(&g, 32, 1);
+        let oracle = dijkstra::apsp(&g);
+        assert!(got.max_diff(&oracle) < 1e-3);
+    }
+
+    #[test]
+    fn matches_dijkstra_er() {
+        let g = generators::erdos_renyi(100, 420, Weights::Uniform(0.5, 2.0), 2);
+        let got = partitioned_apsp(&g, 24, 2);
+        let oracle = dijkstra::apsp(&g);
+        assert!(got.max_diff(&oracle) < 1e-3);
+    }
+
+    #[test]
+    fn small_graph_direct() {
+        let g = generators::complete(12, Weights::Uniform(1.0, 3.0), 3);
+        let got = partitioned_apsp(&g, 1024, 3);
+        let oracle = dijkstra::apsp(&g);
+        assert!(got.max_diff(&oracle) < 1e-4);
+    }
+
+    #[test]
+    fn disconnected_components() {
+        let g = CsrGraph::from_undirected_edges(
+            30,
+            &(0..14u32)
+                .map(|i| (i, i + 1, 1.0f32))
+                .chain((16..29u32).map(|i| (i, i + 1, 1.0)))
+                .collect::<Vec<_>>(),
+        );
+        let got = partitioned_apsp(&g, 8, 4);
+        let oracle = dijkstra::apsp(&g);
+        assert_eq!(got.max_diff(&oracle), 0.0);
+    }
+}

@@ -1,0 +1,456 @@
+//! Recursion-aware partition planning (paper §III-A).
+//!
+//! The plan captures the *structure* of the recursive decomposition —
+//! which vertices form each component at each level, who is boundary,
+//! and the cross-edge graph each boundary level inherits — using
+//! topology only. Both execution modes walk the same plan, which is what
+//! guarantees estimate-mode cycle counts equal functional-mode counts.
+//!
+//! Level 0 uses the full multilevel partitioner on the input graph. For
+//! levels >= 1 the paper's insight applies directly: the boundary graph
+//! of a partitioned level consists of per-component boundary cliques
+//! (virtual d_intra edges) plus cross edges, so a *recursion-aware*
+//! partitioner can keep each component's boundary set intact and pack
+//! whole boundary groups into tiles. Because every boundary group has at
+//! most `tile_limit` members (it comes from a component of at most
+//! `tile_limit` vertices), whole-group packing is always feasible, no
+//! clique ever crosses a part, and the clique edges never need to be
+//! materialized — the decomposition stays O(|B| + cut) per level, which
+//! is what lets the planner reach OGBN-Products scale.
+
+use crate::graph::csr::CsrGraph;
+use crate::partition::boundary::{build_components, ComponentSet};
+use crate::partition::{partition_by_max_size, Partition};
+
+/// One level of the recursive decomposition.
+#[derive(Debug, Clone)]
+pub struct PlanLevel {
+    /// Number of vertices in this level's graph.
+    pub n: usize,
+    /// Components (boundary-first vertex ordering) of this level.
+    pub cs: ComponentSet,
+    /// This level's graph restricted to cross-component edges, with
+    /// vertices renumbered to *boundary ids* — i.e. the next level's
+    /// graph minus the (implicit) boundary cliques.
+    pub next_cross: CsrGraph,
+    /// Start of each component's boundary-id range: component `c`'s
+    /// boundary vertices are boundary ids `group_start[c] ..
+    /// group_start[c+1]`.
+    pub group_start: Vec<usize>,
+    /// Intra-component edge count per component (for load costing).
+    pub comp_nnz: Vec<u64>,
+}
+
+impl PlanLevel {
+    pub fn n_boundary(&self) -> usize {
+        self.next_cross.n()
+    }
+    pub fn n_components(&self) -> usize {
+        self.cs.components.len()
+    }
+}
+
+/// The full recursive plan.
+#[derive(Debug, Clone)]
+pub struct ApspPlan {
+    /// Partitioned levels, outermost (original graph) first.
+    pub levels: Vec<PlanLevel>,
+    /// Size of the terminal graph solved directly by one dense FW
+    /// (0 if the deepest boundary graph is empty).
+    pub final_n: usize,
+    /// Edge count of the terminal graph.
+    pub final_nnz: u64,
+    pub tile_limit: usize,
+}
+
+impl ApspPlan {
+    /// Recursion depth (number of partitioned levels).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Boundary count per level (|B^l| in the paper's notation).
+    pub fn boundary_sizes(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.n_boundary()).collect()
+    }
+}
+
+/// Planning options.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    /// Max vertices per tile (paper: 1024).
+    pub tile_limit: usize,
+    /// Max recursion depth: `usize::MAX` = Algorithm 2 (full recursion);
+    /// `1` = Algorithm 1 (single-level, boundary graph solved densely
+    /// whatever its size).
+    pub max_depth: usize,
+    /// Partitioner seed.
+    pub seed: u64,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        Self {
+            tile_limit: crate::TILE_LIMIT,
+            max_depth: usize::MAX,
+            seed: 0x5241_5049,
+        }
+    }
+}
+
+/// Build the recursive plan for graph `g`.
+pub fn build_plan(g: &CsrGraph, opts: PlanOptions) -> ApspPlan {
+    assert!(opts.tile_limit >= 2, "tile_limit must be >= 2");
+    let mut levels: Vec<PlanLevel> = Vec::new();
+
+    // ---- level 0: real multilevel partitioning of G
+    if g.n() <= opts.tile_limit || opts.max_depth == 0 {
+        return ApspPlan {
+            levels,
+            final_n: g.n(),
+            final_nnz: g.m() as u64,
+            tile_limit: opts.tile_limit,
+        };
+    }
+    // Partition on *topology* (unit edge affinity): edge weights here are
+    // distances, not affinities — METIS likewise cuts edge count when
+    // no affinity weights are given. Cutting by distance weight would
+    // preferentially cut short edges, exactly backwards.
+    let unit = CsrGraph {
+        rowptr: g.rowptr.clone(),
+        col: g.col.clone(),
+        val: vec![1.0; g.m()],
+    };
+    let p0 = partition_by_max_size(&unit, opts.tile_limit, opts.seed);
+    let cs0 = build_components(g, &p0);
+    let lvl0 = finish_level(g, cs0);
+    let mut cur_cross = lvl0.next_cross.clone();
+    let mut cur_groups = lvl0.group_start.clone();
+    levels.push(lvl0);
+
+    // ---- levels >= 1: group-packing partitioner over the cross graph
+    // (guard: recursion depth is bounded because each level's graph is
+    // its predecessor's boundary set; a hard cap protects pathological
+    // inputs where the boundary refuses to shrink)
+    const HARD_DEPTH_CAP: usize = 64;
+    loop {
+        let n = cur_cross.n();
+        let depth = levels.len();
+        if n <= opts.tile_limit || depth >= opts.max_depth || depth >= HARD_DEPTH_CAP {
+            return ApspPlan {
+                final_n: n,
+                final_nnz: cur_cross.m() as u64,
+                levels,
+                tile_limit: opts.tile_limit,
+            };
+        }
+        let p = pack_groups(&cur_cross, &cur_groups, opts.tile_limit);
+        let cs = build_components(&cur_cross, &p);
+        let lvl = finish_level(&cur_cross, cs);
+        // no progress guard: if the boundary did not shrink at all we
+        // would loop forever — solve the rest directly instead.
+        if lvl.n_boundary() >= n {
+            return ApspPlan {
+                final_n: n,
+                final_nnz: cur_cross.m() as u64,
+                levels,
+                tile_limit: opts.tile_limit,
+            };
+        }
+        cur_cross = lvl.next_cross.clone();
+        cur_groups = lvl.group_start.clone();
+        levels.push(lvl);
+    }
+}
+
+/// Compute the derived fields of a level from its component set.
+fn finish_level(g: &CsrGraph, cs: ComponentSet) -> PlanLevel {
+    let nb = cs.n_boundary();
+    // group_start: boundary ids are assigned component-major by
+    // build_components, so prefix sums of n_boundary give the ranges.
+    let mut group_start = Vec::with_capacity(cs.components.len() + 1);
+    let mut acc = 0usize;
+    for c in &cs.components {
+        group_start.push(acc);
+        acc += c.n_boundary;
+    }
+    group_start.push(acc);
+    debug_assert_eq!(acc, nb);
+
+    // cross edges mapped to boundary ids
+    let mut cross_edges: Vec<(u32, u32, f32)> = Vec::new();
+    let mut comp_nnz = vec![0u64; cs.components.len()];
+    for (u, v, w) in g.edges() {
+        let cu = cs.comp_of[u as usize];
+        let cv = cs.comp_of[v as usize];
+        if cu != cv {
+            cross_edges.push((
+                cs.boundary_id[u as usize],
+                cs.boundary_id[v as usize],
+                w,
+            ));
+        } else {
+            comp_nnz[cu as usize] += 1;
+        }
+    }
+    let next_cross = CsrGraph::from_edges(nb, &cross_edges);
+    PlanLevel {
+        n: g.n(),
+        cs,
+        next_cross,
+        group_start,
+        comp_nnz,
+    }
+}
+
+/// Pack whole boundary groups (contiguous vertex ranges) into parts of
+/// at most `tile_limit` vertices, ordered by *group connectivity*: a
+/// greedy agglomerative traversal that always appends the unpacked
+/// group with the strongest cross-edge attachment to the current bin,
+/// so cross edges collapse inside bins and the next level's boundary
+/// actually shrinks (the recursion-aware partitioner of §III-A). Every
+/// group has at most `tile_limit` members by construction.
+fn pack_groups(cross: &CsrGraph, group_start: &[usize], tile_limit: usize) -> Partition {
+    let n = cross.n();
+    let ngroups = group_start.len() - 1;
+    // cluster id per group; clusters merge agglomeratively
+    let mut cluster_of: Vec<u32> = (0..ngroups as u32).collect();
+    let mut cluster_size: Vec<usize> = (0..ngroups)
+        .map(|g| group_start[g + 1] - group_start[g])
+        .collect();
+    // group of each vertex (groups are contiguous ranges)
+    let mut group_of = vec![0u32; n];
+    for gi in 0..ngroups {
+        for v in group_start[gi]..group_start[gi + 1] {
+            group_of[v] = gi as u32;
+        }
+    }
+    // Agglomerative capacity-bounded matching: repeatedly merge the
+    // cluster pairs with the heaviest cross-edge attachment whose
+    // combined size still fits one tile. Log-many rounds coalesce
+    // community *chains* (pair, then pair-of-pairs, ...), which a
+    // single greedy pass cannot.
+    loop {
+        // cluster adjacency weights
+        let mut w: std::collections::HashMap<(u32, u32), u64> = std::collections::HashMap::new();
+        for (u, v, _) in cross.edges() {
+            let cu = cluster_of[group_of[u as usize] as usize];
+            let cv = cluster_of[group_of[v as usize] as usize];
+            if cu != cv {
+                let key = (cu.min(cv), cu.max(cv));
+                *w.entry(key).or_insert(0) += 1;
+            }
+        }
+        if w.is_empty() {
+            break;
+        }
+        let mut pairs: Vec<((u32, u32), u64)> = w.into_iter().collect();
+        pairs.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut merged_any = false;
+        let mut taken: std::collections::HashSet<u32> = std::collections::HashSet::new();
+        let mut remap: Vec<u32> = (0..ngroups as u32).collect();
+        for ((a, b), _) in pairs {
+            if taken.contains(&a) || taken.contains(&b) {
+                continue;
+            }
+            if cluster_size[a as usize] + cluster_size[b as usize] > tile_limit {
+                continue;
+            }
+            // merge b into a
+            taken.insert(a);
+            taken.insert(b);
+            remap[b as usize] = a;
+            cluster_size[a as usize] += cluster_size[b as usize];
+            cluster_size[b as usize] = 0;
+            merged_any = true;
+        }
+        if !merged_any {
+            break;
+        }
+        for c in cluster_of.iter_mut() {
+            *c = remap[*c as usize];
+        }
+    }
+    // pack final clusters into dense part ids, folding tiny clusters
+    // together first-fit to limit tile fragmentation
+    let mut part_of_cluster: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut part_fill: Vec<usize> = Vec::new();
+    let mut order: Vec<u32> = cluster_of
+        .iter()
+        .copied()
+        .collect::<std::collections::HashSet<_>>()
+        .into_iter()
+        .collect();
+    order.sort_unstable_by_key(|&c| std::cmp::Reverse(cluster_size[c as usize]));
+    for c in order {
+        let sz = cluster_size[c as usize];
+        if sz == 0 {
+            part_of_cluster.insert(c, 0);
+            continue;
+        }
+        // first-fit-decreasing into existing parts
+        let slot = part_fill.iter().position(|&f| f + sz <= tile_limit);
+        let pid = match slot {
+            Some(p) => {
+                part_fill[p] += sz;
+                p
+            }
+            None => {
+                part_fill.push(sz);
+                part_fill.len() - 1
+            }
+        };
+        part_of_cluster.insert(c, pid as u32);
+    }
+    let mut assign = vec![0u32; n];
+    for v in 0..n {
+        assign[v] = part_of_cluster[&cluster_of[group_of[v] as usize]];
+    }
+    Partition {
+        assign,
+        k: part_fill.len().max(1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+
+    fn plan_for(n: usize, tile: usize, seed: u64) -> (CsrGraph, ApspPlan) {
+        let g = generators::newman_watts_strogatz(n, 4, 0.08, Weights::Uniform(1.0, 5.0), seed);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: tile,
+                max_depth: usize::MAX,
+                seed,
+            },
+        );
+        (g, plan)
+    }
+
+    #[test]
+    fn small_graph_is_direct() {
+        let g = generators::complete(16, Weights::Unit, 1);
+        let plan = build_plan(&g, PlanOptions::default());
+        assert_eq!(plan.depth(), 0);
+        assert_eq!(plan.final_n, 16);
+    }
+
+    #[test]
+    fn level0_components_fit_tiles() {
+        let (g, plan) = plan_for(600, 64, 2);
+        assert!(plan.depth() >= 1);
+        let l0 = &plan.levels[0];
+        assert_eq!(l0.n, g.n());
+        l0.cs.validate(&g).unwrap();
+        assert!(l0.cs.max_component() <= 64);
+    }
+
+    #[test]
+    fn deeper_levels_fit_tiles_and_shrink() {
+        let (_, plan) = plan_for(1500, 48, 3);
+        let sizes = plan.boundary_sizes();
+        for w in sizes.windows(2) {
+            assert!(w[1] <= w[0], "boundary must not grow: {sizes:?}");
+        }
+        for lvl in &plan.levels {
+            assert!(lvl.cs.max_component() <= 48);
+        }
+        assert!(plan.final_n <= 48 || plan.depth() >= 1);
+    }
+
+    #[test]
+    fn group_packing_keeps_groups_whole() {
+        let (_, plan) = plan_for(1200, 32, 4);
+        for li in 1..plan.depth() {
+            let prev = &plan.levels[li - 1];
+            let lvl = &plan.levels[li];
+            // all vertices of one group (prev component boundary range)
+            // must share a component at this level
+            for gi in 0..prev.group_start.len() - 1 {
+                let range = prev.group_start[gi]..prev.group_start[gi + 1];
+                let mut comp = None;
+                for v in range {
+                    let c = lvl.cs.comp_of[v];
+                    match comp {
+                        None => comp = Some(c),
+                        Some(c0) => assert_eq!(c0, c, "group {gi} split at level {li}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cross_graph_excludes_intra_edges() {
+        let (g, plan) = plan_for(400, 64, 5);
+        let l0 = &plan.levels[0];
+        // every cross edge of G appears in next_cross (mapped)
+        let mut expect = 0usize;
+        for (u, v, _) in g.edges() {
+            if l0.cs.comp_of[u as usize] != l0.cs.comp_of[v as usize] {
+                expect += 1;
+            }
+        }
+        assert_eq!(l0.next_cross.m(), expect);
+        // comp_nnz counts the rest
+        let intra: u64 = l0.comp_nnz.iter().sum();
+        assert_eq!(intra as usize + expect, g.m());
+    }
+
+    #[test]
+    fn max_depth_one_is_algorithm_1() {
+        let g = generators::newman_watts_strogatz(800, 4, 0.1, Weights::Unit, 6);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 64,
+                max_depth: 1,
+                seed: 6,
+            },
+        );
+        assert_eq!(plan.depth(), 1);
+        // terminal graph is the whole boundary graph regardless of size
+        assert_eq!(plan.final_n, plan.levels[0].n_boundary());
+    }
+
+    #[test]
+    fn plan_deterministic() {
+        let (_, p1) = plan_for(700, 64, 9);
+        let (_, p2) = plan_for(700, 64, 9);
+        assert_eq!(p1.depth(), p2.depth());
+        assert_eq!(p1.boundary_sizes(), p2.boundary_sizes());
+        assert_eq!(p1.final_n, p2.final_n);
+    }
+
+    #[test]
+    fn disconnected_graph_zero_boundary() {
+        // two cliques, no bridge: partitioner should find the split and
+        // the boundary graph is empty
+        let mut edges = Vec::new();
+        for u in 0..30u32 {
+            for v in (u + 1)..30 {
+                edges.push((u, v, 1.0f32));
+            }
+        }
+        for u in 30..60u32 {
+            for v in (u + 1)..60 {
+                edges.push((u, v, 1.0));
+            }
+        }
+        let g = CsrGraph::from_undirected_edges(60, &edges);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 32,
+                max_depth: usize::MAX,
+                seed: 1,
+            },
+        );
+        assert!(plan.depth() >= 1);
+        assert_eq!(plan.levels[0].n_boundary(), 0);
+        assert_eq!(plan.final_n, 0);
+    }
+}

@@ -1,0 +1,942 @@
+//! Recursive partitioned APSP — the paper's Algorithm 2, executed over a
+//! [`plan::ApspPlan`] with a pluggable [`backend::TileBackend`].
+//!
+//! The walk is shared between the two execution modes:
+//!
+//! * **functional** (`backend = Some(..)`) — every FW pass and MP merge
+//!   actually runs; results are exact (validated against Dijkstra).
+//! * **estimate** (`backend = None`) — only the op trace is emitted.
+//!
+//! Because both modes walk the same plan through the same code path, the
+//! emitted [`trace::Trace`] is identical — the property that lets the
+//! simulator cost OGBN-Products-scale runs without materializing any
+//! O(n^2) state.
+
+use super::backend::TileBackend;
+use super::plan::ApspPlan;
+use super::trace::{Op, Phase, Trace};
+use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
+use crate::util::threads;
+use crate::INF;
+
+/// Solution of one level's graph.
+#[derive(Debug, Clone)]
+pub enum LevelSolution {
+    /// Full dense APSP matrix (terminal dense solve).
+    Direct(DistMatrix),
+    /// Partitioned solution: exact per-component matrices (post
+    /// injection) plus the exact boundary-boundary matrix dB.
+    Partitioned {
+        level: usize,
+        comp_dist: Vec<DistMatrix>,
+        db: DistMatrix,
+    },
+}
+
+/// Result of a recursive APSP run.
+pub struct ApspSolution<'p> {
+    pub plan: &'p ApspPlan,
+    pub trace: Trace,
+    /// `None` in estimate mode.
+    top: Option<LevelSolution>,
+    /// level-0 vertex -> (component, local index).
+    vert_loc: Vec<(u32, u32)>,
+}
+
+impl<'p> ApspSolution<'p> {
+    /// Exact distance u -> v (functional mode only).
+    pub fn query(&self, u: usize, v: usize) -> f32 {
+        let top = self
+            .top
+            .as_ref()
+            .expect("query requires functional mode (backend = Some)");
+        match top {
+            LevelSolution::Direct(d) => d.get(u, v),
+            LevelSolution::Partitioned {
+                comp_dist, db, ..
+            } => {
+                let (c1, m) = self.vert_loc[u];
+                let (c2, n) = self.vert_loc[v];
+                if c1 == c2 {
+                    return comp_dist[c1 as usize].get(m as usize, n as usize);
+                }
+                let lvl = &self.plan.levels[0];
+                let b1 = lvl.cs.components[c1 as usize].n_boundary;
+                let b2 = lvl.cs.components[c2 as usize].n_boundary;
+                let gs1 = lvl.group_start[c1 as usize];
+                let gs2 = lvl.group_start[c2 as usize];
+                let d1 = &comp_dist[c1 as usize];
+                let d2 = &comp_dist[c2 as usize];
+                let mut best = INF;
+                for i in 0..b1 {
+                    let dmi = d1.get(m as usize, i);
+                    if !(dmi < INF) {
+                        continue;
+                    }
+                    for j in 0..b2 {
+                        let cand = dmi + db.get(gs1 + i, gs2 + j) + d2.get(j, n as usize);
+                        if cand < best {
+                            best = cand;
+                        }
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Materialize the full n x n matrix (functional mode, small n).
+    pub fn materialize_full(&self, backend: &dyn TileBackend) -> DistMatrix {
+        let top = self.top.as_ref().expect("functional mode required");
+        let plan = self.plan;
+        materialize(top, plan, 0, backend)
+    }
+
+    /// Whether numerics were computed.
+    pub fn is_functional(&self) -> bool {
+        self.top.is_some()
+    }
+
+    /// Access the level-0 solution (tests).
+    pub fn top(&self) -> Option<&LevelSolution> {
+        self.top.as_ref()
+    }
+}
+
+/// Options for a solve run.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveOptions {
+    /// Refuse functional runs whose projected peak matrix footprint
+    /// exceeds this many bytes (guards against accidental OGBN-sized
+    /// functional runs). Estimate mode ignores it.
+    pub memory_limit_bytes: u64,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self {
+            memory_limit_bytes: 12 << 30,
+        }
+    }
+}
+
+/// Run recursive partitioned APSP.
+///
+/// `backend = Some(engine)` → functional; `None` → estimate (trace only).
+pub fn solve<'p>(
+    g: &CsrGraph,
+    plan: &'p ApspPlan,
+    backend: Option<&dyn TileBackend>,
+    opts: SolveOptions,
+) -> ApspSolution<'p> {
+    if backend.is_some() {
+        let need = projected_bytes(plan, g);
+        assert!(
+            need <= opts.memory_limit_bytes,
+            "functional solve needs ~{need} bytes of matrices \
+             (> limit {}); use estimate mode",
+            opts.memory_limit_bytes
+        );
+    }
+    let mut ctx = Ctx {
+        g,
+        plan,
+        backend,
+        trace: Trace::default(),
+        d_intra: vec![Vec::new(); plan.depth()],
+    };
+    let top = ctx.solve_level(0);
+    // The paper's dataflow finishes with the level-0 cross-component
+    // merges and the CSR store to FeNAND (Fig. 4a steps 6-7). Those ops
+    // are part of every run's workload even when the caller only queries
+    // (they are what the MP die exists for), so the trace always
+    // includes them; numerics for them run in `materialize_full`.
+    if plan.depth() > 0 {
+        // Final cross-partition merges (dataflow step 7). Note: cross
+        // distances are *computed* (the MP die's workload) but not
+        // persisted — the paper stores intra-component CSR + boundary
+        // matrices (Fig. 4a step 6); the full n^2 cross matrix would
+        // not fit 16 TB FeNAND at OGBN scale (6e12 pairs).
+        ctx.emit_cross_merge_ops(0);
+    } else {
+        // direct solve of the whole graph: store the result
+        let n = plan.final_n as u64;
+        ctx.trace.push(
+            0,
+            Phase::Store,
+            vec![Op::StoreCsr {
+                dense_elems: n * n,
+                csr_bytes: csr_bytes_estimate(n * n),
+            }],
+        );
+    }
+    // vertex -> (comp, local) map for queries
+    let vert_loc = if plan.depth() > 0 {
+        let lvl = &plan.levels[0];
+        let mut loc = vec![(0u32, 0u32); g.n()];
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            for (idx, &v) in c.verts.iter().enumerate() {
+                loc[v as usize] = (ci as u32, idx as u32);
+            }
+        }
+        loc
+    } else {
+        Vec::new()
+    };
+    ApspSolution {
+        plan,
+        trace: ctx.trace,
+        top,
+        vert_loc,
+    }
+}
+
+/// Rough peak matrix footprint for the functional-mode guard.
+fn projected_bytes(plan: &ApspPlan, g: &CsrGraph) -> u64 {
+    let mut total = 0u64;
+    for lvl in &plan.levels {
+        let comp: u64 = lvl
+            .cs
+            .components
+            .iter()
+            .map(|c| (c.n() * c.n() * 4) as u64)
+            .sum();
+        let nb = lvl.n_boundary() as u64;
+        total += comp + nb * nb * 4;
+    }
+    if plan.depth() == 0 {
+        total += (g.n() * g.n() * 4) as u64;
+    }
+    total + (plan.final_n * plan.final_n * 4) as u64
+}
+
+fn csr_bytes_estimate(dense_elems: u64) -> u64 {
+    // the paper stores results compressed; reachable entries dominate —
+    // assume full reachability (worst case): 8 bytes per (col, val)
+    dense_elems * 8
+}
+
+struct Ctx<'a, 'p> {
+    g: &'a CsrGraph,
+    plan: &'p ApspPlan,
+    backend: Option<&'a dyn TileBackend>,
+    trace: Trace,
+    /// Pre-injection intra matrices per level (needed to build the next
+    /// level's dense blocks; functional mode only).
+    d_intra: Vec<Vec<DistMatrix>>,
+}
+
+impl<'a, 'p> Ctx<'a, 'p> {
+    /// Solve the graph at `level` (level == depth → terminal direct solve).
+    fn solve_level(&mut self, level: usize) -> Option<LevelSolution> {
+        let depth = self.plan.depth();
+        if level == depth {
+            return self.solve_terminal(level);
+        }
+        let lvl_n_comp = self.plan.levels[level].n_components();
+        let nb = self.plan.levels[level].n_boundary();
+
+        // ---- Step 1: load + local FW per component
+        let (load_ops, fw_ops) = {
+            let lvl = &self.plan.levels[level];
+            let load = lvl
+                .cs
+                .components
+                .iter()
+                .zip(&lvl.comp_nnz)
+                .filter(|(c, _)| c.n() > 0)
+                .map(|(c, &nnz)| Op::LoadComponent {
+                    n: c.n() as u64,
+                    nnz,
+                })
+                .collect::<Vec<_>>();
+            let fw = lvl
+                .cs
+                .components
+                .iter()
+                .filter(|c| c.n() > 1)
+                .map(|c| Op::TileFw {
+                    n: c.n() as u64,
+                    rerun: false,
+                })
+                .collect::<Vec<_>>();
+            (load, fw)
+        };
+        self.trace.push(level as u32, Phase::Load, load_ops);
+        self.trace.push(level as u32, Phase::LocalFw, fw_ops);
+
+        if self.backend.is_some() {
+            let blocks = self.fill_level_blocks(level);
+            let mut blocks = blocks;
+            self.fw_batch(&mut blocks);
+            self.d_intra[level] = blocks;
+        }
+
+        // ---- Step 2: boundary graph + recursive solve
+        if nb == 0 {
+            // no cross edges at all: components are mutually unreachable
+            let comp_dist = std::mem::take(&mut self.d_intra[level]);
+            let sol = LevelSolution::Partitioned {
+                level,
+                comp_dist,
+                db: DistMatrix::new_inf(0),
+            };
+            return self.backend.is_some().then_some(sol);
+        }
+        {
+            let lvl = &self.plan.levels[level];
+            let gather: u64 = lvl
+                .cs
+                .components
+                .iter()
+                .map(|c| (c.n_boundary * c.n_boundary) as u64)
+                .sum();
+            self.trace.push(
+                level as u32,
+                Phase::BoundaryBuild,
+                vec![Op::BuildBoundary {
+                    nb: nb as u64,
+                    cross_nnz: lvl.next_cross.m() as u64,
+                    gather_elems: gather,
+                }],
+            );
+        }
+        let sub = self.solve_level(level + 1);
+
+        // dB = full APSP matrix of the boundary graph (materialized from
+        // the sub-solution; emits the sub-level's cross-merge ops).
+        self.emit_cross_merge_ops(level + 1);
+        let db = match (&sub, self.backend) {
+            (Some(s), Some(be)) => Some(materialize(s, self.plan, level + 1, be)),
+            _ => None,
+        };
+
+        // ---- Step 3: inject dB + rerun FW
+        let (inject_ops, rerun_ops) = {
+            let lvl = &self.plan.levels[level];
+            let inj = lvl
+                .cs
+                .components
+                .iter()
+                .filter(|c| c.n_boundary > 0)
+                .map(|c| Op::Inject {
+                    n: c.n() as u64,
+                    nb: c.n_boundary as u64,
+                })
+                .collect::<Vec<_>>();
+            let rer = lvl
+                .cs
+                .components
+                .iter()
+                .filter(|c| c.n_boundary > 0 && c.n() > 1)
+                .map(|c| Op::TileFw {
+                    n: c.n() as u64,
+                    rerun: true,
+                })
+                .collect::<Vec<_>>();
+            (inj, rer)
+        };
+        self.trace.push(level as u32, Phase::Inject, inject_ops);
+        self.trace.push(level as u32, Phase::RerunFw, rerun_ops);
+
+        let mut comp_dist = std::mem::take(&mut self.d_intra[level]);
+        if let (Some(db), Some(_)) = (&db, self.backend) {
+            let lvl = &self.plan.levels[level];
+            for (ci, c) in lvl.cs.components.iter().enumerate() {
+                let b = c.n_boundary;
+                if b == 0 {
+                    continue;
+                }
+                let gs = lvl.group_start[ci];
+                let dc = &mut comp_dist[ci];
+                for i in 0..b {
+                    for j in 0..b {
+                        dc.relax(i, j, db.get(gs + i, gs + j));
+                    }
+                }
+            }
+            self.fw_batch(&mut comp_dist);
+        }
+
+        // ---- sync + store this level's results (dataflow 5-6)
+        {
+            let lvl = &self.plan.levels[level];
+            let nb64 = nb as u64;
+            self.trace.push(
+                level as u32,
+                Phase::Sync,
+                vec![Op::SyncBoundary { bytes: nb64 * nb64 * 4 }],
+            );
+            let dense: u64 = lvl
+                .cs
+                .components
+                .iter()
+                .map(|c| (c.n() * c.n()) as u64)
+                .sum();
+            self.trace.push(
+                level as u32,
+                Phase::Store,
+                vec![
+                    Op::StoreCsr {
+                        dense_elems: dense,
+                        csr_bytes: csr_bytes_estimate(dense),
+                    },
+                    Op::StoreDense { bytes: nb64 * nb64 * 4 },
+                ],
+            );
+        }
+
+        self.backend.is_some().then(|| LevelSolution::Partitioned {
+            level,
+            comp_dist,
+            db: db.unwrap_or_else(|| DistMatrix::new_inf(0)),
+        })
+        .or({
+            // estimate mode still needed the comp count bookkeeping above
+            debug_assert!(lvl_n_comp > 0);
+            None
+        })
+    }
+
+    /// Terminal dense solve of the deepest boundary graph.
+    fn solve_terminal(&mut self, level: usize) -> Option<LevelSolution> {
+        let n = self.plan.final_n;
+        if n == 0 {
+            return self
+                .backend
+                .is_some()
+                .then(|| LevelSolution::Direct(DistMatrix::new_inf(0)));
+        }
+        self.trace.push(
+            level as u32,
+            Phase::Load,
+            vec![Op::LoadComponent {
+                n: n as u64,
+                nnz: self.plan.final_nnz,
+            }],
+        );
+        self.trace.push(
+            level as u32,
+            Phase::FinalSolve,
+            vec![Op::TileFw {
+                n: n as u64,
+                rerun: false,
+            }],
+        );
+        if self.backend.is_some() {
+            let mut d = self.fill_terminal_dense(level);
+            // the terminal boundary graph can exceed one tile (random
+            // topologies); compose blocked FW from tile-sized calls,
+            // like the PCM die does
+            super::backend::fw_any(self.backend.unwrap(), &mut d);
+            Some(LevelSolution::Direct(d))
+        } else {
+            None
+        }
+    }
+
+    /// Dense blocks for all components of `level` (functional mode).
+    fn fill_level_blocks(&self, level: usize) -> Vec<DistMatrix> {
+        let lvl = &self.plan.levels[level];
+        let k = lvl.cs.components.len();
+        if level == 0 {
+            threads::par_map(k, |ci| {
+                let c = &lvl.cs.components[ci];
+                fill_block_from_graph(self.g, &c.verts, &lvl.cs.comp_of, ci as u32)
+            })
+        } else {
+            let prev = &self.plan.levels[level - 1];
+            let d_prev = &self.d_intra[level - 1];
+            threads::par_map(k, |ci| {
+                let c = &lvl.cs.components[ci];
+                fill_block_from_boundary(
+                    &prev.next_cross,
+                    prev,
+                    d_prev,
+                    &c.verts,
+                    &lvl.cs.comp_of,
+                    ci as u32,
+                )
+            })
+        }
+    }
+
+    /// Dense matrix for the terminal graph.
+    fn fill_terminal_dense(&self, level: usize) -> DistMatrix {
+        let n = self.plan.final_n;
+        let all: Vec<u32> = (0..n as u32).collect();
+        if level == 0 {
+            // whole original graph in one tile
+            let comp_of = vec![0u32; self.g.n()];
+            fill_block_from_graph(self.g, &all, &comp_of, 0)
+        } else {
+            let prev = &self.plan.levels[level - 1];
+            let d_prev = &self.d_intra[level - 1];
+            let comp_of = vec![0u32; n];
+            fill_block_from_boundary(&prev.next_cross, prev, d_prev, &all, &comp_of, 0)
+        }
+    }
+
+    /// Run FW on many blocks: parallel across blocks with the serial
+    /// kernel when there are enough blocks, else the backend's own
+    /// (internally parallel) FW.
+    fn fw_batch(&self, blocks: &mut [DistMatrix]) {
+        let be = self.backend.unwrap();
+        if blocks.len() >= 2 && be.name() == "native" {
+            let nblocks = blocks.len();
+            let items = std::sync::Mutex::new(blocks.iter_mut().collect::<Vec<_>>());
+            threads::par_for(nblocks, |_| {
+                let item = items.lock().unwrap().pop();
+                if let Some(b) = item {
+                    super::floyd_warshall::fw_rowwise(b);
+                }
+            });
+        } else {
+            for b in blocks.iter_mut() {
+                super::backend::fw_any(be, b);
+            }
+        }
+    }
+
+    /// Emit the aggregated cross-merge + fetch ops for `level`'s graph
+    /// (Algorithm step 4 / dataflow step 7). No numerics.
+    fn emit_cross_merge_ops(&mut self, level: usize) {
+        if level >= self.plan.depth() {
+            return; // terminal level has no cross merges
+        }
+        let lvl = &self.plan.levels[level];
+        let comps = &lvl.cs.components;
+        let k = comps.len();
+        if k < 2 {
+            return;
+        }
+        let nvec: Vec<u64> = comps.iter().map(|c| c.n() as u64).collect();
+        let bvec: Vec<u64> = comps.iter().map(|c| c.n_boundary as u64).collect();
+        let ntot: u64 = nvec.iter().sum();
+        let btot: u64 = bvec.iter().sum();
+        let s_nb: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * b).sum();
+        let s_bn: u64 = s_nb;
+        let s_nn: u64 = nvec.iter().map(|n| n * n).sum();
+        let s_nbb: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * b * b).sum();
+        let s_nbn: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * b * n).sum();
+        // Σ_{c1≠c2} n1*b1*b2 = Σ n1*b1*(B - b1)
+        let stage1: u64 = nvec
+            .iter()
+            .zip(&bvec)
+            .map(|(n, b)| n * b * (btot - b))
+            .sum();
+        // Σ_{c1≠c2} n1*b2*n2 = Σ_c1 n1 * (S - b1*n1), S = Σ b*n
+        let stage2: u64 = nvec
+            .iter()
+            .zip(&bvec)
+            .map(|(n, b)| n * (s_bn - b * n))
+            .sum();
+        let out_elems = ntot * ntot - s_nn;
+        // stage-1 intermediate rows + stage-2 output rows through the
+        // comparator tree
+        let stage1_rows: u64 = nvec
+            .iter()
+            .map(|n| n * (btot - 0)) // n1 rows against each foreign b2 col-block
+            .sum::<u64>()
+            .saturating_sub(s_nb);
+        let rows = stage1_rows + out_elems;
+        let _ = (s_nbb, s_nbn);
+        let pairs = (k * (k - 1)) as u64;
+        let fetch_bytes = btot * btot * 4;
+        self.trace.push(
+            level as u32,
+            Phase::CrossMerge,
+            vec![
+                Op::FetchBoundary { bytes: fetch_bytes },
+                Op::MpMergeAgg {
+                    pairs,
+                    stage1_madds: stage1,
+                    stage2_madds: stage2,
+                    out_elems,
+                    rows,
+                },
+            ],
+        );
+    }
+
+}
+
+/// Fill a dense block for a level-0 component from the weighted graph.
+fn fill_block_from_graph(
+    g: &CsrGraph,
+    verts: &[u32],
+    comp_of: &[u32],
+    ci: u32,
+) -> DistMatrix {
+    let n = verts.len();
+    let mut pos = std::collections::HashMap::with_capacity(n);
+    for (idx, &v) in verts.iter().enumerate() {
+        pos.insert(v, idx as u32);
+    }
+    let mut d = DistMatrix::new_diag0(n);
+    for (i, &v) in verts.iter().enumerate() {
+        for (u, w) in g.neighbors(v as usize) {
+            if comp_of[u] == ci {
+                if let Some(&j) = pos.get(&(u as u32)) {
+                    d.relax(i, j as usize, w);
+                }
+            }
+        }
+    }
+    d
+}
+
+/// Fill a dense block for a level-l (l >= 1) component: vertices are
+/// boundary ids of level l-1; adjacency = virtual d_intra edges within
+/// the same level-(l-1) component plus inherited cross edges.
+fn fill_block_from_boundary(
+    cross: &CsrGraph,
+    prev: &super::plan::PlanLevel,
+    d_prev: &[DistMatrix],
+    verts: &[u32],
+    comp_of: &[u32],
+    ci: u32,
+) -> DistMatrix {
+    let n = verts.len();
+    let mut pos = std::collections::HashMap::with_capacity(n);
+    for (idx, &v) in verts.iter().enumerate() {
+        pos.insert(v, idx as u32);
+    }
+    let mut d = DistMatrix::new_diag0(n);
+    // cross edges within this component
+    for (i, &v) in verts.iter().enumerate() {
+        for (u, w) in cross.neighbors(v as usize) {
+            if comp_of[u] == ci {
+                if let Some(&j) = pos.get(&(u as u32)) {
+                    d.relax(i, j as usize, w);
+                }
+            }
+        }
+    }
+    // virtual d_intra edges: whole groups (prev components' boundary
+    // ranges) lie inside this component by construction
+    let group_of = |bid: usize| -> usize {
+        // binary search the group_start prefix array
+        match prev.group_start.binary_search(&bid) {
+            Ok(g) => {
+                // bid is exactly a group start; skip empty groups
+                let mut g = g;
+                while g + 1 < prev.group_start.len() && prev.group_start[g + 1] == bid {
+                    g += 1;
+                }
+                g
+            }
+            Err(g) => g - 1,
+        }
+    };
+    let mut seen_groups = std::collections::HashSet::new();
+    for &v in verts {
+        let g = group_of(v as usize);
+        if !seen_groups.insert(g) {
+            continue;
+        }
+        let gs = prev.group_start[g];
+        let b = prev.group_start[g + 1] - gs;
+        let dg = &d_prev[g];
+        for bi in 0..b {
+            let i = pos[&((gs + bi) as u32)] as usize;
+            for bj in 0..b {
+                if bi == bj {
+                    continue;
+                }
+                let j = pos[&((gs + bj) as u32)] as usize;
+                d.relax(i, j, dg.get(bi, bj));
+            }
+        }
+    }
+    d
+}
+
+/// Materialize the full matrix of a level solution (Algorithm step 4:
+/// intra entries from the component matrices, cross entries via
+/// two-stage MP merges).
+pub fn materialize(
+    sol: &LevelSolution,
+    plan: &ApspPlan,
+    level: usize,
+    backend: &dyn TileBackend,
+) -> DistMatrix {
+    match sol {
+        LevelSolution::Direct(d) => d.clone(),
+        LevelSolution::Partitioned {
+            comp_dist, db, ..
+        } => {
+            let lvl = &plan.levels[level];
+            let n = lvl.n;
+            let mut out = DistMatrix::new_inf(n);
+            // intra entries
+            for (ci, c) in lvl.cs.components.iter().enumerate() {
+                let dc = &comp_dist[ci];
+                for (i, &u) in c.verts.iter().enumerate() {
+                    let urow = out.row_mut(u as usize);
+                    for (j, &v) in c.verts.iter().enumerate() {
+                        let val = dc.get(i, j);
+                        if val < urow[v as usize] {
+                            urow[v as usize] = val;
+                        }
+                    }
+                }
+            }
+            // cross entries per ordered component pair
+            let k = lvl.cs.components.len();
+            for c1 in 0..k {
+                let comp1 = &lvl.cs.components[c1];
+                let b1 = comp1.n_boundary;
+                if b1 == 0 {
+                    continue;
+                }
+                let n1 = comp1.n();
+                let gs1 = lvl.group_start[c1];
+                // A = D_c1[:, 0..b1] (m x b1)
+                let d1 = &comp_dist[c1];
+                let mut a = vec![INF; n1 * b1];
+                for i in 0..n1 {
+                    a[i * b1..(i + 1) * b1].copy_from_slice(&d1.row(i)[..b1]);
+                }
+                for c2 in 0..k {
+                    if c1 == c2 {
+                        continue;
+                    }
+                    let comp2 = &lvl.cs.components[c2];
+                    let b2 = comp2.n_boundary;
+                    if b2 == 0 {
+                        continue;
+                    }
+                    let n2 = comp2.n();
+                    let gs2 = lvl.group_start[c2];
+                    // DB block (b1 x b2)
+                    let mut dbb = vec![INF; b1 * b2];
+                    for i in 0..b1 {
+                        for j in 0..b2 {
+                            dbb[i * b2 + j] = db.get(gs1 + i, gs2 + j);
+                        }
+                    }
+                    // B = D_c2[0..b2, :] (b2 x n2) — boundary rows
+                    let d2 = &comp_dist[c2];
+                    let mut bmat = vec![INF; b2 * n2];
+                    for j in 0..b2 {
+                        bmat[j * n2..(j + 1) * n2].copy_from_slice(d2.row(j));
+                    }
+                    // two-stage merge
+                    let mut stage1 = vec![INF; n1 * b2];
+                    backend.minplus_into(&mut stage1, &a, &dbb, n1, b1, b2);
+                    let mut strip = vec![INF; n1 * n2];
+                    backend.minplus_into(&mut strip, &stage1, &bmat, n1, b2, n2);
+                    // scatter into out
+                    for (i, &u) in comp1.verts.iter().enumerate() {
+                        let urow = out.row_mut(u as usize);
+                        for (j, &v) in comp2.verts.iter().enumerate() {
+                            let val = strip[i * n2 + j];
+                            if val < urow[v as usize] {
+                                urow[v as usize] = val;
+                            }
+                        }
+                    }
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::backend::NativeBackend;
+    use crate::apsp::plan::{build_plan, PlanOptions};
+    use crate::apsp::{dijkstra, floyd_warshall};
+    use crate::graph::generators::{self, Topology, Weights};
+
+    fn solve_and_check(g: &CsrGraph, tile: usize, seed: u64) {
+        let plan = build_plan(
+            g,
+            PlanOptions {
+                tile_limit: tile,
+                max_depth: usize::MAX,
+                seed,
+            },
+        );
+        let be = NativeBackend;
+        let sol = solve(g, &plan, Some(&be), SolveOptions::default());
+        let oracle = dijkstra::apsp(g);
+        // full materialization matches the oracle
+        let full = sol.materialize_full(&be);
+        let diff = full.max_diff(&oracle);
+        assert!(
+            diff < 1e-3,
+            "materialized diff {diff} (tile {tile}, seed {seed}, depth {})",
+            plan.depth()
+        );
+        // spot queries match too
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xABCD);
+        for _ in 0..200 {
+            let u = rng.gen_range(g.n());
+            let v = rng.gen_range(g.n());
+            let q = sol.query(u, v);
+            let o = oracle.get(u, v);
+            assert!(
+                (q - o).abs() < 1e-3 || (q.is_infinite() && o.is_infinite()),
+                "query({u},{v}) = {q}, oracle {o}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_on_small_nws() {
+        let g = generators::newman_watts_strogatz(150, 3, 0.15, Weights::Uniform(1.0, 5.0), 1);
+        solve_and_check(&g, 32, 1);
+    }
+
+    #[test]
+    fn exact_on_er() {
+        let g = generators::erdos_renyi(120, 500, Weights::Uniform(0.5, 3.0), 2);
+        solve_and_check(&g, 24, 2);
+    }
+
+    #[test]
+    fn exact_on_clustered() {
+        let g = generators::ogbn_proxy(300, 12.0, Weights::Uniform(1.0, 2.0), 3);
+        solve_and_check(&g, 48, 3);
+    }
+
+    #[test]
+    fn exact_on_grid() {
+        let g = generators::grid2d(14, 14, Weights::Uniform(1.0, 4.0), 4);
+        solve_and_check(&g, 40, 4);
+    }
+
+    #[test]
+    fn exact_on_disconnected() {
+        let g = CsrGraph::from_undirected_edges(
+            50,
+            &(0..24u32)
+                .map(|i| (i, i + 1, 1.0f32))
+                .chain((26..49u32).map(|i| (i, i + 1, 2.0)))
+                .collect::<Vec<_>>(),
+        );
+        solve_and_check(&g, 16, 5);
+    }
+
+    #[test]
+    fn exact_with_deep_recursion() {
+        // A chain of cliques has tiny per-component boundary sets (the
+        // bridge endpoints), so the recursion gets several levels even
+        // with a small tile: level-0 components are cliques, level-1
+        // packs many 2-vertex boundary groups per tile.
+        let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+        let cliques = 40u32;
+        let size = 12u32;
+        let mut rng = crate::util::rng::Rng::new(6);
+        for c in 0..cliques {
+            let base = c * size;
+            for i in 0..size {
+                for j in (i + 1)..size {
+                    edges.push((base + i, base + j, rng.gen_f32_range(1.0, 5.0)));
+                }
+            }
+            if c + 1 < cliques {
+                edges.push((base + size - 1, base + size, rng.gen_f32_range(1.0, 5.0)));
+            }
+        }
+        let g = CsrGraph::from_undirected_edges((cliques * size) as usize, &edges);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 16,
+                max_depth: usize::MAX,
+                seed: 6,
+            },
+        );
+        assert!(plan.depth() >= 2, "want depth >= 2, got {}", plan.depth());
+        solve_and_check(&g, 16, 6);
+    }
+
+    #[test]
+    fn direct_when_graph_fits() {
+        let g = generators::complete(20, Weights::Uniform(1.0, 2.0), 7);
+        let plan = build_plan(&g, PlanOptions::default());
+        let be = NativeBackend;
+        let sol = solve(&g, &plan, Some(&be), SolveOptions::default());
+        let mut fw = g.to_dense();
+        floyd_warshall::fw_rowwise(&mut fw);
+        assert_eq!(sol.query(3, 17), fw.get(3, 17));
+        assert_eq!(sol.materialize_full(&be).max_diff(&fw), 0.0);
+    }
+
+    #[test]
+    fn estimate_trace_equals_functional_trace() {
+        for topo in [Topology::Nws, Topology::Er, Topology::OgbnProxy] {
+            let g = generators::generate(topo, 400, 10.0, Weights::Uniform(1.0, 3.0), 8);
+            let plan = build_plan(
+                &g,
+                PlanOptions {
+                    tile_limit: 48,
+                    max_depth: usize::MAX,
+                    seed: 8,
+                },
+            );
+            let be = NativeBackend;
+            let func = solve(&g, &plan, Some(&be), SolveOptions::default());
+            let est = solve(&g, &plan, None, SolveOptions::default());
+            assert_eq!(
+                func.trace, est.trace,
+                "traces must be identical ({})",
+                topo.name()
+            );
+            assert!(!est.is_functional());
+        }
+    }
+
+    #[test]
+    fn trace_has_expected_phases() {
+        let g = generators::newman_watts_strogatz(200, 3, 0.1, Weights::Unit, 9);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 32,
+                max_depth: usize::MAX,
+                seed: 9,
+            },
+        );
+        let est = solve(&g, &plan, None, SolveOptions::default());
+        let counts = est.trace.phase_op_counts();
+        use crate::apsp::trace::Phase::*;
+        for phase in [Load, LocalFw, BoundaryBuild, Inject, RerunFw, CrossMerge, Store] {
+            assert!(
+                counts.contains_key(&phase),
+                "missing phase {phase:?} in trace:\n{}",
+                est.trace.summary()
+            );
+        }
+        assert!(est.trace.total_madds() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "functional solve needs")]
+    fn memory_guard_trips() {
+        let g = generators::newman_watts_strogatz(500, 4, 0.1, Weights::Unit, 10);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 64,
+                max_depth: usize::MAX,
+                seed: 10,
+            },
+        );
+        let be = NativeBackend;
+        let _ = solve(
+            &g,
+            &plan,
+            Some(&be),
+            SolveOptions {
+                memory_limit_bytes: 1024,
+            },
+        );
+    }
+}

@@ -1,0 +1,215 @@
+//! Operation trace: the interface between the APSP algorithm (what work
+//! exists) and the PIM simulator (what it costs).
+//!
+//! Both execution modes — functional (real numerics) and estimate
+//! (cost-only, for OGBN-scale graphs) — walk the same plan and emit the
+//! *identical* trace; the simulator then schedules each step's ops onto
+//! the modeled hardware (DESIGN.md "Execution modes").
+//!
+//! Ops within a [`Step`] are independent and may run in parallel across
+//! tiles; steps are sequential (each step consumes the previous one's
+//! results, mirroring Algorithm 2's level-by-level structure).
+
+/// Dataflow phase (paper Fig. 4a steps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// (1) CSR stream-in + densify into PCM compute region
+    Load,
+    /// (2) intra-component FW on the PCM-FW die
+    LocalFw,
+    /// (3i) boundary extraction + boundary-graph assembly in HBM3
+    BoundaryBuild,
+    /// dB injection back into component tiles
+    Inject,
+    /// boundary-aware FW rerun (Algorithm 1 step 3)
+    RerunFw,
+    /// (4)(7) cross-partition MP merges on the PCM-MP die
+    CrossMerge,
+    /// (5) boundary synchronization across partitions in HBM3
+    Sync,
+    /// (6) CSR compression + FeNAND program
+    Store,
+    /// terminal dense solve of the last boundary graph
+    FinalSolve,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Load => "load",
+            Phase::LocalFw => "local_fw",
+            Phase::BoundaryBuild => "boundary_build",
+            Phase::Inject => "inject",
+            Phase::RerunFw => "rerun_fw",
+            Phase::CrossMerge => "cross_merge",
+            Phase::Sync => "sync",
+            Phase::Store => "store",
+            Phase::FinalSolve => "final_solve",
+        }
+    }
+}
+
+/// One hardware operation with the sizes the cost model needs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Stream one component's CSR in and densify (logic-die stream
+    /// engine + PCM write of the n x n block).
+    LoadComponent { n: u64, nnz: u64 },
+    /// One full FW pass over an n x n block on a PCM-FW tile
+    /// (n pivots x (bit-serial add + min + permutation)).
+    TileFw { n: u64, rerun: bool },
+    /// Assemble the boundary graph in HBM3: `nb` vertices, `cross_nnz`
+    /// cross edges, plus gathering the per-component boundary blocks
+    /// (`gather_elems` distance values).
+    BuildBoundary {
+        nb: u64,
+        cross_nnz: u64,
+        gather_elems: u64,
+    },
+    /// Copy the dB rows/cols for one component back into its tile
+    /// (HBM3 -> UCIe -> PCM write of nb^2 values, min-merged).
+    Inject { n: u64, nb: u64 },
+    /// Aggregated cross-component MP merges (two-stage, Fig. 6d).
+    /// `pairs` strips totalling `stage1_madds + stage2_madds` min-add
+    /// candidates and `out_elems` result entries. `rows` = total
+    /// 1024-way comparator-tree reductions.
+    MpMergeAgg {
+        pairs: u64,
+        stage1_madds: u64,
+        stage2_madds: u64,
+        out_elems: u64,
+        rows: u64,
+    },
+    /// HBM3 boundary synchronization traffic.
+    SyncBoundary { bytes: u64 },
+    /// Compress to CSR on the logic die and program FeNAND.
+    StoreCsr { dense_elems: u64, csr_bytes: u64 },
+    /// Store a dense matrix to FeNAND (boundary matrices, step 6i).
+    StoreDense { bytes: u64 },
+    /// Fetch interleaved boundary matrices from FeNAND (step 7).
+    FetchBoundary { bytes: u64 },
+}
+
+impl Op {
+    /// Upper-bound FLOP-equivalents (min-add candidate evaluations) —
+    /// used for roofline reporting, not costing.
+    pub fn madds(&self) -> u64 {
+        match self {
+            Op::TileFw { n, .. } => n * n * n,
+            Op::MpMergeAgg {
+                stage1_madds,
+                stage2_madds,
+                ..
+            } => stage1_madds + stage2_madds,
+            _ => 0,
+        }
+    }
+}
+
+/// A group of independent ops at one recursion level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Step {
+    pub level: u32,
+    pub phase: Phase,
+    pub ops: Vec<Op>,
+}
+
+/// The full trace of one APSP run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub steps: Vec<Step>,
+}
+
+impl Trace {
+    pub fn push(&mut self, level: u32, phase: Phase, ops: Vec<Op>) {
+        if !ops.is_empty() {
+            self.steps.push(Step { level, phase, ops });
+        }
+    }
+
+    /// Total min-add candidates across the trace.
+    pub fn total_madds(&self) -> u64 {
+        self.steps
+            .iter()
+            .flat_map(|s| s.ops.iter())
+            .map(|o| o.madds())
+            .sum()
+    }
+
+    /// Count of ops of each phase (test/report helper).
+    pub fn phase_op_counts(&self) -> std::collections::HashMap<Phase, usize> {
+        let mut m = std::collections::HashMap::new();
+        for s in &self.steps {
+            *m.entry(s.phase).or_insert(0) += s.ops.len();
+        }
+        m
+    }
+
+    /// Deepest recursion level seen.
+    pub fn max_level(&self) -> u32 {
+        self.steps.iter().map(|s| s.level).max().unwrap_or(0)
+    }
+
+    /// Human-readable one-line-per-step summary.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for s in &self.steps {
+            out.push_str(&format!(
+                "L{} {:15} x{}\n",
+                s.level,
+                s.phase.name(),
+                s.ops.len()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_skips_empty() {
+        let mut t = Trace::default();
+        t.push(0, Phase::Load, vec![]);
+        assert!(t.steps.is_empty());
+        t.push(0, Phase::Load, vec![Op::LoadComponent { n: 8, nnz: 10 }]);
+        assert_eq!(t.steps.len(), 1);
+    }
+
+    #[test]
+    fn madds_accounting() {
+        let mut t = Trace::default();
+        t.push(0, Phase::LocalFw, vec![Op::TileFw { n: 10, rerun: false }]);
+        t.push(
+            0,
+            Phase::CrossMerge,
+            vec![Op::MpMergeAgg {
+                pairs: 2,
+                stage1_madds: 100,
+                stage2_madds: 200,
+                out_elems: 50,
+                rows: 5,
+            }],
+        );
+        assert_eq!(t.total_madds(), 1000 + 300);
+    }
+
+    #[test]
+    fn phase_counts() {
+        let mut t = Trace::default();
+        t.push(
+            0,
+            Phase::LocalFw,
+            vec![
+                Op::TileFw { n: 4, rerun: false },
+                Op::TileFw { n: 5, rerun: false },
+            ],
+        );
+        t.push(1, Phase::LocalFw, vec![Op::TileFw { n: 6, rerun: false }]);
+        let c = t.phase_op_counts();
+        assert_eq!(c[&Phase::LocalFw], 3);
+        assert_eq!(t.max_level(), 1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-implementation validation: every APSP path in the crate can be
+//! checked against repeated Dijkstra, either exhaustively (full matrix)
+//! or by sampling (scalable).
+
+use super::dijkstra;
+use super::recursive::ApspSolution;
+use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
+use crate::util::rng::Rng;
+
+/// Result of a validation pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Validation {
+    pub checked: usize,
+    pub max_abs_err: f32,
+    pub mismatches: usize,
+}
+
+impl Validation {
+    pub fn ok(&self, tol: f32) -> bool {
+        self.mismatches == 0 && self.max_abs_err <= tol
+    }
+}
+
+/// Exhaustive check of a full matrix against the Dijkstra oracle.
+pub fn validate_full(g: &CsrGraph, got: &DistMatrix, tol: f32) -> Validation {
+    let oracle = dijkstra::apsp(g);
+    let n = g.n();
+    let mut max_err = 0f32;
+    let mut mismatches = 0usize;
+    for i in 0..n {
+        for j in 0..n {
+            let a = got.get(i, j);
+            let b = oracle.get(i, j);
+            match (a.is_finite(), b.is_finite()) {
+                (true, true) => {
+                    let e = (a - b).abs();
+                    if e > max_err {
+                        max_err = e;
+                    }
+                    if e > tol {
+                        mismatches += 1;
+                    }
+                }
+                (false, false) => {}
+                _ => mismatches += 1,
+            }
+        }
+    }
+    Validation {
+        checked: n * n,
+        max_abs_err: max_err,
+        mismatches,
+    }
+}
+
+/// Sampled validation of a recursive solution: `sources` random rows are
+/// solved with Dijkstra and compared against `sol.query` on `cols_per`
+/// random columns each. Scales to any graph the solver handles.
+pub fn validate_sampled(
+    g: &CsrGraph,
+    sol: &ApspSolution,
+    sources: usize,
+    cols_per: usize,
+    tol: f32,
+    seed: u64,
+) -> Validation {
+    let n = g.n();
+    let mut rng = Rng::new(seed);
+    let srcs: Vec<usize> = (0..sources.min(n)).map(|_| rng.gen_range(n)).collect();
+    let rows = dijkstra::sampled_rows(g, &srcs);
+    let mut max_err = 0f32;
+    let mut mismatches = 0usize;
+    let mut checked = 0usize;
+    for (si, &src) in srcs.iter().enumerate() {
+        for _ in 0..cols_per.min(n) {
+            let v = rng.gen_range(n);
+            let got = sol.query(src, v);
+            let want = rows[si][v];
+            checked += 1;
+            match (got.is_finite(), want.is_finite()) {
+                (true, true) => {
+                    let e = (got - want).abs();
+                    if e > max_err {
+                        max_err = e;
+                    }
+                    if e > tol {
+                        mismatches += 1;
+                    }
+                }
+                (false, false) => {}
+                _ => mismatches += 1,
+            }
+        }
+    }
+    Validation {
+        checked,
+        max_abs_err: max_err,
+        mismatches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::backend::NativeBackend;
+    use crate::apsp::plan::{build_plan, PlanOptions};
+    use crate::apsp::recursive::{solve, SolveOptions};
+    use crate::apsp::{floyd_warshall, partitioned};
+    use crate::graph::generators::{self, Weights};
+
+    #[test]
+    fn full_validation_passes_for_fw() {
+        let g = generators::newman_watts_strogatz(100, 3, 0.1, Weights::Uniform(1.0, 4.0), 1);
+        let mut d = g.to_dense();
+        floyd_warshall::fw_parallel(&mut d);
+        let v = validate_full(&g, &d, 1e-3);
+        assert!(v.ok(1e-3), "{v:?}");
+        assert_eq!(v.checked, 100 * 100);
+    }
+
+    #[test]
+    fn full_validation_catches_corruption() {
+        let g = generators::newman_watts_strogatz(60, 3, 0.1, Weights::Uniform(1.0, 4.0), 2);
+        let mut d = g.to_dense();
+        floyd_warshall::fw_parallel(&mut d);
+        d.set(3, 7, d.get(3, 7) * 0.5); // corrupt one entry
+        let v = validate_full(&g, &d, 1e-3);
+        assert!(!v.ok(1e-3));
+        assert!(v.mismatches >= 1);
+    }
+
+    #[test]
+    fn sampled_validation_passes_for_recursive() {
+        let g = generators::ogbn_proxy(400, 10.0, Weights::Uniform(1.0, 3.0), 3);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 64,
+                max_depth: usize::MAX,
+                seed: 3,
+            },
+        );
+        let be = NativeBackend;
+        let sol = solve(&g, &plan, Some(&be), SolveOptions::default());
+        let v = validate_sampled(&g, &sol, 20, 30, 1e-3, 99);
+        assert!(v.ok(1e-3), "{v:?}");
+        assert!(v.checked >= 400);
+    }
+
+    #[test]
+    fn partitioned_and_recursive_agree() {
+        let g = generators::newman_watts_strogatz(180, 3, 0.12, Weights::Uniform(1.0, 6.0), 4);
+        let alg1 = partitioned::partitioned_apsp(&g, 32, 4);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 32,
+                max_depth: usize::MAX,
+                seed: 4,
+            },
+        );
+        let be = NativeBackend;
+        let sol = solve(&g, &plan, Some(&be), SolveOptions::default());
+        let alg2 = sol.materialize_full(&be);
+        assert!(alg1.max_diff(&alg2) < 1e-3);
+    }
+}

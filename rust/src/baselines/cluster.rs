@@ -1,0 +1,87 @@
+//! Distributed GPU-cluster baselines, anchored to their published
+//! results exactly as the paper does ("On OGBN-products ... we estimate
+//! their performance from reported scaling trends", §IV-C2):
+//!
+//! * **Partitioned APSP** (Djidjev et al. [10]): "computes APSP for a
+//!   2M-vertex graph in approximately 30 minutes but requires 128 GPUs".
+//! * **Co-Parallel FW** (Sao et al. [11]): "achieves 8.1 PFLOP/s but
+//!   requires complex coordination among 4,608 GPUs", with "only 45%
+//!   weak-scaling efficiency on a 300K-node graph".
+
+use super::CostPoint;
+
+/// Per-GPU board power assumed for the clusters (V100-class parts in
+/// both papers' testbeds).
+const CLUSTER_GPU_W: f64 = 300.0;
+/// Non-GPU cluster overhead (CPUs, NICs, switches) per GPU.
+const CLUSTER_OVERHEAD_W: f64 = 100.0;
+
+/// Partitioned APSP [10]: anchored at (2M vertices, 1800 s, 128 GPUs);
+/// work scales ~n^3 with the boundary-dominated constant, and the
+/// inter-GPU synchronization keeps scaling superlinear past the anchor.
+pub fn partitioned_apsp(n: usize) -> CostPoint {
+    let anchor_n = 2.0e6;
+    let anchor_t = 1800.0;
+    let gpus = 128.0;
+    let x = n as f64 / anchor_n;
+    // n^3 work on fixed hardware, mildly relieved by better locality on
+    // smaller graphs (communication fraction shrinks): exponent 2.7
+    let seconds = anchor_t * x.powf(2.7);
+    CostPoint {
+        seconds,
+        joules: seconds * gpus * (CLUSTER_GPU_W + CLUSTER_OVERHEAD_W),
+    }
+}
+
+/// Co-Parallel FW [11]: sustained 8.1 PFLOP/s across 4,608 GPUs at 45%
+/// weak-scaling efficiency; FW needs 2 n^3 FLOPs.
+pub fn co_parallel_fw(n: usize) -> CostPoint {
+    let gpus = 4608.0;
+    let sustained = 8.1e15;
+    let n = n as f64;
+    // the sustained figure already includes their scaling losses at the
+    // reported size; smaller graphs cannot use the full machine
+    // (communication floor), modeled as a fixed 2 s launch/sync floor
+    let seconds = (2.0 * n * n * n / sustained) + 2.0;
+    CostPoint {
+        seconds,
+        joules: seconds * gpus * (CLUSTER_GPU_W + CLUSTER_OVERHEAD_W),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitioned_anchor_reproduced() {
+        let c = partitioned_apsp(2_000_000);
+        assert!((c.seconds - 1800.0).abs() < 1.0);
+        // 128 GPUs x 400 W x 30 min ≈ 92 MJ
+        assert!(c.joules > 5e7 && c.joules < 2e8, "{}", c.joules);
+    }
+
+    #[test]
+    fn co_parallel_fw_at_ogbn_scale() {
+        // 2.45M vertices: 2 * n^3 / 8.1 PFLOP/s ≈ 3630 s ≈ 1 h
+        let c = co_parallel_fw(2_449_029);
+        assert!(c.seconds > 3000.0 && c.seconds < 5000.0, "{}", c.seconds);
+    }
+
+    #[test]
+    fn both_monotone_in_n() {
+        for f in [partitioned_apsp as fn(usize) -> CostPoint, co_parallel_fw] {
+            let a = f(100_000);
+            let b = f(1_000_000);
+            assert!(b.seconds > a.seconds);
+            assert!(b.joules > a.joules);
+        }
+    }
+
+    #[test]
+    fn cluster_energy_dwarfs_single_gpu() {
+        let cluster = partitioned_apsp(2_000_000);
+        let single = super::super::gpu::h100().cost(100_000);
+        assert!(cluster.joules > single.joules);
+    }
+}

@@ -1,0 +1,156 @@
+//! Single-GPU analytic baselines: NVIDIA A100-SXM4 (80 GB) and the
+//! paper's "Estimated GPU H100 [35]".
+//!
+//! Blocked Floyd–Warshall on a GPU is bound by whichever is slower:
+//! CUDA-core min-add throughput (FW's `min(a, b+c)` cannot use tensor
+//! cores) or HBM traffic (each pivot panel sweep re-touches the O(n^2)
+//! matrix once it exceeds L2, the paper's Fig. 9(e) argument). The model
+//! is the max of those two rooflines with published part constants
+//! [35], plus a fixed kernel-efficiency factor for real-world blocked-FW
+//! implementations (Katz–Kider-style) on these parts.
+
+use super::CostPoint;
+
+/// GPU part constants.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    pub name: &'static str,
+    /// FP32 CUDA-core peak (FLOP/s); a min-add counts as 2 FLOPs.
+    pub fp32_flops: f64,
+    /// HBM bandwidth (bytes/s).
+    pub hbm_bytes_per_s: f64,
+    /// L2 cache (bytes): below this the matrix stays on-chip.
+    pub l2_bytes: f64,
+    /// Board power under load (W).
+    pub power_w: f64,
+    /// Achieved fraction of the compute roofline for blocked FW kernels.
+    pub efficiency: f64,
+    /// Effective HBM bytes touched per matrix entry per pivot sweep
+    /// (panel-cached tiled kernels re-read the block once: ~4 B).
+    pub bytes_per_entry: f64,
+    /// Achieved fraction of HBM bandwidth.
+    pub mem_efficiency: f64,
+    /// Kernel-launch/sync overhead per block round (s).
+    pub launch_s: f64,
+    /// Device memory (bytes) — FW needs 4 n^2; beyond this the workload
+    /// spills to host over PCIe and slows dramatically.
+    pub mem_bytes: f64,
+    /// Host<->device link (bytes/s) once spilled.
+    pub pcie_bytes_per_s: f64,
+}
+
+/// A100-SXM4-80GB: 19.5 TFLOP/s fp32, 2.04 TB/s HBM2e, 40 MB L2, 400 W.
+pub fn a100() -> GpuModel {
+    GpuModel {
+        name: "A100",
+        fp32_flops: 19.5e12,
+        hbm_bytes_per_s: 2.04e12,
+        l2_bytes: 40e6,
+        power_w: 400.0,
+        efficiency: 0.35,
+        bytes_per_entry: 4.0,
+        mem_efficiency: 0.7,
+        launch_s: 5e-6,
+        mem_bytes: 80e9,
+        pcie_bytes_per_s: 25e9,
+    }
+}
+
+/// H100-SXM5-80GB: 66.9 TFLOP/s fp32, 3.35 TB/s HBM3, 50 MB L2, 700 W
+/// (the paper cites up to 700 W peak [35]).
+pub fn h100() -> GpuModel {
+    GpuModel {
+        name: "H100",
+        fp32_flops: 66.9e12,
+        hbm_bytes_per_s: 3.35e12,
+        l2_bytes: 50e6,
+        power_w: 700.0,
+        efficiency: 0.35,
+        bytes_per_entry: 4.0,
+        mem_efficiency: 0.7,
+        launch_s: 5e-6,
+        mem_bytes: 80e9,
+        pcie_bytes_per_s: 50e9,
+    }
+}
+
+impl GpuModel {
+    /// Exact-APSP (blocked FW) cost at n vertices.
+    pub fn cost(&self, n: usize) -> CostPoint {
+        let n = n as f64;
+        let madds = n * n * n;
+        // compute roofline: 2 FLOPs per min-add on CUDA cores
+        let t_compute = 2.0 * madds / (self.fp32_flops * self.efficiency);
+        // memory roofline: per pivot sweep, the blocked kernel re-streams
+        // the matrix once it no longer fits in L2
+        let bytes = 4.0 * n * n;
+        let t_mem = if bytes <= self.l2_bytes {
+            0.0
+        } else {
+            n * self.bytes_per_entry * n * n
+                / (self.hbm_bytes_per_s * self.mem_efficiency)
+        };
+        // kernel-launch floor: blocked FW issues ~3 kernels per 32-wide
+        // block round (diagonal, panels, update)
+        let t_launch = 3.0 * (n / 32.0) * self.launch_s;
+        // capacity wall: spilled tiles cross PCIe each pivot sweep
+        let t_spill = if bytes > self.mem_bytes {
+            let excess = bytes - self.mem_bytes;
+            n * excess / self.pcie_bytes_per_s
+        } else {
+            0.0
+        };
+        let seconds = t_compute.max(t_mem) + t_launch + t_spill;
+        CostPoint {
+            seconds,
+            joules: seconds * self.power_w,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_faster_than_a100() {
+        for n in [1024usize, 32768, 262144] {
+            assert!(h100().cost(n).seconds < a100().cost(n).seconds, "n={n}");
+        }
+    }
+
+    #[test]
+    fn small_graphs_compute_bound_large_memory_bound() {
+        let g = h100();
+        // at n=1024 (4 MB matrix < 50 MB L2) memory term is zero:
+        // compute + launch floor only
+        let t1 = g.cost(1024).seconds;
+        let expect = 2.0 * 1024f64.powi(3) / (g.fp32_flops * g.efficiency)
+            + 3.0 * 32.0 * g.launch_s;
+        assert!((t1 - expect).abs() / expect < 1e-9, "{t1} vs {expect}");
+        // at n=32768 (4.3 GB) the memory roofline dominates
+        let n = 32768f64;
+        let t2 = g.cost(32768).seconds;
+        let mem = n * g.bytes_per_entry * n * n / (g.hbm_bytes_per_s * g.mem_efficiency);
+        assert!(t2 >= mem * 0.99, "t2={t2} mem={mem}");
+    }
+
+    #[test]
+    fn superlinear_energy_growth_past_cache() {
+        // Fig. 9(e): H100 energy grows superlinearly beyond ~10^3 nodes
+        let g = h100();
+        let e1 = g.cost(1024).joules;
+        let e2 = g.cost(8192).joules;
+        let ratio = e2 / e1;
+        assert!(ratio > 512.0, "energy ratio {ratio} should exceed n^3 512");
+    }
+
+    #[test]
+    fn capacity_wall_kicks_in() {
+        let g = h100();
+        // 80 GB / 4 bytes => n ~ 141k; beyond that the PCIe term appears
+        let below = g.cost(140_000);
+        let above = g.cost(200_000);
+        assert!(above.seconds > 3.0 * below.seconds);
+    }
+}

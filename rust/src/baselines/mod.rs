@@ -1,0 +1,54 @@
+//! Baseline cost models — every comparator in the paper's §IV:
+//!
+//! * [`cpu`] — Intel i7-11700K: *measured* on this host via the native
+//!   FW kernel, then scaled to the paper's part.
+//! * [`gpu`] — NVIDIA A100 / H100 analytic roofline for blocked FW.
+//! * [`cluster`] — Partitioned APSP [10] and Co-Parallel FW [11] GPU
+//!   clusters, anchored to their published results ("we estimate their
+//!   performance from reported scaling trends" — paper §IV-C).
+//! * [`pim`] — PIM-APSP: the Temporal-State-Machine SSSP engine [16]
+//!   repeated n times, the paper's PIM comparison point.
+//!
+//! All models return a [`CostPoint`] (seconds, joules) for an
+//! (n, avg_degree) workload so figures can mix measured and modeled
+//! systems uniformly.
+
+pub mod cluster;
+pub mod cpu;
+pub mod gpu;
+pub mod pim;
+
+/// One (time, energy) prediction for a workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostPoint {
+    pub seconds: f64,
+    pub joules: f64,
+}
+
+impl CostPoint {
+    pub fn speedup_vs(&self, other: &CostPoint) -> f64 {
+        other.seconds / self.seconds
+    }
+    pub fn energy_eff_vs(&self, other: &CostPoint) -> f64 {
+        other.joules / self.joules
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_helpers() {
+        let a = CostPoint {
+            seconds: 1.0,
+            joules: 10.0,
+        };
+        let b = CostPoint {
+            seconds: 5.0,
+            joules: 100.0,
+        };
+        assert_eq!(a.speedup_vs(&b), 5.0);
+        assert_eq!(a.energy_eff_vs(&b), 10.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmark harness: workload definitions and figure/table generators.
+//!
+//! Each `benches/*.rs` binary is a thin wrapper that calls one generator
+//! here and prints its tables — keeping every paper figure regenerable
+//! from both `cargo bench` and the library API (and testable from unit
+//! tests).
+
+pub mod figures;
+pub mod workload;

@@ -1,0 +1,73 @@
+//! Workload definitions shared by the figure generators.
+
+use crate::graph::csr::CsrGraph;
+use crate::graph::generators::{self, Topology, Weights};
+
+/// The paper's evaluation degree (OGBN-Products average, Fig. 9 caption).
+pub const PAPER_DEGREE: f64 = 25.25;
+
+/// OGBN-Products published size.
+pub const OGBN_N: usize = generators::OGBN_PRODUCTS_N;
+
+/// A named graph workload.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub topo: Topology,
+    pub n: usize,
+    pub degree: f64,
+    pub seed: u64,
+}
+
+impl Workload {
+    pub fn nws(n: usize, seed: u64) -> Self {
+        Self {
+            topo: Topology::Nws,
+            n,
+            degree: PAPER_DEGREE,
+            seed,
+        }
+    }
+
+    pub fn ogbn_proxy_at(n: usize, seed: u64) -> Self {
+        Self {
+            topo: Topology::OgbnProxy,
+            n,
+            degree: PAPER_DEGREE,
+            seed,
+        }
+    }
+
+    pub fn generate(&self) -> CsrGraph {
+        generators::generate(self.topo, self.n, self.degree, Weights::Uniform(1.0, 8.0), self.seed)
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} n={} deg={}",
+            self.topo.name(),
+            crate::util::table::fmt_count(self.n),
+            self.degree
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workloads_generate_expected_sizes() {
+        let w = Workload::nws(1000, 1);
+        let g = w.generate();
+        assert_eq!(g.n(), 1000);
+        let d = g.avg_degree();
+        assert!(d > 18.0 && d < 32.0, "degree {d}");
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        let w = Workload::ogbn_proxy_at(OGBN_N, 2);
+        assert!(w.label().contains("OGBN-proxy"));
+        assert!(w.label().contains("2.45M"));
+    }
+}

@@ -1,0 +1,208 @@
+//! System configuration: hardware model + algorithm knobs + run mode,
+//! loadable from a TOML-subset config file with CLI overrides.
+
+use crate::sim::params::HwParams;
+use crate::util::cli::Args;
+use crate::util::config::ConfigFile;
+
+/// Execution mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Real numerics through a tile backend, validated against Dijkstra.
+    Functional,
+    /// Cost model only (scales to OGBN-Products).
+    Estimate,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "functional" | "func" => Some(Mode::Functional),
+            "estimate" | "est" => Some(Mode::Estimate),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Functional => "functional",
+            Mode::Estimate => "estimate",
+        }
+    }
+}
+
+/// Which tile compute engine executes FW/MP numerics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Multithreaded rust kernels.
+    Native,
+    /// AOT JAX/Pallas HLO artifacts through PJRT.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "rust" => Some(BackendKind::Native),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub hw: HwParams,
+    /// Max vertices per PIM tile (paper: 1024).
+    pub tile_limit: usize,
+    /// Recursion depth cap (usize::MAX = Algorithm 2; 1 = Algorithm 1).
+    pub max_depth: usize,
+    pub seed: u64,
+    pub mode: Mode,
+    pub backend: BackendKind,
+    /// Sampled-validation effort (sources x cols); 0 disables.
+    pub validate_sources: usize,
+    pub validate_cols: usize,
+    /// Functional-mode matrix memory guard.
+    pub memory_limit_bytes: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            hw: HwParams::default(),
+            tile_limit: crate::TILE_LIMIT,
+            max_depth: usize::MAX,
+            seed: 0x5241_5049,
+            mode: Mode::Functional,
+            backend: BackendKind::Native,
+            validate_sources: 16,
+            validate_cols: 64,
+            memory_limit_bytes: 12 << 30,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Load from a config file (all keys optional).
+    pub fn from_file(cf: &ConfigFile) -> Self {
+        let mut c = Self::default();
+        c.apply_file(cf);
+        c
+    }
+
+    pub fn apply_file(&mut self, cf: &ConfigFile) {
+        self.tile_limit = cf.get_usize("algo.tile_limit", self.tile_limit);
+        self.max_depth = cf.get_usize("algo.max_depth", self.max_depth);
+        self.seed = cf.get_usize("algo.seed", self.seed as usize) as u64;
+        if let Some(m) = cf.get("run.mode").and_then(Mode::parse) {
+            self.mode = m;
+        }
+        if let Some(b) = cf.get("run.backend").and_then(BackendKind::parse) {
+            self.backend = b;
+        }
+        self.validate_sources = cf.get_usize("run.validate_sources", self.validate_sources);
+        self.validate_cols = cf.get_usize("run.validate_cols", self.validate_cols);
+        // hardware overrides
+        let hw = &mut self.hw;
+        hw.tiles_per_die = cf.get_usize("hardware.tiles_per_die", hw.tiles_per_die);
+        hw.units_per_tile = cf.get_usize("hardware.units_per_tile", hw.units_per_tile);
+        hw.clock_hz = cf.get_f64("hardware.clock_ghz", hw.clock_hz / 1e9) * 1e9;
+        hw.prefetch = cf.get_bool("hardware.prefetch", hw.prefetch);
+        hw.permutation_unit = cf.get_bool("hardware.permutation_unit", hw.permutation_unit);
+        hw.comparator_tree = cf.get_bool("hardware.comparator_tree", hw.comparator_tree);
+    }
+
+    /// Apply CLI overrides (`--tile`, `--mode`, `--backend`, `--seed`,
+    /// `--max-depth`, `--no-prefetch`, ...).
+    pub fn apply_args(&mut self, args: &Args) {
+        self.tile_limit = args.get_usize("tile", self.tile_limit);
+        self.max_depth = args.get_usize("max-depth", self.max_depth);
+        self.seed = args.get_u64("seed", self.seed);
+        if let Some(m) = args.get("mode").and_then(Mode::parse) {
+            self.mode = m;
+        }
+        if let Some(b) = args.get("backend").and_then(BackendKind::parse) {
+            self.backend = b;
+        }
+        if args.flag("no-prefetch") {
+            self.hw.prefetch = false;
+        }
+        if args.flag("no-permutation-unit") {
+            self.hw.permutation_unit = false;
+        }
+        if args.flag("no-comparator-tree") {
+            self.hw.comparator_tree = false;
+        }
+        if args.flag("no-validate") {
+            self.validate_sources = 0;
+        }
+    }
+
+    pub fn plan_options(&self) -> crate::apsp::plan::PlanOptions {
+        crate::apsp::plan::PlanOptions {
+            tile_limit: self.tile_limit,
+            max_depth: self.max_depth,
+            seed: self.seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_config() {
+        let c = SystemConfig::default();
+        assert_eq!(c.tile_limit, 1024);
+        assert_eq!(c.mode, Mode::Functional);
+        assert_eq!(c.backend, BackendKind::Native);
+        assert!(c.hw.prefetch);
+    }
+
+    #[test]
+    fn file_overrides() {
+        let cf = ConfigFile::parse(
+            "[algo]\ntile_limit = 256\nmax_depth = 1\n[run]\nmode = \"estimate\"\n\
+             [hardware]\ntiles_per_die = 60\nprefetch = false",
+        )
+        .unwrap();
+        let c = SystemConfig::from_file(&cf);
+        assert_eq!(c.tile_limit, 256);
+        assert_eq!(c.max_depth, 1);
+        assert_eq!(c.mode, Mode::Estimate);
+        assert_eq!(c.hw.tiles_per_die, 60);
+        assert!(!c.hw.prefetch);
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let cf = ConfigFile::parse("[algo]\ntile_limit = 256").unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        let args = crate::util::cli::Args::parse(
+            ["--tile", "128", "--mode", "estimate", "--no-prefetch"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.tile_limit, 128);
+        assert_eq!(c.mode, Mode::Estimate);
+        assert!(!c.hw.prefetch);
+    }
+
+    #[test]
+    fn mode_backend_parsing() {
+        assert_eq!(Mode::parse("FUNCTIONAL"), Some(Mode::Functional));
+        assert_eq!(Mode::parse("est"), Some(Mode::Estimate));
+        assert_eq!(Mode::parse("x"), None);
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+    }
+}

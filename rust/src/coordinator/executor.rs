@@ -1,0 +1,206 @@
+//! End-to-end orchestration: partition → recursive APSP → PIM
+//! simulation → validation. One `Executor::run` call is one experiment.
+
+use super::config::{BackendKind, Mode, SystemConfig};
+use crate::apsp::backend::{NativeBackend, TileBackend};
+use crate::apsp::plan::{build_plan, ApspPlan};
+use crate::apsp::recursive::{solve, ApspSolution, SolveOptions};
+use crate::apsp::validate::{validate_sampled, Validation};
+use crate::graph::csr::CsrGraph;
+use crate::runtime::{PjrtBackend, PjrtRuntime};
+use crate::sim::engine::{simulate, SimReport};
+use anyhow::Result;
+
+/// Everything one run produces.
+pub struct RunResult {
+    /// Modeled hardware time/energy.
+    pub sim: SimReport,
+    /// Recursion structure statistics.
+    pub depth: usize,
+    pub boundary_sizes: Vec<usize>,
+    pub final_n: usize,
+    pub components_l0: usize,
+    /// Host wall time spent computing numerics (functional mode).
+    pub host_solve_seconds: f64,
+    /// Sampled exactness validation (functional mode with validation on).
+    pub validation: Option<Validation>,
+    /// Which backend executed the numerics.
+    pub backend_name: &'static str,
+    pub mode: Mode,
+    pub graph_n: usize,
+    pub graph_m: usize,
+}
+
+impl RunResult {
+    /// Total modeled speedup measure used by the figures: modeled
+    /// seconds on RAPID-Graph hardware.
+    pub fn rapid_seconds(&self) -> f64 {
+        self.sim.seconds
+    }
+    pub fn rapid_joules(&self) -> f64 {
+        self.sim.joules
+    }
+}
+
+/// The coordinator entry point.
+pub struct Executor {
+    pub config: SystemConfig,
+    pjrt: Option<PjrtRuntime>,
+}
+
+impl Executor {
+    pub fn new(config: SystemConfig) -> Result<Self> {
+        let pjrt = match (config.mode, config.backend) {
+            (Mode::Functional, BackendKind::Pjrt) => Some(PjrtRuntime::load_default()?),
+            _ => None,
+        };
+        Ok(Self { config, pjrt })
+    }
+
+    /// Build the recursion plan for a graph (exposed for benches).
+    pub fn plan(&self, g: &CsrGraph) -> ApspPlan {
+        build_plan(g, self.config.plan_options())
+    }
+
+    /// Run the full pipeline on a graph.
+    pub fn run(&self, g: &CsrGraph) -> Result<RunResult> {
+        let plan = self.plan(g);
+        self.run_with_plan(g, &plan)
+    }
+
+    /// Run with a pre-built plan (benches reuse plans across configs).
+    pub fn run_with_plan(&self, g: &CsrGraph, plan: &ApspPlan) -> Result<RunResult> {
+        let solve_opts = SolveOptions {
+            memory_limit_bytes: self.config.memory_limit_bytes,
+        };
+        let native = NativeBackend;
+        let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
+        let backend: Option<&dyn TileBackend> = match (self.config.mode, self.config.backend) {
+            (Mode::Estimate, _) => None,
+            (Mode::Functional, BackendKind::Native) => Some(&native),
+            (Mode::Functional, BackendKind::Pjrt) => Some(
+                pjrt_adapter
+                    .as_ref()
+                    .expect("pjrt runtime not loaded (Executor::new loads it)"),
+            ),
+        };
+
+        let t0 = std::time::Instant::now();
+        let sol: ApspSolution = solve(g, plan, backend, solve_opts);
+        let host_solve_seconds = t0.elapsed().as_secs_f64();
+
+        let sim = simulate(&sol.trace, &self.config.hw);
+
+        let validation = match (self.config.mode, self.config.validate_sources) {
+            (Mode::Functional, s) if s > 0 => Some(validate_sampled(
+                g,
+                &sol,
+                s,
+                self.config.validate_cols,
+                1e-3,
+                self.config.seed ^ 0xFEED,
+            )),
+            _ => None,
+        };
+
+        Ok(RunResult {
+            sim,
+            depth: plan.depth(),
+            boundary_sizes: plan.boundary_sizes(),
+            final_n: plan.final_n,
+            components_l0: plan
+                .levels
+                .first()
+                .map(|l| l.cs.components.len())
+                .unwrap_or(1),
+            host_solve_seconds,
+            validation,
+            backend_name: match (self.config.mode, self.config.backend) {
+                (Mode::Estimate, _) => "estimate",
+                (_, BackendKind::Native) => "native",
+                (_, BackendKind::Pjrt) => "pjrt",
+            },
+            mode: self.config.mode,
+            graph_n: g.n(),
+            graph_m: g.m(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Topology, Weights};
+
+    fn graph(n: usize, seed: u64) -> CsrGraph {
+        generators::generate(Topology::Nws, n, 10.0, Weights::Uniform(1.0, 4.0), seed)
+    }
+
+    #[test]
+    fn functional_run_validates() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 128;
+        let ex = Executor::new(cfg).unwrap();
+        let g = graph(800, 1);
+        let r = ex.run(&g).unwrap();
+        assert_eq!(r.mode, Mode::Functional);
+        let v = r.validation.expect("validation requested");
+        assert!(v.ok(1e-3), "{v:?}");
+        assert!(r.sim.seconds > 0.0);
+        assert!(r.host_solve_seconds > 0.0);
+        assert!(r.depth >= 1);
+    }
+
+    #[test]
+    fn estimate_run_matches_functional_sim() {
+        let g = graph(1200, 2);
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 128;
+        let func = Executor::new(cfg.clone()).unwrap().run(&g).unwrap();
+        cfg.mode = Mode::Estimate;
+        let est = Executor::new(cfg).unwrap().run(&g).unwrap();
+        // identical traces => identical modeled time/energy
+        assert!((func.sim.seconds - est.sim.seconds).abs() < 1e-12);
+        assert!((func.sim.joules - est.sim.joules).abs() < 1e-12);
+        assert!(est.validation.is_none());
+    }
+
+    #[test]
+    fn estimate_scales_past_functional_memory() {
+        // 50k vertices would need GBs of matrices in functional mode;
+        // estimate mode must handle it quickly
+        let g = generators::generate(
+            Topology::OgbnProxy,
+            50_000,
+            16.0,
+            Weights::Unit,
+            3,
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        let t0 = std::time::Instant::now();
+        let r = Executor::new(cfg).unwrap().run(&g).unwrap();
+        assert!(r.sim.seconds > 0.0);
+        assert!(
+            t0.elapsed().as_secs_f64() < 60.0,
+            "estimate mode too slow: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn algorithm1_vs_algorithm2_sim() {
+        // recursion (Alg 2) must beat single-level (Alg 1) when the
+        // boundary graph exceeds one tile — the paper's §III-A argument
+        let g = graph(3000, 4);
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 128;
+        cfg.mode = Mode::Estimate;
+        let alg2 = Executor::new(cfg.clone()).unwrap().run(&g).unwrap();
+        cfg.max_depth = 1;
+        let alg1 = Executor::new(cfg).unwrap().run(&g).unwrap();
+        assert!(alg2.depth >= 1 && alg1.depth == 1);
+        // Alg 1's terminal FW is a giant dense solve
+        assert!(alg1.final_n >= alg2.final_n);
+    }
+}

@@ -1,0 +1,11 @@
+//! The Layer-3 coordinator: configuration, end-to-end orchestration
+//! (partition → recursive APSP → simulation → validation), and
+//! reporting. This is the paper's "logic base die serves as the central
+//! controller" role, mapped onto the host process.
+
+pub mod config;
+pub mod executor;
+pub mod report;
+
+pub use config::{BackendKind, Mode, SystemConfig};
+pub use executor::{Executor, RunResult};

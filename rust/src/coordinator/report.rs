@@ -1,0 +1,97 @@
+//! Human-readable run reports: the coordinator's metrics output.
+
+use super::executor::RunResult;
+use crate::apsp::trace::Phase;
+use crate::util::table::{fmt_count, fmt_energy, fmt_time, Table};
+
+/// Render a full report for one run.
+pub fn render(r: &RunResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "RAPID-Graph run: n={} m={} mode={} backend={}\n",
+        fmt_count(r.graph_n),
+        fmt_count(r.graph_m),
+        r.mode.name(),
+        r.backend_name,
+    ));
+    out.push_str(&format!(
+        "recursion: depth={} components(L0)={} boundary={:?} final_n={}\n",
+        r.depth,
+        r.components_l0,
+        r.boundary_sizes.iter().map(|&b| fmt_count(b)).collect::<Vec<_>>(),
+        r.final_n,
+    ));
+    out.push_str(&format!(
+        "modeled hardware: time={} energy={} (dynamic {}), FW util {:.1}%, MP util {:.1}%, prefetch hid {}\n",
+        fmt_time(r.sim.seconds),
+        fmt_energy(r.sim.joules),
+        fmt_energy(r.sim.dynamic_joules),
+        100.0 * r.sim.fw_utilization(),
+        100.0 * r.sim.mp_utilization(),
+        fmt_time(r.sim.prefetch_hidden),
+    ));
+    out.push_str(&format!(
+        "work: {:.3e} min-adds, {:.3e} madds/s modeled\n",
+        r.sim.madds as f64,
+        r.sim.madds_per_sec(),
+    ));
+    if r.host_solve_seconds > 0.0 {
+        out.push_str(&format!(
+            "host numerics: {}\n",
+            fmt_time(r.host_solve_seconds)
+        ));
+    }
+    if let Some(v) = &r.validation {
+        out.push_str(&format!(
+            "validation: {} samples, max err {:.2e}, {} mismatches -> {}\n",
+            v.checked,
+            v.max_abs_err,
+            v.mismatches,
+            if v.ok(1e-3) { "EXACT" } else { "FAILED" },
+        ));
+    }
+    // per-phase table
+    let mut t = Table::new(
+        "modeled per-phase breakdown",
+        &["phase", "ops", "time", "energy", "% time"],
+    );
+    let mut phases: Vec<(&Phase, _)> = r.sim.per_phase.iter().collect();
+    phases.sort_by(|a, b| {
+        b.1.secs
+            .partial_cmp(&a.1.secs)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for (phase, stat) in phases {
+        t.row(&[
+            phase.name().to_string(),
+            stat.ops.to_string(),
+            fmt_time(stat.secs),
+            fmt_energy(stat.joules),
+            format!("{:.1}%", 100.0 * stat.secs / r.sim.seconds.max(1e-30)),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::config::SystemConfig;
+    use crate::coordinator::executor::Executor;
+    use crate::graph::generators::{self, Topology, Weights};
+
+    #[test]
+    fn report_contains_key_sections() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        let ex = Executor::new(cfg).unwrap();
+        let g = generators::generate(Topology::Nws, 400, 8.0, Weights::Unit, 1);
+        let r = ex.run(&g).unwrap();
+        let text = super::render(&r);
+        assert!(text.contains("RAPID-Graph run"));
+        assert!(text.contains("recursion: depth="));
+        assert!(text.contains("modeled hardware"));
+        assert!(text.contains("validation"));
+        assert!(text.contains("local_fw"));
+    }
+}

@@ -1,0 +1,348 @@
+//! Compressed sparse row (CSR) weighted graph (paper §II-A, Fig. 1c).
+//!
+//! Storage layout matches the paper: `rowptr`, `col`, `val`. Graphs are
+//! directed internally; the generators emit symmetric edge sets for the
+//! undirected workloads the paper evaluates.
+
+use crate::INF;
+
+/// A weighted graph in CSR form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrGraph {
+    /// `rowptr[v]..rowptr[v+1]` indexes `col`/`val` for vertex `v`.
+    pub rowptr: Vec<usize>,
+    /// Neighbor vertex ids.
+    pub col: Vec<u32>,
+    /// Edge weights (non-negative, finite).
+    pub val: Vec<f32>,
+}
+
+impl CsrGraph {
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.rowptr.len() - 1
+    }
+
+    /// Number of directed edges stored.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Average out-degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.m() as f64 / self.n() as f64
+        }
+    }
+
+    /// Neighbors of `v` as `(neighbor, weight)` pairs.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.rowptr[v];
+        let hi = self.rowptr[v + 1];
+        self.col[lo..hi]
+            .iter()
+            .zip(&self.val[lo..hi])
+            .map(|(&c, &w)| (c as usize, w))
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.rowptr[v + 1] - self.rowptr[v]
+    }
+
+    /// Build from an edge list. Duplicate `(u,v)` edges keep the minimum
+    /// weight; self-loops are dropped (distance to self is always 0).
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f32)]) -> Self {
+        let mut deg = vec![0usize; n];
+        for &(u, v, _) in edges {
+            assert!((u as usize) < n && (v as usize) < n, "edge out of range");
+            if u != v {
+                deg[u as usize] += 1;
+            }
+        }
+        let mut rowptr = vec![0usize; n + 1];
+        for v in 0..n {
+            rowptr[v + 1] = rowptr[v] + deg[v];
+        }
+        let m = rowptr[n];
+        let mut col = vec![0u32; m];
+        let mut val = vec![0f32; m];
+        let mut fill = rowptr.clone();
+        for &(u, v, w) in edges {
+            if u == v {
+                continue;
+            }
+            debug_assert!(w >= 0.0 && w.is_finite(), "weights must be finite >= 0");
+            let slot = fill[u as usize];
+            col[slot] = v;
+            val[slot] = w;
+            fill[u as usize] += 1;
+        }
+        let mut g = Self { rowptr, col, val };
+        g.sort_and_dedup_min();
+        g
+    }
+
+    /// Build an undirected graph from an edge list (adds both directions).
+    pub fn from_undirected_edges(n: usize, edges: &[(u32, u32, f32)]) -> Self {
+        let mut both = Vec::with_capacity(edges.len() * 2);
+        for &(u, v, w) in edges {
+            both.push((u, v, w));
+            both.push((v, u, w));
+        }
+        Self::from_edges(n, &both)
+    }
+
+    /// Sort adjacency lists by neighbor id, keeping the min weight for
+    /// duplicates.
+    fn sort_and_dedup_min(&mut self) {
+        let n = self.n();
+        let mut new_rowptr = vec![0usize; n + 1];
+        let mut new_col = Vec::with_capacity(self.m());
+        let mut new_val = Vec::with_capacity(self.m());
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for v in 0..n {
+            scratch.clear();
+            scratch.extend(
+                self.col[self.rowptr[v]..self.rowptr[v + 1]]
+                    .iter()
+                    .zip(&self.val[self.rowptr[v]..self.rowptr[v + 1]])
+                    .map(|(&c, &w)| (c, w)),
+            );
+            scratch.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap()));
+            let mut last: Option<u32> = None;
+            for &(c, w) in scratch.iter() {
+                if last == Some(c) {
+                    continue; // keep first (min, due to sort)
+                }
+                last = Some(c);
+                new_col.push(c);
+                new_val.push(w);
+            }
+            new_rowptr[v + 1] = new_col.len();
+        }
+        self.rowptr = new_rowptr;
+        self.col = new_col;
+        self.val = new_val;
+    }
+
+    /// Weight of edge `(u, v)` if present (binary search).
+    pub fn edge_weight(&self, u: usize, v: usize) -> Option<f32> {
+        let lo = self.rowptr[u];
+        let hi = self.rowptr[u + 1];
+        let slice = &self.col[lo..hi];
+        slice
+            .binary_search(&(v as u32))
+            .ok()
+            .map(|i| self.val[lo + i])
+    }
+
+    /// Extract the vertex-induced subgraph on `verts` (graph vertex ids).
+    /// Returns the subgraph with vertices renumbered `0..verts.len()` in
+    /// the given order.
+    pub fn induced_subgraph(&self, verts: &[u32]) -> CsrGraph {
+        let mut inv = std::collections::HashMap::with_capacity(verts.len());
+        for (local, &g) in verts.iter().enumerate() {
+            inv.insert(g, local as u32);
+        }
+        let mut edges = Vec::new();
+        for (local, &g) in verts.iter().enumerate() {
+            for (nbr, w) in self.neighbors(g as usize) {
+                if let Some(&nl) = inv.get(&(nbr as u32)) {
+                    edges.push((local as u32, nl, w));
+                }
+            }
+        }
+        CsrGraph::from_edges(verts.len(), &edges)
+    }
+
+    /// Dense adjacency matrix (paper Fig. 1b): `A[i][j] = w(i,j)` or INF,
+    /// diagonal 0. Only valid for small `n`.
+    pub fn to_dense(&self) -> crate::graph::dense::DistMatrix {
+        let n = self.n();
+        let mut d = crate::graph::dense::DistMatrix::new_inf(n);
+        for v in 0..n {
+            d.set(v, v, 0.0);
+            for (u, w) in self.neighbors(v) {
+                if w < d.get(v, u) {
+                    d.set(v, u, w);
+                }
+            }
+        }
+        d
+    }
+
+    /// Total bytes of the CSR arrays (the paper stores results compressed
+    /// in FeNAND; this sizes those transfers).
+    pub fn csr_bytes(&self) -> usize {
+        self.rowptr.len() * std::mem::size_of::<usize>()
+            + self.col.len() * 4
+            + self.val.len() * 4
+    }
+
+    /// Check structural invariants (used by tests and generators).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n();
+        if self.rowptr[0] != 0 {
+            return Err("rowptr[0] != 0".into());
+        }
+        if *self.rowptr.last().unwrap() != self.col.len() {
+            return Err("rowptr[n] != m".into());
+        }
+        if self.col.len() != self.val.len() {
+            return Err("col/val length mismatch".into());
+        }
+        for v in 0..n {
+            if self.rowptr[v] > self.rowptr[v + 1] {
+                return Err(format!("rowptr not monotone at {v}"));
+            }
+            let lo = self.rowptr[v];
+            let hi = self.rowptr[v + 1];
+            for i in lo..hi {
+                if self.col[i] as usize >= n {
+                    return Err(format!("edge target out of range at row {v}"));
+                }
+                if self.col[i] as usize == v {
+                    return Err(format!("self loop at {v}"));
+                }
+                if !(self.val[i] >= 0.0) || !self.val[i].is_finite() {
+                    return Err(format!("bad weight at row {v}"));
+                }
+                if i > lo && self.col[i - 1] >= self.col[i] {
+                    return Err(format!("row {v} not sorted/deduped"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// An empty graph with `n` isolated vertices.
+    pub fn empty(n: usize) -> Self {
+        Self {
+            rowptr: vec![0; n + 1],
+            col: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+
+    /// Iterate all directed edges `(u, v, w)`.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.n()).flat_map(move |u| {
+            self.neighbors(u)
+                .map(move |(v, w)| (u as u32, v as u32, w))
+        })
+    }
+
+    /// Shortest edge weight in the graph, INF if edgeless.
+    pub fn min_weight(&self) -> f32 {
+        self.val.iter().copied().fold(INF, f32::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> CsrGraph {
+        // the paper's Fig. 1 toy graph shape: 8 vertices, sparse
+        CsrGraph::from_undirected_edges(
+            8,
+            &[
+                (0, 1, 3.0),
+                (0, 2, 1.0),
+                (1, 3, 2.0),
+                (2, 3, 5.0),
+                (3, 4, 1.5),
+                (4, 5, 2.5),
+                (5, 6, 1.0),
+                (6, 7, 4.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn builds_valid_csr() {
+        let g = toy();
+        assert_eq!(g.n(), 8);
+        assert_eq!(g.m(), 16); // both directions
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let g = toy();
+        let nbrs: Vec<usize> = g.neighbors(3).map(|(v, _)| v).collect();
+        assert_eq!(nbrs, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn duplicate_edges_keep_min() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 5.0), (0, 1, 2.0), (0, 1, 9.0)]);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.edge_weight(0, 1), Some(2.0));
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = CsrGraph::from_edges(3, &[(0, 0, 1.0), (1, 2, 1.0)]);
+        assert_eq!(g.m(), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn edge_weight_lookup() {
+        let g = toy();
+        assert_eq!(g.edge_weight(0, 2), Some(1.0));
+        assert_eq!(g.edge_weight(2, 0), Some(1.0));
+        assert_eq!(g.edge_weight(0, 7), None);
+    }
+
+    #[test]
+    fn induced_subgraph_renumbers() {
+        let g = toy();
+        let sub = g.induced_subgraph(&[0, 1, 3]);
+        assert_eq!(sub.n(), 3);
+        // edges kept: 0-1 (3.0), 1-3 (2.0) => local (0,1) and (1,2)
+        assert_eq!(sub.edge_weight(0, 1), Some(3.0));
+        assert_eq!(sub.edge_weight(1, 2), Some(2.0));
+        assert_eq!(sub.edge_weight(0, 2), None); // 0-3 not an edge
+        sub.validate().unwrap();
+    }
+
+    #[test]
+    fn to_dense_matches_edges() {
+        let g = toy();
+        let d = g.to_dense();
+        assert_eq!(d.get(0, 0), 0.0);
+        assert_eq!(d.get(0, 1), 3.0);
+        assert_eq!(d.get(1, 0), 3.0);
+        assert!(d.get(0, 7).is_infinite());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::empty(5);
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn edges_iterator_roundtrip() {
+        let g = toy();
+        let edges: Vec<_> = g.edges().collect();
+        let g2 = CsrGraph::from_edges(8, &edges);
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn csr_bytes_positive() {
+        assert!(toy().csr_bytes() > 0);
+    }
+}

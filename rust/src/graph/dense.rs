@@ -1,0 +1,295 @@
+//! Dense distance matrix (paper Fig. 1b): the working representation for
+//! FW and MP kernels. Row-major `f32` with `+inf` for "no path".
+
+use crate::INF;
+
+/// An `n x n` row-major distance matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistMatrix {
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl DistMatrix {
+    /// All-INF matrix with a zero diagonal NOT set (use `new_diag0`).
+    pub fn new_inf(n: usize) -> Self {
+        Self {
+            n,
+            data: vec![INF; n * n],
+        }
+    }
+
+    /// All-INF with zero diagonal — the FW identity element.
+    pub fn new_diag0(n: usize) -> Self {
+        let mut m = Self::new_inf(n);
+        for i in 0..n {
+            m.set(i, i, 0.0);
+        }
+        m
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(n: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * n);
+        Self { n, data }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.n + j] = v;
+    }
+
+    /// `D[i][j] = min(D[i][j], v)` — the semiring accumulate.
+    #[inline]
+    pub fn relax(&mut self, i: usize, j: usize, v: f32) {
+        let slot = &mut self.data[i * self.n + j];
+        if v < *slot {
+            *slot = v;
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Column `j` copied out (rows are the contiguous axis).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.n).map(|i| self.get(i, j)).collect()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Copy the `rows x cols` block at `(r0, c0)` out of this matrix.
+    pub fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> DistMatrix {
+        assert!(r0 + rows <= self.n && c0 + cols <= self.n);
+        assert_eq!(rows, cols, "block() returns square blocks");
+        let mut out = DistMatrix::new_inf(rows);
+        for i in 0..rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.data[(r0 + i) * self.n + c0..(r0 + i) * self.n + c0 + cols]);
+        }
+        out
+    }
+
+    /// Gather the sub-matrix on index sets `rows x cols`.
+    pub fn gather(&self, rows: &[usize], cols: &[usize]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(rows.len() * cols.len());
+        for &i in rows {
+            for &j in cols {
+                out.push(self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Scatter-min `vals` (a `rows.len() x cols.len()` row-major block)
+    /// into this matrix at the given index sets.
+    pub fn scatter_min(&mut self, rows: &[usize], cols: &[usize], vals: &[f32]) {
+        assert_eq!(vals.len(), rows.len() * cols.len());
+        for (bi, &i) in rows.iter().enumerate() {
+            for (bj, &j) in cols.iter().enumerate() {
+                self.relax(i, j, vals[bi * cols.len() + bj]);
+            }
+        }
+    }
+
+    /// Pad to `m >= n` with INF off-diagonal, 0 on the new diagonal.
+    /// Padding vertices are isolated, so FW/MP results on the top-left
+    /// `n x n` corner are unchanged — this is how ragged components map
+    /// onto fixed-size tile kernels.
+    pub fn pad_to(&self, m: usize) -> DistMatrix {
+        assert!(m >= self.n);
+        let mut out = DistMatrix::new_diag0(m);
+        for i in 0..self.n {
+            out.row_mut(i)[..self.n].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Take the top-left `k x k` corner.
+    pub fn truncate(&self, k: usize) -> DistMatrix {
+        assert!(k <= self.n);
+        let mut out = DistMatrix::new_inf(k);
+        for i in 0..k {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    /// Max finite absolute difference against another matrix (INF==INF
+    /// counts as equal). Returns INF if one side is finite and the other
+    /// is not.
+    pub fn max_diff(&self, other: &DistMatrix) -> f32 {
+        assert_eq!(self.n, other.n);
+        let mut worst = 0f32;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = match (a.is_finite(), b.is_finite()) {
+                (true, true) => (a - b).abs(),
+                (false, false) => 0.0,
+                _ => INF,
+            };
+            if d > worst {
+                worst = d;
+            }
+        }
+        worst
+    }
+
+    /// Count finite (reachable) entries.
+    pub fn finite_count(&self) -> usize {
+        self.data.iter().filter(|x| x.is_finite()).count()
+    }
+
+    /// Bytes of the dense payload.
+    pub fn dense_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+impl std::fmt::Display for DistMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for i in 0..self.n.min(16) {
+            for j in 0..self.n.min(16) {
+                let v = self.get(i, j);
+                if v.is_finite() {
+                    write!(f, "{v:7.2} ")?;
+                } else {
+                    write!(f, "    inf ")?;
+                }
+            }
+            writeln!(f)?;
+        }
+        if self.n > 16 {
+            writeln!(f, "... ({n} x {n})", n = self.n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diag0_identity() {
+        let d = DistMatrix::new_diag0(4);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i == j {
+                    assert_eq!(d.get(i, j), 0.0);
+                } else {
+                    assert!(d.get(i, j).is_infinite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relax_takes_min() {
+        let mut d = DistMatrix::new_inf(2);
+        d.relax(0, 1, 5.0);
+        d.relax(0, 1, 3.0);
+        d.relax(0, 1, 9.0);
+        assert_eq!(d.get(0, 1), 3.0);
+    }
+
+    #[test]
+    fn block_extraction() {
+        let mut d = DistMatrix::new_diag0(4);
+        d.set(1, 2, 7.0);
+        d.set(2, 1, 8.0);
+        let b = d.block(1, 1, 2, 2);
+        assert_eq!(b.get(0, 1), 7.0);
+        assert_eq!(b.get(1, 0), 8.0);
+        assert_eq!(b.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut d = DistMatrix::new_diag0(5);
+        d.set(0, 3, 2.0);
+        d.set(3, 0, 4.0);
+        let rows = [0usize, 3];
+        let cols = [0usize, 3];
+        let vals = d.gather(&rows, &cols);
+        assert_eq!(vals, vec![0.0, 2.0, 4.0, 0.0]);
+
+        let mut e = DistMatrix::new_inf(5);
+        e.scatter_min(&rows, &cols, &vals);
+        assert_eq!(e.get(0, 3), 2.0);
+        assert_eq!(e.get(3, 0), 4.0);
+        // scatter_min keeps existing smaller values
+        e.set(0, 3, 1.0);
+        e.scatter_min(&rows, &cols, &vals);
+        assert_eq!(e.get(0, 3), 1.0);
+    }
+
+    #[test]
+    fn pad_preserves_corner_and_isolates() {
+        let mut d = DistMatrix::new_diag0(2);
+        d.set(0, 1, 5.0);
+        let p = d.pad_to(4);
+        assert_eq!(p.get(0, 1), 5.0);
+        assert_eq!(p.get(2, 2), 0.0);
+        assert!(p.get(0, 2).is_infinite());
+        assert!(p.get(3, 1).is_infinite());
+        let t = p.truncate(2);
+        assert_eq!(t, d);
+    }
+
+    #[test]
+    fn max_diff_semantics() {
+        let mut a = DistMatrix::new_diag0(2);
+        let mut b = DistMatrix::new_diag0(2);
+        assert_eq!(a.max_diff(&b), 0.0);
+        a.set(0, 1, 5.0);
+        assert!(a.max_diff(&b).is_infinite()); // finite vs inf
+        b.set(0, 1, 5.5);
+        assert!((a.max_diff(&b) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn finite_count() {
+        let d = DistMatrix::new_diag0(3);
+        assert_eq!(d.finite_count(), 3);
+    }
+
+    #[test]
+    fn rows_and_cols() {
+        let mut d = DistMatrix::new_diag0(3);
+        d.set(0, 1, 1.0);
+        d.set(0, 2, 2.0);
+        assert_eq!(d.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(d.col(0), vec![0.0, INF, INF]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Graph IO: a plain edge-list text format and a compact binary CSR
+//! format (used to persist generated workloads and final APSP results —
+//! the functional stand-in for the paper's FeNAND CSR storage).
+
+use super::csr::CsrGraph;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write a text edge list: first line `n m`, then `u v w` per line.
+pub fn write_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{} {}", g.n(), g.m())?;
+    for (u, v, wt) in g.edges() {
+        writeln!(w, "{u} {v} {wt}")?;
+    }
+    Ok(())
+}
+
+/// Read the text edge-list format written by `write_edge_list`.
+pub fn read_edge_list(path: &Path) -> Result<CsrGraph> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines.next().context("empty file")??;
+    let mut it = header.split_whitespace();
+    let n: usize = it.next().context("missing n")?.parse()?;
+    let m: usize = it.next().context("missing m")?.parse()?;
+    let mut edges = Vec::with_capacity(m);
+    for line in lines {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: u32 = it.next().context("missing u")?.parse()?;
+        let v: u32 = it.next().context("missing v")?.parse()?;
+        let w: f32 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+        edges.push((u, v, w));
+    }
+    Ok(CsrGraph::from_edges(n, &edges))
+}
+
+const BIN_MAGIC: &[u8; 8] = b"RAPIDCSR";
+
+/// Write the compact binary CSR format (little-endian):
+/// magic, n (u64), m (u64), rowptr (u64 * (n+1)), col (u32 * m), val (f32 * m).
+pub fn write_binary(g: &CsrGraph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&(g.m() as u64).to_le_bytes())?;
+    for &r in &g.rowptr {
+        w.write_all(&(r as u64).to_le_bytes())?;
+    }
+    for &c in &g.col {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    for &v in &g.val {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary CSR format.
+pub fn read_binary(path: &Path) -> Result<CsrGraph> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("bad magic in {}", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let m = u64::from_le_bytes(u64buf) as usize;
+    let mut rowptr = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        r.read_exact(&mut u64buf)?;
+        rowptr.push(u64::from_le_bytes(u64buf) as usize);
+    }
+    let mut buf4 = [0u8; 4];
+    let mut col = Vec::with_capacity(m);
+    for _ in 0..m {
+        r.read_exact(&mut buf4)?;
+        col.push(u32::from_le_bytes(buf4));
+    }
+    let mut val = Vec::with_capacity(m);
+    for _ in 0..m {
+        r.read_exact(&mut buf4)?;
+        val.push(f32::from_le_bytes(buf4));
+    }
+    let g = CsrGraph { rowptr, col, val };
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("rapid_graph_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = generators::random_connected(50, 30, Weights::Uniform(0.5, 4.0), 9);
+        let p = tmp("roundtrip.txt");
+        write_edge_list(&g, &p).unwrap();
+        let h = read_edge_list(&p).unwrap();
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = generators::newman_watts_strogatz(120, 4, 0.1, Weights::Uniform(1.0, 2.0), 11);
+        let p = tmp("roundtrip.bin");
+        write_binary(&g, &p).unwrap();
+        let h = read_binary(&p).unwrap();
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn edge_list_default_weight() {
+        let p = tmp("unweighted.txt");
+        std::fs::write(&p, "3 2\n0 1\n1 2\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.edge_weight(0, 1), Some(1.0));
+        assert_eq!(g.edge_weight(1, 2), Some(1.0));
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"NOTMAGIC????").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn edge_list_skips_comments() {
+        let p = tmp("comments.txt");
+        std::fs::write(&p, "2 1\n# comment\n0 1 2.5\n\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.edge_weight(0, 1), Some(2.5));
+    }
+}

@@ -1,0 +1,12 @@
+//! Graph substrate: CSR storage, dense distance matrices, synthetic
+//! generators (the paper's NWS / ER / OGBN-proxy workloads), IO, and
+//! structural properties.
+
+pub mod csr;
+pub mod dense;
+pub mod generators;
+pub mod io;
+pub mod properties;
+
+pub use csr::CsrGraph;
+pub use dense::DistMatrix;

@@ -1,0 +1,172 @@
+//! Structural graph properties: connectivity, degree statistics, and a
+//! clustering-coefficient estimate (used by the Fig. 9 topology analysis
+//! to verify the generators produce the intended structure).
+
+use super::csr::CsrGraph;
+use crate::util::rng::Rng;
+
+/// BFS reachability from vertex 0 — true iff the graph is connected
+/// (treats edges as undirected: follows stored arcs only, so generators
+/// must emit symmetric edge sets, which ours do).
+pub fn is_connected(g: &CsrGraph) -> bool {
+    let n = g.n();
+    if n == 0 {
+        return true;
+    }
+    connected_component(g, 0).len() == n
+}
+
+/// Vertices reachable from `src` following stored arcs.
+pub fn connected_component(g: &CsrGraph, src: usize) -> Vec<u32> {
+    let n = g.n();
+    let mut seen = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    seen[src] = true;
+    queue.push_back(src);
+    let mut out = vec![src as u32];
+    while let Some(v) = queue.pop_front() {
+        for (u, _) in g.neighbors(v) {
+            if !seen[u] {
+                seen[u] = true;
+                out.push(u as u32);
+                queue.push_back(u);
+            }
+        }
+    }
+    out
+}
+
+/// All connected components, each a vertex list.
+pub fn connected_components(g: &CsrGraph) -> Vec<Vec<u32>> {
+    let n = g.n();
+    let mut seen = vec![false; n];
+    let mut comps = Vec::new();
+    for s in 0..n {
+        if seen[s] {
+            continue;
+        }
+        let comp = connected_component(g, s);
+        for &v in &comp {
+            seen[v as usize] = true;
+        }
+        comps.push(comp);
+    }
+    comps
+}
+
+/// Degree statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub p50: usize,
+    pub p99: usize,
+}
+
+pub fn degree_stats(g: &CsrGraph) -> DegreeStats {
+    let n = g.n();
+    if n == 0 {
+        return DegreeStats {
+            min: 0,
+            max: 0,
+            mean: 0.0,
+            p50: 0,
+            p99: 0,
+        };
+    }
+    let mut degs: Vec<usize> = (0..n).map(|v| g.degree(v)).collect();
+    degs.sort_unstable();
+    DegreeStats {
+        min: degs[0],
+        max: degs[n - 1],
+        mean: g.avg_degree(),
+        p50: degs[n / 2],
+        p99: degs[(n as f64 * 0.99) as usize],
+    }
+}
+
+/// Sampled local clustering coefficient (average over `samples` random
+/// vertices of degree >= 2). Clustered topologies (NWS, OGBN-proxy)
+/// score high; ER scores ~degree/n.
+pub fn clustering_coefficient(g: &CsrGraph, samples: usize, seed: u64) -> f64 {
+    let n = g.n();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for _ in 0..samples {
+        let v = rng.gen_range(n);
+        let nbrs: Vec<usize> = g.neighbors(v).map(|(u, _)| u).collect();
+        if nbrs.len() < 2 {
+            continue;
+        }
+        let mut links = 0usize;
+        for (i, &a) in nbrs.iter().enumerate() {
+            for &b in &nbrs[i + 1..] {
+                if g.edge_weight(a, b).is_some() {
+                    links += 1;
+                }
+            }
+        }
+        let possible = nbrs.len() * (nbrs.len() - 1) / 2;
+        total += links as f64 / possible as f64;
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+
+    #[test]
+    fn path_graph_connected() {
+        let g = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        assert!(!is_connected(&g));
+        let comps = connected_components(&g);
+        assert_eq!(comps.len(), 2);
+        assert_eq!(comps[0].len(), 2);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(is_connected(&CsrGraph::empty(0)));
+        assert!(is_connected(&CsrGraph::empty(1)));
+        assert!(!is_connected(&CsrGraph::empty(2)));
+    }
+
+    #[test]
+    fn degree_stats_basic() {
+        let g = generators::grid2d(8, 8, Weights::Unit, 1);
+        let s = degree_stats(&g);
+        assert_eq!(s.min, 2); // corners
+        assert_eq!(s.max, 4); // interior
+        assert!(s.mean > 2.0 && s.mean < 4.0);
+    }
+
+    #[test]
+    fn clustering_separates_topologies() {
+        let nws = generators::newman_watts_strogatz(2000, 6, 0.05, Weights::Unit, 2);
+        let er = generators::erdos_renyi(2000, 12000, Weights::Unit, 2);
+        let c_nws = clustering_coefficient(&nws, 300, 3);
+        let c_er = clustering_coefficient(&er, 300, 3);
+        assert!(
+            c_nws > 3.0 * c_er,
+            "NWS clustering {c_nws} should dominate ER {c_er}"
+        );
+    }
+}

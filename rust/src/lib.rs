@@ -1,0 +1,38 @@
+//! # RAPID-Graph
+//!
+//! Reproduction of *RAPID-Graph: Recursive All-Pairs Shortest Paths Using
+//! Processing-in-Memory for Dynamic Programming on Graphs* (CS.AR 2025).
+//!
+//! The crate is the Layer-3 rust coordinator of a three-layer stack:
+//!
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the FW
+//!   pivot-panel update and blocked min-plus matmul, AOT-lowered.
+//! * **Layer 2** — JAX tile model (`python/compile/model.py`): dense-block
+//!   Floyd–Warshall and two-stage MP merge, exported as HLO text.
+//! * **Layer 3** — this crate: recursive partitioner, multi-die PIM
+//!   simulator, dataflow scheduler, PJRT runtime, baselines, benches.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod apsp;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use coordinator::config::SystemConfig;
+pub use coordinator::executor::Executor;
+pub use graph::csr::CsrGraph;
+pub use graph::dense::DistMatrix;
+
+/// Infinity sentinel for 32-bit float distances. The paper stores 32-bit
+/// distances in PCM rows; we use IEEE f32 with `+inf` for "no path".
+pub const INF: f32 = f32::INFINITY;
+
+/// Maximum vertices per PIM tile (paper §III-A: components are partitioned
+/// at |V| <= 1024, matching the 1024x1024 PCM unit dimension).
+pub const TILE_LIMIT: usize = 1024;

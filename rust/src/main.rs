@@ -1,0 +1,205 @@
+//! RAPID-Graph CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   generate   synthesize a workload graph and write it to disk
+//!   apsp       run the full pipeline (partition -> recursive APSP ->
+//!              PIM simulation -> validation) and print the report
+//!   figure     regenerate a paper figure/table (7, 8, 9a, 9b, 9c, table3)
+//!   validate   exhaustive Dijkstra validation on a small graph
+//!
+//! Examples:
+//!   rapid-graph apsp --topo nws --nodes 20000 --degree 25.25
+//!   rapid-graph apsp --graph g.bin --mode estimate
+//!   rapid-graph figure --id 7
+//!   rapid-graph generate --topo ogbn --nodes 100000 --out g.bin
+
+use anyhow::{bail, Context, Result};
+use rapid_graph::baselines::cpu::CpuModel;
+use rapid_graph::bench::figures;
+use rapid_graph::coordinator::{config::SystemConfig, executor::Executor, report};
+use rapid_graph::graph::generators::{self, Topology, Weights};
+use rapid_graph::graph::io;
+use rapid_graph::util::cli::{render_help, Args};
+use rapid_graph::util::config::ConfigFile;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("generate") => cmd_generate(args),
+        Some("apsp") | Some("simulate") => cmd_apsp(args),
+        Some("figure") => cmd_figure(args),
+        Some("validate") => cmd_validate(args),
+        _ => {
+            print!(
+                "{}",
+                render_help(
+                    "rapid-graph",
+                    "recursive APSP on a simulated processing-in-memory stack",
+                    &[
+                        ("generate", "--topo nws|er|ogbn|grid --nodes N [--degree D] [--seed S] --out FILE"),
+                        ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--tile T] [--max-depth D] [--config FILE]"),
+                        ("figure", "--id 7|8|9a|9b|9c|table3 [--full]"),
+                        ("validate", "--nodes N [--topo T] [--tile T]"),
+                    ]
+                )
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<SystemConfig> {
+    let mut cfg = SystemConfig::default();
+    if let Some(path) = args.get("config") {
+        let cf = ConfigFile::load(path).with_context(|| format!("load config {path}"))?;
+        cfg.apply_file(&cf);
+    }
+    cfg.apply_args(args);
+    Ok(cfg)
+}
+
+fn graph_from_args(args: &Args) -> Result<rapid_graph::CsrGraph> {
+    if let Some(path) = args.get("graph") {
+        return if path.ends_with(".bin") {
+            io::read_binary(Path::new(path))
+        } else {
+            io::read_edge_list(Path::new(path))
+        };
+    }
+    let topo = Topology::parse(args.get_or("topo", "nws"))
+        .context("unknown --topo (nws|er|ogbn|grid)")?;
+    let n = args.get_usize("nodes", 10_000);
+    let degree = args.get_f64("degree", 25.25);
+    let seed = args.get_u64("seed", 42);
+    Ok(generators::generate(
+        topo,
+        n,
+        degree,
+        Weights::Uniform(1.0, 8.0),
+        seed,
+    ))
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let g = graph_from_args(args)?;
+    let out = args.get("out").context("--out FILE required")?;
+    if out.ends_with(".bin") {
+        io::write_binary(&g, Path::new(out))?;
+    } else {
+        io::write_edge_list(&g, Path::new(out))?;
+    }
+    println!(
+        "wrote {} (n={}, m={}, avg degree {:.2})",
+        out,
+        g.n(),
+        g.m(),
+        g.avg_degree()
+    );
+    Ok(())
+}
+
+fn cmd_apsp(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    if args.subcommand() == Some("simulate") {
+        cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
+    }
+    let g = graph_from_args(args)?;
+    let ex = Executor::new(cfg)?;
+    let r = ex.run(&g)?;
+    print!("{}", report::render(&r));
+    if let Some(v) = &r.validation {
+        if !v.ok(1e-3) {
+            bail!("validation FAILED");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let full = args.flag("full");
+    match args.get_or("id", "7") {
+        "7" => {
+            let cpu = if full {
+                CpuModel::calibrated()
+            } else {
+                CpuModel::paper()
+            };
+            let (s, e) = figures::fig7(&cfg, &cpu, &[100, 1024, 32768]);
+            s.print();
+            e.print();
+        }
+        "8" => {
+            let n = if full {
+                rapid_graph::bench::workload::OGBN_N
+            } else {
+                args.get_usize("nodes", 200_000)
+            };
+            figures::fig8(&cfg, n).print();
+        }
+        "9a" => figures::fig9_degree(&cfg, 32_768, &[12.5, 25.25, 50.0, 100.0]).print(),
+        "9b" => {
+            let sizes: Vec<usize> = if full {
+                vec![1024, 8192, 65_536, 524_288, 2_449_029]
+            } else {
+                vec![1024, 8192, 65_536]
+            };
+            figures::fig9_size(&cfg, &sizes).0.print();
+        }
+        "9c" => {
+            figures::fig9_topology(
+                &cfg,
+                if full { 131_072 } else { 32_768 },
+                &[Topology::Nws, Topology::OgbnProxy, Topology::Er],
+            )
+            .0
+            .print();
+        }
+        "table3" => {
+            for t in figures::table3() {
+                t.print();
+            }
+        }
+        other => bail!("unknown figure id {other:?} (7|8|9a|9b|9c|table3)"),
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let g = graph_from_args(args)?;
+    anyhow::ensure!(
+        g.n() <= 3000,
+        "exhaustive validation is O(n^2); use --nodes <= 3000 (apsp does sampled validation at any size)"
+    );
+    let ex = Executor::new(cfg)?;
+    let plan = ex.plan(&g);
+    let backend = rapid_graph::apsp::backend::NativeBackend;
+    let sol = rapid_graph::apsp::recursive::solve(
+        &g,
+        &plan,
+        Some(&backend),
+        rapid_graph::apsp::recursive::SolveOptions::default(),
+    );
+    let full = sol.materialize_full(&backend);
+    let v = rapid_graph::apsp::validate::validate_full(&g, &full, 1e-3);
+    println!(
+        "exhaustive validation: {} entries, max err {:.2e}, {} mismatches -> {}",
+        v.checked,
+        v.max_abs_err,
+        v.mismatches,
+        if v.ok(1e-3) { "EXACT" } else { "FAILED" }
+    );
+    if !v.ok(1e-3) {
+        bail!("validation failed");
+    }
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! Multilevel bisection: coarsen → greedy-growing initial split →
+//! FM refinement → project back with per-level refinement.
+
+use super::coarsen;
+use super::refine;
+use crate::graph::csr::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Bisect into two roughly equal halves with generous (25%) balance
+/// slack — the right mode for `partition_by_max_size`, where only the
+/// max-part-size bound matters and forcing exact halves would split
+/// natural communities. Returns `side[v]` (false=left).
+pub fn bisect(g: &CsrGraph, seed: u64) -> Vec<bool> {
+    bisect_slack(g, g.n() / 2, 0.25, seed)
+}
+
+/// Bisect with an explicit left-side size target, enforced exactly
+/// (within +-1) — the mode `partition_kway` needs for balanced parts.
+pub fn bisect_with_target(g: &CsrGraph, target_left: usize, seed: u64) -> Vec<bool> {
+    let mut side = bisect_slack(g, target_left, 0.05, seed);
+    rebalance(g, &mut side, target_left, 0);
+    side
+}
+
+/// Multilevel bisection with a balance slack fraction: the final left
+/// side lands within `slack_frac * n` of `target_left`, wherever the
+/// cut is cheapest.
+pub fn bisect_slack(g: &CsrGraph, target_left: usize, slack_frac: f64, seed: u64) -> Vec<bool> {
+    let n = g.n();
+    if n <= 1 {
+        return vec![false; n];
+    }
+    let target_left = target_left.clamp(1, n - 1);
+    let mut rng = Rng::new(seed);
+
+    // ---- coarsen
+    let coarse_target = 200.max(n / 64).min(n);
+    let levels = coarsen_to(g, coarse_target, &mut rng);
+
+    // ---- initial partition on the coarsest graph (weighted target)
+    let (coarsest, vwgt): (&CsrGraph, Vec<u32>) = match levels.last() {
+        Some(l) => (&l.graph, l.vwgt.clone()),
+        None => (g, vec![1u32; n]),
+    };
+    let frac = target_left as f64 / n as f64;
+    let coarse_total: u64 = vwgt.iter().map(|&w| w as u64).sum();
+    let coarse_target_left = ((coarse_total as f64) * frac).round() as u64;
+    let mut side = greedy_grow(coarsest, &vwgt, coarse_target_left, &mut rng);
+    refine::fm_refine_slack(coarsest, &vwgt, &mut side, coarse_target_left, 8, slack_frac);
+
+    // ---- project back through the levels, refining each time
+    for i in (0..levels.len()).rev() {
+        let fine_graph: &CsrGraph = if i == 0 { g } else { &levels[i - 1].graph };
+        let fine_vwgt: Vec<u32> = if i == 0 {
+            vec![1u32; g.n()]
+        } else {
+            levels[i - 1].vwgt.clone()
+        };
+        let map = &levels[i].map;
+        let mut fine_side = vec![false; fine_graph.n()];
+        for v in 0..fine_graph.n() {
+            fine_side[v] = side[map[v] as usize];
+        }
+        let fine_total: u64 = fine_vwgt.iter().map(|&w| w as u64).sum();
+        let fine_target_left = ((fine_total as f64) * frac).round() as u64;
+        refine::fm_refine_slack(
+            fine_graph,
+            &fine_vwgt,
+            &mut fine_side,
+            fine_target_left,
+            4,
+            slack_frac,
+        );
+        side = fine_side;
+    }
+    debug_assert_eq!(side.len(), n);
+    let slack = ((n as f64) * slack_frac) as usize;
+    rebalance(g, &mut side, target_left, slack);
+    side
+}
+
+fn coarsen_to(g: &CsrGraph, target: usize, rng: &mut Rng) -> Vec<coarsen::CoarseLevel> {
+    coarsen::coarsen_to(g, target, rng)
+}
+
+/// Greedy graph growing: BFS from a random seed, absorbing vertices until
+/// the left side reaches the weight target. Disconnected leftovers stay
+/// right.
+fn greedy_grow(g: &CsrGraph, vwgt: &[u32], target_left: u64, rng: &mut Rng) -> Vec<bool> {
+    let n = g.n();
+    let mut side = vec![true; n]; // true = right
+    if n == 0 {
+        return side;
+    }
+    let mut grown: u64 = 0;
+    let mut visited = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    while grown < target_left {
+        // (re)seed from an unvisited vertex (handles disconnected graphs)
+        if queue.is_empty() {
+            let mut start = rng.gen_range(n);
+            let mut tries = 0;
+            while visited[start] && tries < n {
+                start = (start + 1) % n;
+                tries += 1;
+            }
+            if visited[start] {
+                break;
+            }
+            visited[start] = true;
+            queue.push_back(start);
+        }
+        if let Some(v) = queue.pop_front() {
+            side[v] = false;
+            grown += vwgt[v] as u64;
+            for (u, _) in g.neighbors(v) {
+                if !visited[u] {
+                    visited[u] = true;
+                    queue.push_back(u);
+                }
+            }
+        }
+    }
+    side
+}
+
+/// Pull the left side size to within `slack` of `target_left` by moving
+/// the cheapest boundary vertices (ensures downstream size invariants;
+/// `slack = 0` forces the target exactly).
+fn rebalance(g: &CsrGraph, side: &mut [bool], target_left: usize, slack: usize) {
+    let n = side.len();
+    let count_left = side.iter().filter(|&&s| !s).count();
+    let (from_right, deficit) = if count_left + slack < target_left {
+        (true, target_left - slack - count_left)
+    } else if count_left > target_left + slack {
+        (false, count_left - target_left - slack)
+    } else {
+        return;
+    };
+    if deficit == 0 {
+        return;
+    }
+    // score candidates by how "attached" they are to the destination side
+    let mut cands: Vec<(i64, usize)> = (0..n)
+        .filter(|&v| side[v] == from_right)
+        .map(|v| {
+            let mut gain = 0i64;
+            for (u, _) in g.neighbors(v) {
+                if side[u] == from_right {
+                    gain -= 1;
+                } else {
+                    gain += 1;
+                }
+            }
+            (-gain, v) // sort ascending => best gain first
+        })
+        .collect();
+    cands.sort_unstable();
+    for &(_, v) in cands.iter().take(deficit) {
+        side[v] = !side[v];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+
+    #[test]
+    fn bisect_halves_within_slack() {
+        let g = generators::newman_watts_strogatz(300, 4, 0.05, Weights::Unit, 1);
+        let side = bisect(&g, 42);
+        let left = side.iter().filter(|&&s| !s).count();
+        // 25% slack around n/2: the cut lands where it is cheapest
+        assert!((75..=225).contains(&left), "left={left}");
+    }
+
+    #[test]
+    fn bisect_with_target_exact() {
+        let g = generators::random_connected(100, 80, Weights::Unit, 2);
+        for target in [10usize, 33, 50, 90] {
+            let side = bisect_with_target(&g, target, 7);
+            let left = side.iter().filter(|&&s| !s).count();
+            assert_eq!(left, target, "target {target}");
+        }
+    }
+
+    #[test]
+    fn cut_quality_on_two_cliques() {
+        // two dense cliques joined by one bridge: ideal cut = 1 edge
+        let mut edges = Vec::new();
+        for u in 0..20u32 {
+            for v in (u + 1)..20 {
+                edges.push((u, v, 1.0f32));
+            }
+        }
+        for u in 20..40u32 {
+            for v in (u + 1)..40 {
+                edges.push((u, v, 1.0));
+            }
+        }
+        edges.push((5, 25, 1.0));
+        let g = CsrGraph::from_undirected_edges(40, &edges);
+        let side = bisect(&g, 3);
+        // sides must separate the cliques
+        let first_clique_side = side[0];
+        assert!(
+            (0..20).all(|v| side[v] == first_clique_side),
+            "clique A split"
+        );
+        assert!(
+            (20..40).all(|v| side[v] != first_clique_side),
+            "clique B split"
+        );
+    }
+
+    #[test]
+    fn tiny_graphs() {
+        let g = CsrGraph::empty(1);
+        assert_eq!(bisect(&g, 1), vec![false]);
+        let g2 = CsrGraph::from_undirected_edges(2, &[(0, 1, 1.0)]);
+        let s = bisect(&g2, 1);
+        assert_ne!(s[0], s[1]);
+    }
+}

@@ -1,0 +1,270 @@
+//! Component/boundary structure for partitioned APSP (paper §II-B2).
+//!
+//! Within each component, a *boundary* vertex has an edge to another
+//! component; internal vertices only connect within their component. For
+//! computational efficiency, boundary vertices are reordered before
+//! internal vertices (paper: "boundary vertices are reordered before
+//! internal vertices") — the distance matrix of a component then has its
+//! boundary block in the top-left corner, which is what the injection
+//! and merge steps slice.
+
+use super::Partition;
+use crate::graph::csr::CsrGraph;
+
+/// One component with boundary-first vertex ordering.
+#[derive(Debug, Clone)]
+pub struct Component {
+    /// Global vertex ids; the first `n_boundary` are boundary vertices.
+    pub verts: Vec<u32>,
+    pub n_boundary: usize,
+}
+
+impl Component {
+    pub fn n(&self) -> usize {
+        self.verts.len()
+    }
+    /// Boundary vertices (global ids).
+    pub fn boundary(&self) -> &[u32] {
+        &self.verts[..self.n_boundary]
+    }
+    /// Internal vertices (global ids).
+    pub fn internal(&self) -> &[u32] {
+        &self.verts[self.n_boundary..]
+    }
+}
+
+/// The decomposition of a graph into components plus the boundary set B.
+#[derive(Debug, Clone)]
+pub struct ComponentSet {
+    pub components: Vec<Component>,
+    /// All boundary vertices in boundary-graph id order (component 0's
+    /// boundary first, then component 1's, ...).
+    pub boundary_verts: Vec<u32>,
+    /// `boundary_id[v]` = id in the boundary graph, or `u32::MAX`.
+    pub boundary_id: Vec<u32>,
+    /// Component id of each vertex (copied from the partition).
+    pub comp_of: Vec<u32>,
+}
+
+impl ComponentSet {
+    /// Total boundary vertices |B|.
+    pub fn n_boundary(&self) -> usize {
+        self.boundary_verts.len()
+    }
+
+    /// Largest component size (must be <= tile limit after partitioning).
+    pub fn max_component(&self) -> usize {
+        self.components.iter().map(|c| c.n()).max().unwrap_or(0)
+    }
+
+    /// Check the defining invariants.
+    pub fn validate(&self, g: &CsrGraph) -> Result<(), String> {
+        let n = g.n();
+        let mut seen = vec![false; n];
+        for (ci, c) in self.components.iter().enumerate() {
+            if c.n_boundary > c.n() {
+                return Err(format!("component {ci}: n_boundary > n"));
+            }
+            for (idx, &v) in c.verts.iter().enumerate() {
+                let v = v as usize;
+                if seen[v] {
+                    return Err(format!("vertex {v} in two components"));
+                }
+                seen[v] = true;
+                if self.comp_of[v] as usize != ci {
+                    return Err(format!("comp_of[{v}] mismatch"));
+                }
+                let is_boundary = g.neighbors(v).any(|(u, _)| self.comp_of[u] != ci as u32);
+                let marked = idx < c.n_boundary;
+                if is_boundary != marked {
+                    return Err(format!(
+                        "vertex {v} boundary flag mismatch (is {is_boundary}, marked {marked})"
+                    ));
+                }
+                let bid = self.boundary_id[v];
+                if marked != (bid != u32::MAX) {
+                    return Err(format!("boundary_id[{v}] inconsistent"));
+                }
+                if marked && self.boundary_verts[bid as usize] as usize != v {
+                    return Err(format!("boundary_verts[{bid}] != {v}"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("not all vertices covered".into());
+        }
+        Ok(())
+    }
+}
+
+/// Build the component set from a partition, reordering boundary-first.
+pub fn build_components(g: &CsrGraph, p: &Partition) -> ComponentSet {
+    let n = g.n();
+    let comp_of = p.assign.clone();
+    let members = p.part_members();
+    let mut components = Vec::with_capacity(p.k);
+    let mut boundary_verts = Vec::new();
+    let mut boundary_id = vec![u32::MAX; n];
+    for (ci, verts) in members.into_iter().enumerate() {
+        let mut bnd = Vec::new();
+        let mut int = Vec::new();
+        for &v in &verts {
+            let is_boundary = g
+                .neighbors(v as usize)
+                .any(|(u, _)| comp_of[u] != ci as u32);
+            if is_boundary {
+                bnd.push(v);
+            } else {
+                int.push(v);
+            }
+        }
+        for &v in &bnd {
+            boundary_id[v as usize] = boundary_verts.len() as u32;
+            boundary_verts.push(v);
+        }
+        let n_boundary = bnd.len();
+        bnd.extend(int);
+        components.push(Component {
+            verts: bnd,
+            n_boundary,
+        });
+    }
+    ComponentSet {
+        components,
+        boundary_verts,
+        boundary_id,
+        comp_of,
+    }
+}
+
+/// Build the boundary graph G_B (paper Step 2): vertices are all boundary
+/// vertices; edges are (i) cross-component edges of `g` and (ii) virtual
+/// intra-component edges weighted by `d_intra(comp, bi, bj)` (local
+/// boundary indices within that component's matrix). Pass
+/// `|_, _, _| 1.0` for topology-only planning.
+pub fn boundary_graph(
+    g: &CsrGraph,
+    cs: &ComponentSet,
+    d_intra: &dyn Fn(usize, usize, usize) -> f32,
+) -> CsrGraph {
+    let nb = cs.n_boundary();
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    // (i) cross-component edges
+    for (u, v, w) in g.edges() {
+        if cs.comp_of[u as usize] != cs.comp_of[v as usize] {
+            let bu = cs.boundary_id[u as usize];
+            let bv = cs.boundary_id[v as usize];
+            debug_assert!(bu != u32::MAX && bv != u32::MAX);
+            edges.push((bu, bv, w));
+        }
+    }
+    // (ii) virtual intra-component edges between boundary vertices
+    for (ci, c) in cs.components.iter().enumerate() {
+        for bi in 0..c.n_boundary {
+            let gu = c.verts[bi] as usize;
+            let bu = cs.boundary_id[gu];
+            for bj in (bi + 1)..c.n_boundary {
+                let gv = c.verts[bj] as usize;
+                let bv = cs.boundary_id[gv];
+                let w = d_intra(ci, bi, bj);
+                if w.is_finite() {
+                    edges.push((bu, bv, w));
+                    edges.push((bv, bu, d_intra(ci, bj, bi)));
+                }
+            }
+        }
+    }
+    CsrGraph::from_edges(nb, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+    use crate::partition::partition_by_max_size;
+
+    fn setup(n: usize, seed: u64) -> (CsrGraph, ComponentSet) {
+        let g = generators::newman_watts_strogatz(n, 4, 0.1, Weights::Uniform(1.0, 5.0), seed);
+        let p = partition_by_max_size(&g, 64, seed);
+        let cs = build_components(&g, &p);
+        (g, cs)
+    }
+
+    #[test]
+    fn components_valid() {
+        let (g, cs) = setup(300, 1);
+        cs.validate(&g).unwrap();
+        assert!(cs.max_component() <= 64);
+    }
+
+    #[test]
+    fn boundary_first_ordering() {
+        let (g, cs) = setup(300, 2);
+        for c in &cs.components {
+            for (idx, &v) in c.verts.iter().enumerate() {
+                let ci = cs.comp_of[v as usize];
+                let is_b = g.neighbors(v as usize).any(|(u, _)| cs.comp_of[u] != ci);
+                assert_eq!(is_b, idx < c.n_boundary);
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_graph_topology_valid() {
+        let (g, cs) = setup(200, 3);
+        let gb = boundary_graph(&g, &cs, &|_, _, _| 1.0);
+        gb.validate().unwrap();
+        assert_eq!(gb.n(), cs.n_boundary());
+        assert!(gb.n() > 0, "NWS partitions must have boundaries");
+    }
+
+    #[test]
+    fn boundary_graph_contains_cross_edges() {
+        let (g, cs) = setup(200, 4);
+        let gb = boundary_graph(&g, &cs, &|_, _, _| f32::INFINITY);
+        // with infinite virtual edges, only cross edges remain
+        for (u, v, w) in g.edges() {
+            if cs.comp_of[u as usize] != cs.comp_of[v as usize] {
+                let bu = cs.boundary_id[u as usize] as usize;
+                let bv = cs.boundary_id[v as usize] as usize;
+                let got = gb.edge_weight(bu, bv).unwrap();
+                assert!(got <= w, "cross edge ({u},{v}) missing or heavier");
+            }
+        }
+    }
+
+    #[test]
+    fn single_component_has_no_boundary() {
+        let g = generators::complete(20, Weights::Unit, 5);
+        let p = partition_by_max_size(&g, 1024, 5);
+        let cs = build_components(&g, &p);
+        cs.validate(&g).unwrap();
+        assert_eq!(cs.n_boundary(), 0);
+        assert_eq!(cs.components.len(), 1);
+    }
+
+    #[test]
+    fn two_cliques_bridge_boundary() {
+        let mut edges = Vec::new();
+        for u in 0..10u32 {
+            for v in (u + 1)..10 {
+                edges.push((u, v, 1.0f32));
+            }
+        }
+        for u in 10..20u32 {
+            for v in (u + 1)..20 {
+                edges.push((u, v, 1.0));
+            }
+        }
+        edges.push((3, 13, 9.0));
+        let g = CsrGraph::from_undirected_edges(20, &edges);
+        let p = partition_by_max_size(&g, 10, 1);
+        let cs = build_components(&g, &p);
+        cs.validate(&g).unwrap();
+        // exactly the two bridge endpoints are boundary
+        assert_eq!(cs.n_boundary(), 2);
+        let bset: std::collections::HashSet<u32> =
+            cs.boundary_verts.iter().copied().collect();
+        assert!(bset.contains(&3) && bset.contains(&13));
+    }
+}

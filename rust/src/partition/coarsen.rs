@@ -1,0 +1,195 @@
+//! Coarsening phase: heavy-edge matching (HEM) + coarse-graph build,
+//! the first phase of the multilevel scheme [24].
+
+use crate::graph::csr::CsrGraph;
+use crate::util::rng::Rng;
+
+/// One coarsening level: the coarse graph, the fine→coarse vertex map,
+//  and coarse vertex weights (number of original vertices merged).
+#[derive(Debug, Clone)]
+pub struct CoarseLevel {
+    pub graph: CsrGraph,
+    /// `map[fine_v] = coarse_v`
+    pub map: Vec<u32>,
+    /// vertices merged into each coarse vertex
+    pub vwgt: Vec<u32>,
+}
+
+/// Heavy-edge matching: visit vertices in random order; match each
+/// unmatched vertex with its unmatched neighbor of maximum edge weight.
+/// Returns `match_of[v]` (== v for unmatched singletons).
+pub fn heavy_edge_matching(g: &CsrGraph, rng: &mut Rng) -> Vec<u32> {
+    let n = g.n();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut match_of: Vec<u32> = (0..n as u32).collect();
+    let mut matched = vec![false; n];
+    for &v in &order {
+        let v = v as usize;
+        if matched[v] {
+            continue;
+        }
+        let mut best: Option<(usize, f32)> = None;
+        for (u, w) in g.neighbors(v) {
+            if !matched[u] && u != v {
+                match best {
+                    Some((_, bw)) if bw >= w => {}
+                    _ => best = Some((u, w)),
+                }
+            }
+        }
+        if let Some((u, _)) = best {
+            matched[v] = true;
+            matched[u] = true;
+            match_of[v] = u as u32;
+            match_of[u] = v as u32;
+        }
+    }
+    match_of
+}
+
+/// Build the coarse graph from a matching, with vertex weights carried
+/// through (`vwgt_fine` may be `None` for the first level = all 1).
+pub fn contract(g: &CsrGraph, match_of: &[u32], vwgt_fine: Option<&[u32]>) -> CoarseLevel {
+    let n = g.n();
+    // assign coarse ids: matched pair gets one id (owner = smaller index)
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        let m = match_of[v] as usize;
+        map[v] = next;
+        if m != v {
+            map[m] = next;
+        }
+        next += 1;
+    }
+    let nc = next as usize;
+    let mut vwgt = vec![0u32; nc];
+    for v in 0..n {
+        vwgt[map[v] as usize] += vwgt_fine.map(|w| w[v]).unwrap_or(1);
+    }
+    // aggregate edges (summing parallel edge weights — heavier coarse
+    // edges attract the next matching round, like METIS)
+    let mut edges: Vec<(u32, u32, f32)> = Vec::with_capacity(g.m());
+    for (u, v, w) in g.edges() {
+        let cu = map[u as usize];
+        let cv = map[v as usize];
+        if cu != cv {
+            edges.push((cu, cv, w));
+        }
+    }
+    // CsrGraph::from_edges dedups by min; we need SUM for coarsening.
+    let graph = csr_from_edges_sum(nc, &mut edges);
+    CoarseLevel { graph, map, vwgt }
+}
+
+/// CSR build that SUMS duplicate edge weights (coarsening semantics)
+/// instead of taking the min.
+fn csr_from_edges_sum(n: usize, edges: &mut Vec<(u32, u32, f32)>) -> CsrGraph {
+    edges.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut rowptr = vec![0usize; n + 1];
+    let mut col = Vec::with_capacity(edges.len());
+    let mut val: Vec<f32> = Vec::with_capacity(edges.len());
+    let mut prev: Option<(u32, u32)> = None;
+    for &(u, v, w) in edges.iter() {
+        if prev == Some((u, v)) {
+            *val.last_mut().unwrap() += w;
+        } else {
+            col.push(v);
+            val.push(w);
+            rowptr[u as usize + 1] += 1;
+            prev = Some((u, v));
+        }
+    }
+    for i in 0..n {
+        rowptr[i + 1] += rowptr[i];
+    }
+    CsrGraph { rowptr, col, val }
+}
+
+/// Coarsen until the graph has at most `target_n` vertices or matching
+/// stalls. Returns levels fine→coarse (level 0 built from `g`).
+pub fn coarsen_to(g: &CsrGraph, target_n: usize, rng: &mut Rng) -> Vec<CoarseLevel> {
+    let mut levels: Vec<CoarseLevel> = Vec::new();
+    let mut cur = g.clone();
+    let mut vwgt: Option<Vec<u32>> = None;
+    while cur.n() > target_n {
+        let match_of = heavy_edge_matching(&cur, rng);
+        let lvl = contract(&cur, &match_of, vwgt.as_deref());
+        // matching stalled (e.g. edgeless graph): stop
+        if lvl.graph.n() as f64 > 0.95 * cur.n() as f64 {
+            levels.push(lvl);
+            break;
+        }
+        cur = lvl.graph.clone();
+        vwgt = Some(lvl.vwgt.clone());
+        levels.push(lvl);
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+
+    #[test]
+    fn matching_is_symmetric_and_disjoint() {
+        let g = generators::newman_watts_strogatz(200, 3, 0.1, Weights::Uniform(1.0, 5.0), 1);
+        let mut rng = Rng::new(2);
+        let m = heavy_edge_matching(&g, &mut rng);
+        for v in 0..g.n() {
+            let u = m[v] as usize;
+            assert_eq!(m[u] as usize, v, "matching not symmetric at {v}");
+        }
+    }
+
+    #[test]
+    fn contract_preserves_total_vertex_weight() {
+        let g = generators::random_connected(150, 100, Weights::Unit, 3);
+        let mut rng = Rng::new(4);
+        let m = heavy_edge_matching(&g, &mut rng);
+        let lvl = contract(&g, &m, None);
+        let total: u32 = lvl.vwgt.iter().sum();
+        assert_eq!(total as usize, g.n());
+        assert!(lvl.graph.n() < g.n());
+        lvl.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn contract_sums_parallel_edges() {
+        // triangle 0-1-2; match (0,1) -> coarse edge {01}-2 weight 1+1=2
+        let g = CsrGraph::from_undirected_edges(
+            3,
+            &[(0, 1, 5.0), (0, 2, 1.0), (1, 2, 1.0)],
+        );
+        let match_of = vec![1, 0, 2];
+        let lvl = contract(&g, &match_of, None);
+        assert_eq!(lvl.graph.n(), 2);
+        let c01 = lvl.map[0];
+        let c2 = lvl.map[2];
+        assert_eq!(
+            lvl.graph.edge_weight(c01 as usize, c2 as usize),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn coarsen_reaches_target() {
+        let g = generators::newman_watts_strogatz(1000, 4, 0.05, Weights::Unit, 5);
+        let mut rng = Rng::new(6);
+        let levels = coarsen_to(&g, 100, &mut rng);
+        assert!(!levels.is_empty());
+        let last = &levels.last().unwrap().graph;
+        assert!(last.n() <= 150, "coarsest has {} vertices", last.n());
+        // every level maps onto the next
+        let mut n_prev = g.n();
+        for lvl in &levels {
+            assert_eq!(lvl.map.len(), n_prev);
+            n_prev = lvl.graph.n();
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Boundary FM refinement: greedy gain-ordered vertex moves with a
+//! balance constraint — the uncoarsening-phase refinement of the
+//! multilevel scheme [24] (simplified Fiduccia–Mattheyses).
+
+use crate::graph::csr::CsrGraph;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Refine a bisection in place. `side[v]` false=left/true=right;
+/// `target_left` is the desired total left vertex weight; `passes`
+/// bounds the number of full sweeps. Only moves that keep
+/// `|left - target| <= max(3, slack_frac of total)` are allowed.
+pub fn fm_refine(
+    g: &CsrGraph,
+    vwgt: &[u32],
+    side: &mut [bool],
+    target_left: u64,
+    passes: usize,
+) {
+    fm_refine_slack(g, vwgt, side, target_left, passes, 0.05)
+}
+
+/// `fm_refine` with an explicit balance slack fraction.
+pub fn fm_refine_slack(
+    g: &CsrGraph,
+    vwgt: &[u32],
+    side: &mut [bool],
+    target_left: u64,
+    passes: usize,
+    slack_frac: f64,
+) {
+    let n = g.n();
+    if n < 4 {
+        return;
+    }
+    let total: u64 = vwgt.iter().map(|&w| w as u64).sum();
+    let slack = ((total as f64) * slack_frac).max(3.0) as i64;
+    let mut left_weight: i64 = (0..n).filter(|&v| !side[v]).map(|v| vwgt[v] as i64).sum();
+    let target = target_left as i64;
+
+    for _ in 0..passes {
+        // gain[v] = cut reduction if v moves to the other side
+        let gain = |v: usize, side: &[bool]| -> f64 {
+            let mut ext = 0.0f64;
+            let mut int = 0.0f64;
+            for (u, w) in g.neighbors(v) {
+                if side[u] == side[v] {
+                    int += w as f64;
+                } else {
+                    ext += w as f64;
+                }
+            }
+            ext - int
+        };
+        // max-heap of boundary vertices by gain
+        let mut heap: BinaryHeap<(i64, Reverse<usize>)> = BinaryHeap::new();
+        for v in 0..n {
+            let on_boundary = g.neighbors(v).any(|(u, _)| side[u] != side[v]);
+            if on_boundary {
+                heap.push(((gain(v, side) * 1024.0) as i64, Reverse(v)));
+            }
+        }
+        let mut moved = vec![false; n];
+        let mut improved = false;
+        while let Some((g1024, Reverse(v))) = heap.pop() {
+            if moved[v] {
+                continue;
+            }
+            // recompute (lazy invalidation)
+            let cur = (gain(v, side) * 1024.0) as i64;
+            if cur < g1024 {
+                if cur > 0 {
+                    heap.push((cur, Reverse(v)));
+                }
+                continue;
+            }
+            if cur <= 0 {
+                break; // no positive-gain moves left
+            }
+            // balance check
+            let delta = if side[v] { vwgt[v] as i64 } else { -(vwgt[v] as i64) };
+            let new_left = left_weight + delta;
+            if (new_left - target).abs() > slack {
+                continue;
+            }
+            // apply move
+            side[v] = !side[v];
+            left_weight = new_left;
+            moved[v] = true;
+            improved = true;
+            // neighbors' gains changed; re-push
+            for (u, _) in g.neighbors(v) {
+                if !moved[u] {
+                    let ug = (gain(u, side) * 1024.0) as i64;
+                    if ug > 0 {
+                        heap.push((ug, Reverse(u)));
+                    }
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// Edge cut of a bisection (test helper, exported for kway tests).
+pub fn cut_of(g: &CsrGraph, side: &[bool]) -> f64 {
+    let mut cut = 0.0;
+    for (u, v, w) in g.edges() {
+        if side[u as usize] != side[v as usize] {
+            cut += w as f64;
+        }
+    }
+    cut / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn refinement_never_worsens_cut() {
+        for seed in 0..5u64 {
+            let g = generators::newman_watts_strogatz(200, 4, 0.1, Weights::Uniform(1.0, 4.0), seed);
+            let mut rng = Rng::new(seed);
+            let mut side: Vec<bool> = (0..g.n()).map(|_| rng.gen_bool(0.5)).collect();
+            let before = cut_of(&g, &side);
+            let vwgt = vec![1u32; g.n()];
+            fm_refine(&g, &vwgt, &mut side, (g.n() / 2) as u64, 6);
+            let after = cut_of(&g, &side);
+            assert!(after <= before + 1e-9, "seed {seed}: {before} -> {after}");
+        }
+    }
+
+    #[test]
+    fn refinement_respects_balance_slack() {
+        let g = generators::random_connected(300, 200, Weights::Unit, 9);
+        let mut side: Vec<bool> = (0..g.n()).map(|v| v % 2 == 1).collect();
+        let vwgt = vec![1u32; g.n()];
+        fm_refine(&g, &vwgt, &mut side, 150, 6);
+        let left = side.iter().filter(|&&s| !s).count() as i64;
+        assert!((left - 150).abs() <= 15, "left={left}");
+    }
+
+    #[test]
+    fn fixes_obvious_misassignment() {
+        // two cliques with one vertex planted on the wrong side
+        let mut edges = Vec::new();
+        for u in 0..10u32 {
+            for v in (u + 1)..10 {
+                edges.push((u, v, 1.0f32));
+            }
+        }
+        for u in 10..20u32 {
+            for v in (u + 1)..20 {
+                edges.push((u, v, 1.0));
+            }
+        }
+        edges.push((0, 10, 1.0));
+        let g = CsrGraph::from_undirected_edges(20, &edges);
+        let mut side: Vec<bool> = (0..20).map(|v| v >= 10).collect();
+        side[5] = true; // misplace one clique-A vertex
+        side[15] = false; // and one clique-B vertex (keeps balance)
+        let vwgt = vec![1u32; 20];
+        let before = cut_of(&g, &side);
+        fm_refine(&g, &vwgt, &mut side, 10, 4);
+        let after = cut_of(&g, &side);
+        assert!(after < before);
+        assert_eq!(after, 1.0, "should recover the single-bridge cut");
+    }
+}

@@ -1,0 +1,170 @@
+//! Artifact manifest: locates and describes the HLO text files emitted
+//! by `python/compile/aot.py` (see `artifacts/manifest.json`).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub path: PathBuf,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Floyd–Warshall over one (n, n) block.
+    Fw,
+    /// Accumulating min-plus product over (n, n) blocks.
+    MinPlus,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+    pub jax_version: String,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing artifacts[]")?
+        {
+            let kind = match a.get("kind").and_then(|k| k.as_str()) {
+                Some("fw") => ArtifactKind::Fw,
+                Some("minplus") => ArtifactKind::MinPlus,
+                other => bail!("unknown artifact kind {other:?}"),
+            };
+            let n = a
+                .get("n")
+                .and_then(|n| n.as_usize())
+                .context("artifact missing n")?;
+            let rel = a
+                .get("path")
+                .and_then(|p| p.as_str())
+                .context("artifact missing path")?;
+            let path = dir.join(rel);
+            if !path.exists() {
+                bail!("artifact file missing: {}", path.display());
+            }
+            artifacts.push(Artifact { kind, n, path });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+            jax_version: json
+                .get("jax_version")
+                .and_then(|v| v.as_str())
+                .unwrap_or("?")
+                .to_string(),
+        })
+    }
+
+    /// Default artifacts directory: `$RAPID_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RAPID_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Available size classes for a kind, ascending.
+    pub fn sizes(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest size class that fits `n`, if any.
+    pub fn size_class(&self, kind: ArtifactKind, n: usize) -> Option<usize> {
+        self.sizes(kind).into_iter().find(|&s| s >= n)
+    }
+
+    pub fn find(&self, kind: ArtifactKind, n: usize) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.kind == kind && a.n == n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, entries: &[(&str, usize)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut arts = Vec::new();
+        for (kind, n) in entries {
+            let name = format!("{kind}_{n}.hlo.txt");
+            std::fs::write(dir.join(&name), "HloModule fake").unwrap();
+            arts.push(format!(
+                "{{\"kind\": \"{kind}\", \"n\": {n}, \"path\": \"{name}\"}}"
+            ));
+        }
+        let text = format!(
+            "{{\"artifacts\": [{}], \"jax_version\": \"0.0-test\"}}",
+            arts.join(",")
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_queries_size_classes() {
+        let dir = std::env::temp_dir().join("rapid_manifest_test1");
+        write_manifest(&dir, &[("fw", 64), ("fw", 256), ("minplus", 64)]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.sizes(ArtifactKind::Fw), vec![64, 256]);
+        assert_eq!(m.size_class(ArtifactKind::Fw, 65), Some(256));
+        assert_eq!(m.size_class(ArtifactKind::Fw, 64), Some(64));
+        assert_eq!(m.size_class(ArtifactKind::Fw, 257), None);
+        assert_eq!(m.size_class(ArtifactKind::MinPlus, 10), Some(64));
+        assert_eq!(m.jax_version, "0.0-test");
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("rapid_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"kind": "fw", "n": 64, "path": "nope.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let dir = std::env::temp_dir().join("rapid_manifest_test3_nonexistent");
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        // integration: parse the real manifest when `make artifacts` ran
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.size_class(ArtifactKind::Fw, 1024).is_some());
+            assert!(m.size_class(ArtifactKind::MinPlus, 1024).is_some());
+        }
+    }
+}

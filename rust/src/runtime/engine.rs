@@ -1,0 +1,319 @@
+//! PJRT tile engines: compile the HLO artifacts once, then execute FW
+//! and MP tile ops from the rust hot path with INF padding to the
+//! nearest size class.
+//!
+//! Padding safety: a padded vertex has +inf to/from everything and 0 to
+//! itself, so it can never lie on a shortest path — FW and min-plus
+//! results on the valid corner are unchanged (property-tested on the
+//! python side in `test_padding_with_inf_is_safe` and here in
+//! `padded_matches_native`).
+
+use super::artifacts::{ArtifactKind, Manifest};
+use crate::apsp::backend::TileBackend;
+use crate::graph::dense::DistMatrix;
+use crate::INF;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Compiled executables for every artifact size class.
+pub struct PjrtRuntime {
+    inner: Mutex<Inner>,
+    fw_sizes: Vec<usize>,
+    mp_sizes: Vec<usize>,
+    pub manifest: Manifest,
+}
+
+struct Inner {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    fw: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    mp: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: all PJRT access is serialized through the Mutex; the CPU PJRT
+// client itself is thread-safe, but we stay conservative.
+unsafe impl Send for Inner {}
+
+impl PjrtRuntime {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut fw = BTreeMap::new();
+        let mut mp = BTreeMap::new();
+        for a in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&a.path)
+                .with_context(|| format!("parse {}", a.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", a.path.display()))?;
+            match a.kind {
+                ArtifactKind::Fw => fw.insert(a.n, exe),
+                ArtifactKind::MinPlus => mp.insert(a.n, exe),
+            };
+        }
+        let fw_sizes: Vec<usize> = fw.keys().copied().collect();
+        let mp_sizes: Vec<usize> = mp.keys().copied().collect();
+        anyhow::ensure!(!fw_sizes.is_empty(), "no fw artifacts");
+        anyhow::ensure!(!mp_sizes.is_empty(), "no minplus artifacts");
+        Ok(Self {
+            inner: Mutex::new(Inner { client, fw, mp }),
+            fw_sizes,
+            mp_sizes,
+            manifest,
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    /// Largest FW tile this runtime can execute.
+    pub fn max_fw_tile(&self) -> usize {
+        *self.fw_sizes.last().unwrap()
+    }
+
+    fn fw_class(&self, n: usize) -> Result<usize> {
+        self.fw_sizes
+            .iter()
+            .copied()
+            .find(|&s| s >= n)
+            .with_context(|| format!("no fw artifact fits n={n} (have {:?})", self.fw_sizes))
+    }
+
+    fn mp_class(&self, n: usize) -> Result<usize> {
+        self.mp_sizes
+            .iter()
+            .copied()
+            .find(|&s| s >= n)
+            .with_context(|| format!("no minplus artifact fits n={n} (have {:?})", self.mp_sizes))
+    }
+
+    /// In-place FW over a dense block via the AOT artifact.
+    pub fn fw_block(&self, d: &mut DistMatrix) -> Result<()> {
+        let n = d.n();
+        if n <= 1 {
+            return Ok(());
+        }
+        let class = self.fw_class(n)?;
+        // pad to the class size (isolated INF vertices, 0 diagonal)
+        let padded = if class == n { d.clone() } else { d.pad_to(class) };
+        let lit = xla::Literal::vec1(padded.as_slice())
+            .reshape(&[class as i64, class as i64])
+            .context("reshape input literal")?;
+        let out = {
+            let inner = self.inner.lock().unwrap();
+            let exe = &inner.fw[&class];
+            let result = exe.execute::<xla::Literal>(&[lit]).context("execute fw")?;
+            result[0][0]
+                .to_literal_sync()
+                .context("fetch fw result")?
+        };
+        let tuple = out.to_tuple1().context("unwrap fw tuple")?;
+        let vals: Vec<f32> = tuple.to_vec().context("fw result to_vec")?;
+        debug_assert_eq!(vals.len(), class * class);
+        for i in 0..n {
+            d.row_mut(i)
+                .copy_from_slice(&vals[i * class..i * class + n]);
+        }
+        Ok(())
+    }
+
+    /// `C = min(C, A (+) B)` via the AOT artifact (square-padded).
+    pub fn minplus_into(
+        &self,
+        c: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<()> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        if m == 0 || n == 0 {
+            return Ok(());
+        }
+        if k == 0 {
+            return Ok(()); // nothing to merge
+        }
+        let class = self.mp_class(m.max(k).max(n))?;
+        let pad = |src: &[f32], rows: usize, cols: usize| -> Vec<f32> {
+            let mut out = vec![INF; class * class];
+            for i in 0..rows {
+                out[i * class..i * class + cols].copy_from_slice(&src[i * cols..(i + 1) * cols]);
+            }
+            out
+        };
+        let lc = xla::Literal::vec1(&pad(c, m, n))
+            .reshape(&[class as i64, class as i64])?;
+        let la = xla::Literal::vec1(&pad(a, m, k))
+            .reshape(&[class as i64, class as i64])?;
+        let lb = xla::Literal::vec1(&pad(b, k, n))
+            .reshape(&[class as i64, class as i64])?;
+        let out = {
+            let inner = self.inner.lock().unwrap();
+            let exe = &inner.mp[&class];
+            let result = exe
+                .execute::<xla::Literal>(&[lc, la, lb])
+                .context("execute minplus")?;
+            result[0][0]
+                .to_literal_sync()
+                .context("fetch minplus result")?
+        };
+        let tuple = out.to_tuple1().context("unwrap minplus tuple")?;
+        let vals: Vec<f32> = tuple.to_vec().context("minplus result to_vec")?;
+        for i in 0..m {
+            c[i * n..(i + 1) * n].copy_from_slice(&vals[i * class..i * class + n]);
+        }
+        Ok(())
+    }
+}
+
+/// [`TileBackend`] adapter over a [`PjrtRuntime`].
+pub struct PjrtBackend<'a> {
+    pub runtime: &'a PjrtRuntime,
+}
+
+// SAFETY: PjrtRuntime serializes PJRT access through its Mutex.
+unsafe impl<'a> Sync for PjrtBackend<'a> {}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(runtime: &'a PjrtRuntime) -> Self {
+        Self { runtime }
+    }
+}
+
+impl<'a> TileBackend for PjrtBackend<'a> {
+    fn fw(&self, d: &mut DistMatrix) {
+        self.runtime
+            .fw_block(d)
+            .expect("PJRT fw_block failed (artifacts stale? run `make artifacts`)");
+    }
+
+    fn minplus_into(&self, c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        self.runtime
+            .minplus_into(c, a, b, m, k, n)
+            .expect("PJRT minplus failed");
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_block(&self) -> Option<usize> {
+        Some(self.runtime.max_fw_tile())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::backend::NativeBackend;
+    use crate::apsp::floyd_warshall;
+    use crate::graph::generators::{self, Weights};
+    use crate::util::rng::Rng;
+    use std::sync::OnceLock;
+
+    /// Compiling artifacts takes ~seconds; share one runtime per test
+    /// process. Tests are skipped when artifacts are absent (CI runs
+    /// `make artifacts` first).
+    fn runtime() -> Option<&'static PjrtRuntime> {
+        static RT: OnceLock<Option<PjrtRuntime>> = OnceLock::new();
+        RT.get_or_init(|| {
+            let dir = Manifest::default_dir();
+            if dir.join("manifest.json").exists() {
+                Some(PjrtRuntime::load(&dir).expect("artifacts exist but failed to load"))
+            } else {
+                eprintln!("skipping PJRT tests: no artifacts (run `make artifacts`)");
+                None
+            }
+        })
+        .as_ref()
+    }
+
+    #[test]
+    fn fw_exact_vs_native() {
+        let Some(rt) = runtime() else { return };
+        for &n in &[5usize, 30, 64, 100] {
+            let g = generators::random_connected(n, n, Weights::Uniform(0.5, 4.0), n as u64);
+            let mut d_pjrt = g.to_dense();
+            rt.fw_block(&mut d_pjrt).unwrap();
+            let mut d_native = g.to_dense();
+            floyd_warshall::fw_rowwise(&mut d_native);
+            let diff = d_pjrt.max_diff(&d_native);
+            assert!(diff < 1e-4, "n={n}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn minplus_exact_vs_native() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(7usize, 9usize, 5usize), (64, 64, 64), (50, 20, 70)] {
+            let gen = |len: usize, rng: &mut Rng| -> Vec<f32> {
+                (0..len)
+                    .map(|_| {
+                        if rng.gen_bool(0.3) {
+                            INF
+                        } else {
+                            rng.gen_f32_range(0.0, 9.0)
+                        }
+                    })
+                    .collect()
+            };
+            let a = gen(m * k, &mut rng);
+            let b = gen(k * n, &mut rng);
+            let mut c1 = gen(m * n, &mut rng);
+            let mut c2 = c1.clone();
+            rt.minplus_into(&mut c1, &a, &b, m, k, n).unwrap();
+            NativeBackend.minplus_into(&mut c2, &a, &b, m, k, n);
+            assert_eq!(c1, c2, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn padded_matches_native() {
+        // sizes straddling class boundaries
+        let Some(rt) = runtime() else { return };
+        for &n in &[63usize, 65, 127, 129] {
+            let g = generators::newman_watts_strogatz(
+                n,
+                3,
+                0.2,
+                Weights::Uniform(1.0, 5.0),
+                n as u64,
+            );
+            let mut d_pjrt = g.to_dense();
+            rt.fw_block(&mut d_pjrt).unwrap();
+            let mut d_native = g.to_dense();
+            floyd_warshall::fw_rowwise(&mut d_native);
+            assert!(d_pjrt.max_diff(&d_native) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn oversize_is_an_error() {
+        let Some(rt) = runtime() else { return };
+        let max = rt.max_fw_tile();
+        let mut d = DistMatrix::new_diag0(max + 1);
+        assert!(rt.fw_block(&mut d).is_err());
+    }
+
+    #[test]
+    fn backend_trait_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let be = PjrtBackend::new(rt);
+        assert_eq!(be.name(), "pjrt");
+        let g = generators::complete(12, Weights::Uniform(1.0, 3.0), 4);
+        let mut d = g.to_dense();
+        be.fw(&mut d);
+        let v = crate::apsp::validate::validate_full(&g, &d, 1e-4);
+        assert!(v.ok(1e-4), "{v:?}");
+    }
+}

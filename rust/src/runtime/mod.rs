@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas HLO artifacts and
+//! executes them as the tile compute engines (the three-layer stack's
+//! serve path — Python never runs here).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::Manifest;
+pub use engine::{PjrtBackend, PjrtRuntime};

@@ -1,0 +1,192 @@
+//! Area/power breakdown per PCM unit — reproduces Table III.
+//!
+//! The per-component constants are transcribed from the paper (40 nm
+//! synthesis scaled to 14 nm with [37]); this module re-derives the
+//! percentage splits and die-level totals the paper reports, so the
+//! bench prints the same rows.
+
+use super::params::HwParams;
+
+/// One Table III row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitComponent {
+    pub name: &'static str,
+    pub area_um2: f64,
+    pub power_mw: f64,
+}
+
+/// Per-unit breakdown for one die flavor.
+#[derive(Debug, Clone)]
+pub struct UnitBreakdown {
+    pub die: &'static str,
+    pub components: Vec<UnitComponent>,
+}
+
+impl UnitBreakdown {
+    pub fn total_area_um2(&self) -> f64 {
+        self.components.iter().map(|c| c.area_um2).sum()
+    }
+    pub fn total_power_mw(&self) -> f64 {
+        self.components.iter().map(|c| c.power_mw).sum()
+    }
+    /// Percentage splits, same order as `components`.
+    pub fn area_pct(&self) -> Vec<f64> {
+        let t = self.total_area_um2();
+        self.components.iter().map(|c| 100.0 * c.area_um2 / t).collect()
+    }
+    pub fn power_pct(&self) -> Vec<f64> {
+        let t = self.total_power_mw();
+        self.components.iter().map(|c| 100.0 * c.power_mw / t).collect()
+    }
+}
+
+/// Table III, PCM-FW column.
+pub fn pcm_fw_unit() -> UnitBreakdown {
+    UnitBreakdown {
+        die: "PCM-FW",
+        components: vec![
+            UnitComponent {
+                name: "PCM Subarray",
+                area_um2: 3288.0,
+                power_mw: 557.0,
+            },
+            UnitComponent {
+                name: "Permutation Unit",
+                area_um2: 917.3,
+                power_mw: 0.586,
+            },
+            UnitComponent {
+                name: "Controller",
+                area_um2: 5.94,
+                power_mw: 0.00126,
+            },
+            UnitComponent {
+                name: "Others",
+                area_um2: 19610.0,
+                power_mw: 133.29,
+            },
+        ],
+    }
+}
+
+/// Table III, PCM-MP column.
+pub fn pcm_mp_unit() -> UnitBreakdown {
+    UnitBreakdown {
+        die: "PCM-MP",
+        components: vec![
+            UnitComponent {
+                name: "PCM Subarray",
+                area_um2: 3288.0,
+                power_mw: 557.0,
+            },
+            UnitComponent {
+                name: "Min Comparator",
+                area_um2: 1268.0,
+                power_mw: 0.684,
+            },
+            UnitComponent {
+                name: "Controller",
+                area_um2: 5.94,
+                power_mw: 0.00126,
+            },
+            UnitComponent {
+                name: "Others",
+                area_um2: 19610.0,
+                power_mw: 133.29,
+            },
+        ],
+    }
+}
+
+/// System-level supporting components (paper §IV-B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemComponent {
+    pub name: &'static str,
+    pub power_w: f64,
+    pub area_mm2: f64,
+}
+
+pub fn system_components() -> Vec<SystemComponent> {
+    vec![
+        SystemComponent {
+            name: "HBM3 (16 GB)",
+            power_w: 8.6,
+            area_mm2: 121.0,
+        },
+        SystemComponent {
+            name: "FeNAND (16 TB)",
+            power_w: 6.4,
+            area_mm2: 3000.0,
+        },
+        SystemComponent {
+            name: "SM2508 controller",
+            power_w: 3.5,
+            area_mm2: 225.0,
+        },
+    ]
+}
+
+/// Die-level totals derived from the unit breakdown and geometry.
+pub fn die_area_mm2(p: &HwParams, unit: &UnitBreakdown) -> f64 {
+    unit.total_area_um2() * p.units_per_tile as f64 * p.tiles_per_die as f64 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_table_iii() {
+        let fw = pcm_fw_unit();
+        assert!((fw.total_area_um2() - 23821.24).abs() < 1.0);
+        assert!((fw.total_power_mw() - 690.88).abs() < 0.5);
+        let mp = pcm_mp_unit();
+        assert!((mp.total_area_um2() - 24171.94).abs() < 1.0);
+        assert!((mp.total_power_mw() - 690.98).abs() < 0.5);
+    }
+
+    #[test]
+    fn peripheral_dominates_area() {
+        // paper: "82% of unit area stems from peripheral circuits"
+        let fw = pcm_fw_unit();
+        let pct = fw.area_pct();
+        let others = fw
+            .components
+            .iter()
+            .position(|c| c.name == "Others")
+            .unwrap();
+        assert!(pct[others] > 80.0 && pct[others] < 84.0, "{}", pct[others]);
+    }
+
+    #[test]
+    fn subarray_dominates_power() {
+        // paper: subarray ≈ 80.6% of unit power
+        let mp = pcm_mp_unit();
+        let pct = mp.power_pct();
+        assert!(pct[0] > 79.0 && pct[0] < 82.0, "{}", pct[0]);
+    }
+
+    #[test]
+    fn compute_units_negligible() {
+        let fw = pcm_fw_unit();
+        let perm_pct = fw.power_pct()[1];
+        assert!(perm_pct < 0.2, "permutation unit power {perm_pct}%");
+        let mp = pcm_mp_unit();
+        let tree_pct = mp.power_pct()[1];
+        assert!(tree_pct < 0.2, "comparator tree power {tree_pct}%");
+    }
+
+    #[test]
+    fn system_power_near_paper_total() {
+        // paper: "total power of ~18.5 W" for the supporting components
+        let total: f64 = system_components().iter().map(|c| c.power_w).sum();
+        assert!((total - 18.5).abs() < 0.1, "{total}");
+    }
+
+    #[test]
+    fn die_area_sane() {
+        let p = HwParams::default();
+        let a = die_area_mm2(&p, &pcm_fw_unit());
+        assert!(a > 100.0 && a < 1000.0, "{a} mm^2");
+    }
+}

@@ -1,0 +1,389 @@
+//! The simulation engine: schedules a [`Trace`] onto the modeled
+//! hardware and accumulates the timeline + energy.
+//!
+//! Scheduling model (paper §III-B dataflow, Fig. 4a):
+//!
+//! * FW ops within a step spread across the PCM-FW die's tiles
+//!   (tile-level parallelism, §III-A): step makespan = max(longest
+//!   single op, ceil(total work / tiles)).
+//! * MP merge batches run across the PCM-MP die's tiles the same way.
+//! * Transfers (load, boundary build, inject, sync, store, fetch)
+//!   serialize on their shared channel (UCIe / HBM / FeNAND).
+//! * With `prefetch` on, a Load step overlaps the next compute step
+//!   (HBM3 "prefetches next intra-component FW blocks for pipelined
+//!   execution" — dataflow step 3ii); only the non-hidden part shows on
+//!   the timeline.
+
+use super::memsys;
+use super::params::HwParams;
+use super::pcm;
+use crate::apsp::trace::{Op, Phase, Step, Trace};
+use std::collections::HashMap;
+
+/// Per-phase accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseStat {
+    pub secs: f64,
+    pub joules: f64,
+    pub ops: usize,
+}
+
+/// Simulation result.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// End-to-end wall time (seconds) on the modeled hardware.
+    pub seconds: f64,
+    /// Total energy (joules), including background/active power.
+    pub joules: f64,
+    /// Dynamic (op-charged) energy only.
+    pub dynamic_joules: f64,
+    pub per_phase: HashMap<Phase, PhaseStat>,
+    /// Busy-seconds per resource.
+    pub fw_busy: f64,
+    pub mp_busy: f64,
+    pub hbm_busy: f64,
+    pub fenand_busy: f64,
+    /// Total min-add candidates (work measure).
+    pub madds: u64,
+    /// Seconds hidden by load/compute prefetch overlap.
+    pub prefetch_hidden: f64,
+}
+
+impl SimReport {
+    /// FW-die utilization in [0,1].
+    pub fn fw_utilization(&self) -> f64 {
+        if self.seconds == 0.0 {
+            0.0
+        } else {
+            self.fw_busy / self.seconds
+        }
+    }
+    pub fn mp_utilization(&self) -> f64 {
+        if self.seconds == 0.0 {
+            0.0
+        } else {
+            self.mp_busy / self.seconds
+        }
+    }
+    /// Effective min-add throughput (per second).
+    pub fn madds_per_sec(&self) -> f64 {
+        if self.seconds == 0.0 {
+            0.0
+        } else {
+            self.madds as f64 / self.seconds
+        }
+    }
+}
+
+/// Duration + energy + resource tag of one scheduled step.
+#[derive(Debug, Clone, Copy)]
+struct StepCost {
+    secs: f64,
+    joules: f64,
+    /// Longest single op (the floor when overlapped).
+    min_visible: f64,
+    kind: ResKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ResKind {
+    FwDie,
+    MpDie,
+    Channel,
+}
+
+/// Simulate a trace; returns the report.
+pub fn simulate(trace: &Trace, p: &HwParams) -> SimReport {
+    let costs: Vec<StepCost> = trace.steps.iter().map(|s| step_cost(s, p)).collect();
+    let mut report = SimReport::default();
+    let mut i = 0;
+    while i < trace.steps.len() {
+        let step = &trace.steps[i];
+        let cost = costs[i];
+        let mut visible = cost.secs;
+        // prefetch: a Load step hides under the following compute step
+        if p.prefetch
+            && step.phase == Phase::Load
+            && i + 1 < trace.steps.len()
+            && matches!(
+                trace.steps[i + 1].phase,
+                Phase::LocalFw | Phase::RerunFw | Phase::FinalSolve
+            )
+        {
+            let next = costs[i + 1];
+            let hidden = (cost.secs - cost.min_visible).min(next.secs);
+            visible = (cost.secs - hidden).max(cost.min_visible);
+            report.prefetch_hidden += cost.secs - visible;
+        }
+        report.seconds += visible;
+        report.dynamic_joules += cost.joules;
+        let stat = report.per_phase.entry(step.phase).or_default();
+        stat.secs += visible;
+        stat.joules += cost.joules;
+        stat.ops += step.ops.len();
+        match cost.kind {
+            ResKind::FwDie => report.fw_busy += visible,
+            ResKind::MpDie => report.mp_busy += visible,
+            ResKind::Channel => {
+                report.hbm_busy += visible;
+                if matches!(step.phase, Phase::Store | Phase::CrossMerge) {
+                    report.fenand_busy += visible;
+                }
+            }
+        }
+        i += 1;
+    }
+    report.madds = trace.total_madds();
+    // background + active standby power over the run
+    report.joules = report.dynamic_joules
+        + report.seconds * p.background_w
+        + report.hbm_busy * p.hbm_active_w
+        + report.fenand_busy * p.fenand_active_w;
+    report
+}
+
+fn step_cost(step: &Step, p: &HwParams) -> StepCost {
+    match step.phase {
+        Phase::LocalFw | Phase::RerunFw | Phase::FinalSolve => {
+            let per_op: Vec<(u64, f64)> = step
+                .ops
+                .iter()
+                .map(|op| match op {
+                    Op::TileFw { n, .. } => pcm::fw_tile(p, *n),
+                    other => panic!("non-FW op {other:?} in FW step"),
+                })
+                .collect();
+            let (secs, longest, joules) = spread(p, &per_op, p.tiles_per_die as u64);
+            StepCost {
+                secs,
+                joules,
+                min_visible: longest,
+                kind: ResKind::FwDie,
+            }
+        }
+        Phase::CrossMerge => {
+            let mut secs = 0.0;
+            let mut joules = 0.0;
+            let mut longest = 0.0f64;
+            for op in &step.ops {
+                match op {
+                    Op::FetchBoundary { bytes } => {
+                        let x = memsys::fenand_read(p, *bytes);
+                        secs += x.secs;
+                        joules += x.joules;
+                    }
+                    Op::MpMergeAgg {
+                        stage1_madds,
+                        stage2_madds,
+                        rows,
+                        ..
+                    } => {
+                        // batch spreads across all MP tiles
+                        let madds = stage1_madds + stage2_madds;
+                        let (cycles, e) =
+                            pcm::mp_merge_on_tile(p, madds.div_ceil(p.tiles_per_die as u64), *rows);
+                        let s = cycles as f64 * p.cycle_s();
+                        secs += s;
+                        longest = longest.max(s);
+                        joules += e;
+                    }
+                    other => panic!("unexpected op {other:?} in CrossMerge step"),
+                }
+            }
+            StepCost {
+                secs,
+                joules,
+                min_visible: longest,
+                kind: ResKind::MpDie,
+            }
+        }
+        Phase::Load => {
+            let per_op: Vec<(f64, f64)> = step
+                .ops
+                .iter()
+                .map(|op| match op {
+                    Op::LoadComponent { n, nnz } => {
+                        let (c, e) = pcm::load_component(p, *n, *nnz);
+                        (c as f64 * p.cycle_s(), e)
+                    }
+                    other => panic!("unexpected op {other:?} in Load step"),
+                })
+                .collect();
+            // loads share the stream-engine/UCIe channel: serialize
+            let secs: f64 = per_op.iter().map(|x| x.0).sum();
+            let joules: f64 = per_op.iter().map(|x| x.1).sum();
+            let longest = per_op.iter().map(|x| x.0).fold(0.0, f64::max);
+            StepCost {
+                secs,
+                joules,
+                min_visible: longest,
+                kind: ResKind::Channel,
+            }
+        }
+        Phase::BoundaryBuild | Phase::Inject | Phase::Sync | Phase::Store => {
+            let mut secs = 0.0;
+            let mut joules = 0.0;
+            for op in &step.ops {
+                let x = match op {
+                    Op::BuildBoundary {
+                        nb,
+                        cross_nnz,
+                        gather_elems,
+                    } => memsys::boundary_build(p, *nb, *cross_nnz, *gather_elems),
+                    Op::Inject { n, nb } => {
+                        let (c, e) = pcm::inject(p, *n, *nb);
+                        memsys::Xfer {
+                            secs: c as f64 * p.cycle_s(),
+                            joules: e,
+                        }
+                    }
+                    Op::SyncBoundary { bytes } => memsys::hbm(p, *bytes),
+                    Op::StoreCsr {
+                        dense_elems,
+                        csr_bytes,
+                    } => memsys::store_csr(p, *dense_elems, *csr_bytes),
+                    Op::StoreDense { bytes } => memsys::fenand_write(p, *bytes),
+                    Op::FetchBoundary { bytes } => memsys::fenand_read(p, *bytes),
+                    other => panic!("unexpected op {other:?} in {:?} step", step.phase),
+                };
+                secs += x.secs;
+                joules += x.joules;
+            }
+            StepCost {
+                secs,
+                joules,
+                min_visible: secs,
+                kind: ResKind::Channel,
+            }
+        }
+    }
+}
+
+/// Spread uniform-ish ops across `tiles` parallel executors: makespan =
+/// max(longest op, total/tiles) (LPT bound). Returns `(makespan_secs,
+/// longest_single_secs, total_joules)`.
+fn spread(p: &HwParams, per_op: &[(u64, f64)], tiles: u64) -> (f64, f64, f64) {
+    let total_cycles: u64 = per_op.iter().map(|x| x.0).sum();
+    let longest: u64 = per_op.iter().map(|x| x.0).max().unwrap_or(0);
+    let joules: f64 = per_op.iter().map(|x| x.1).sum();
+    let makespan = (total_cycles.div_ceil(tiles)).max(longest);
+    (
+        makespan as f64 * p.cycle_s(),
+        longest as f64 * p.cycle_s(),
+        joules,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::plan::{build_plan, PlanOptions};
+    use crate::apsp::recursive::{solve, SolveOptions};
+    use crate::graph::generators::{self, Topology, Weights};
+
+    fn trace_for(n: usize, topo: Topology, seed: u64) -> Trace {
+        let g = generators::generate(topo, n, 12.0, Weights::Uniform(1.0, 4.0), seed);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 128,
+                max_depth: usize::MAX,
+                seed,
+            },
+        );
+        solve(&g, &plan, None, SolveOptions::default()).trace
+    }
+
+    #[test]
+    fn nonzero_time_and_energy() {
+        let t = trace_for(1000, Topology::Nws, 1);
+        let r = simulate(&t, &HwParams::default());
+        assert!(r.seconds > 0.0);
+        assert!(r.joules > r.dynamic_joules);
+        assert!(r.madds > 0);
+        assert!(r.fw_utilization() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn bigger_graph_costs_more() {
+        let p = HwParams::default();
+        let a = simulate(&trace_for(600, Topology::Nws, 2), &p);
+        let b = simulate(&trace_for(2400, Topology::Nws, 2), &p);
+        assert!(b.seconds > a.seconds);
+        assert!(b.joules > a.joules);
+    }
+
+    #[test]
+    fn prefetch_hides_load_time() {
+        let t = trace_for(2000, Topology::Nws, 3);
+        let on = simulate(&t, &HwParams::default());
+        let off = simulate(
+            &t,
+            &HwParams {
+                prefetch: false,
+                ..HwParams::default()
+            },
+        );
+        assert!(on.seconds < off.seconds, "{} !< {}", on.seconds, off.seconds);
+        assert!(on.prefetch_hidden > 0.0);
+        assert_eq!(off.prefetch_hidden, 0.0);
+        // energy unaffected by overlap (same dynamic work)
+        assert!((on.dynamic_joules - off.dynamic_joules).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permutation_unit_ablation_slows_fw() {
+        let t = trace_for(2000, Topology::Nws, 4);
+        let on = simulate(&t, &HwParams::default());
+        let off = simulate(
+            &t,
+            &HwParams {
+                permutation_unit: false,
+                ..HwParams::default()
+            },
+        );
+        let fw_on = on.per_phase[&Phase::LocalFw].secs;
+        let fw_off = off.per_phase[&Phase::LocalFw].secs;
+        assert!(fw_off > 2.0 * fw_on, "{fw_off} vs {fw_on}");
+    }
+
+    #[test]
+    fn per_phase_adds_up() {
+        let t = trace_for(1500, Topology::OgbnProxy, 5);
+        let r = simulate(&t, &HwParams::default());
+        let sum: f64 = r.per_phase.values().map(|s| s.secs).sum();
+        assert!((sum - r.seconds).abs() < 1e-9);
+        let esum: f64 = r.per_phase.values().map(|s| s.joules).sum();
+        assert!((esum - r.dynamic_joules).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clustered_beats_random_in_sim() {
+        // the Fig. 9(c,f) mechanism: fewer boundary vertices => less
+        // boundary/merge work => faster + cheaper. The effect needs
+        // paper-scale tiles and a graph big enough that the boundary
+        // dominates (at toy sizes the terminal dense solve is free
+        // either way).
+        let hw = HwParams::default();
+        let mk = |topo| {
+            let g = generators::generate(topo, 24_000, 20.0, Weights::Uniform(1.0, 4.0), 6);
+            let plan = build_plan(
+                &g,
+                PlanOptions {
+                    tile_limit: 1024,
+                    max_depth: usize::MAX,
+                    seed: 6,
+                },
+            );
+            solve(&g, &plan, None, SolveOptions::default()).trace
+        };
+        let clustered = simulate(&mk(Topology::OgbnProxy), &hw);
+        let random = simulate(&mk(Topology::Er), &hw);
+        assert!(
+            clustered.seconds < random.seconds,
+            "clustered {} !< random {}",
+            clustered.seconds,
+            random.seconds
+        );
+    }
+}

@@ -1,0 +1,127 @@
+//! Memory-system cost functions: UCIe, HBM3, FeNAND, logic-die stream
+//! engines (paper §III-B, Fig. 4).
+
+use super::params::HwParams;
+
+/// A `(seconds, joules)` transfer cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Xfer {
+    pub secs: f64,
+    pub joules: f64,
+}
+
+impl Xfer {
+    pub fn zero() -> Self {
+        Self {
+            secs: 0.0,
+            joules: 0.0,
+        }
+    }
+    pub fn cycles(&self, p: &HwParams) -> u64 {
+        (self.secs * p.clock_hz).ceil() as u64
+    }
+}
+
+/// HBM3 read or write of `bytes`.
+pub fn hbm(p: &HwParams, bytes: u64) -> Xfer {
+    Xfer {
+        secs: bytes as f64 / p.hbm_bytes_per_s(),
+        joules: bytes as f64 * 8.0 * p.hbm_pj_per_bit * 1e-12,
+    }
+}
+
+/// UCIe die-to-die transfer of `bytes`.
+pub fn ucie(p: &HwParams, bytes: u64) -> Xfer {
+    Xfer {
+        secs: bytes as f64 / p.ucie_bytes_per_s(),
+        joules: bytes as f64 * 8.0 * p.ucie_pj_per_bit * 1e-12,
+    }
+}
+
+/// FeNAND read of `bytes` (ONFI channels, interleaved).
+pub fn fenand_read(p: &HwParams, bytes: u64) -> Xfer {
+    Xfer {
+        secs: bytes as f64 / p.fenand_read_bytes_per_s(),
+        joules: bytes as f64 * 8.0 * p.fenand_read_pj_per_bit * 1e-12,
+    }
+}
+
+/// FeNAND program of `bytes`.
+pub fn fenand_write(p: &HwParams, bytes: u64) -> Xfer {
+    Xfer {
+        secs: bytes as f64 / p.fenand_write_bytes_per_s(),
+        joules: bytes as f64 * 8.0 * p.fenand_write_pj_per_bit * 1e-12,
+    }
+}
+
+/// Logic-die stream-engine conversion (CSR <-> dense) of `bytes`.
+pub fn stream_convert(p: &HwParams, bytes: u64) -> Xfer {
+    Xfer {
+        secs: bytes as f64 / p.stream_bytes_per_s(),
+        // conversion itself is register shuffling; charge UCIe-class
+        // energy for the on-die movement
+        joules: bytes as f64 * 8.0 * 0.1e-12,
+    }
+}
+
+/// Boundary-graph assembly in HBM (dataflow step 3i): gather the
+/// per-component boundary blocks + cross edges, write G_B back.
+pub fn boundary_build(p: &HwParams, nb: u64, cross_nnz: u64, gather_elems: u64) -> Xfer {
+    let bytes = gather_elems * 4 + cross_nnz * 12 + nb * nb * 4;
+    let h = hbm(p, bytes);
+    let u = ucie(p, gather_elems * 4);
+    Xfer {
+        secs: h.secs + u.secs,
+        joules: h.joules + u.joules,
+    }
+}
+
+/// Store a dense matrix region compressed to CSR (dataflow step 6):
+/// logic-die compression + FeNAND program.
+pub fn store_csr(p: &HwParams, dense_elems: u64, csr_bytes: u64) -> Xfer {
+    let conv = stream_convert(p, dense_elems * 4);
+    let wr = fenand_write(p, csr_bytes);
+    let u = ucie(p, dense_elems * 4);
+    Xfer {
+        // conversion and program pipeline; the slower stage dominates
+        secs: conv.secs.max(wr.secs) + u.secs,
+        joules: conv.joules + wr.joules + u.joules,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_ordering_reflected_in_time() {
+        let p = HwParams::default();
+        let bytes = 1 << 30;
+        assert!(hbm(&p, bytes).secs < ucie(&p, bytes).secs * 5.0);
+        assert!(fenand_write(&p, bytes).secs > fenand_read(&p, bytes).secs);
+        assert!(fenand_read(&p, bytes).secs > hbm(&p, bytes).secs);
+    }
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        let p = HwParams::default();
+        let a = hbm(&p, 1000).joules;
+        let b = hbm(&p, 2000).joules;
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_csr_dominated_by_slowest_stage() {
+        let p = HwParams::default();
+        let x = store_csr(&p, 1 << 20, 8 << 20);
+        let wr = fenand_write(&p, 8 << 20);
+        assert!(x.secs >= wr.secs);
+    }
+
+    #[test]
+    fn zero_bytes_zero_cost() {
+        let p = HwParams::default();
+        assert_eq!(hbm(&p, 0), Xfer::zero());
+        assert_eq!(ucie(&p, 0).cycles(&p), 0);
+    }
+}

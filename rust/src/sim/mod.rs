@@ -1,0 +1,26 @@
+//! Cycle-level simulator of the RAPID-Graph hardware (paper §III-B/C/D,
+//! Table II/III, §IV-B) — the substitute for the authors' in-house
+//! cycle-accurate simulator + NeuroSim + synthesized RTL, none of which
+//! exist on this machine.
+//!
+//! The simulator consumes the [`crate::apsp::trace::Trace`] emitted by
+//! the recursive solver and charges cycles + energy for each op on the
+//! modeled dies:
+//!
+//! * [`params`]  — every device/system constant, transcribed from the
+//!   paper (Sb2Te3/Ge4Sb6Te7 SLC PCM, FELIX op latencies, comparator
+//!   tree, UCIe v1.0, HBM3, FeNAND) with the calibration notes.
+//! * [`pcm`]     — PCM-FW / PCM-MP die op cost functions.
+//! * [`memsys`]  — UCIe, HBM3, FeNAND, logic-die stream engine transfers.
+//! * [`area`]    — Table III (area/power per PCM unit) reproduction.
+//! * [`engine`]  — schedules trace steps onto tiles and accumulates the
+//!   timeline + energy, with optional load/compute prefetch overlap.
+
+pub mod area;
+pub mod engine;
+pub mod memsys;
+pub mod params;
+pub mod pcm;
+
+pub use engine::{simulate, SimReport};
+pub use params::HwParams;

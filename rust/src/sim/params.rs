@@ -1,0 +1,261 @@
+//! Hardware parameters — every constant the cost model uses, with its
+//! provenance in the paper.
+//!
+//! Calibration note (DESIGN.md "Fidelity note"): device-event counts per
+//! bit-serial op are taken from FELIX [26] and Table II; the two
+//! *effective* energy constants (`fw_pj_per_madd`, `mp_pj_per_madd`)
+//! fold in selective-write gating (the sign-bit mask skips futile
+//! writes, paper §III-C) and FELIX multi-input fusion, and are
+//! calibrated so the modeled 1024-vertex tile lands at the paper's
+//! reported ~1061x/7208x CPU ratios. Everything downstream (scaling
+//! curves, crossovers, topology sensitivity) is *derived*, not fitted.
+
+/// Full hardware configuration. `Default` is the paper's system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwParams {
+    // ---- clock (Table II: 2 ns cycle, 500 MHz)
+    pub clock_hz: f64,
+
+    // ---- PCM device (Table II, Sb2Te3/Ge4Sb6Te7 SLC)
+    /// Set/reset pulse width (20 ns) — bounds any single device write.
+    pub pcm_write_ns: f64,
+    /// Programming energy per device event (~0.56 pJ).
+    pub pcm_program_pj: f64,
+
+    // ---- array / tile / die geometry (§III-C)
+    /// PCM unit (crossbar) dimension: 1024 x 1024 cells.
+    pub unit_dim: usize,
+    /// Units per tile (130, H-tree connected).
+    pub units_per_tile: usize,
+    /// Tiles per compute die (2 GB die / (130 x 128 KiB) ≈ 120).
+    pub tiles_per_die: usize,
+    /// Distance word width (32-bit, §III-C comparator tree).
+    pub word_bits: u32,
+
+    // ---- FELIX bit-serial op latencies (cycles, §II-C)
+    /// Cycles per 1-bit full-add (2 XOR @ 2cy + majority @ 1cy).
+    pub cycles_per_bit_add: u64,
+    /// Cycles per 1-bit of the min-compare subtraction (XOR @2 + NOR @1).
+    pub cycles_per_bit_min: u64,
+    /// Selective-write cycles per word (sign-gated, 1 column write).
+    pub cycles_selective_write: u64,
+
+    // ---- PCM-FW permutation unit (§III-C, Fig. 5d)
+    /// Burst window of the row-buffer controller (32 rows).
+    pub perm_burst_rows: u64,
+    /// DMA read / write latency per burst (1 / 10 cycles).
+    pub perm_dma_read_cycles: u64,
+    pub perm_dma_write_cycles: u64,
+
+    // ---- PCM-MP comparator tree (§III-C, Fig. 5e)
+    /// Pipeline latency to reduce one 1024-wide row (1 + 6 + 6).
+    pub mp_tree_latency_cycles: u64,
+    /// Sustained throughput: one 1024-wide vector per cycle per unit.
+    pub mp_vector_width: u64,
+
+    // ---- effective energies (calibrated; see module docstring)
+    /// Energy per FW min-add candidate (bit-serial add+min across the
+    /// main block, selective write gated).
+    pub fw_pj_per_madd: f64,
+    /// Energy per MP min-add candidate (adds in PCM, min in the CMOS
+    /// comparator tree -> cheaper than FW).
+    pub mp_pj_per_madd: f64,
+
+    // ---- UCIe interposer (§III-B: 64 lanes x 32 Gb/s full duplex)
+    pub ucie_lanes: u64,
+    pub ucie_gbps_per_lane: f64,
+    pub ucie_pj_per_bit: f64,
+
+    // ---- HBM3 (16 GB, [38])
+    pub hbm_bytes: u64,
+    pub hbm_gbps: f64,
+    pub hbm_pj_per_bit: f64,
+    pub hbm_active_w: f64,
+
+    // ---- FeNAND (16 TB, ONFI 5.1 x16 [28][29])
+    pub fenand_bytes: u64,
+    pub fenand_read_gbps: f64,
+    pub fenand_write_gbps: f64,
+    pub fenand_read_pj_per_bit: f64,
+    pub fenand_write_pj_per_bit: f64,
+    pub fenand_active_w: f64,
+
+    // ---- logic die stream engines (CSR <-> dense, §III-B)
+    pub stream_engines: u64,
+    pub stream_bytes_per_cycle: u64,
+
+    // ---- background power (controller SM2508 3.5 W + logic die)
+    pub background_w: f64,
+
+    // ---- scheduling knobs (ablations)
+    /// Overlap component loads with the previous compute step.
+    pub prefetch: bool,
+    /// Use the permutation unit (off => panel extraction pays full
+    /// row-by-row DMA cost, paper's motivation for the unit).
+    pub permutation_unit: bool,
+    /// Use the comparator tree (off => log2(1024) serial min passes).
+    pub comparator_tree: bool,
+}
+
+impl Default for HwParams {
+    fn default() -> Self {
+        Self {
+            clock_hz: 500e6,
+            pcm_write_ns: 20.0,
+            pcm_program_pj: 0.56,
+            unit_dim: 1024,
+            units_per_tile: 130,
+            tiles_per_die: 120,
+            word_bits: 32,
+            cycles_per_bit_add: 5,
+            cycles_per_bit_min: 3,
+            cycles_selective_write: 1,
+            perm_burst_rows: 32,
+            perm_dma_read_cycles: 1,
+            perm_dma_write_cycles: 10,
+            mp_tree_latency_cycles: 13,
+            mp_vector_width: 1024,
+            fw_pj_per_madd: 16.0,
+            mp_pj_per_madd: 8.0,
+            ucie_lanes: 64,
+            ucie_gbps_per_lane: 32.0,
+            ucie_pj_per_bit: 0.6,
+            hbm_bytes: 16 << 30,
+            hbm_gbps: 819.0 * 8.0, // 819 GB/s
+            hbm_pj_per_bit: 3.9,
+            hbm_active_w: 8.6,
+            fenand_bytes: 16 << 40,
+            fenand_read_gbps: 38.4 * 8.0,
+            fenand_write_gbps: 19.2 * 8.0,
+            fenand_read_pj_per_bit: 0.5,
+            fenand_write_pj_per_bit: 2.0,
+            fenand_active_w: 6.4,
+            stream_engines: 2,
+            stream_bytes_per_cycle: 64,
+            background_w: 3.5,
+            prefetch: true,
+            permutation_unit: true,
+            comparator_tree: true,
+        }
+    }
+}
+
+impl HwParams {
+    /// Seconds per clock cycle.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    /// UCIe bandwidth in bytes/s.
+    pub fn ucie_bytes_per_s(&self) -> f64 {
+        self.ucie_lanes as f64 * self.ucie_gbps_per_lane * 1e9 / 8.0
+    }
+
+    /// HBM3 bandwidth in bytes/s.
+    pub fn hbm_bytes_per_s(&self) -> f64 {
+        self.hbm_gbps * 1e9 / 8.0
+    }
+
+    pub fn fenand_read_bytes_per_s(&self) -> f64 {
+        self.fenand_read_gbps * 1e9 / 8.0
+    }
+
+    pub fn fenand_write_bytes_per_s(&self) -> f64 {
+        self.fenand_write_gbps * 1e9 / 8.0
+    }
+
+    /// Logic-die CSR<->dense conversion bandwidth (bytes/s).
+    pub fn stream_bytes_per_s(&self) -> f64 {
+        self.stream_engines as f64 * self.stream_bytes_per_cycle as f64 * self.clock_hz
+    }
+
+    /// Cycles for one FW pivot step (panel add + min + selective write +
+    /// permutation), independent of block size thanks to full-array
+    /// parallelism (§III-D).
+    pub fn fw_pivot_cycles(&self, n: u64) -> u64 {
+        let add = self.cycles_per_bit_add * self.word_bits as u64;
+        let min = self.cycles_per_bit_min * self.word_bits as u64;
+        let write = self.cycles_selective_write * self.word_bits as u64 / 8;
+        let perm = if self.permutation_unit {
+            // 32-row coalesced bursts through the 4-stage FSM pipeline,
+            // overlapped with compute: only the burst issue shows.
+            n.div_ceil(self.perm_burst_rows)
+                * (self.perm_dma_read_cycles + self.perm_dma_write_cycles)
+                / 4
+        } else {
+            // row-by-row DMA, no overlap
+            n * (self.perm_dma_read_cycles + self.perm_dma_write_cycles)
+        };
+        add + min + write + perm
+    }
+
+    /// Die-wide sustained MP throughput (min-add candidates per cycle):
+    /// every unit retires one `mp_vector_width` row per cycle.
+    pub fn mp_madds_per_cycle_per_tile(&self) -> u64 {
+        let per_unit = if self.comparator_tree {
+            self.mp_vector_width
+        } else {
+            // serial pairwise min: log2(width) passes over the row
+            self.mp_vector_width / (self.mp_vector_width as f64).log2() as u64
+        };
+        // H-tree feeds half the units with operand streams; the rest
+        // compute (paper: 130 units, 2 staging buffers per unit).
+        per_unit * (self.units_per_tile as u64 / 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let p = HwParams::default();
+        assert_eq!(p.clock_hz, 500e6); // Table II: 2 ns cycle
+        assert_eq!(p.pcm_program_pj, 0.56); // Table II
+        assert_eq!(p.unit_dim, 1024);
+        assert_eq!(p.units_per_tile, 130); // §III-C
+        assert_eq!(p.mp_tree_latency_cycles, 13); // §III-C
+        assert_eq!(p.ucie_lanes, 64); // §III-B
+        assert_eq!(p.hbm_bytes, 16 << 30);
+        assert_eq!(p.fenand_bytes, 16 << 40);
+    }
+
+    #[test]
+    fn bandwidths_positive_and_ordered() {
+        let p = HwParams::default();
+        assert!(p.ucie_bytes_per_s() > 2.0e11); // 2 Tb/s class (paper §V)
+        assert!(p.hbm_bytes_per_s() > p.fenand_read_bytes_per_s());
+        assert!(p.fenand_read_bytes_per_s() > p.fenand_write_bytes_per_s());
+    }
+
+    #[test]
+    fn fw_pivot_cycles_scale() {
+        let p = HwParams::default();
+        let c1024 = p.fw_pivot_cycles(1024);
+        let c64 = p.fw_pivot_cycles(64);
+        assert!(c1024 > c64);
+        // dominated by the bit-serial add/min, not the permutation
+        assert!(c1024 < 2 * (p.cycles_per_bit_add + p.cycles_per_bit_min) * 32);
+    }
+
+    #[test]
+    fn permutation_unit_ablation_hurts() {
+        let on = HwParams::default();
+        let off = HwParams {
+            permutation_unit: false,
+            ..on
+        };
+        assert!(off.fw_pivot_cycles(1024) > 4 * on.fw_pivot_cycles(1024));
+    }
+
+    #[test]
+    fn comparator_tree_ablation_hurts() {
+        let on = HwParams::default();
+        let off = HwParams {
+            comparator_tree: false,
+            ..on
+        };
+        assert!(on.mp_madds_per_cycle_per_tile() > 5 * off.mp_madds_per_cycle_per_tile());
+    }
+}

@@ -1,0 +1,153 @@
+//! PCM compute-die cost functions: what one op costs on one tile.
+//!
+//! All functions return `(cycles, joules)` for executing the op on a
+//! single tile; the engine divides work across tiles per step.
+
+use super::params::HwParams;
+
+/// Cost of a full FW pass over an `n x n` block on the PCM-FW die
+/// (paper Fig. 6b/c: n pivots, each = one parallel add + one parallel
+/// min + a panel permutation).
+///
+/// Blocks up to `unit_dim` live in one tile and update all cells per
+/// pivot in parallel. Larger blocks (a terminal boundary graph that
+/// refused to shrink — the random-topology worst case) fall back to
+/// blocked FW across the whole die: each pivot must update
+/// `ceil(n/unit_dim)^2` tile-blocks, `tiles_per_die` at a time.
+pub fn fw_tile(p: &HwParams, n: u64) -> (u64, f64) {
+    if n <= 1 {
+        return (0, 0.0);
+    }
+    let ud = p.unit_dim as u64;
+    let madds = n * n * n;
+    let mut energy = madds as f64 * p.fw_pj_per_madd * 1e-12;
+    let cycles = if n <= ud {
+        n * p.fw_pivot_cycles(n)
+    } else {
+        // blocked FW across the die: each of the `rounds` block-pivot
+        // rounds updates all blocks (3 phases), `tiles_per_die` at a time
+        let rounds = n.div_ceil(ud);
+        let blocks = rounds * rounds;
+        let waves = blocks.div_ceil(p.tiles_per_die as u64);
+        let compute = n * p.fw_pivot_cycles(ud) * waves;
+        // the matrix exceeds what the die can hold resident once
+        // 4n^2 approaches the 2 GB die; blocks stream HBM <-> PCM every
+        // round (3 phase touches) — this is the cost the recursion
+        // exists to avoid (paper §III-A)
+        let bytes = rounds * 3 * n * n * 4;
+        let hbm_bytes_per_cycle = (p.hbm_bytes_per_s() / p.clock_hz).max(1.0);
+        let stream = (bytes as f64 / hbm_bytes_per_cycle).ceil() as u64;
+        energy += bytes as f64 * 8.0 * (p.hbm_pj_per_bit + p.ucie_pj_per_bit) * 1e-12;
+        compute.max(stream)
+    };
+    (cycles, energy)
+}
+
+/// Cost of streaming a component in and densifying it (dataflow step 1):
+/// CSR read from the PCM cold region + logic-die expansion + dense
+/// write-back into the compute region.
+pub fn load_component(p: &HwParams, n: u64, nnz: u64) -> (u64, f64) {
+    let csr_bytes = nnz * 8 + n * 8;
+    let dense_bytes = n * n * 4;
+    // logic-die stream engine converts at stream_bytes_per_s; PCM write
+    // bandwidth is bounded by the 20 ns pulse over unit_dim-wide rows.
+    let stream_s = (csr_bytes + dense_bytes) as f64 / p.stream_bytes_per_s();
+    let row_writes = (n * n * 4).div_ceil(p.unit_dim as u64 * 4);
+    let write_s = row_writes as f64 * p.pcm_write_ns * 1e-9;
+    let secs = stream_s.max(write_s);
+    let cycles = (secs * p.clock_hz).ceil() as u64;
+    // energy: every written bit is a potential program event (SLC,
+    // write-verify skips unchanged cells — assume half toggle)
+    let energy = dense_bytes as f64 * 8.0 * 0.5 * p.pcm_program_pj * 1e-12
+        + (csr_bytes + dense_bytes) as f64 * 8.0 * p.ucie_pj_per_bit * 1e-12;
+    (cycles, energy)
+}
+
+/// Cost of injecting a `nb x nb` dB block into a component tile
+/// (HBM3 -> UCIe -> PCM min-merged write) plus the gated writes.
+pub fn inject(p: &HwParams, _n: u64, nb: u64) -> (u64, f64) {
+    let bytes = nb * nb * 4;
+    let xfer_s = bytes as f64 / p.ucie_bytes_per_s().min(p.hbm_bytes_per_s());
+    // compare-and-swap write: one bit-serial min per value
+    let min_cycles = p.cycles_per_bit_min * p.word_bits as u64;
+    let rows = (nb * nb).div_ceil(p.unit_dim as u64);
+    let cycles = (xfer_s * p.clock_hz).ceil() as u64 + rows * min_cycles;
+    let energy = bytes as f64 * 8.0 * (p.hbm_pj_per_bit + p.ucie_pj_per_bit) * 1e-12
+        + (nb * nb) as f64 * 0.25 * p.word_bits as f64 * p.pcm_program_pj * 1e-12;
+    (cycles, energy)
+}
+
+/// Cost of an aggregated MP merge batch on the PCM-MP die, per tile:
+/// `madds` min-add candidates streamed through the bit-serial adders
+/// and the comparator tree (paper Fig. 6d).
+pub fn mp_merge_on_tile(p: &HwParams, madds: u64, rows: u64) -> (u64, f64) {
+    let throughput = p.mp_madds_per_cycle_per_tile();
+    let cycles = madds.div_ceil(throughput.max(1)) + p.mp_tree_latency_cycles * rows.min(1);
+    let energy = madds as f64 * p.mp_pj_per_madd * 1e-12;
+    (cycles, energy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fw_1024_lands_near_paper_scale() {
+        // ~1061x over a CPU that needs ~1 s for n=1024 means the tile
+        // must finish in ~1 ms. Sanity-check the model's order of
+        // magnitude (calibration target, DESIGN.md).
+        let p = HwParams::default();
+        let (cycles, energy) = fw_tile(&p, 1024);
+        let secs = cycles as f64 * p.cycle_s();
+        assert!(
+            secs > 1e-4 && secs < 1e-2,
+            "FW(1024) = {secs} s, expected ~1 ms"
+        );
+        assert!(
+            energy > 1e-3 && energy < 1e-1,
+            "FW(1024) = {energy} J, expected ~tens of mJ"
+        );
+    }
+
+    #[test]
+    fn fw_scales_cubically_in_energy_linearly_in_cycles() {
+        let p = HwParams::default();
+        let (c1, e1) = fw_tile(&p, 256);
+        let (c2, e2) = fw_tile(&p, 512);
+        assert!((e2 / e1 - 8.0).abs() < 0.1, "energy ratio {}", e2 / e1);
+        let ratio = c2 as f64 / c1 as f64;
+        assert!(ratio > 1.9 && ratio < 2.6, "cycle ratio {ratio}");
+    }
+
+    #[test]
+    fn trivial_blocks_free() {
+        let p = HwParams::default();
+        assert_eq!(fw_tile(&p, 0), (0, 0.0));
+        assert_eq!(fw_tile(&p, 1), (0, 0.0));
+    }
+
+    #[test]
+    fn load_cost_monotone() {
+        let p = HwParams::default();
+        let (c1, e1) = load_component(&p, 128, 1000);
+        let (c2, e2) = load_component(&p, 1024, 20000);
+        assert!(c2 > c1 && e2 > e1);
+    }
+
+    #[test]
+    fn mp_throughput_reasonable() {
+        let p = HwParams::default();
+        // 1 Tmadd on one tile at ~66k madds/cycle @ 500 MHz ≈ 0.03 s
+        let (cycles, _) = mp_merge_on_tile(&p, 1_000_000_000_000, 1_000_000);
+        let secs = cycles as f64 * p.cycle_s();
+        assert!(secs > 1e-3 && secs < 1.0, "{secs}");
+    }
+
+    #[test]
+    fn inject_scales_with_boundary() {
+        let p = HwParams::default();
+        let (c1, e1) = inject(&p, 1024, 32);
+        let (c2, e2) = inject(&p, 1024, 512);
+        assert!(c2 > c1 && e2 > e1);
+    }
+}

@@ -1,0 +1,155 @@
+//! Micro-benchmark timing harness (substitute for `criterion`).
+//!
+//! Warms up, then runs enough iterations to cover a minimum measurement
+//! window, and reports mean / min / stddev. Used by `benches/*.rs`
+//! (compiled with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub iters: u64,
+    pub mean: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {} (min {}, sd {}, {} iters)",
+            super::table::fmt_time(self.mean.as_secs_f64()),
+            super::table::fmt_time(self.min.as_secs_f64()),
+            super::table::fmt_time(self.stddev.as_secs_f64()),
+            self.iters
+        )
+    }
+}
+
+/// Options for a timing run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Max sample count (each sample is one closure call).
+    pub max_samples: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1500),
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(300),
+            max_samples: 5,
+        }
+    }
+}
+
+/// Time `f`, returning per-call stats. `f` should do one unit of work.
+pub fn bench<F: FnMut()>(opts: BenchOpts, mut f: F) -> Measurement {
+    // Warmup
+    let start = Instant::now();
+    while start.elapsed() < opts.warmup {
+        f();
+    }
+    // Measure
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < opts.measure && (samples.len() as u64) < opts.max_samples {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    if samples.is_empty() {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    let n = samples.len() as u64;
+    let total: Duration = samples.iter().sum();
+    let mean = total / n as u32;
+    let min = *samples.iter().min().unwrap();
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_s;
+            x * x
+        })
+        .sum::<f64>()
+        / n as f64;
+    Measurement {
+        iters: n,
+        mean,
+        min,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// Convenience: run once and return elapsed seconds (for long workloads
+/// where repeated sampling is impractical).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench(
+            BenchOpts {
+                warmup: Duration::from_millis(5),
+                measure: Duration::from_millis(20),
+                max_samples: 1000,
+            },
+            || {
+                let mut s = 0u64;
+                for i in 0..1000 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                black_box(s);
+            },
+        );
+        assert!(m.iters >= 1);
+        assert!(m.mean > Duration::ZERO);
+        assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

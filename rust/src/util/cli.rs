@@ -1,0 +1,159 @@
+//! Tiny declarative command-line parser (substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// A parsed argument set.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    named: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.named.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nx| !nx.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.named.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process args.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.named.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.replace('_', "").parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.replace('_', "").parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+/// Render a help screen from `(option, description)` rows.
+pub fn render_help(prog: &str, about: &str, options: &[(&str, &str)]) -> String {
+    let mut s = format!("{prog} — {about}\n\nOPTIONS:\n");
+    let width = options.iter().map(|(o, _)| o.len()).max().unwrap_or(0);
+    for (o, d) in options {
+        s.push_str(&format!("  {o:<width$}  {d}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = parse(&["--nodes", "1024", "--degree=25.25"]);
+        assert_eq!(a.get_usize("nodes", 0), 1024);
+        assert_eq!(a.get_f64("degree", 0.0), 25.25);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["apsp", "--verbose", "--seed", "7", "extra"]);
+        assert_eq!(a.subcommand(), Some("apsp"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert_eq!(a.positional(), &["apsp".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let a = parse(&["--n", "2_449_029"]);
+        assert_eq!(a.get_usize("n", 0), 2_449_029);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("mode", "functional"), "functional");
+        assert_eq!(a.get_usize("k", 17), 17);
+        assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("prog", "does x", &[("--a", "alpha"), ("--bb", "beta")]);
+        assert!(h.contains("--a "));
+        assert!(h.contains("beta"));
+    }
+}

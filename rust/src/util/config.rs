@@ -1,0 +1,151 @@
+//! Minimal TOML-subset parser (substitute for `serde` + `toml`).
+//!
+//! Supports what run configs need: `[section]` headers, `key = value`
+//! with string / integer / float / boolean values, `#` comments.
+
+use std::collections::BTreeMap;
+
+/// Parsed config: `section.key -> raw value string`. Keys outside a
+/// section live under the empty section `""`.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigFile {
+    values: BTreeMap<String, String>,
+}
+
+/// Error raised on malformed config text.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let line = match line.find('#') {
+                // allow '#' inside quoted strings
+                Some(pos) if !in_string(line, pos) => line[..pos].trim(),
+                _ => line,
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(ConfigError {
+                line: idx + 1,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.replace('_', "").parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn in_string(line: &str, pos: usize) -> bool {
+    line[..pos].bytes().filter(|&b| b == b'"').count() % 2 == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# RAPID-Graph run config
+mode = "functional"
+
+[hardware]
+fw_tiles = 64          # tiles on the PCM-FW die
+clock_ghz = 0.5
+prefetch = true
+
+[algo]
+tile_limit = 1024
+balance = 1.05
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("mode", ""), "functional");
+        assert_eq!(c.get_usize("hardware.fw_tiles", 0), 64);
+        assert_eq!(c.get_f64("hardware.clock_ghz", 0.0), 0.5);
+        assert!(c.get_bool("hardware.prefetch", false));
+        assert_eq!(c.get_usize("algo.tile_limit", 0), 1024);
+        assert_eq!(c.get_f64("algo.balance", 0.0), 1.05);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = ConfigFile::parse("").unwrap();
+        assert_eq!(c.get_usize("absent", 7), 7);
+        assert!(!c.get_bool("absent", false));
+    }
+
+    #[test]
+    fn error_on_garbage() {
+        let e = ConfigFile::parse("not a kv line").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = ConfigFile::parse("name = \"a#b\"").unwrap();
+        assert_eq!(c.get_str("name", ""), "a#b");
+    }
+
+    #[test]
+    fn keys_are_iterable() {
+        let c = ConfigFile::parse("[s]\na = 1\nb = 2").unwrap();
+        let keys: Vec<_> = c.keys().collect();
+        assert_eq!(keys, vec!["s.a", "s.b"]);
+    }
+}

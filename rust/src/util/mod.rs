@@ -1,0 +1,11 @@
+//! Small self-contained utilities that substitute for crates unavailable
+//! in the offline build image (see DESIGN.md "Environment substitutions").
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod threads;

@@ -1,0 +1,208 @@
+//! ASCII table rendering for benchmark/figure output.
+//!
+//! Every bench in `benches/` prints its figure/table through this module
+//! so the rows the paper reports are regenerated in a uniform format.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity must match header"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {cell:<w$} |", w = widths[c]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a ratio like `1061x` / `5.8x` with sensible precision.
+pub fn fmt_ratio(x: f64) -> String {
+    if !x.is_finite() {
+        return "inf".to_string();
+    }
+    if x >= 100.0 {
+        format!("{x:.0}x")
+    } else if x >= 10.0 {
+        format!("{x:.1}x")
+    } else {
+        format!("{x:.2}x")
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        "inf".to_string()
+    } else if secs >= 3600.0 {
+        format!("{:.2} h", secs / 3600.0)
+    } else if secs >= 60.0 {
+        format!("{:.2} min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format joules with an adaptive unit.
+pub fn fmt_energy(joules: f64) -> String {
+    if !joules.is_finite() {
+        "inf".to_string()
+    } else if joules >= 1e6 {
+        format!("{:.2} MJ", joules / 1e6)
+    } else if joules >= 1e3 {
+        format!("{:.2} kJ", joules / 1e3)
+    } else if joules >= 1.0 {
+        format!("{joules:.3} J")
+    } else if joules >= 1e-3 {
+        format!("{:.3} mJ", joules * 1e3)
+    } else if joules >= 1e-6 {
+        format!("{:.3} uJ", joules * 1e6)
+    } else if joules >= 1e-9 {
+        format!("{:.3} nJ", joules * 1e9)
+    } else {
+        format!("{:.3} pJ", joules * 1e12)
+    }
+}
+
+/// Format a vertex count: 2449029 -> "2.45M", 32768 -> "32.8k".
+pub fn fmt_count(n: usize) -> String {
+    let x = n as f64;
+    if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e4 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Fig. X", &["n", "speedup"]);
+        t.row_strs(&["100", "12x"]);
+        t.row_strs(&["32768", "42.8x"]);
+        let s = t.render();
+        assert!(s.contains("## Fig. X"));
+        assert!(s.contains("| n     | speedup |"));
+        assert!(s.lines().filter(|l| l.starts_with('+')).count() >= 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn ratio_formats() {
+        assert_eq!(fmt_ratio(1061.4), "1061x");
+        assert_eq!(fmt_ratio(42.81), "42.8x");
+        assert_eq!(fmt_ratio(5.83), "5.83x");
+        assert_eq!(fmt_ratio(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    fn time_formats() {
+        assert_eq!(fmt_time(7200.0), "2.00 h");
+        assert_eq!(fmt_time(90.0), "1.50 min");
+        assert_eq!(fmt_time(1.5), "1.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 us");
+        assert_eq!(fmt_time(3e-9), "3.0 ns");
+    }
+
+    #[test]
+    fn energy_formats() {
+        assert_eq!(fmt_energy(2.5e6), "2.50 MJ");
+        assert_eq!(fmt_energy(1.5), "1.500 J");
+        assert_eq!(fmt_energy(0.56e-12), "0.560 pJ");
+    }
+
+    #[test]
+    fn count_formats() {
+        assert_eq!(fmt_count(2_449_029), "2.45M");
+        assert_eq!(fmt_count(32_768), "32.8k");
+        assert_eq!(fmt_count(100), "100");
+    }
+}

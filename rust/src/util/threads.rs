@@ -1,0 +1,145 @@
+//! Minimal data-parallel helpers over `std::thread::scope` (substitute for
+//! rayon/tokio — the coordinator is compute-bound, so scoped OS threads
+//! with chunked work-stealing-free partitioning are sufficient and keep
+//! the hot loop allocation-free).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `RAPID_THREADS` env var, else the
+/// available parallelism, clamped to [1, 64].
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("RAPID_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 64)
+}
+
+/// Run `f(i)` for every `i in 0..n`, dynamically load-balanced across
+/// `num_threads()` workers. `f` must be `Sync` (called concurrently).
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    par_for_with(num_threads(), n, f)
+}
+
+/// `par_for` with an explicit worker count.
+pub fn par_for_with<F: Fn(usize) + Sync>(workers: usize, n: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let workers = workers.min(n).max(1);
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = SendPtr(out.as_mut_ptr());
+        let slots = &slots;
+        par_for(n, |i| {
+            // SAFETY: each index is written by exactly one worker.
+            unsafe { slots.write(i, Some(f(i))) };
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Wrapper to smuggle a raw pointer into a `Sync` closure; callers must
+/// guarantee disjoint index access.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// SAFETY: each index must be written by exactly one thread, and the
+    /// pointer must stay valid for the duration of the parallel region.
+    unsafe fn write(&self, i: usize, val: T) {
+        *self.0.add(i) = val;
+    }
+}
+
+/// Process disjoint mutable row-chunks of a flat `data` buffer in parallel:
+/// `f(chunk_index, chunk)` where `chunk` is `rows_per_chunk * row_len`
+/// elements (last chunk may be shorter).
+pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: F,
+) {
+    assert!(chunk_len > 0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    let n = chunks.len();
+    let slots = std::sync::Mutex::new(chunks);
+    // Pull chunks off a shared list; order does not matter.
+    par_for(n, |_| {
+        let item = slots.lock().unwrap().pop();
+        if let Some((idx, chunk)) = item {
+            f(idx, chunk);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_visits_all_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        par_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_for_zero_items() {
+        par_for(0, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let v = par_map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_chunks_mut_disjoint() {
+        let mut data = vec![0u32; 1003];
+        par_chunks_mut(&mut data, 100, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx as u32 + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x >= 1));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[1002], 11);
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,104 @@
+//! Failure-injection tests: corrupted artifacts, malformed inputs, and
+//! misconfiguration must fail loudly and informatively, never silently.
+
+use rapid_graph::coordinator::config::SystemConfig;
+use rapid_graph::coordinator::executor::Executor;
+use rapid_graph::graph::csr::CsrGraph;
+use rapid_graph::graph::io;
+use rapid_graph::runtime::{Manifest, PjrtRuntime};
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("rapid_failure_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn corrupted_hlo_artifact_fails_at_load() {
+    let dir = tmpdir("bad_hlo");
+    std::fs::write(dir.join("fw_block_64.hlo.txt"), "this is not HLO").unwrap();
+    std::fs::write(dir.join("minplus_64.hlo.txt"), "nor is this").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts": [
+            {"kind": "fw", "n": 64, "path": "fw_block_64.hlo.txt"},
+            {"kind": "minplus", "n": 64, "path": "minplus_64.hlo.txt"}
+        ]}"#,
+    )
+    .unwrap();
+    let err = match PjrtRuntime::load(&dir) {
+        Ok(_) => panic!("corrupted HLO must not load"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fw_block_64"), "error should name the file: {msg}");
+}
+
+#[test]
+fn truncated_manifest_rejected() {
+    let dir = tmpdir("bad_manifest");
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": ["#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn malformed_edge_list_rejected() {
+    let dir = tmpdir("bad_edges");
+    let p = dir.join("g.txt");
+    std::fs::write(&p, "3 1\n0 notanumber 1.0\n").unwrap();
+    assert!(io::read_edge_list(&p).is_err());
+}
+
+#[test]
+fn out_of_range_edge_panics_in_builder() {
+    let result = std::panic::catch_unwind(|| {
+        CsrGraph::from_edges(2, &[(0, 5, 1.0)]);
+    });
+    assert!(result.is_err(), "edge target 5 in a 2-vertex graph must panic");
+}
+
+#[test]
+fn csr_validate_catches_corruption() {
+    let mut g = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0), (1, 2, 1.0)]);
+    g.val[0] = -3.0; // negative weight
+    assert!(g.validate().is_err());
+    let mut g2 = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0)]);
+    g2.rowptr[1] = 99; // broken rowptr
+    assert!(g2.validate().is_err());
+}
+
+#[test]
+fn memory_guard_rejects_oversized_functional_runs() {
+    let g = rapid_graph::graph::generators::newman_watts_strogatz(
+        3000,
+        4,
+        0.1,
+        rapid_graph::graph::generators::Weights::Unit,
+        1,
+    );
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 128;
+    cfg.memory_limit_bytes = 1 << 20; // 1 MiB: far too small
+    let ex = Executor::new(cfg).unwrap();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| ex.run(&g)));
+    assert!(res.is_err(), "memory guard must trip");
+}
+
+#[test]
+fn binary_graph_roundtrip_detects_truncation() {
+    let dir = tmpdir("trunc_bin");
+    let g = rapid_graph::graph::generators::erdos_renyi(
+        50,
+        100,
+        rapid_graph::graph::generators::Weights::Unit,
+        3,
+    );
+    let p = dir.join("g.bin");
+    io::write_binary(&g, &p).unwrap();
+    // chop the file
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(io::read_binary(&p).is_err());
+}

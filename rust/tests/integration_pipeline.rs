@@ -1,0 +1,159 @@
+//! Integration tests: the whole pipeline across modules (plan ->
+//! recursive solve -> simulate -> validate), both compute backends, and
+//! the independent Algorithm-1 implementation as a cross-oracle.
+
+use rapid_graph::apsp::backend::{NativeBackend, SerialBackend, TileBackend};
+use rapid_graph::apsp::partitioned::partitioned_apsp;
+use rapid_graph::apsp::plan::{build_plan, PlanOptions};
+use rapid_graph::apsp::recursive::{solve, SolveOptions};
+use rapid_graph::apsp::validate::{validate_full, validate_sampled};
+use rapid_graph::apsp::{dijkstra, trace::Phase};
+use rapid_graph::coordinator::config::{Mode, SystemConfig};
+use rapid_graph::coordinator::executor::Executor;
+use rapid_graph::graph::generators::{self, Topology, Weights};
+use rapid_graph::sim::engine::simulate;
+use rapid_graph::sim::params::HwParams;
+
+fn plan_opts(tile: usize, seed: u64) -> PlanOptions {
+    PlanOptions {
+        tile_limit: tile,
+        max_depth: usize::MAX,
+        seed,
+    }
+}
+
+#[test]
+fn exactness_across_topologies_and_tiles() {
+    for (topo, n, tile) in [
+        (Topology::Nws, 500usize, 64usize),
+        (Topology::Er, 300, 48),
+        (Topology::OgbnProxy, 600, 96),
+        (Topology::Grid, 400, 32),
+    ] {
+        let g = generators::generate(topo, n, 10.0, Weights::Uniform(0.5, 5.0), 11);
+        let plan = build_plan(&g, plan_opts(tile, 11));
+        let be = NativeBackend;
+        let sol = solve(&g, &plan, Some(&be), SolveOptions::default());
+        let full = sol.materialize_full(&be);
+        let v = validate_full(&g, &full, 1e-3);
+        assert!(v.ok(1e-3), "{}: {v:?}", topo.name());
+    }
+}
+
+#[test]
+fn three_implementations_agree() {
+    // recursive (Alg 2), single-level (Alg 1, independent code), Dijkstra
+    let g = generators::generate(Topology::Nws, 350, 8.0, Weights::Uniform(1.0, 6.0), 13);
+    let alg1 = partitioned_apsp(&g, 48, 13);
+    let plan = build_plan(&g, plan_opts(48, 13));
+    let be = SerialBackend;
+    let alg2 = solve(&g, &plan, Some(&be), SolveOptions::default()).materialize_full(&be);
+    let oracle = dijkstra::apsp(&g);
+    assert!(alg1.max_diff(&oracle) < 1e-3);
+    assert!(alg2.max_diff(&oracle) < 1e-3);
+    assert!(alg1.max_diff(&alg2) < 1e-3);
+}
+
+#[test]
+fn executor_end_to_end_functional() {
+    let g = generators::generate(Topology::OgbnProxy, 2_000, 14.0, Weights::Uniform(1.0, 4.0), 17);
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 256;
+    let ex = Executor::new(cfg).unwrap();
+    let r = ex.run(&g).unwrap();
+    assert!(r.validation.unwrap().ok(1e-3));
+    assert!(r.sim.seconds > 0.0 && r.sim.joules > 0.0);
+    assert!(r.depth >= 1);
+    assert!(r.components_l0 > 1);
+}
+
+#[test]
+fn estimate_and_functional_traces_identical_at_scale() {
+    let g = generators::generate(Topology::Nws, 3_000, 20.0, Weights::Uniform(1.0, 3.0), 19);
+    let plan = build_plan(&g, plan_opts(512, 19));
+    let be = NativeBackend;
+    let func = solve(&g, &plan, Some(&be), SolveOptions::default());
+    let est = solve(&g, &plan, None, SolveOptions::default());
+    assert_eq!(func.trace, est.trace);
+    // and therefore identical simulated cost
+    let p = HwParams::default();
+    let a = simulate(&func.trace, &p);
+    let b = simulate(&est.trace, &p);
+    assert_eq!(a.seconds, b.seconds);
+    assert_eq!(a.joules, b.joules);
+}
+
+#[test]
+fn trace_covers_full_dataflow() {
+    let g = generators::generate(Topology::OgbnProxy, 4_000, 16.0, Weights::Unit, 23);
+    let plan = build_plan(&g, plan_opts(256, 23));
+    let est = solve(&g, &plan, None, SolveOptions::default());
+    let counts = est.trace.phase_op_counts();
+    for phase in [
+        Phase::Load,
+        Phase::LocalFw,
+        Phase::BoundaryBuild,
+        Phase::Inject,
+        Phase::RerunFw,
+        Phase::CrossMerge,
+        Phase::Sync,
+        Phase::Store,
+    ] {
+        assert!(counts.contains_key(&phase), "missing {phase:?}");
+    }
+}
+
+#[test]
+fn pjrt_backend_agrees_with_native_when_artifacts_exist() {
+    let dir = rapid_graph::runtime::Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let runtime = rapid_graph::runtime::PjrtRuntime::load(&dir).unwrap();
+    let pjrt = rapid_graph::runtime::PjrtBackend::new(&runtime);
+    let g = generators::generate(Topology::Nws, 700, 10.0, Weights::Uniform(1.0, 5.0), 29);
+    let plan = build_plan(&g, plan_opts(128, 29));
+    let native = NativeBackend;
+    let sol_p = solve(&g, &plan, Some(&pjrt as &dyn TileBackend), SolveOptions::default());
+    let sol_n = solve(&g, &plan, Some(&native), SolveOptions::default());
+    let full_p = sol_p.materialize_full(&pjrt);
+    let full_n = sol_n.materialize_full(&native);
+    assert!(full_p.max_diff(&full_n) < 1e-3);
+    let v = validate_sampled(&g, &sol_p, 12, 30, 1e-3, 31);
+    assert!(v.ok(1e-3), "{v:?}");
+}
+
+#[test]
+fn ablation_knobs_change_cost_monotonically() {
+    let g = generators::generate(Topology::Nws, 5_000, 20.0, Weights::Unit, 37);
+    let mut cfg = SystemConfig::default();
+    cfg.mode = Mode::Estimate;
+    let base = Executor::new(cfg.clone()).unwrap().run(&g).unwrap();
+
+    cfg.hw.prefetch = false;
+    let no_prefetch = Executor::new(cfg.clone()).unwrap().run(&g).unwrap();
+    assert!(no_prefetch.sim.seconds >= base.sim.seconds);
+    cfg.hw.prefetch = true;
+
+    cfg.hw.permutation_unit = false;
+    let no_perm = Executor::new(cfg.clone()).unwrap().run(&g).unwrap();
+    assert!(no_perm.sim.seconds > base.sim.seconds);
+    cfg.hw.permutation_unit = true;
+
+    cfg.hw.comparator_tree = false;
+    let no_tree = Executor::new(cfg.clone()).unwrap().run(&g).unwrap();
+    assert!(no_tree.sim.seconds > base.sim.seconds);
+}
+
+#[test]
+fn weighted_and_unit_graphs_both_exact() {
+    for weights in [Weights::Unit, Weights::Uniform(0.1, 99.0)] {
+        let g = generators::generate(Topology::Er, 250, 8.0, weights, 41);
+        let plan = build_plan(&g, plan_opts(40, 41));
+        let be = NativeBackend;
+        let sol = solve(&g, &plan, Some(&be), SolveOptions::default());
+        let v = validate_sampled(&g, &sol, 25, 40, 1e-2, 43);
+        assert!(v.ok(1e-2), "{weights:?}: {v:?}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Property tests on coordinator/trace invariants — the "scheduler never
+//! double-books, never drops work" class of guarantees (DESIGN.md
+//! testing strategy), checked over randomized workloads via the seeded
+//! property harness.
+
+use rapid_graph::apsp::plan::{build_plan, PlanOptions};
+use rapid_graph::apsp::recursive::{solve, SolveOptions};
+use rapid_graph::apsp::trace::{Op, Phase, Trace};
+use rapid_graph::graph::csr::CsrGraph;
+use rapid_graph::graph::generators::{self, Topology, Weights};
+use rapid_graph::sim::engine::simulate;
+use rapid_graph::sim::params::HwParams;
+use rapid_graph::util::prop::assert_prop;
+use rapid_graph::util::rng::Rng;
+
+fn random_workload(r: &mut Rng) -> (CsrGraph, usize, u64) {
+    let topo = [Topology::Nws, Topology::Er, Topology::OgbnProxy, Topology::Grid]
+        [r.gen_range(4)];
+    let n = 200 + r.gen_range(1500);
+    let deg = 4.0 + r.gen_f64() * 16.0;
+    let seed = r.next_u64();
+    let tile = [32usize, 64, 128, 256][r.gen_range(4)];
+    (
+        generators::generate(topo, n, deg, Weights::Uniform(0.5, 5.0), seed),
+        tile,
+        seed,
+    )
+}
+
+fn trace_of(g: &CsrGraph, tile: usize, seed: u64) -> (Trace, rapid_graph::apsp::plan::ApspPlan) {
+    let plan = build_plan(
+        g,
+        PlanOptions {
+            tile_limit: tile,
+            max_depth: usize::MAX,
+            seed,
+        },
+    );
+    let sol = solve(g, &plan, None, SolveOptions::default());
+    (sol.trace, plan)
+}
+
+#[test]
+fn every_component_loaded_and_solved_exactly_once_per_level() {
+    assert_prop(15, random_workload, |(g, tile, seed)| {
+        let (trace, plan) = trace_of(g, *tile, *seed);
+        for (li, lvl) in plan.levels.iter().enumerate() {
+            let nonempty = lvl.cs.components.iter().filter(|c| c.n() > 0).count();
+            let loads: usize = trace
+                .steps
+                .iter()
+                .filter(|s| s.level == li as u32 && s.phase == Phase::Load)
+                .map(|s| s.ops.len())
+                .sum();
+            if loads != nonempty {
+                return Err(format!(
+                    "level {li}: {loads} loads for {nonempty} components"
+                ));
+            }
+            let solvable = lvl.cs.components.iter().filter(|c| c.n() > 1).count();
+            let fws: usize = trace
+                .steps
+                .iter()
+                .filter(|s| s.level == li as u32 && s.phase == Phase::LocalFw)
+                .map(|s| s.ops.len())
+                .sum();
+            if fws != solvable {
+                return Err(format!("level {li}: {fws} FW ops for {solvable} components"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn injection_matches_boundary_components() {
+    assert_prop(15, random_workload, |(g, tile, seed)| {
+        let (trace, plan) = trace_of(g, *tile, *seed);
+        for (li, lvl) in plan.levels.iter().enumerate() {
+            if lvl.n_boundary() == 0 {
+                continue;
+            }
+            let with_boundary = lvl
+                .cs
+                .components
+                .iter()
+                .filter(|c| c.n_boundary > 0)
+                .count();
+            let injects: usize = trace
+                .steps
+                .iter()
+                .filter(|s| s.level == li as u32 && s.phase == Phase::Inject)
+                .map(|s| s.ops.len())
+                .sum();
+            if injects != with_boundary {
+                return Err(format!(
+                    "level {li}: {injects} injects vs {with_boundary} boundary comps"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn op_sizes_respect_tile_limit() {
+    assert_prop(15, random_workload, |(g, tile, seed)| {
+        let (trace, plan) = trace_of(g, *tile, *seed);
+        for step in &trace.steps {
+            for op in &step.ops {
+                if let Op::TileFw { n, .. } = op {
+                    // only the terminal solve may exceed the tile limit
+                    let terminal = step.phase == Phase::FinalSolve;
+                    if !terminal && *n as usize > *tile {
+                        return Err(format!(
+                            "non-terminal FW of size {n} > tile {tile} at level {}",
+                            step.level
+                        ));
+                    }
+                    if terminal && *n as usize != plan.final_n {
+                        return Err("terminal FW size != plan.final_n".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulated_cost_deterministic_and_additive() {
+    assert_prop(10, random_workload, |(g, tile, seed)| {
+        let (trace, _) = trace_of(g, *tile, *seed);
+        let p = HwParams::default();
+        let a = simulate(&trace, &p);
+        let b = simulate(&trace, &p);
+        if a.seconds != b.seconds || a.joules != b.joules {
+            return Err("simulation not deterministic".into());
+        }
+        let phase_sum: f64 = a.per_phase.values().map(|s| s.secs).sum();
+        if (phase_sum - a.seconds).abs() > 1e-9 {
+            return Err(format!("phases {phase_sum} != total {}", a.seconds));
+        }
+        if a.fw_busy > a.seconds + 1e-12 || a.mp_busy > a.seconds + 1e-12 {
+            return Err("resource busy exceeds wall time".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn madds_match_plan_structure() {
+    // total FW madds must equal sum over levels of components' n^3 (+
+    // rerun) + terminal; a mismatch means dropped or duplicated work
+    assert_prop(10, random_workload, |(g, tile, seed)| {
+        let (trace, plan) = trace_of(g, *tile, *seed);
+        let mut expect: u64 = 0;
+        for lvl in &plan.levels {
+            for c in &lvl.cs.components {
+                let n = c.n() as u64;
+                if c.n() > 1 {
+                    expect += n * n * n; // local FW
+                    if c.n_boundary > 0 && lvl.n_boundary() > 0 {
+                        expect += n * n * n; // rerun after injection
+                    }
+                }
+            }
+        }
+        let fnl = plan.final_n as u64;
+        if fnl > 1 {
+            expect += fnl * fnl * fnl;
+        }
+        let fw_madds: u64 = trace
+            .steps
+            .iter()
+            .flat_map(|s| s.ops.iter())
+            .filter_map(|op| match op {
+                Op::TileFw { n, .. } => Some(n * n * n),
+                _ => None,
+            })
+            .sum();
+        if fw_madds != expect {
+            return Err(format!("FW madds {fw_madds} != expected {expect}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deeper_recursion_never_increases_terminal_size() {
+    assert_prop(10, random_workload, |(g, tile, seed)| {
+        let full = build_plan(
+            g,
+            PlanOptions {
+                tile_limit: *tile,
+                max_depth: usize::MAX,
+                seed: *seed,
+            },
+        );
+        let alg1 = build_plan(
+            g,
+            PlanOptions {
+                tile_limit: *tile,
+                max_depth: 1,
+                seed: *seed,
+            },
+        );
+        if full.final_n > alg1.final_n {
+            return Err(format!(
+                "recursion made the terminal bigger: {} > {}",
+                full.final_n, alg1.final_n
+            ));
+        }
+        Ok(())
+    });
+}
