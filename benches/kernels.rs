@@ -1,5 +1,8 @@
 //! Kernel micro-benchmarks: native rust vs PJRT (AOT JAX/Pallas) tile
-//! engines for FW blocks and min-plus merges, across size classes.
+//! engines for FW blocks and min-plus merges, across size classes —
+//! plus the scheduler benchmark (barrier walk vs tile-task DAG) on a
+//! multi-component graph, for both the host executor's wall clock and
+//! the simulator's modeled makespan.
 //!
 //! This quantifies the L3 hot path (the functional backend) and the
 //! PJRT dispatch overhead — see EXPERIMENTS.md §Perf.
@@ -7,14 +10,122 @@
 //!     make artifacts && cargo bench --bench kernels
 
 use rapid_graph::apsp::backend::{NativeBackend, TileBackend};
-use rapid_graph::apsp::floyd_warshall;
+use rapid_graph::apsp::plan::{build_plan, PlanOptions};
+use rapid_graph::apsp::recursive::{solve, SolveOptions};
+use rapid_graph::apsp::{floyd_warshall, scheduler, taskgraph};
+use rapid_graph::graph::csr::CsrGraph;
 use rapid_graph::graph::generators::{self, Weights};
 use rapid_graph::runtime::PjrtRuntime;
+use rapid_graph::sim::{engine, HwParams};
 use rapid_graph::util::bench::{bench, BenchOpts};
 use rapid_graph::util::rng::Rng;
-use rapid_graph::util::table::{fmt_time, Table};
+use rapid_graph::util::table::{fmt_ratio, fmt_time, Table};
+
+/// Multi-component scheduler workload: 8 bridged communities (shared
+/// boundary hierarchy) plus one large isolated clique. The barrier walk
+/// serializes the clique's FW against the whole boundary recursion; the
+/// DAG executor overlaps them (the clique has no boundary, so nothing
+/// downstream waits on it).
+fn scheduler_workload() -> CsrGraph {
+    let mut rng = Rng::new(0xDA6);
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    // communities of 600: two would overflow a 1024-tile, so each one
+    // is its own component — 8 components plus the isolated clique
+    let commns = 8u32;
+    let csize = 600u32;
+    for c in 0..commns {
+        let base = c * csize;
+        // dense-ish community: ~20% of pairs
+        for i in 0..csize {
+            for j in (i + 1)..csize {
+                if rng.gen_bool(0.2) {
+                    edges.push((base + i, base + j, rng.gen_f32_range(1.0, 5.0)));
+                }
+            }
+        }
+        // a few cross links: small boundary, real boundary hierarchy
+        if c > 0 {
+            for _ in 0..8 {
+                let u = (c - 1) * csize + rng.gen_range(csize as usize) as u32;
+                let v = base + rng.gen_range(csize as usize) as u32;
+                edges.push((u, v, rng.gen_f32_range(2.0, 8.0)));
+            }
+        }
+    }
+    // isolated clique: heavy FW, zero boundary — the barrier walk
+    // stalls the whole boundary recursion on it, the DAG overlaps it
+    let gbase = commns * csize;
+    let gsize = 800u32;
+    for i in 0..gsize {
+        for j in (i + 1)..gsize {
+            edges.push((gbase + i, gbase + j, rng.gen_f32_range(1.0, 3.0)));
+        }
+    }
+    CsrGraph::from_undirected_edges((gbase + gsize) as usize, &edges)
+}
+
+fn bench_schedulers() {
+    let g = scheduler_workload();
+    let plan = build_plan(
+        &g,
+        PlanOptions {
+            tile_limit: 1024,
+            max_depth: usize::MAX,
+            seed: 0xDA6,
+        },
+    );
+    let be = NativeBackend;
+    let k0 = plan.levels.first().map(|l| l.n_components()).unwrap_or(1);
+    println!(
+        "scheduler workload: n={} m={} components={} depth={} boundary={:?}\n",
+        g.n(),
+        g.m(),
+        k0,
+        plan.depth(),
+        plan.boundary_sizes()
+    );
+    let opts = BenchOpts::quick();
+    let m_barrier = bench(opts, || {
+        let s = solve(&g, &plan, Some(&be), SolveOptions::default());
+        std::hint::black_box(s.query(0, 1));
+    });
+    let m_dag = bench(opts, || {
+        let s = scheduler::solve_dag(&g, &plan, &be, SolveOptions::default());
+        std::hint::black_box(s.query(0, 1));
+    });
+    let mut t = Table::new(
+        "host executor: barrier walk vs tile-task DAG (functional solve)",
+        &["scheduler", "wall time", "speedup"],
+    );
+    t.row(&["barrier".into(), fmt_time(m_barrier.mean_secs()), "1x".into()]);
+    t.row(&[
+        "dag".into(),
+        fmt_time(m_dag.mean_secs()),
+        fmt_ratio(m_barrier.mean_secs() / m_dag.mean_secs()),
+    ]);
+    t.print();
+
+    // modeled hardware makespan under the two sim schedulers
+    let tg = taskgraph::lower(&plan);
+    let hw = HwParams::default();
+    let sim_barrier = engine::simulate(&tg.to_trace(), &hw);
+    let sim_dag = engine::simulate_dag(&tg, &hw);
+    let mut t = Table::new(
+        "simulator: step-barrier vs dependency-aware makespan",
+        &["schedule", "modeled time", "speedup"],
+    );
+    t.row(&["barrier".into(), fmt_time(sim_barrier.seconds), "1x".into()]);
+    t.row(&[
+        "dag".into(),
+        fmt_time(sim_dag.seconds),
+        fmt_ratio(sim_barrier.seconds / sim_dag.seconds),
+    ]);
+    t.print();
+}
 
 fn main() {
+    bench_schedulers();
+
     let runtime = PjrtRuntime::load_default().ok();
     if runtime.is_none() {
         println!("note: artifacts missing, PJRT columns skipped (run `make artifacts`)\n");

@@ -31,7 +31,7 @@ use rapid_graph::graph::generators::{self, Topology, Weights};
 use rapid_graph::runtime::{PjrtBackend, PjrtRuntime};
 use rapid_graph::util::table::{fmt_energy, fmt_ratio, fmt_time};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rapid_graph::util::error::Result<()> {
     let n = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     // ---- full pipeline through the PJRT backend (AOT JAX/Pallas HLO)
     let t0 = std::time::Instant::now();
     let runtime = PjrtRuntime::load_default().map_err(|e| {
-        anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first")
+        rapid_graph::err!("{e:#}\nhint: run `make artifacts` first")
     })?;
     println!(
         "[2/5] PJRT runtime up: {} artifacts (jax {}), compiled in {:.1}s",

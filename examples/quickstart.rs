@@ -10,7 +10,7 @@
 use rapid_graph::coordinator::{config::SystemConfig, executor::Executor, report};
 use rapid_graph::graph::generators::{self, Topology, Weights};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rapid_graph::util::error::Result<()> {
     // a 5k-vertex clustered graph (OGBN-like community structure)
     let g = generators::generate(
         Topology::OgbnProxy,

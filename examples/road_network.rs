@@ -12,7 +12,7 @@ use rapid_graph::coordinator::{executor::Executor, report};
 use rapid_graph::graph::generators::{self, Weights};
 use rapid_graph::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rapid_graph::util::error::Result<()> {
     // 120 x 120 road grid: ~14.4k intersections, edge weight = minutes
     let (rows, cols) = (120usize, 120usize);
     let g = generators::grid2d(rows, cols, Weights::Uniform(0.5, 4.0), 7);

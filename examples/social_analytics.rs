@@ -15,7 +15,7 @@ use rapid_graph::coordinator::executor::Executor;
 use rapid_graph::graph::generators::{self, Weights};
 use rapid_graph::util::table::{fmt_time, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rapid_graph::util::error::Result<()> {
     let n = 12_000usize;
     let g = generators::ogbn_proxy_with(n, 18.0, 48, 512, 0.9, Weights::Uniform(1.0, 3.0), 11);
     println!(

@@ -10,6 +10,7 @@
 
 use crate::apsp::{floyd_warshall, minplus};
 use crate::graph::dense::DistMatrix;
+use crate::INF;
 
 /// A tile-granular compute engine.
 pub trait TileBackend: Sync {
@@ -61,6 +62,12 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
             d.row_mut(r0 + r)[c0..c0 + cs].copy_from_slice(&v[r * cs..(r + 1) * cs]);
         }
     };
+    // one scratch buffer reused for every panel relax (replaces the
+    // per-panel `orig` clone the old code allocated), and the row
+    // panels of the current pivot kept resident so step (3) does not
+    // re-extract them once per block-row
+    let mut scratch = vec![0f32; block * block];
+    let mut row_panels: Vec<Vec<f32>> = vec![Vec::new(); nb];
     for k in 0..nb {
         let ks = dim(k);
         // (1) diagonal block
@@ -68,16 +75,25 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
         be.fw(&mut diag);
         let diag = diag.into_vec();
         put(d, k, k, &diag);
-        // (2) row panels: D[k][j] = min(D[k][j], diag (+) D[k][j])
+        // (2) row panels: D[k][j] = min(D[k][j], diag (+) D[k][j]);
+        // `minplus_into` accumulates into its output, so relax via the
+        // INF-reset scratch and min-merge back — no aliasing, no clone
         for j in 0..nb {
             if j == k {
                 continue;
             }
             let js = dim(j);
             let mut panel = get(d, k, j);
-            let orig = panel.clone();
-            be.minplus_into(&mut panel, &diag, &orig, ks, ks, js);
+            let out = &mut scratch[..ks * js];
+            out.fill(INF);
+            be.minplus_into(out, &diag, &panel, ks, ks, js);
+            for (p, &o) in panel.iter_mut().zip(out.iter()) {
+                if o < *p {
+                    *p = o;
+                }
+            }
             put(d, k, j, &panel);
+            row_panels[j] = panel;
         }
         //     column panels: D[i][k] = min(D[i][k], D[i][k] (+) diag)
         for i in 0..nb {
@@ -86,11 +102,18 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
             }
             let is = dim(i);
             let mut panel = get(d, i, k);
-            let orig = panel.clone();
-            be.minplus_into(&mut panel, &orig, &diag, is, ks, ks);
+            let out = &mut scratch[..is * ks];
+            out.fill(INF);
+            be.minplus_into(out, &panel, &diag, is, ks, ks);
+            for (p, &o) in panel.iter_mut().zip(out.iter()) {
+                if o < *p {
+                    *p = o;
+                }
+            }
             put(d, i, k, &panel);
         }
-        // (3) outer update: D[i][j] = min(D[i][j], D[i][k] (+) D[k][j])
+        // (3) outer update: D[i][j] = min(D[i][j], D[i][k] (+) D[k][j]),
+        // with the row panels hoisted out of the i loop
         for i in 0..nb {
             if i == k {
                 continue;
@@ -102,9 +125,8 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
                     continue;
                 }
                 let js = dim(j);
-                let row_panel = get(d, k, j);
                 let mut blk = get(d, i, j);
-                be.minplus_into(&mut blk, &col_panel, &row_panel, is, ks, js);
+                be.minplus_into(&mut blk, &col_panel, &row_panels[j], is, ks, js);
                 put(d, i, j, &blk);
             }
         }

@@ -7,8 +7,14 @@
 //! * [`plan`] — recursion-aware partition planning (topology only).
 //! * [`partitioned`] — single-level partitioned APSP (Algorithm 1).
 //! * [`recursive`] — recursive partitioned APSP (Algorithm 2) over a
-//!   pluggable [`backend::TileBackend`].
-//! * [`trace`] — the operation trace consumed by the PIM simulator.
+//!   pluggable [`backend::TileBackend`], barrier-stepped walk.
+//! * [`taskgraph`] — the tile-task DAG: lowering of a plan into tile
+//!   ops + true data dependencies (the IR shared by both executors and
+//!   the simulator).
+//! * [`scheduler`] — dependency-aware work-stealing host executor over
+//!   the task graph (bit-identical to the barrier walk).
+//! * [`trace`] — the operation trace consumed by the PIM simulator
+//!   (a deterministic topological lowering of the task graph).
 //! * [`validate`] — cross-implementation validation helpers.
 
 pub mod backend;
@@ -18,5 +24,7 @@ pub mod minplus;
 pub mod partitioned;
 pub mod plan;
 pub mod recursive;
+pub mod scheduler;
+pub mod taskgraph;
 pub mod trace;
 pub mod validate;

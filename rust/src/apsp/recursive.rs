@@ -1,20 +1,25 @@
 //! Recursive partitioned APSP — the paper's Algorithm 2, executed over a
 //! [`plan::ApspPlan`] with a pluggable [`backend::TileBackend`].
 //!
-//! The walk is shared between the two execution modes:
+//! The plan is first lowered to the tile-task DAG
+//! ([`super::taskgraph::lower`]); the [`trace::Trace`] every solution
+//! carries is the deterministic topological lowering of that graph, so
+//! it is identical across:
 //!
-//! * **functional** (`backend = Some(..)`) — every FW pass and MP merge
-//!   actually runs; results are exact (validated against Dijkstra).
-//! * **estimate** (`backend = None`) — only the op trace is emitted.
-//!
-//! Because both modes walk the same plan through the same code path, the
-//! emitted [`trace::Trace`] is identical — the property that lets the
-//! simulator cost OGBN-Products-scale runs without materializing any
-//! O(n^2) state.
+//! * **functional barrier** (`solve` with `backend = Some(..)`) — the
+//!   legacy step-barrier walk in this module: every FW pass and MP merge
+//!   actually runs, level by level.
+//! * **functional dag** ([`super::scheduler::solve_dag`]) — the
+//!   work-stealing executor that runs ready tasks concurrently; results
+//!   are bit-identical to the barrier walk.
+//! * **estimate** (`backend = None`) — no numerics at all; only the
+//!   trace, which is what lets the simulator cost OGBN-Products-scale
+//!   runs without materializing any O(n^2) state.
 
 use super::backend::TileBackend;
-use super::plan::ApspPlan;
-use super::trace::{Op, Phase, Trace};
+use super::plan::{ApspPlan, PlanLevel};
+use super::taskgraph;
+use super::trace::Trace;
 use crate::graph::csr::CsrGraph;
 use crate::graph::dense::DistMatrix;
 use crate::util::threads;
@@ -39,9 +44,9 @@ pub struct ApspSolution<'p> {
     pub plan: &'p ApspPlan,
     pub trace: Trace,
     /// `None` in estimate mode.
-    top: Option<LevelSolution>,
+    pub(crate) top: Option<LevelSolution>,
     /// level-0 vertex -> (component, local index).
-    vert_loc: Vec<(u32, u32)>,
+    pub(crate) vert_loc: Vec<(u32, u32)>,
 }
 
 impl<'p> ApspSolution<'p> {
@@ -53,9 +58,7 @@ impl<'p> ApspSolution<'p> {
             .expect("query requires functional mode (backend = Some)");
         match top {
             LevelSolution::Direct(d) => d.get(u, v),
-            LevelSolution::Partitioned {
-                comp_dist, db, ..
-            } => {
+            LevelSolution::Partitioned { comp_dist, db, .. } => {
                 let (c1, m) = self.vert_loc[u];
                 let (c2, n) = self.vert_loc[v];
                 if c1 == c2 {
@@ -89,8 +92,7 @@ impl<'p> ApspSolution<'p> {
     /// Materialize the full n x n matrix (functional mode, small n).
     pub fn materialize_full(&self, backend: &dyn TileBackend) -> DistMatrix {
         let top = self.top.as_ref().expect("functional mode required");
-        let plan = self.plan;
-        materialize(top, plan, 0, backend)
+        materialize(top, self.plan, 0, backend)
     }
 
     /// Whether numerics were computed.
@@ -121,9 +123,11 @@ impl Default for SolveOptions {
     }
 }
 
-/// Run recursive partitioned APSP.
+/// Run recursive partitioned APSP with the legacy step-barrier schedule.
 ///
 /// `backend = Some(engine)` → functional; `None` → estimate (trace only).
+/// For dependency-aware concurrent execution of the same work, see
+/// [`super::scheduler::solve_dag`] (bit-identical results).
 pub fn solve<'p>(
     g: &CsrGraph,
     plan: &'p ApspPlan,
@@ -131,65 +135,65 @@ pub fn solve<'p>(
     opts: SolveOptions,
 ) -> ApspSolution<'p> {
     if backend.is_some() {
-        let need = projected_bytes(plan, g);
-        assert!(
-            need <= opts.memory_limit_bytes,
-            "functional solve needs ~{need} bytes of matrices \
-             (> limit {}); use estimate mode",
-            opts.memory_limit_bytes
-        );
+        check_memory_guard(plan, g, &opts);
     }
-    let mut ctx = Ctx {
-        g,
-        plan,
-        backend,
-        trace: Trace::default(),
-        d_intra: vec![Vec::new(); plan.depth()],
-    };
-    let top = ctx.solve_level(0);
-    // The paper's dataflow finishes with the level-0 cross-component
-    // merges and the CSR store to FeNAND (Fig. 4a steps 6-7). Those ops
-    // are part of every run's workload even when the caller only queries
-    // (they are what the MP die exists for), so the trace always
-    // includes them; numerics for them run in `materialize_full`.
-    if plan.depth() > 0 {
-        // Final cross-partition merges (dataflow step 7). Note: cross
-        // distances are *computed* (the MP die's workload) but not
-        // persisted — the paper stores intra-component CSR + boundary
-        // matrices (Fig. 4a step 6); the full n^2 cross matrix would
-        // not fit 16 TB FeNAND at OGBN scale (6e12 pairs).
-        ctx.emit_cross_merge_ops(0);
-    } else {
-        // direct solve of the whole graph: store the result
-        let n = plan.final_n as u64;
-        ctx.trace.push(
-            0,
-            Phase::Store,
-            vec![Op::StoreCsr {
-                dense_elems: n * n,
-                csr_bytes: csr_bytes_estimate(n * n),
-            }],
-        );
-    }
-    // vertex -> (comp, local) map for queries
-    let vert_loc = if plan.depth() > 0 {
-        let lvl = &plan.levels[0];
-        let mut loc = vec![(0u32, 0u32); g.n()];
-        for (ci, c) in lvl.cs.components.iter().enumerate() {
-            for (idx, &v) in c.verts.iter().enumerate() {
-                loc[v as usize] = (ci as u32, idx as u32);
+    let trace = taskgraph::lower(plan).to_trace();
+    match backend {
+        None => estimate_solution(g, plan, trace),
+        Some(be) => {
+            let mut walk = Walk {
+                g,
+                plan,
+                backend: be,
+                d_intra: vec![Vec::new(); plan.depth()],
+            };
+            let top = walk.solve_level(0);
+            ApspSolution {
+                plan,
+                trace,
+                top: Some(top),
+                vert_loc: vert_locations(plan, g),
             }
         }
-        loc
-    } else {
-        Vec::new()
-    };
+    }
+}
+
+/// Estimate-mode solution (trace only, no numerics) from an existing
+/// trace lowering — lets the coordinator reuse one `taskgraph::lower`
+/// for the executor, the simulator, and the solution.
+pub fn estimate_solution<'p>(g: &CsrGraph, plan: &'p ApspPlan, trace: Trace) -> ApspSolution<'p> {
     ApspSolution {
         plan,
-        trace: ctx.trace,
-        top,
-        vert_loc,
+        trace,
+        top: None,
+        vert_loc: vert_locations(plan, g),
     }
+}
+
+/// Enforce the functional-mode memory guard (shared by both schedulers).
+pub(crate) fn check_memory_guard(plan: &ApspPlan, g: &CsrGraph, opts: &SolveOptions) {
+    let need = projected_bytes(plan, g);
+    assert!(
+        need <= opts.memory_limit_bytes,
+        "functional solve needs ~{need} bytes of matrices \
+         (> limit {}); use estimate mode",
+        opts.memory_limit_bytes
+    );
+}
+
+/// level-0 vertex -> (component, local index) map for queries.
+pub(crate) fn vert_locations(plan: &ApspPlan, g: &CsrGraph) -> Vec<(u32, u32)> {
+    if plan.depth() == 0 {
+        return Vec::new();
+    }
+    let lvl = &plan.levels[0];
+    let mut loc = vec![(0u32, 0u32); g.n()];
+    for (ci, c) in lvl.cs.components.iter().enumerate() {
+        for (idx, &v) in c.verts.iter().enumerate() {
+            loc[v as usize] = (ci as u32, idx as u32);
+        }
+    }
+    loc
 }
 
 /// Rough peak matrix footprint for the functional-mode guard.
@@ -211,232 +215,92 @@ fn projected_bytes(plan: &ApspPlan, g: &CsrGraph) -> u64 {
     total + (plan.final_n * plan.final_n * 4) as u64
 }
 
-fn csr_bytes_estimate(dense_elems: u64) -> u64 {
-    // the paper stores results compressed; reachable entries dominate —
-    // assume full reachability (worst case): 8 bytes per (col, val)
-    dense_elems * 8
-}
-
-struct Ctx<'a, 'p> {
+/// The step-barrier functional walk (numerics only; the trace comes from
+/// the task graph).
+struct Walk<'a, 'p> {
     g: &'a CsrGraph,
     plan: &'p ApspPlan,
-    backend: Option<&'a dyn TileBackend>,
-    trace: Trace,
+    backend: &'a dyn TileBackend,
     /// Pre-injection intra matrices per level (needed to build the next
-    /// level's dense blocks; functional mode only).
+    /// level's dense blocks).
     d_intra: Vec<Vec<DistMatrix>>,
 }
 
-impl<'a, 'p> Ctx<'a, 'p> {
+impl<'a, 'p> Walk<'a, 'p> {
     /// Solve the graph at `level` (level == depth → terminal direct solve).
-    fn solve_level(&mut self, level: usize) -> Option<LevelSolution> {
+    fn solve_level(&mut self, level: usize) -> LevelSolution {
         let depth = self.plan.depth();
         if level == depth {
             return self.solve_terminal(level);
         }
-        let lvl_n_comp = self.plan.levels[level].n_components();
         let nb = self.plan.levels[level].n_boundary();
 
         // ---- Step 1: load + local FW per component
-        let (load_ops, fw_ops) = {
-            let lvl = &self.plan.levels[level];
-            let load = lvl
-                .cs
-                .components
-                .iter()
-                .zip(&lvl.comp_nnz)
-                .filter(|(c, _)| c.n() > 0)
-                .map(|(c, &nnz)| Op::LoadComponent {
-                    n: c.n() as u64,
-                    nnz,
-                })
-                .collect::<Vec<_>>();
-            let fw = lvl
-                .cs
-                .components
-                .iter()
-                .filter(|c| c.n() > 1)
-                .map(|c| Op::TileFw {
-                    n: c.n() as u64,
-                    rerun: false,
-                })
-                .collect::<Vec<_>>();
-            (load, fw)
-        };
-        self.trace.push(level as u32, Phase::Load, load_ops);
-        self.trace.push(level as u32, Phase::LocalFw, fw_ops);
+        let mut blocks = self.fill_level_blocks(level);
+        self.fw_batch(blocks.iter_mut().collect());
+        self.d_intra[level] = blocks;
 
-        if self.backend.is_some() {
-            let blocks = self.fill_level_blocks(level);
-            let mut blocks = blocks;
-            self.fw_batch(&mut blocks);
-            self.d_intra[level] = blocks;
-        }
-
-        // ---- Step 2: boundary graph + recursive solve
+        // ---- Step 2: recursive boundary solve
         if nb == 0 {
             // no cross edges at all: components are mutually unreachable
             let comp_dist = std::mem::take(&mut self.d_intra[level]);
-            let sol = LevelSolution::Partitioned {
+            return LevelSolution::Partitioned {
                 level,
                 comp_dist,
                 db: DistMatrix::new_inf(0),
             };
-            return self.backend.is_some().then_some(sol);
-        }
-        {
-            let lvl = &self.plan.levels[level];
-            let gather: u64 = lvl
-                .cs
-                .components
-                .iter()
-                .map(|c| (c.n_boundary * c.n_boundary) as u64)
-                .sum();
-            self.trace.push(
-                level as u32,
-                Phase::BoundaryBuild,
-                vec![Op::BuildBoundary {
-                    nb: nb as u64,
-                    cross_nnz: lvl.next_cross.m() as u64,
-                    gather_elems: gather,
-                }],
-            );
         }
         let sub = self.solve_level(level + 1);
+        // dB = full APSP matrix of the boundary graph
+        let db = materialize(&sub, self.plan, level + 1, self.backend);
 
-        // dB = full APSP matrix of the boundary graph (materialized from
-        // the sub-solution; emits the sub-level's cross-merge ops).
-        self.emit_cross_merge_ops(level + 1);
-        let db = match (&sub, self.backend) {
-            (Some(s), Some(be)) => Some(materialize(s, self.plan, level + 1, be)),
-            _ => None,
-        };
-
-        // ---- Step 3: inject dB + rerun FW
-        let (inject_ops, rerun_ops) = {
-            let lvl = &self.plan.levels[level];
-            let inj = lvl
-                .cs
-                .components
-                .iter()
-                .filter(|c| c.n_boundary > 0)
-                .map(|c| Op::Inject {
-                    n: c.n() as u64,
-                    nb: c.n_boundary as u64,
-                })
-                .collect::<Vec<_>>();
-            let rer = lvl
-                .cs
-                .components
-                .iter()
-                .filter(|c| c.n_boundary > 0 && c.n() > 1)
-                .map(|c| Op::TileFw {
-                    n: c.n() as u64,
-                    rerun: true,
-                })
-                .collect::<Vec<_>>();
-            (inj, rer)
-        };
-        self.trace.push(level as u32, Phase::Inject, inject_ops);
-        self.trace.push(level as u32, Phase::RerunFw, rerun_ops);
-
+        // ---- Step 3: inject dB + rerun FW on boundary components (the
+        // same set the trace's RerunFw ops name)
         let mut comp_dist = std::mem::take(&mut self.d_intra[level]);
-        if let (Some(db), Some(_)) = (&db, self.backend) {
-            let lvl = &self.plan.levels[level];
-            for (ci, c) in lvl.cs.components.iter().enumerate() {
-                let b = c.n_boundary;
-                if b == 0 {
-                    continue;
-                }
-                let gs = lvl.group_start[ci];
-                let dc = &mut comp_dist[ci];
-                for i in 0..b {
-                    for j in 0..b {
-                        dc.relax(i, j, db.get(gs + i, gs + j));
-                    }
+        let lvl = &self.plan.levels[level];
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            let b = c.n_boundary;
+            if b == 0 {
+                continue;
+            }
+            let gs = lvl.group_start[ci];
+            let dc = &mut comp_dist[ci];
+            for i in 0..b {
+                for j in 0..b {
+                    dc.relax(i, j, db.get(gs + i, gs + j));
                 }
             }
-            self.fw_batch(&mut comp_dist);
         }
+        let rerun: Vec<&mut DistMatrix> = comp_dist
+            .iter_mut()
+            .zip(&lvl.cs.components)
+            .filter(|(_, c)| c.n_boundary > 0 && c.n() > 1)
+            .map(|(d, _)| d)
+            .collect();
+        self.fw_batch(rerun);
 
-        // ---- sync + store this level's results (dataflow 5-6)
-        {
-            let lvl = &self.plan.levels[level];
-            let nb64 = nb as u64;
-            self.trace.push(
-                level as u32,
-                Phase::Sync,
-                vec![Op::SyncBoundary { bytes: nb64 * nb64 * 4 }],
-            );
-            let dense: u64 = lvl
-                .cs
-                .components
-                .iter()
-                .map(|c| (c.n() * c.n()) as u64)
-                .sum();
-            self.trace.push(
-                level as u32,
-                Phase::Store,
-                vec![
-                    Op::StoreCsr {
-                        dense_elems: dense,
-                        csr_bytes: csr_bytes_estimate(dense),
-                    },
-                    Op::StoreDense { bytes: nb64 * nb64 * 4 },
-                ],
-            );
-        }
-
-        self.backend.is_some().then(|| LevelSolution::Partitioned {
+        LevelSolution::Partitioned {
             level,
             comp_dist,
-            db: db.unwrap_or_else(|| DistMatrix::new_inf(0)),
-        })
-        .or({
-            // estimate mode still needed the comp count bookkeeping above
-            debug_assert!(lvl_n_comp > 0);
-            None
-        })
+            db,
+        }
     }
 
     /// Terminal dense solve of the deepest boundary graph.
-    fn solve_terminal(&mut self, level: usize) -> Option<LevelSolution> {
+    fn solve_terminal(&mut self, level: usize) -> LevelSolution {
         let n = self.plan.final_n;
         if n == 0 {
-            return self
-                .backend
-                .is_some()
-                .then(|| LevelSolution::Direct(DistMatrix::new_inf(0)));
+            return LevelSolution::Direct(DistMatrix::new_inf(0));
         }
-        self.trace.push(
-            level as u32,
-            Phase::Load,
-            vec![Op::LoadComponent {
-                n: n as u64,
-                nnz: self.plan.final_nnz,
-            }],
-        );
-        self.trace.push(
-            level as u32,
-            Phase::FinalSolve,
-            vec![Op::TileFw {
-                n: n as u64,
-                rerun: false,
-            }],
-        );
-        if self.backend.is_some() {
-            let mut d = self.fill_terminal_dense(level);
-            // the terminal boundary graph can exceed one tile (random
-            // topologies); compose blocked FW from tile-sized calls,
-            // like the PCM die does
-            super::backend::fw_any(self.backend.unwrap(), &mut d);
-            Some(LevelSolution::Direct(d))
-        } else {
-            None
-        }
+        let mut d = self.fill_terminal_dense(level);
+        // the terminal boundary graph can exceed one tile (random
+        // topologies); compose blocked FW from tile-sized calls,
+        // like the PCM die does
+        super::backend::fw_any(self.backend, &mut d);
+        LevelSolution::Direct(d)
     }
 
-    /// Dense blocks for all components of `level` (functional mode).
+    /// Dense blocks for all components of `level`.
     fn fill_level_blocks(&self, level: usize) -> Vec<DistMatrix> {
         let lvl = &self.plan.levels[level];
         let k = lvl.cs.components.len();
@@ -453,7 +317,7 @@ impl<'a, 'p> Ctx<'a, 'p> {
                 fill_block_from_boundary(
                     &prev.next_cross,
                     prev,
-                    d_prev,
+                    |gi| &d_prev[gi],
                     &c.verts,
                     &lvl.cs.comp_of,
                     ci as u32,
@@ -474,96 +338,52 @@ impl<'a, 'p> Ctx<'a, 'p> {
             let prev = &self.plan.levels[level - 1];
             let d_prev = &self.d_intra[level - 1];
             let comp_of = vec![0u32; n];
-            fill_block_from_boundary(&prev.next_cross, prev, d_prev, &all, &comp_of, 0)
+            fill_block_from_boundary(
+                &prev.next_cross,
+                prev,
+                |gi| &d_prev[gi],
+                &all,
+                &comp_of,
+                0,
+            )
         }
     }
 
     /// Run FW on many blocks: parallel across blocks with the serial
     /// kernel when there are enough blocks, else the backend's own
     /// (internally parallel) FW.
-    fn fw_batch(&self, blocks: &mut [DistMatrix]) {
-        let be = self.backend.unwrap();
-        if blocks.len() >= 2 && be.name() == "native" {
-            let nblocks = blocks.len();
-            let items = std::sync::Mutex::new(blocks.iter_mut().collect::<Vec<_>>());
-            threads::par_for(nblocks, |_| {
-                let item = items.lock().unwrap().pop();
-                if let Some(b) = item {
-                    super::floyd_warshall::fw_rowwise(b);
-                }
-            });
-        } else {
-            for b in blocks.iter_mut() {
-                super::backend::fw_any(be, b);
+    fn fw_batch(&self, blocks: Vec<&mut DistMatrix>) {
+        run_fw_batch(self.backend, blocks)
+    }
+}
+
+/// Batch-FW kernel selection shared by both schedulers so their results
+/// stay bit-identical: >= 2 native blocks run the serial row-wise kernel
+/// in parallel across blocks; otherwise each block gets the backend's
+/// own (internally parallel, block-limited) FW.
+pub(crate) fn batch_uses_serial_kernel(backend: &dyn TileBackend, batch_len: usize) -> bool {
+    batch_len >= 2 && backend.name() == "native"
+}
+
+pub(crate) fn run_fw_batch(backend: &dyn TileBackend, blocks: Vec<&mut DistMatrix>) {
+    if batch_uses_serial_kernel(backend, blocks.len()) {
+        let nblocks = blocks.len();
+        let items = std::sync::Mutex::new(blocks);
+        threads::par_for(nblocks, |_| {
+            let item = items.lock().unwrap().pop();
+            if let Some(b) = item {
+                super::floyd_warshall::fw_rowwise(b);
             }
+        });
+    } else {
+        for b in blocks {
+            super::backend::fw_any(backend, b);
         }
     }
-
-    /// Emit the aggregated cross-merge + fetch ops for `level`'s graph
-    /// (Algorithm step 4 / dataflow step 7). No numerics.
-    fn emit_cross_merge_ops(&mut self, level: usize) {
-        if level >= self.plan.depth() {
-            return; // terminal level has no cross merges
-        }
-        let lvl = &self.plan.levels[level];
-        let comps = &lvl.cs.components;
-        let k = comps.len();
-        if k < 2 {
-            return;
-        }
-        let nvec: Vec<u64> = comps.iter().map(|c| c.n() as u64).collect();
-        let bvec: Vec<u64> = comps.iter().map(|c| c.n_boundary as u64).collect();
-        let ntot: u64 = nvec.iter().sum();
-        let btot: u64 = bvec.iter().sum();
-        let s_nb: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * b).sum();
-        let s_bn: u64 = s_nb;
-        let s_nn: u64 = nvec.iter().map(|n| n * n).sum();
-        let s_nbb: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * b * b).sum();
-        let s_nbn: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * b * n).sum();
-        // Σ_{c1≠c2} n1*b1*b2 = Σ n1*b1*(B - b1)
-        let stage1: u64 = nvec
-            .iter()
-            .zip(&bvec)
-            .map(|(n, b)| n * b * (btot - b))
-            .sum();
-        // Σ_{c1≠c2} n1*b2*n2 = Σ_c1 n1 * (S - b1*n1), S = Σ b*n
-        let stage2: u64 = nvec
-            .iter()
-            .zip(&bvec)
-            .map(|(n, b)| n * (s_bn - b * n))
-            .sum();
-        let out_elems = ntot * ntot - s_nn;
-        // stage-1 intermediate rows + stage-2 output rows through the
-        // comparator tree
-        let stage1_rows: u64 = nvec
-            .iter()
-            .map(|n| n * (btot - 0)) // n1 rows against each foreign b2 col-block
-            .sum::<u64>()
-            .saturating_sub(s_nb);
-        let rows = stage1_rows + out_elems;
-        let _ = (s_nbb, s_nbn);
-        let pairs = (k * (k - 1)) as u64;
-        let fetch_bytes = btot * btot * 4;
-        self.trace.push(
-            level as u32,
-            Phase::CrossMerge,
-            vec![
-                Op::FetchBoundary { bytes: fetch_bytes },
-                Op::MpMergeAgg {
-                    pairs,
-                    stage1_madds: stage1,
-                    stage2_madds: stage2,
-                    out_elems,
-                    rows,
-                },
-            ],
-        );
-    }
-
 }
 
 /// Fill a dense block for a level-0 component from the weighted graph.
-fn fill_block_from_graph(
+pub(crate) fn fill_block_from_graph(
     g: &CsrGraph,
     verts: &[u32],
     comp_of: &[u32],
@@ -589,11 +409,14 @@ fn fill_block_from_graph(
 
 /// Fill a dense block for a level-l (l >= 1) component: vertices are
 /// boundary ids of level l-1; adjacency = virtual d_intra edges within
-/// the same level-(l-1) component plus inherited cross edges.
-fn fill_block_from_boundary(
+/// the same level-(l-1) component plus inherited cross edges. `d_prev`
+/// resolves a level-(l-1) component index to its (pre-injection) intra
+/// matrix — a closure so the DAG scheduler can serve blocks from its
+/// slot table.
+pub(crate) fn fill_block_from_boundary<'m>(
     cross: &CsrGraph,
-    prev: &super::plan::PlanLevel,
-    d_prev: &[DistMatrix],
+    prev: &PlanLevel,
+    d_prev: impl Fn(usize) -> &'m DistMatrix,
     verts: &[u32],
     comp_of: &[u32],
     ci: u32,
@@ -638,7 +461,7 @@ fn fill_block_from_boundary(
         }
         let gs = prev.group_start[g];
         let b = prev.group_start[g + 1] - gs;
-        let dg = &d_prev[g];
+        let dg = d_prev(g);
         for bi in 0..b {
             let i = pos[&((gs + bi) as u32)] as usize;
             for bj in 0..b {
@@ -664,85 +487,95 @@ pub fn materialize(
 ) -> DistMatrix {
     match sol {
         LevelSolution::Direct(d) => d.clone(),
-        LevelSolution::Partitioned {
-            comp_dist, db, ..
-        } => {
-            let lvl = &plan.levels[level];
-            let n = lvl.n;
-            let mut out = DistMatrix::new_inf(n);
-            // intra entries
-            for (ci, c) in lvl.cs.components.iter().enumerate() {
-                let dc = &comp_dist[ci];
-                for (i, &u) in c.verts.iter().enumerate() {
-                    let urow = out.row_mut(u as usize);
-                    for (j, &v) in c.verts.iter().enumerate() {
-                        let val = dc.get(i, j);
-                        if val < urow[v as usize] {
-                            urow[v as usize] = val;
-                        }
-                    }
-                }
-            }
-            // cross entries per ordered component pair
-            let k = lvl.cs.components.len();
-            for c1 in 0..k {
-                let comp1 = &lvl.cs.components[c1];
-                let b1 = comp1.n_boundary;
-                if b1 == 0 {
-                    continue;
-                }
-                let n1 = comp1.n();
-                let gs1 = lvl.group_start[c1];
-                // A = D_c1[:, 0..b1] (m x b1)
-                let d1 = &comp_dist[c1];
-                let mut a = vec![INF; n1 * b1];
-                for i in 0..n1 {
-                    a[i * b1..(i + 1) * b1].copy_from_slice(&d1.row(i)[..b1]);
-                }
-                for c2 in 0..k {
-                    if c1 == c2 {
-                        continue;
-                    }
-                    let comp2 = &lvl.cs.components[c2];
-                    let b2 = comp2.n_boundary;
-                    if b2 == 0 {
-                        continue;
-                    }
-                    let n2 = comp2.n();
-                    let gs2 = lvl.group_start[c2];
-                    // DB block (b1 x b2)
-                    let mut dbb = vec![INF; b1 * b2];
-                    for i in 0..b1 {
-                        for j in 0..b2 {
-                            dbb[i * b2 + j] = db.get(gs1 + i, gs2 + j);
-                        }
-                    }
-                    // B = D_c2[0..b2, :] (b2 x n2) — boundary rows
-                    let d2 = &comp_dist[c2];
-                    let mut bmat = vec![INF; b2 * n2];
-                    for j in 0..b2 {
-                        bmat[j * n2..(j + 1) * n2].copy_from_slice(d2.row(j));
-                    }
-                    // two-stage merge
-                    let mut stage1 = vec![INF; n1 * b2];
-                    backend.minplus_into(&mut stage1, &a, &dbb, n1, b1, b2);
-                    let mut strip = vec![INF; n1 * n2];
-                    backend.minplus_into(&mut strip, &stage1, &bmat, n1, b2, n2);
-                    // scatter into out
-                    for (i, &u) in comp1.verts.iter().enumerate() {
-                        let urow = out.row_mut(u as usize);
-                        for (j, &v) in comp2.verts.iter().enumerate() {
-                            let val = strip[i * n2 + j];
-                            if val < urow[v as usize] {
-                                urow[v as usize] = val;
-                            }
-                        }
-                    }
-                }
-            }
-            out
+        LevelSolution::Partitioned { comp_dist, db, .. } => {
+            materialize_partitioned(plan, level, |ci| &comp_dist[ci], db, backend)
         }
     }
+}
+
+/// [`materialize`] for a partitioned level, with the component matrices
+/// resolved through a closure (shared with the DAG scheduler).
+pub(crate) fn materialize_partitioned<'m>(
+    plan: &ApspPlan,
+    level: usize,
+    comp_dist: impl Fn(usize) -> &'m DistMatrix,
+    db: &DistMatrix,
+    backend: &dyn TileBackend,
+) -> DistMatrix {
+    let lvl = &plan.levels[level];
+    let n = lvl.n;
+    let mut out = DistMatrix::new_inf(n);
+    // intra entries
+    for (ci, c) in lvl.cs.components.iter().enumerate() {
+        let dc = comp_dist(ci);
+        for (i, &u) in c.verts.iter().enumerate() {
+            let urow = out.row_mut(u as usize);
+            for (j, &v) in c.verts.iter().enumerate() {
+                let val = dc.get(i, j);
+                if val < urow[v as usize] {
+                    urow[v as usize] = val;
+                }
+            }
+        }
+    }
+    // cross entries per ordered component pair
+    let k = lvl.cs.components.len();
+    for c1 in 0..k {
+        let comp1 = &lvl.cs.components[c1];
+        let b1 = comp1.n_boundary;
+        if b1 == 0 {
+            continue;
+        }
+        let n1 = comp1.n();
+        let gs1 = lvl.group_start[c1];
+        // A = D_c1[:, 0..b1] (m x b1)
+        let d1 = comp_dist(c1);
+        let mut a = vec![INF; n1 * b1];
+        for i in 0..n1 {
+            a[i * b1..(i + 1) * b1].copy_from_slice(&d1.row(i)[..b1]);
+        }
+        for c2 in 0..k {
+            if c1 == c2 {
+                continue;
+            }
+            let comp2 = &lvl.cs.components[c2];
+            let b2 = comp2.n_boundary;
+            if b2 == 0 {
+                continue;
+            }
+            let n2 = comp2.n();
+            let gs2 = lvl.group_start[c2];
+            // DB block (b1 x b2)
+            let mut dbb = vec![INF; b1 * b2];
+            for i in 0..b1 {
+                for j in 0..b2 {
+                    dbb[i * b2 + j] = db.get(gs1 + i, gs2 + j);
+                }
+            }
+            // B = D_c2[0..b2, :] (b2 x n2) — boundary rows
+            let d2 = comp_dist(c2);
+            let mut bmat = vec![INF; b2 * n2];
+            for j in 0..b2 {
+                bmat[j * n2..(j + 1) * n2].copy_from_slice(d2.row(j));
+            }
+            // two-stage merge
+            let mut stage1 = vec![INF; n1 * b2];
+            backend.minplus_into(&mut stage1, &a, &dbb, n1, b1, b2);
+            let mut strip = vec![INF; n1 * n2];
+            backend.minplus_into(&mut strip, &stage1, &bmat, n1, b2, n2);
+            // scatter into out
+            for (i, &u) in comp1.verts.iter().enumerate() {
+                let urow = out.row_mut(u as usize);
+                for (j, &v) in comp2.verts.iter().enumerate() {
+                    let val = strip[i * n2 + j];
+                    if val < urow[v as usize] {
+                        urow[v as usize] = val;
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]

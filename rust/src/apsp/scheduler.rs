@@ -1,0 +1,537 @@
+//! Dependency-aware host executor: runs the tile-task DAG
+//! ([`super::taskgraph`]) concurrently against any [`TileBackend`] with
+//! work-stealing workers ([`crate::util::threads::par_dag`]).
+//!
+//! Unlike the legacy barrier walk ([`super::recursive::solve`]), which
+//! joins every phase before starting the next, this executor starts a
+//! task the moment its true data dependencies are done — a straggler
+//! component's FW no longer holds up the boundary solve it never feeds
+//! (a disconnected component overlaps the *entire* sub-recursion), and
+//! load/FW chains of independent components pipeline freely.
+//!
+//! Results are **bit-identical** to the barrier walk: every task runs
+//! the same kernel on the same inputs in the same rounding order, only
+//! the schedule differs. Buffer safety follows the graph — each matrix
+//! slot has exactly one writer task at a time, and every reader is
+//! ordered behind that writer by a dependency path (documented per
+//! access below).
+
+use super::backend::{fw_any, TileBackend};
+use super::plan::ApspPlan;
+use super::recursive::{
+    batch_uses_serial_kernel, check_memory_guard, fill_block_from_boundary,
+    fill_block_from_graph, materialize_partitioned, vert_locations, ApspSolution, LevelSolution,
+    SolveOptions,
+};
+use super::taskgraph::{lower, TaskGraph, TaskKind};
+use crate::apsp::floyd_warshall;
+use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
+use crate::util::threads;
+use std::cell::UnsafeCell;
+
+/// One exclusively-owned matrix buffer. Ownership transfers along task
+/// edges; the graph guarantees a single writer at a time.
+struct Slot(UnsafeCell<Option<DistMatrix>>);
+
+impl Slot {
+    fn new() -> Self {
+        Slot(UnsafeCell::new(None))
+    }
+
+    /// SAFETY: caller must be the slot's current owner task (no
+    /// concurrent reader or writer — enforced by the task graph).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn put(&self, v: DistMatrix) {
+        *self.0.get() = Some(v);
+    }
+
+    /// SAFETY: a writer task that the caller transitively depends on
+    /// must have filled the slot, and no concurrent writer may exist.
+    unsafe fn get(&self) -> &DistMatrix {
+        (*self.0.get()).as_ref().expect("slot not yet filled")
+    }
+
+    /// SAFETY: as [`Slot::get`], plus no concurrent *reader*.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get_mut(&self) -> &mut DistMatrix {
+        (*self.0.get()).as_mut().expect("slot not yet filled")
+    }
+
+    fn take(&mut self) -> Option<DistMatrix> {
+        self.0.get_mut().take()
+    }
+}
+
+/// All matrix state of one DAG run.
+struct Slots {
+    /// `d[level][comp]`: the component block (written by Load, advanced
+    /// in place by LocalFw → Inject → RerunFw).
+    d: Vec<Vec<Slot>>,
+    /// `db[level]`: the dB injected into `level` (written by the
+    /// sub-level's CrossMerge task).
+    db: Vec<Slot>,
+    /// Terminal dense solve result.
+    terminal: Slot,
+}
+
+// SAFETY: interior mutability is disciplined by the task graph — see
+// the per-access SAFETY notes in `run_task`.
+unsafe impl Sync for Slots {}
+
+impl Slots {
+    fn new(plan: &ApspPlan) -> Self {
+        Slots {
+            d: plan
+                .levels
+                .iter()
+                .map(|l| (0..l.n_components()).map(|_| Slot::new()).collect())
+                .collect(),
+            db: (0..plan.depth()).map(|_| Slot::new()).collect(),
+            terminal: Slot::new(),
+        }
+    }
+}
+
+/// Lower `plan` and execute it with the dependency-aware scheduler.
+pub fn solve_dag<'p>(
+    g: &CsrGraph,
+    plan: &'p ApspPlan,
+    backend: &dyn TileBackend,
+    opts: SolveOptions,
+) -> ApspSolution<'p> {
+    let tg = lower(plan);
+    execute(g, plan, &tg, backend, opts)
+}
+
+/// Execute an already-lowered task graph (the coordinator lowers once
+/// and shares the graph with the simulator).
+pub fn execute<'p>(
+    g: &CsrGraph,
+    plan: &'p ApspPlan,
+    tg: &TaskGraph,
+    backend: &dyn TileBackend,
+    opts: SolveOptions,
+) -> ApspSolution<'p> {
+    check_memory_guard(plan, g, &opts);
+    let depth = plan.depth();
+    let mut slots = Slots::new(plan);
+
+    // Mirror the barrier walk's per-batch kernel choice so results stay
+    // bit-identical even where fw_rowwise and the backend's own FW
+    // could differ in rounding.
+    let local_serial: Vec<bool> = plan
+        .levels
+        .iter()
+        .map(|l| batch_uses_serial_kernel(backend, l.n_components()))
+        .collect();
+    let rerun_serial: Vec<bool> = plan
+        .levels
+        .iter()
+        .map(|l| {
+            let reruns = l
+                .cs
+                .components
+                .iter()
+                .filter(|c| c.n_boundary > 0 && c.n() > 1)
+                .count();
+            batch_uses_serial_kernel(backend, reruns)
+        })
+        .collect();
+
+    {
+        let slots = &slots;
+        let deps = tg.dep_lists();
+        threads::par_dag(&deps, |ti| {
+            run_task(
+                &tg.nodes[ti].kind,
+                g,
+                plan,
+                backend,
+                slots,
+                &local_serial,
+                &rerun_serial,
+            )
+        });
+    }
+
+    // ---- assemble the level-0 solution
+    let top = if depth == 0 {
+        LevelSolution::Direct(
+            slots
+                .terminal
+                .take()
+                .unwrap_or_else(|| DistMatrix::new_inf(0)),
+        )
+    } else {
+        let comp_dist: Vec<DistMatrix> = slots.d[0]
+            .iter_mut()
+            .map(|s| s.take().expect("level-0 component never filled"))
+            .collect();
+        let db = slots.db[0]
+            .take()
+            .unwrap_or_else(|| DistMatrix::new_inf(0));
+        LevelSolution::Partitioned {
+            level: 0,
+            comp_dist,
+            db,
+        }
+    };
+    ApspSolution {
+        plan,
+        trace: tg.to_trace(),
+        top: Some(top),
+        vert_loc: vert_locations(plan, g),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_task(
+    kind: &TaskKind,
+    g: &CsrGraph,
+    plan: &ApspPlan,
+    backend: &dyn TileBackend,
+    slots: &Slots,
+    local_serial: &[bool],
+    rerun_serial: &[bool],
+) {
+    let depth = plan.depth();
+    match *kind {
+        TaskKind::Load { level, comp } => {
+            let (l, ci) = (level as usize, comp as usize);
+            let lvl = &plan.levels[l];
+            let c = &lvl.cs.components[ci];
+            let block = if l == 0 {
+                fill_block_from_graph(g, &c.verts, &lvl.cs.comp_of, comp)
+            } else {
+                let prev = &plan.levels[l - 1];
+                // SAFETY (read): Load(l, c) is ordered behind
+                // BoundaryBuild(l-1), which is behind every boundary
+                // component's LocalFw — the only groups this fill
+                // reads. The next writer of those slots, Inject(l-1),
+                // is ordered behind this task via CrossMerge(l).
+                fill_block_from_boundary(
+                    &prev.next_cross,
+                    prev,
+                    |gi| unsafe { slots.d[l - 1][gi].get() },
+                    &c.verts,
+                    &lvl.cs.comp_of,
+                    comp,
+                )
+            };
+            // SAFETY (write): Load is the slot's first writer; every
+            // other toucher depends on it.
+            unsafe { slots.d[l][ci].put(block) };
+        }
+        TaskKind::LocalFw { level, comp } => {
+            let (l, ci) = (level as usize, comp as usize);
+            // SAFETY (write): exclusive — ordered after Load(l, c);
+            // all readers depend on this task.
+            let d = unsafe { slots.d[l][ci].get_mut() };
+            if local_serial[l] {
+                floyd_warshall::fw_rowwise(d);
+            } else {
+                fw_any(backend, d);
+            }
+        }
+        TaskKind::Inject { level, comp } => {
+            let (l, ci) = (level as usize, comp as usize);
+            let lvl = &plan.levels[l];
+            let b = lvl.cs.components[ci].n_boundary;
+            let gs = lvl.group_start[ci];
+            // SAFETY (read): db[l] was written by CrossMerge(l+1), a
+            // direct dependency; its only writer is done.
+            let db = unsafe { slots.db[l].get() };
+            // SAFETY (write): exclusive — every pre-injection reader of
+            // this block (sub-level Loads, CrossMerge(l+1)) is ordered
+            // before this task through the dB chain.
+            let dc = unsafe { slots.d[l][ci].get_mut() };
+            for i in 0..b {
+                for j in 0..b {
+                    dc.relax(i, j, db.get(gs + i, gs + j));
+                }
+            }
+        }
+        TaskKind::RerunFw { level, comp } => {
+            let (l, ci) = (level as usize, comp as usize);
+            // SAFETY (write): exclusive — ordered after Inject(l, c);
+            // post-injection readers (Sync, CrossMerge(l), the final
+            // solution) depend on this task.
+            let d = unsafe { slots.d[l][ci].get_mut() };
+            if rerun_serial[l] {
+                floyd_warshall::fw_rowwise(d);
+            } else {
+                fw_any(backend, d);
+            }
+        }
+        TaskKind::FinalLoad => {
+            let n = plan.final_n;
+            let all: Vec<u32> = (0..n as u32).collect();
+            let block = if depth == 0 {
+                let comp_of = vec![0u32; g.n()];
+                fill_block_from_graph(g, &all, &comp_of, 0)
+            } else {
+                let prev = &plan.levels[depth - 1];
+                let comp_of = vec![0u32; n];
+                // SAFETY (read): as the Load arm — ordered behind
+                // BoundaryBuild(depth-1).
+                fill_block_from_boundary(
+                    &prev.next_cross,
+                    prev,
+                    |gi| unsafe { slots.d[depth - 1][gi].get() },
+                    &all,
+                    &comp_of,
+                    0,
+                )
+            };
+            // SAFETY (write): first writer of the terminal slot.
+            unsafe { slots.terminal.put(block) };
+        }
+        TaskKind::FinalSolve => {
+            // SAFETY (write): exclusive — ordered after FinalLoad; all
+            // readers (CrossMerge(depth), the final solution) depend on
+            // this task.
+            let d = unsafe { slots.terminal.get_mut() };
+            fw_any(backend, d);
+        }
+        TaskKind::CrossMerge { level } => {
+            let m = level as usize;
+            if m == 0 {
+                // top-level merges are computed-but-not-persisted on
+                // the real hardware (Fig. 4a step 7); numerics for them
+                // run on demand in `materialize_full`
+                return;
+            }
+            let out = if m == depth {
+                // SAFETY (read): FinalSolve, the terminal's last
+                // writer, is a direct dependency.
+                unsafe { slots.terminal.get() }.clone()
+            } else {
+                let empty = DistMatrix::new_inf(0);
+                let db_m = if plan.levels[m].n_boundary() > 0 {
+                    // SAFETY (read): written by CrossMerge(m+1), a
+                    // direct dependency.
+                    unsafe { slots.db[m].get() }
+                } else {
+                    &empty
+                };
+                // SAFETY (read): every component's final writer at
+                // level m is a direct dependency; no later writer
+                // exists.
+                materialize_partitioned(
+                    plan,
+                    m,
+                    |ci| unsafe { slots.d[m][ci].get() },
+                    db_m,
+                    backend,
+                )
+            };
+            // SAFETY (write): sole writer of db[m-1]; readers
+            // (Inject(m-1, *), CrossMerge(m-1), the final solution)
+            // depend on this task.
+            unsafe { slots.db[m - 1].put(out) };
+        }
+        // pure transfer/bookkeeping nodes: no host numerics
+        TaskKind::BoundaryBuild { .. } | TaskKind::Sync { .. } | TaskKind::Store { .. } => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::backend::{NativeBackend, SerialBackend};
+    use crate::apsp::plan::{build_plan, PlanOptions};
+    use crate::apsp::recursive::solve;
+    use crate::graph::generators::{self, Weights};
+
+    fn check_bit_identical(g: &CsrGraph, tile: usize, seed: u64) {
+        let plan = build_plan(
+            g,
+            PlanOptions {
+                tile_limit: tile,
+                max_depth: usize::MAX,
+                seed,
+            },
+        );
+        let be = NativeBackend;
+        let barrier = solve(g, &plan, Some(&be), SolveOptions::default());
+        let dag = solve_dag(g, &plan, &be, SolveOptions::default());
+        assert_eq!(barrier.trace, dag.trace, "traces must be identical");
+        // full materializations agree bit-for-bit
+        let fb = barrier.materialize_full(&be);
+        let fd = dag.materialize_full(&be);
+        assert_eq!(fb.max_diff(&fd), 0.0, "schedulers disagree (tile {tile})");
+        // per-slot equality (component matrices and dB), not just the
+        // merged view
+        match (barrier.top().unwrap(), dag.top().unwrap()) {
+            (LevelSolution::Direct(a), LevelSolution::Direct(b)) => {
+                assert_eq!(a.max_diff(b), 0.0)
+            }
+            (
+                LevelSolution::Partitioned {
+                    comp_dist: ca,
+                    db: da,
+                    ..
+                },
+                LevelSolution::Partitioned {
+                    comp_dist: cb,
+                    db: dbb,
+                    ..
+                },
+            ) => {
+                assert_eq!(ca.len(), cb.len());
+                for (x, y) in ca.iter().zip(cb) {
+                    assert_eq!(x.max_diff(y), 0.0);
+                }
+                assert_eq!(da.max_diff(dbb), 0.0);
+            }
+            _ => panic!("solution shapes differ between schedulers"),
+        }
+        // and the dag solution is actually *correct*, not just consistent
+        let oracle = crate::apsp::dijkstra::apsp(g);
+        assert!(fd.max_diff(&oracle) < 1e-3);
+    }
+
+    #[test]
+    fn bit_identical_on_nws() {
+        let g = generators::newman_watts_strogatz(300, 4, 0.12, Weights::Uniform(1.0, 5.0), 21);
+        check_bit_identical(&g, 48, 21);
+    }
+
+    #[test]
+    fn bit_identical_on_clustered() {
+        let g = generators::ogbn_proxy(500, 12.0, Weights::Uniform(1.0, 3.0), 22);
+        check_bit_identical(&g, 64, 22);
+    }
+
+    #[test]
+    fn bit_identical_on_er() {
+        let g = generators::erdos_renyi(250, 900, Weights::Uniform(0.5, 4.0), 23);
+        check_bit_identical(&g, 40, 23);
+    }
+
+    #[test]
+    fn bit_identical_with_deep_recursion() {
+        // chain of cliques forces depth >= 2 (see recursive.rs test)
+        let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(24);
+        for c in 0..30u32 {
+            let base = c * 12;
+            for i in 0..12 {
+                for j in (i + 1)..12 {
+                    edges.push((base + i, base + j, rng.gen_f32_range(1.0, 5.0)));
+                }
+            }
+            if c < 29 {
+                edges.push((base + 11, base + 12, rng.gen_f32_range(1.0, 5.0)));
+            }
+        }
+        let g = CsrGraph::from_undirected_edges(360, &edges);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 16,
+                max_depth: usize::MAX,
+                seed: 24,
+            },
+        );
+        assert!(plan.depth() >= 2);
+        check_bit_identical(&g, 16, 24);
+    }
+
+    #[test]
+    fn bit_identical_on_disconnected_mix() {
+        // bridged communities plus an isolated clique (the zero-boundary
+        // fast path: its FW overlaps the whole boundary recursion)
+        let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(25);
+        for c in 0..6u32 {
+            let base = c * 20;
+            for i in 0..20 {
+                for j in (i + 1)..20 {
+                    edges.push((base + i, base + j, rng.gen_f32_range(1.0, 4.0)));
+                }
+            }
+            if c < 5 {
+                edges.push((base + 19, base + 20, 2.0));
+            }
+        }
+        for i in 120..170u32 {
+            for j in (i + 1)..170 {
+                edges.push((i, j, rng.gen_f32_range(1.0, 2.0)));
+            }
+        }
+        let g = CsrGraph::from_undirected_edges(170, &edges);
+        check_bit_identical(&g, 64, 25);
+    }
+
+    #[test]
+    fn bit_identical_direct_solve() {
+        let g = generators::complete(24, Weights::Uniform(1.0, 2.0), 26);
+        check_bit_identical(&g, 128, 26);
+    }
+
+    #[test]
+    fn serial_backend_agrees_too() {
+        let g = generators::newman_watts_strogatz(200, 3, 0.1, Weights::Uniform(1.0, 4.0), 27);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 32,
+                max_depth: usize::MAX,
+                seed: 27,
+            },
+        );
+        let be = SerialBackend;
+        let barrier = solve(&g, &plan, Some(&be), SolveOptions::default());
+        let dag = solve_dag(&g, &plan, &be, SolveOptions::default());
+        assert_eq!(
+            barrier
+                .materialize_full(&be)
+                .max_diff(&dag.materialize_full(&be)),
+            0.0
+        );
+    }
+
+    #[test]
+    fn repeated_runs_deterministic() {
+        let g = generators::ogbn_proxy(400, 10.0, Weights::Uniform(1.0, 3.0), 28);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 48,
+                max_depth: usize::MAX,
+                seed: 28,
+            },
+        );
+        let be = NativeBackend;
+        let a = solve_dag(&g, &plan, &be, SolveOptions::default());
+        let b = solve_dag(&g, &plan, &be, SolveOptions::default());
+        assert_eq!(
+            a.materialize_full(&be).max_diff(&b.materialize_full(&be)),
+            0.0
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "functional solve needs")]
+    fn memory_guard_applies_to_dag_too() {
+        let g = generators::newman_watts_strogatz(500, 4, 0.1, Weights::Unit, 29);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 64,
+                max_depth: usize::MAX,
+                seed: 29,
+            },
+        );
+        let _ = solve_dag(
+            &g,
+            &plan,
+            &NativeBackend,
+            SolveOptions {
+                memory_limit_bytes: 1024,
+            },
+        );
+    }
+}

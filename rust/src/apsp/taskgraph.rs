@@ -1,0 +1,848 @@
+//! Tile-task DAG: the shared intermediate representation between the
+//! APSP algorithm, the execution backends, and the PIM simulator.
+//!
+//! [`lower`] walks an [`ApspPlan`] and emits a [`TaskGraph`] whose nodes
+//! are tile-granular operations (carrying the same [`Op`] payloads the
+//! legacy trace used) and whose edges are *true data dependencies*:
+//!
+//! * a component's `LocalFw` blocks only the gathers that read it — a
+//!   zero-boundary component never gates the boundary build;
+//! * `Inject` needs exactly the sub-level's merged dB plus the
+//!   component's own local FW result;
+//! * the cross merges of a level need that level's final component
+//!   matrices and its dB, nothing else.
+//!
+//! Two consumers walk the graph: the work-stealing host executor
+//! ([`super::scheduler`]) runs ready tasks concurrently against any
+//! `TileBackend`, and the simulator's dependency-aware list scheduler
+//! ([`crate::sim::engine::simulate_dag`]) computes a critical-path
+//! makespan under the modeled resource constraints.
+//!
+//! The legacy [`Trace`] is a *deterministic topological lowering* of the
+//! graph: every node records the trace step it belongs to, and
+//! [`TaskGraph::to_trace`] regroups the ops in exactly the order the old
+//! barrier-stepped recursive walk emitted them — estimate mode and the
+//! barrier simulator keep working unchanged. (Figure code defaults to
+//! the dag scheduler, so its modeled makespans improve by the overlap;
+//! `run.scheduler = "barrier"` reproduces the legacy numbers exactly.
+//! See DESIGN.md "TaskGraph IR".)
+
+use super::plan::{ApspPlan, PlanLevel};
+use super::trace::{Op, Phase, Trace};
+
+pub type TaskId = u32;
+
+/// What a task node does. `level`/`comp` index into the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Stream one component in and densify its block.
+    Load { level: u32, comp: u32 },
+    /// Local (pre-injection) FW pass on one component.
+    LocalFw { level: u32, comp: u32 },
+    /// Assemble the level's boundary graph in HBM (gathers the boundary
+    /// blocks of every component that *has* boundary vertices).
+    BoundaryBuild { level: u32 },
+    /// Stream the terminal graph into the die.
+    FinalLoad,
+    /// Dense FW solve of the terminal graph.
+    FinalSolve,
+    /// Materialize the full matrix of `level`'s graph — intra entries
+    /// from the component matrices plus the two-stage cross merges on
+    /// the MP die. Its output is the dB injected into `level - 1`.
+    /// `level == depth` materializes the terminal solution (no merge
+    /// work); `level == 0` is the top-level merge pass (computed, never
+    /// persisted — Fig. 4a step 7).
+    CrossMerge { level: u32 },
+    /// Min-merge the dB rows/cols into one component's tile.
+    Inject { level: u32, comp: u32 },
+    /// Boundary-aware FW rerun after injection.
+    RerunFw { level: u32, comp: u32 },
+    /// HBM boundary synchronization for a level.
+    Sync { level: u32 },
+    /// CSR-compress + FeNAND-program a level's results (also the
+    /// terminal store of a direct, unpartitioned solve).
+    Store { level: u32 },
+}
+
+/// One node of the tile-task DAG.
+#[derive(Debug, Clone)]
+pub struct TaskNode {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    /// Recursion level of the trace step this node's ops belong to.
+    pub level: u32,
+    pub phase: Phase,
+    /// Trace step index ([`TaskGraph::to_trace`] grouping).
+    pub step: u32,
+    /// Hardware ops (empty for pure-dependency nodes, e.g. the terminal
+    /// materialization or an empty component's load).
+    pub ops: Vec<Op>,
+    /// Direct data dependencies (always lower task ids — the graph is
+    /// acyclic by construction).
+    pub deps: Vec<TaskId>,
+}
+
+/// The full tile-task DAG of one APSP run.
+#[derive(Debug, Clone, Default)]
+pub struct TaskGraph {
+    pub nodes: Vec<TaskNode>,
+    /// `(level, phase)` of each trace step, in emission order.
+    steps: Vec<(u32, Phase)>,
+}
+
+impl TaskGraph {
+    fn begin_step(&mut self, level: u32, phase: Phase) -> u32 {
+        self.steps.push((level, phase));
+        (self.steps.len() - 1) as u32
+    }
+
+    fn add(&mut self, kind: TaskKind, step: u32, ops: Vec<Op>, deps: Vec<TaskId>) -> TaskId {
+        let id = self.nodes.len() as TaskId;
+        let (level, phase) = self.steps[step as usize];
+        debug_assert!(deps.iter().all(|&d| d < id), "deps must point backward");
+        self.nodes.push(TaskNode {
+            id,
+            kind,
+            level,
+            phase,
+            step,
+            ops,
+            deps,
+        });
+        id
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Successor adjacency (inverse of `deps`).
+    pub fn successors(&self) -> Vec<Vec<TaskId>> {
+        let mut succ = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &d in &n.deps {
+                succ[d as usize].push(n.id);
+            }
+        }
+        succ
+    }
+
+    /// Dependency lists in task-id order (the shape `threads::par_dag`
+    /// consumes).
+    pub fn dep_lists(&self) -> Vec<Vec<u32>> {
+        self.nodes.iter().map(|n| n.deps.clone()).collect()
+    }
+
+    /// Deterministic topological lowering to the legacy step-barrier
+    /// trace: nodes grouped by their recorded step, ops in node-creation
+    /// order — bit-for-bit the trace the old recursive walk emitted.
+    pub fn to_trace(&self) -> Trace {
+        let mut per_step: Vec<Vec<Op>> = vec![Vec::new(); self.steps.len()];
+        for n in &self.nodes {
+            per_step[n.step as usize].extend(n.ops.iter().cloned());
+        }
+        let mut trace = Trace::default();
+        for (si, ops) in per_step.into_iter().enumerate() {
+            let (level, phase) = self.steps[si];
+            trace.push(level, phase, ops);
+        }
+        trace
+    }
+
+    /// Structural invariants: forward-only edges (acyclicity), in-range
+    /// deps, monotone step assignment.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut last_step = 0u32;
+        for n in &self.nodes {
+            for &d in &n.deps {
+                if d >= n.id {
+                    return Err(format!("task {} depends on non-earlier task {d}", n.id));
+                }
+            }
+            if (n.step as usize) >= self.steps.len() {
+                return Err(format!("task {} has out-of-range step {}", n.id, n.step));
+            }
+            if n.step < last_step {
+                return Err(format!(
+                    "task {} emitted into step {} after step {last_step}",
+                    n.id, n.step
+                ));
+            }
+            last_step = n.step;
+        }
+        Ok(())
+    }
+}
+
+/// Worst-case CSR byte estimate for storing `dense_elems` result
+/// entries (full reachability: 8 bytes per `(col, val)` pair).
+pub(crate) fn csr_bytes_estimate(dense_elems: u64) -> u64 {
+    dense_elems * 8
+}
+
+/// The aggregated cross-merge ops of one partitioned level (Algorithm
+/// step 4 / dataflow step 7) — fetch the interleaved boundary matrices,
+/// then the two-stage MP merges for every ordered component pair.
+fn cross_merge_ops(lvl: &PlanLevel) -> Vec<Op> {
+    let comps = &lvl.cs.components;
+    let k = comps.len();
+    if k < 2 {
+        return Vec::new();
+    }
+    let nvec: Vec<u64> = comps.iter().map(|c| c.n() as u64).collect();
+    let bvec: Vec<u64> = comps.iter().map(|c| c.n_boundary as u64).collect();
+    let ntot: u64 = nvec.iter().sum();
+    let btot: u64 = bvec.iter().sum();
+    let s_nb: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * b).sum();
+    let s_bn: u64 = s_nb;
+    let s_nn: u64 = nvec.iter().map(|n| n * n).sum();
+    // Σ_{c1≠c2} n1*b1*b2 = Σ n1*b1*(B - b1)
+    let stage1: u64 = nvec
+        .iter()
+        .zip(&bvec)
+        .map(|(n, b)| n * b * (btot - b))
+        .sum();
+    // Σ_{c1≠c2} n1*b2*n2 = Σ_c1 n1 * (S - b1*n1), S = Σ b*n
+    let stage2: u64 = nvec
+        .iter()
+        .zip(&bvec)
+        .map(|(n, b)| n * (s_bn - b * n))
+        .sum();
+    let out_elems = ntot * ntot - s_nn;
+    // stage-1 intermediate rows + stage-2 output rows through the
+    // comparator tree
+    let stage1_rows: u64 = nvec
+        .iter()
+        .map(|n| n * btot)
+        .sum::<u64>()
+        .saturating_sub(s_nb);
+    let rows = stage1_rows + out_elems;
+    let pairs = (k * (k - 1)) as u64;
+    let fetch_bytes = btot * btot * 4;
+    vec![
+        Op::FetchBoundary { bytes: fetch_bytes },
+        Op::MpMergeAgg {
+            pairs,
+            stage1_madds: stage1,
+            stage2_madds: stage2,
+            out_elems,
+            rows,
+        },
+    ]
+}
+
+/// Lower a recursion plan to the tile-task DAG. Pure plan walk — no
+/// graph data, no numerics; both execution modes share the result.
+pub fn lower(plan: &ApspPlan) -> TaskGraph {
+    let depth = plan.depth();
+    let mut tg = TaskGraph::default();
+
+    // Per level: the pre-injection last writer of every component's
+    // block (LocalFw, or Load for single-vertex components).
+    let mut pre_writer: Vec<Vec<TaskId>> = Vec::with_capacity(depth);
+    let mut bb_id: Vec<Option<TaskId>> = vec![None; depth];
+
+    // ---- descent: Load + LocalFw (+ BoundaryBuild) per level
+    for (l, lvl) in plan.levels.iter().enumerate() {
+        let lu = l as u32;
+        let step = tg.begin_step(lu, Phase::Load);
+        let mut loads = Vec::with_capacity(lvl.n_components());
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            let deps = if l == 0 {
+                Vec::new()
+            } else {
+                vec![bb_id[l - 1].expect("parent level recursed")]
+            };
+            let ops = if c.n() > 0 {
+                vec![Op::LoadComponent {
+                    n: c.n() as u64,
+                    nnz: lvl.comp_nnz[ci],
+                }]
+            } else {
+                Vec::new()
+            };
+            loads.push(tg.add(
+                TaskKind::Load {
+                    level: lu,
+                    comp: ci as u32,
+                },
+                step,
+                ops,
+                deps,
+            ));
+        }
+
+        let step = tg.begin_step(lu, Phase::LocalFw);
+        let mut pw = Vec::with_capacity(lvl.n_components());
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            if c.n() > 1 {
+                pw.push(tg.add(
+                    TaskKind::LocalFw {
+                        level: lu,
+                        comp: ci as u32,
+                    },
+                    step,
+                    vec![Op::TileFw {
+                        n: c.n() as u64,
+                        rerun: false,
+                    }],
+                    vec![loads[ci]],
+                ));
+            } else {
+                pw.push(loads[ci]);
+            }
+        }
+        pre_writer.push(pw);
+
+        let nb = lvl.n_boundary();
+        if nb == 0 {
+            // mutually unreachable components: no boundary graph, no
+            // deeper levels (the plan guarantees this is the last one)
+            break;
+        }
+        let step = tg.begin_step(lu, Phase::BoundaryBuild);
+        let gather: u64 = lvl
+            .cs
+            .components
+            .iter()
+            .map(|c| (c.n_boundary * c.n_boundary) as u64)
+            .sum();
+        let deps: Vec<TaskId> = lvl
+            .cs
+            .components
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.n_boundary > 0)
+            .map(|(ci, _)| pre_writer[l][ci])
+            .collect();
+        bb_id[l] = Some(tg.add(
+            TaskKind::BoundaryBuild { level: lu },
+            step,
+            vec![Op::BuildBoundary {
+                nb: nb as u64,
+                cross_nnz: lvl.next_cross.m() as u64,
+                gather_elems: gather,
+            }],
+            deps,
+        ));
+    }
+
+    let reached_terminal = depth == 0 || plan.levels[depth - 1].n_boundary() > 0;
+
+    // ---- terminal dense solve
+    let mut final_solve: Option<TaskId> = None;
+    if reached_terminal && plan.final_n > 0 {
+        let du = depth as u32;
+        let step = tg.begin_step(du, Phase::Load);
+        let deps = if depth > 0 {
+            vec![bb_id[depth - 1].expect("reached terminal")]
+        } else {
+            Vec::new()
+        };
+        let fl = tg.add(
+            TaskKind::FinalLoad,
+            step,
+            vec![Op::LoadComponent {
+                n: plan.final_n as u64,
+                nnz: plan.final_nnz,
+            }],
+            deps,
+        );
+        let step = tg.begin_step(du, Phase::FinalSolve);
+        final_solve = Some(tg.add(
+            TaskKind::FinalSolve,
+            step,
+            vec![Op::TileFw {
+                n: plan.final_n as u64,
+                rerun: false,
+            }],
+            vec![fl],
+        ));
+    }
+
+    // ---- unwind: per level (innermost out) the sub-level's cross
+    // merges, then inject + rerun + sync + store
+    let mut final_writer: Vec<Vec<TaskId>> = vec![Vec::new(); depth];
+    // dB producer per level (None where the level has no boundary).
+    let mut db_of: Vec<Option<TaskId>> = vec![None; depth];
+    for l in (0..depth).rev() {
+        let lvl = &plan.levels[l];
+        let lu = l as u32;
+        let nb = lvl.n_boundary();
+        if nb == 0 {
+            // early-returned level: components are final after LocalFw
+            final_writer[l] = pre_writer[l].clone();
+            continue;
+        }
+        // dB of level l = materialization of the sub-level's solution
+        let sub = l + 1;
+        let cm = if sub == depth {
+            // terminal: plain matrix clone, no merge ops
+            let step = tg.begin_step(sub as u32, Phase::CrossMerge);
+            tg.add(
+                TaskKind::CrossMerge { level: sub as u32 },
+                step,
+                Vec::new(),
+                final_solve.into_iter().collect(),
+            )
+        } else {
+            let step = tg.begin_step(sub as u32, Phase::CrossMerge);
+            let mut deps = final_writer[sub].clone();
+            deps.extend(db_of[sub]);
+            tg.add(
+                TaskKind::CrossMerge { level: sub as u32 },
+                step,
+                cross_merge_ops(&plan.levels[sub]),
+                deps,
+            )
+        };
+        db_of[l] = Some(cm);
+
+        // Inject + RerunFw per boundary component
+        let step = tg.begin_step(lu, Phase::Inject);
+        let mut inject_id: Vec<Option<TaskId>> = vec![None; lvl.n_components()];
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            if c.n_boundary == 0 {
+                continue;
+            }
+            inject_id[ci] = Some(tg.add(
+                TaskKind::Inject {
+                    level: lu,
+                    comp: ci as u32,
+                },
+                step,
+                vec![Op::Inject {
+                    n: c.n() as u64,
+                    nb: c.n_boundary as u64,
+                }],
+                vec![cm, pre_writer[l][ci]],
+            ));
+        }
+        let step = tg.begin_step(lu, Phase::RerunFw);
+        let mut fw = pre_writer[l].clone();
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            if let Some(inj) = inject_id[ci] {
+                fw[ci] = inj;
+                if c.n() > 1 {
+                    fw[ci] = tg.add(
+                        TaskKind::RerunFw {
+                            level: lu,
+                            comp: ci as u32,
+                        },
+                        step,
+                        vec![Op::TileFw {
+                            n: c.n() as u64,
+                            rerun: true,
+                        }],
+                        vec![inj],
+                    );
+                }
+            }
+        }
+        final_writer[l] = fw;
+
+        // Sync + Store (dataflow steps 5-6)
+        let nb64 = nb as u64;
+        let step = tg.begin_step(lu, Phase::Sync);
+        let sync_deps: Vec<TaskId> = lvl
+            .cs
+            .components
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.n_boundary > 0)
+            .map(|(ci, _)| final_writer[l][ci])
+            .collect();
+        let sync = tg.add(
+            TaskKind::Sync { level: lu },
+            step,
+            vec![Op::SyncBoundary {
+                bytes: nb64 * nb64 * 4,
+            }],
+            sync_deps,
+        );
+        let step = tg.begin_step(lu, Phase::Store);
+        let dense: u64 = lvl
+            .cs
+            .components
+            .iter()
+            .map(|c| (c.n() * c.n()) as u64)
+            .sum();
+        let mut store_deps = vec![sync];
+        // internal-only components aren't covered by the sync edge
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            if c.n_boundary == 0 {
+                store_deps.push(final_writer[l][ci]);
+            }
+        }
+        tg.add(
+            TaskKind::Store { level: lu },
+            step,
+            vec![
+                Op::StoreCsr {
+                    dense_elems: dense,
+                    csr_bytes: csr_bytes_estimate(dense),
+                },
+                Op::StoreDense {
+                    bytes: nb64 * nb64 * 4,
+                },
+            ],
+            store_deps,
+        );
+    }
+
+    // ---- top of the recursion: final cross merges (dataflow step 7),
+    // or the direct solve's result store
+    if depth > 0 {
+        let step = tg.begin_step(0, Phase::CrossMerge);
+        let mut deps = final_writer[0].clone();
+        deps.extend(db_of[0]);
+        tg.add(
+            TaskKind::CrossMerge { level: 0 },
+            step,
+            cross_merge_ops(&plan.levels[0]),
+            deps,
+        );
+    } else {
+        let step = tg.begin_step(0, Phase::Store);
+        let n = plan.final_n as u64;
+        tg.add(
+            TaskKind::Store { level: 0 },
+            step,
+            vec![Op::StoreCsr {
+                dense_elems: n * n,
+                csr_bytes: csr_bytes_estimate(n * n),
+            }],
+            final_solve.into_iter().collect(),
+        );
+    }
+
+    debug_assert!(tg.validate().is_ok(), "{:?}", tg.validate());
+    tg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::plan::{build_plan, PlanOptions};
+    use crate::graph::csr::CsrGraph;
+    use crate::graph::generators::{self, Topology, Weights};
+
+    fn plan_for(n: usize, tile: usize, seed: u64, topo: Topology) -> ApspPlan {
+        let g = generators::generate(topo, n, 10.0, Weights::Uniform(1.0, 5.0), seed);
+        build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: tile,
+                max_depth: usize::MAX,
+                seed,
+            },
+        )
+    }
+
+    /// Reference reimplementation of the legacy barrier-walk trace
+    /// emission (the code `lower` replaced) — guards that `to_trace` is
+    /// bit-identical to what the old recursive walk produced.
+    fn legacy_trace(plan: &ApspPlan) -> Trace {
+        fn emit_level(plan: &ApspPlan, level: usize, t: &mut Trace) {
+            let depth = plan.depth();
+            if level == depth {
+                let n = plan.final_n;
+                if n == 0 {
+                    return;
+                }
+                t.push(
+                    level as u32,
+                    Phase::Load,
+                    vec![Op::LoadComponent {
+                        n: n as u64,
+                        nnz: plan.final_nnz,
+                    }],
+                );
+                t.push(
+                    level as u32,
+                    Phase::FinalSolve,
+                    vec![Op::TileFw {
+                        n: n as u64,
+                        rerun: false,
+                    }],
+                );
+                return;
+            }
+            let lvl = &plan.levels[level];
+            let load = lvl
+                .cs
+                .components
+                .iter()
+                .zip(&lvl.comp_nnz)
+                .filter(|(c, _)| c.n() > 0)
+                .map(|(c, &nnz)| Op::LoadComponent {
+                    n: c.n() as u64,
+                    nnz,
+                })
+                .collect();
+            t.push(level as u32, Phase::Load, load);
+            let fw = lvl
+                .cs
+                .components
+                .iter()
+                .filter(|c| c.n() > 1)
+                .map(|c| Op::TileFw {
+                    n: c.n() as u64,
+                    rerun: false,
+                })
+                .collect();
+            t.push(level as u32, Phase::LocalFw, fw);
+            let nb = lvl.n_boundary();
+            if nb == 0 {
+                return;
+            }
+            let gather: u64 = lvl
+                .cs
+                .components
+                .iter()
+                .map(|c| (c.n_boundary * c.n_boundary) as u64)
+                .sum();
+            t.push(
+                level as u32,
+                Phase::BoundaryBuild,
+                vec![Op::BuildBoundary {
+                    nb: nb as u64,
+                    cross_nnz: lvl.next_cross.m() as u64,
+                    gather_elems: gather,
+                }],
+            );
+            emit_level(plan, level + 1, t);
+            if level + 1 < depth {
+                let ops = cross_merge_ops(&plan.levels[level + 1]);
+                t.push((level + 1) as u32, Phase::CrossMerge, ops);
+            }
+            let inj = lvl
+                .cs
+                .components
+                .iter()
+                .filter(|c| c.n_boundary > 0)
+                .map(|c| Op::Inject {
+                    n: c.n() as u64,
+                    nb: c.n_boundary as u64,
+                })
+                .collect();
+            t.push(level as u32, Phase::Inject, inj);
+            let rer = lvl
+                .cs
+                .components
+                .iter()
+                .filter(|c| c.n_boundary > 0 && c.n() > 1)
+                .map(|c| Op::TileFw {
+                    n: c.n() as u64,
+                    rerun: true,
+                })
+                .collect();
+            t.push(level as u32, Phase::RerunFw, rer);
+            let nb64 = nb as u64;
+            t.push(
+                level as u32,
+                Phase::Sync,
+                vec![Op::SyncBoundary {
+                    bytes: nb64 * nb64 * 4,
+                }],
+            );
+            let dense: u64 = lvl
+                .cs
+                .components
+                .iter()
+                .map(|c| (c.n() * c.n()) as u64)
+                .sum();
+            t.push(
+                level as u32,
+                Phase::Store,
+                vec![
+                    Op::StoreCsr {
+                        dense_elems: dense,
+                        csr_bytes: csr_bytes_estimate(dense),
+                    },
+                    Op::StoreDense {
+                        bytes: nb64 * nb64 * 4,
+                    },
+                ],
+            );
+        }
+        let mut t = Trace::default();
+        emit_level(plan, 0, &mut t);
+        if plan.depth() > 0 {
+            t.push(0, Phase::CrossMerge, cross_merge_ops(&plan.levels[0]));
+        } else {
+            let n = plan.final_n as u64;
+            t.push(
+                0,
+                Phase::Store,
+                vec![Op::StoreCsr {
+                    dense_elems: n * n,
+                    csr_bytes: csr_bytes_estimate(n * n),
+                }],
+            );
+        }
+        t
+    }
+
+    #[test]
+    fn trace_matches_legacy_emission() {
+        for (topo, n, tile, seed) in [
+            (Topology::Nws, 500usize, 48usize, 1u64),
+            (Topology::Er, 350, 32, 2),
+            (Topology::OgbnProxy, 800, 96, 3),
+            (Topology::Grid, 400, 40, 4),
+            (Topology::Nws, 60, 128, 5), // direct solve (depth 0)
+        ] {
+            let plan = plan_for(n, tile, seed, topo);
+            let tg = lower(&plan);
+            tg.validate().unwrap();
+            assert_eq!(
+                tg.to_trace(),
+                legacy_trace(&plan),
+                "{} n={n} tile={tile}",
+                topo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn trace_matches_legacy_on_disconnected() {
+        // two cliques, no bridge: level 0 has zero boundary
+        let mut edges = Vec::new();
+        for u in 0..30u32 {
+            for v in (u + 1)..30 {
+                edges.push((u, v, 1.0f32));
+            }
+        }
+        for u in 30..60u32 {
+            for v in (u + 1)..60 {
+                edges.push((u, v, 1.0));
+            }
+        }
+        let g = CsrGraph::from_undirected_edges(60, &edges);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 32,
+                max_depth: usize::MAX,
+                seed: 1,
+            },
+        );
+        assert_eq!(plan.levels[0].n_boundary(), 0);
+        let tg = lower(&plan);
+        assert_eq!(tg.to_trace(), legacy_trace(&plan));
+    }
+
+    #[test]
+    fn zero_boundary_component_does_not_gate_boundary_build() {
+        // 8 bridged communities + 1 disconnected clique: the clique's
+        // LocalFw must not be a dependency of BoundaryBuild
+        let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+        for c in 0..8u32 {
+            let base = c * 20;
+            for i in 0..20 {
+                for j in (i + 1)..20 {
+                    edges.push((base + i, base + j, 1.0));
+                }
+            }
+            if c > 0 {
+                edges.push((base - 1, base, 2.0));
+            }
+        }
+        for i in 160..220u32 {
+            for j in (i + 1)..220 {
+                edges.push((i, j, 1.0));
+            }
+        }
+        let g = CsrGraph::from_undirected_edges(220, &edges);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 64,
+                max_depth: usize::MAX,
+                seed: 9,
+            },
+        );
+        let lvl0 = &plan.levels[0];
+        let isolated: Vec<u32> = lvl0
+            .cs
+            .components
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.n() > 1 && c.n_boundary == 0)
+            .map(|(ci, _)| ci as u32)
+            .collect();
+        assert!(!isolated.is_empty(), "expected a zero-boundary component");
+        let tg = lower(&plan);
+        let bb = tg
+            .nodes
+            .iter()
+            .find(|n| n.kind == TaskKind::BoundaryBuild { level: 0 })
+            .expect("boundary build node");
+        for dep in &bb.deps {
+            let dn = &tg.nodes[*dep as usize];
+            if let TaskKind::LocalFw { level: 0, comp } = dn.kind {
+                assert!(
+                    !isolated.contains(&comp),
+                    "BoundaryBuild depends on isolated component {comp}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cross_merge_depends_on_db_and_final_writers_only() {
+        let plan = plan_for(900, 48, 7, Topology::Nws);
+        assert!(plan.depth() >= 1);
+        let tg = lower(&plan);
+        let top = tg
+            .nodes
+            .iter()
+            .find(|n| n.kind == TaskKind::CrossMerge { level: 0 })
+            .expect("top-level cross merge");
+        for dep in &top.deps {
+            let dn = &tg.nodes[*dep as usize];
+            assert!(
+                matches!(
+                    dn.kind,
+                    TaskKind::LocalFw { level: 0, .. }
+                        | TaskKind::Load { level: 0, .. }
+                        | TaskKind::Inject { level: 0, .. }
+                        | TaskKind::RerunFw { level: 0, .. }
+                        | TaskKind::CrossMerge { .. }
+                ),
+                "unexpected dep kind {:?}",
+                dn.kind
+            );
+        }
+    }
+
+    #[test]
+    fn graph_is_acyclic_and_steps_monotone() {
+        for seed in 1..6u64 {
+            let plan = plan_for(700, 64, seed, Topology::OgbnProxy);
+            let tg = lower(&plan);
+            tg.validate().unwrap();
+            // every task reachable: topological count == n_tasks
+            let mut indeg: Vec<usize> = tg.nodes.iter().map(|n| n.deps.len()).collect();
+            let succ = tg.successors();
+            let mut ready: Vec<TaskId> = tg
+                .nodes
+                .iter()
+                .filter(|n| n.deps.is_empty())
+                .map(|n| n.id)
+                .collect();
+            let mut seen = 0;
+            while let Some(t) = ready.pop() {
+                seen += 1;
+                for &s in &succ[t as usize] {
+                    indeg[s as usize] -= 1;
+                    if indeg[s as usize] == 0 {
+                        ready.push(s);
+                    }
+                }
+            }
+            assert_eq!(seen, tg.n_tasks(), "cycle or orphan in task graph");
+        }
+    }
+}

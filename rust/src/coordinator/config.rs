@@ -55,6 +55,35 @@ impl BackendKind {
     }
 }
 
+/// Which scheduler orders the tile work (host numerics and the
+/// simulator's makespan model alike).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Legacy step-barrier walk: phases join before the next starts;
+    /// the simulator costs the trace step by step.
+    Barrier,
+    /// Dependency-aware execution over the tile-task DAG: the host
+    /// executor runs ready tasks concurrently (bit-identical results),
+    /// and the simulator list-schedules ops under resource constraints.
+    Dag,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "barrier" | "step" | "legacy" => Some(SchedulerKind::Barrier),
+            "dag" | "graph" => Some(SchedulerKind::Dag),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Barrier => "barrier",
+            SchedulerKind::Dag => "dag",
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -66,6 +95,9 @@ pub struct SystemConfig {
     pub seed: u64,
     pub mode: Mode,
     pub backend: BackendKind,
+    /// Tile-work scheduling: dependency-aware DAG (default) or the
+    /// legacy step-barrier walk.
+    pub scheduler: SchedulerKind,
     /// Sampled-validation effort (sources x cols); 0 disables.
     pub validate_sources: usize,
     pub validate_cols: usize,
@@ -82,6 +114,7 @@ impl Default for SystemConfig {
             seed: 0x5241_5049,
             mode: Mode::Functional,
             backend: BackendKind::Native,
+            scheduler: SchedulerKind::Dag,
             validate_sources: 16,
             validate_cols: 64,
             memory_limit_bytes: 12 << 30,
@@ -107,6 +140,9 @@ impl SystemConfig {
         if let Some(b) = cf.get("run.backend").and_then(BackendKind::parse) {
             self.backend = b;
         }
+        if let Some(s) = cf.get("run.scheduler").and_then(SchedulerKind::parse) {
+            self.scheduler = s;
+        }
         self.validate_sources = cf.get_usize("run.validate_sources", self.validate_sources);
         self.validate_cols = cf.get_usize("run.validate_cols", self.validate_cols);
         // hardware overrides
@@ -130,6 +166,9 @@ impl SystemConfig {
         }
         if let Some(b) = args.get("backend").and_then(BackendKind::parse) {
             self.backend = b;
+        }
+        if let Some(s) = args.get("scheduler").and_then(SchedulerKind::parse) {
+            self.scheduler = s;
         }
         if args.flag("no-prefetch") {
             self.hw.prefetch = false;
@@ -164,7 +203,24 @@ mod tests {
         assert_eq!(c.tile_limit, 1024);
         assert_eq!(c.mode, Mode::Functional);
         assert_eq!(c.backend, BackendKind::Native);
+        assert_eq!(c.scheduler, SchedulerKind::Dag);
         assert!(c.hw.prefetch);
+    }
+
+    #[test]
+    fn scheduler_knob_parses_and_overrides() {
+        assert_eq!(SchedulerKind::parse("DAG"), Some(SchedulerKind::Dag));
+        assert_eq!(SchedulerKind::parse("barrier"), Some(SchedulerKind::Barrier));
+        assert_eq!(SchedulerKind::parse("step"), Some(SchedulerKind::Barrier));
+        assert_eq!(SchedulerKind::parse("??"), None);
+        let cf = ConfigFile::parse("[run]\nscheduler = \"barrier\"").unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        assert_eq!(c.scheduler, SchedulerKind::Barrier);
+        let args = crate::util::cli::Args::parse(
+            ["--scheduler", "dag"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.scheduler, SchedulerKind::Dag);
     }
 
     #[test]

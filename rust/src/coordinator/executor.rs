@@ -1,15 +1,16 @@
 //! End-to-end orchestration: partition → recursive APSP → PIM
 //! simulation → validation. One `Executor::run` call is one experiment.
 
-use super::config::{BackendKind, Mode, SystemConfig};
+use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig};
 use crate::apsp::backend::{NativeBackend, TileBackend};
 use crate::apsp::plan::{build_plan, ApspPlan};
-use crate::apsp::recursive::{solve, ApspSolution, SolveOptions};
+use crate::apsp::recursive::{self, solve, ApspSolution, SolveOptions};
 use crate::apsp::validate::{validate_sampled, Validation};
+use crate::apsp::{scheduler, taskgraph};
 use crate::graph::csr::CsrGraph;
 use crate::runtime::{PjrtBackend, PjrtRuntime};
-use crate::sim::engine::{simulate, SimReport};
-use anyhow::Result;
+use crate::sim::engine::{simulate, simulate_dag, SimReport};
+use crate::util::error::Result;
 
 /// Everything one run produces.
 pub struct RunResult {
@@ -26,6 +27,8 @@ pub struct RunResult {
     pub validation: Option<Validation>,
     /// Which backend executed the numerics.
     pub backend_name: &'static str,
+    /// Which scheduler ordered the tile work.
+    pub scheduler: SchedulerKind,
     pub mode: Mode,
     pub graph_n: usize,
     pub graph_m: usize,
@@ -85,11 +88,24 @@ impl Executor {
             ),
         };
 
+        // in dag mode one lowering of the plan feeds the executor, the
+        // solution's trace, and the simulator; barrier mode lowers once
+        // inside `solve`
+        let tg = (self.config.scheduler == SchedulerKind::Dag)
+            .then(|| taskgraph::lower(plan));
+
         let t0 = std::time::Instant::now();
-        let sol: ApspSolution = solve(g, plan, backend, solve_opts);
+        let sol: ApspSolution = match (backend, &tg) {
+            (Some(be), Some(tg)) => scheduler::execute(g, plan, tg, be, solve_opts),
+            (None, Some(tg)) => recursive::estimate_solution(g, plan, tg.to_trace()),
+            (be, None) => solve(g, plan, be, solve_opts),
+        };
         let host_solve_seconds = t0.elapsed().as_secs_f64();
 
-        let sim = simulate(&sol.trace, &self.config.hw);
+        let sim = match &tg {
+            Some(tg) => simulate_dag(tg, &self.config.hw),
+            None => simulate(&sol.trace, &self.config.hw),
+        };
 
         let validation = match (self.config.mode, self.config.validate_sources) {
             (Mode::Functional, s) if s > 0 => Some(validate_sampled(
@@ -120,6 +136,7 @@ impl Executor {
                 (_, BackendKind::Native) => "native",
                 (_, BackendKind::Pjrt) => "pjrt",
             },
+            scheduler: self.config.scheduler,
             mode: self.config.mode,
             graph_n: g.n(),
             graph_m: g.m(),
@@ -186,6 +203,30 @@ mod tests {
             "estimate mode too slow: {:?}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn dag_scheduler_matches_barrier_functionally_and_is_no_slower() {
+        let g = graph(1_000, 7);
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 128;
+        let dag = Executor::new(cfg.clone()).unwrap().run(&g).unwrap();
+        cfg.scheduler = crate::coordinator::config::SchedulerKind::Barrier;
+        let barrier = Executor::new(cfg).unwrap().run(&g).unwrap();
+        // both validate exactly
+        assert!(dag.validation.as_ref().unwrap().ok(1e-3));
+        assert!(barrier.validation.as_ref().unwrap().ok(1e-3));
+        // overlap can only help the modeled makespan
+        assert!(
+            dag.sim.seconds <= barrier.sim.seconds * (1.0 + 1e-9),
+            "dag {} > barrier {}",
+            dag.sim.seconds,
+            barrier.sim.seconds
+        );
+        // identical dynamic work
+        assert!((dag.sim.dynamic_joules - barrier.sim.dynamic_joules).abs() < 1e-9);
+        assert_eq!(dag.scheduler.name(), "dag");
+        assert_eq!(barrier.scheduler.name(), "barrier");
     }
 
     #[test]

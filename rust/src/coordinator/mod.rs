@@ -7,5 +7,5 @@ pub mod config;
 pub mod executor;
 pub mod report;
 
-pub use config::{BackendKind, Mode, SystemConfig};
+pub use config::{BackendKind, Mode, SchedulerKind, SystemConfig};
 pub use executor::{Executor, RunResult};

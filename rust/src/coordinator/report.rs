@@ -8,11 +8,12 @@ use crate::util::table::{fmt_count, fmt_energy, fmt_time, Table};
 pub fn render(r: &RunResult) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "RAPID-Graph run: n={} m={} mode={} backend={}\n",
+        "RAPID-Graph run: n={} m={} mode={} backend={} scheduler={}\n",
         fmt_count(r.graph_n),
         fmt_count(r.graph_m),
         r.mode.name(),
         r.backend_name,
+        r.scheduler.name(),
     ));
     out.push_str(&format!(
         "recursion: depth={} components(L0)={} boundary={:?} final_n={}\n",
@@ -50,10 +51,14 @@ pub fn render(r: &RunResult) -> String {
             if v.ok(1e-3) { "EXACT" } else { "FAILED" },
         ));
     }
-    // per-phase table
+    // per-phase table. Shares are of the summed per-phase busy time:
+    // under the barrier scheduler that equals wall time, under the dag
+    // scheduler phases overlap, so wall time would make rows exceed
+    // 100%.
+    let phase_total: f64 = r.sim.per_phase.values().map(|s| s.secs).sum();
     let mut t = Table::new(
         "modeled per-phase breakdown",
-        &["phase", "ops", "time", "energy", "% time"],
+        &["phase", "ops", "busy time", "energy", "% busy"],
     );
     let mut phases: Vec<(&Phase, _)> = r.sim.per_phase.iter().collect();
     phases.sort_by(|a, b| {
@@ -67,7 +72,7 @@ pub fn render(r: &RunResult) -> String {
             stat.ops.to_string(),
             fmt_time(stat.secs),
             fmt_energy(stat.joules),
-            format!("{:.1}%", 100.0 * stat.secs / r.sim.seconds.max(1e-30)),
+            format!("{:.1}%", 100.0 * stat.secs / phase_total.max(1e-30)),
         ]);
     }
     out.push_str(&t.render());

@@ -3,7 +3,8 @@
 //! the functional stand-in for the paper's FeNAND CSR storage).
 
 use super::csr::CsrGraph;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -97,7 +98,7 @@ pub fn read_binary(path: &Path) -> Result<CsrGraph> {
         val.push(f32::from_le_bytes(buf4));
     }
     let g = CsrGraph { rowptr, col, val };
-    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    g.validate().map_err(crate::util::error::Error::msg)?;
     Ok(g)
 }
 

@@ -13,8 +13,9 @@
 //!   rapid-graph figure --id 7
 //!   rapid-graph generate --topo ogbn --nodes 100000 --out g.bin
 
-use anyhow::{bail, Context, Result};
 use rapid_graph::baselines::cpu::CpuModel;
+use rapid_graph::util::error::{Context, Result};
+use rapid_graph::{bail, ensure};
 use rapid_graph::bench::figures;
 use rapid_graph::coordinator::{config::SystemConfig, executor::Executor, report};
 use rapid_graph::graph::generators::{self, Topology, Weights};
@@ -45,7 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
                     "recursive APSP on a simulated processing-in-memory stack",
                     &[
                         ("generate", "--topo nws|er|ogbn|grid --nodes N [--degree D] [--seed S] --out FILE"),
-                        ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--tile T] [--max-depth D] [--config FILE]"),
+                        ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--scheduler dag|barrier] [--tile T] [--max-depth D] [--config FILE]"),
                         ("figure", "--id 7|8|9a|9b|9c|table3 [--full]"),
                         ("validate", "--nodes N [--topo T] [--tile T]"),
                     ]
@@ -176,7 +177,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
 fn cmd_validate(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let g = graph_from_args(args)?;
-    anyhow::ensure!(
+    ensure!(
         g.n() <= 3000,
         "exhaustive validation is O(n^2); use --nodes <= 3000 (apsp does sampled validation at any size)"
     );

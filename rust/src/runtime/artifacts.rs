@@ -1,8 +1,9 @@
 //! Artifact manifest: locates and describes the HLO text files emitted
 //! by `python/compile/aot.py` (see `artifacts/manifest.json`).
 
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One artifact entry.
@@ -35,7 +36,7 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
-        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| crate::err!("parse manifest: {e}"))?;
         let mut artifacts = Vec::new();
         for a in json
             .get("artifacts")

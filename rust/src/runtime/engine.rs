@@ -12,7 +12,7 @@ use super::artifacts::{ArtifactKind, Manifest};
 use crate::apsp::backend::TileBackend;
 use crate::graph::dense::DistMatrix;
 use crate::INF;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Mutex;
@@ -57,8 +57,8 @@ impl PjrtRuntime {
         }
         let fw_sizes: Vec<usize> = fw.keys().copied().collect();
         let mp_sizes: Vec<usize> = mp.keys().copied().collect();
-        anyhow::ensure!(!fw_sizes.is_empty(), "no fw artifacts");
-        anyhow::ensure!(!mp_sizes.is_empty(), "no minplus artifacts");
+        crate::ensure!(!fw_sizes.is_empty(), "no fw artifacts");
+        crate::ensure!(!mp_sizes.is_empty(), "no minplus artifacts");
         Ok(Self {
             inner: Mutex::new(Inner { client, fw, mp }),
             fw_sizes,

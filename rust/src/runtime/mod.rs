@@ -1,8 +1,17 @@
 //! PJRT runtime: loads the AOT-compiled JAX/Pallas HLO artifacts and
 //! executes them as the tile compute engines (the three-layer stack's
 //! serve path — Python never runs here).
+//!
+//! The real engine needs the XLA/PJRT bindings and is gated behind the
+//! off-by-default `pjrt` cargo feature; without it, [`stub`] provides
+//! the same API surface with loud load-time errors (DESIGN.md
+//! "Execution backends").
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
 pub mod engine;
 
 pub use artifacts::Manifest;

@@ -1,0 +1,86 @@
+//! No-op stand-in for [`super::engine`] when the crate is built without
+//! the `pjrt` feature (the default: no XLA toolchain, no libpjrt).
+//!
+//! The types keep the full API surface so callers (`Executor`, benches,
+//! examples) compile unchanged; every load attempt fails loudly with a
+//! pointer at the feature flag, and the execution methods are
+//! unreachable because a `PjrtRuntime` can never be constructed.
+
+use super::artifacts::Manifest;
+use crate::apsp::backend::TileBackend;
+use crate::graph::dense::DistMatrix;
+use crate::util::error::Result;
+use std::marker::PhantomData;
+use std::path::Path;
+
+const DISABLED: &str =
+    "PJRT backend unavailable: rebuild with `--features pjrt` (requires the XLA toolchain)";
+
+/// Stand-in for the compiled-artifact runtime; cannot be constructed.
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+    _no_construct: PhantomData<()>,
+}
+
+impl PjrtRuntime {
+    pub fn load(_dir: &Path) -> Result<Self> {
+        Err(crate::err!("{DISABLED}"))
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Err(crate::err!("{DISABLED}"))
+    }
+
+    pub fn max_fw_tile(&self) -> usize {
+        unreachable!("{DISABLED}")
+    }
+
+    pub fn fw_block(&self, _d: &mut DistMatrix) -> Result<()> {
+        unreachable!("{DISABLED}")
+    }
+
+    pub fn minplus_into(
+        &self,
+        _c: &mut [f32],
+        _a: &[f32],
+        _b: &[f32],
+        _m: usize,
+        _k: usize,
+        _n: usize,
+    ) -> Result<()> {
+        unreachable!("{DISABLED}")
+    }
+}
+
+/// Stand-in [`TileBackend`] adapter; only exists so call sites typecheck.
+pub struct PjrtBackend<'a> {
+    pub runtime: &'a PjrtRuntime,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(runtime: &'a PjrtRuntime) -> Self {
+        Self { runtime }
+    }
+}
+
+impl<'a> TileBackend for PjrtBackend<'a> {
+    fn fw(&self, _d: &mut DistMatrix) {
+        unreachable!("{DISABLED}")
+    }
+
+    fn minplus_into(
+        &self,
+        _c: &mut [f32],
+        _a: &[f32],
+        _b: &[f32],
+        _m: usize,
+        _k: usize,
+        _n: usize,
+    ) {
+        unreachable!("{DISABLED}")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-disabled"
+    }
+}

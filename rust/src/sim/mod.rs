@@ -22,5 +22,5 @@ pub mod memsys;
 pub mod params;
 pub mod pcm;
 
-pub use engine::{simulate, SimReport};
+pub use engine::{simulate, simulate_dag, SimReport};
 pub use params::HwParams;

@@ -13,12 +13,19 @@ pub struct ConfigFile {
 }
 
 /// Error raised on malformed config text.
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl ConfigFile {
     pub fn parse(text: &str) -> Result<Self, ConfigError> {
@@ -56,7 +63,7 @@ impl ConfigFile {
         Ok(Self { values })
     }
 
-    pub fn load(path: &str) -> anyhow::Result<Self> {
+    pub fn load(path: &str) -> crate::util::error::Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Ok(Self::parse(&text)?)
     }

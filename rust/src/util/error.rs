@@ -1,0 +1,145 @@
+//! Minimal error type with context chaining (substitute for `anyhow`,
+//! which is unavailable in the offline build image).
+//!
+//! Supports the subset the crate uses: `Result<T>`, `err!`/`bail!`/
+//! `ensure!` macros, `.context(..)` / `.with_context(|| ..)` on both
+//! `Result` and `Option`, and `?` conversion from any `std` error.
+//! Display renders the whole context chain outermost-first
+//! (`"open foo: No such file or directory"`), so `{e}` and `{e:#}`
+//! both print the full story.
+
+use std::fmt;
+
+/// An error message with its accumulated context chain, rendered flat.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error(format!("{c}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`;
+// that keeps this blanket conversion from colliding with the reflexive
+// `From<T> for T` impl (the same trick `anyhow` uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)*));
+        }
+    };
+}
+
+/// Context-attachment helpers, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // From<ParseIntError>
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Result<()> = Err(Error::msg("root cause"));
+        let e = e.context("step failed").unwrap_err();
+        let rendered = format!("{e:#}");
+        assert_eq!(rendered, "step failed: root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| "missing field").unwrap_err();
+        assert!(format!("{e}").contains("missing field"));
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                crate::bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(12).unwrap_err()).contains("x too big: 12"));
+        assert!(format!("{}", f(5).unwrap_err()).contains("five"));
+    }
+}

@@ -79,6 +79,120 @@ impl<T> SendPtr<T> {
     }
 }
 
+/// Execute a dependency DAG of `deps.len()` tasks with work-stealing
+/// workers: task `i` runs (via `f(i)`) only after every task in
+/// `deps[i]` finished; independent ready tasks run concurrently on up to
+/// `num_threads()` workers. `deps` must be acyclic — a cycle panics up
+/// front (cheap Kahn sweep) instead of deadlocking the ready queue.
+///
+/// A panic inside `f` aborts the remaining tasks and resurfaces on the
+/// caller's thread.
+pub fn par_dag<F: Fn(usize) + Sync>(deps: &[Vec<u32>], f: F) {
+    let n = deps.len();
+    if n == 0 {
+        return;
+    }
+    let mut indeg: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+    let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (i, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            assert!((d as usize) < n, "dep {d} out of range");
+            succs[d as usize].push(i as u32);
+        }
+    }
+    // reject cycles before any worker can block on one
+    {
+        let mut count = vec![0usize; n];
+        let mut stack: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(i) = stack.pop() {
+            seen += 1;
+            for &s in &succs[i] {
+                let s = s as usize;
+                count[s] += 1;
+                if count[s] == deps[s].len() {
+                    stack.push(s);
+                }
+            }
+        }
+        assert_eq!(seen, n, "dependency cycle in par_dag");
+    }
+    let workers = num_threads().min(n).max(1);
+    if workers == 1 {
+        // deterministic serial fallback: repeated ready sweeps
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut finished = 0;
+        while let Some(i) = ready.pop() {
+            f(i);
+            finished += 1;
+            for &s in &succs[i] {
+                indeg[s as usize] -= 1;
+                if indeg[s as usize] == 0 {
+                    ready.push(s as usize);
+                }
+            }
+        }
+        assert_eq!(finished, n, "dependency cycle in par_dag");
+        return;
+    }
+
+    struct DagState {
+        ready: Vec<usize>,
+        indeg: Vec<usize>,
+        remaining: usize,
+        panicked: bool,
+    }
+    let ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    assert!(!ready.is_empty(), "dependency cycle in par_dag");
+    let state = std::sync::Mutex::new(DagState {
+        ready,
+        indeg,
+        remaining: n,
+        panicked: false,
+    });
+    let cv = std::sync::Condvar::new();
+    let succs = &succs;
+    let state = &state;
+    let cv = &cv;
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let task = {
+                    let mut g = state.lock().unwrap();
+                    loop {
+                        if g.remaining == 0 || g.panicked {
+                            return;
+                        }
+                        if let Some(t) = g.ready.pop() {
+                            break t;
+                        }
+                        g = cv.wait(g).unwrap();
+                    }
+                };
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
+                let mut g = state.lock().unwrap();
+                if res.is_err() {
+                    g.panicked = true;
+                }
+                g.remaining -= 1;
+                for &sx in &succs[task] {
+                    let sx = sx as usize;
+                    g.indeg[sx] -= 1;
+                    if g.indeg[sx] == 0 {
+                        g.ready.push(sx);
+                    }
+                }
+                drop(g);
+                cv.notify_all();
+                if let Err(p) = res {
+                    std::panic::resume_unwind(p);
+                }
+            });
+        }
+    });
+}
+
 /// Process disjoint mutable row-chunks of a flat `data` buffer in parallel:
 /// `f(chunk_index, chunk)` where `chunk` is `rows_per_chunk * row_len`
 /// elements (last chunk may be shorter).
@@ -141,5 +255,81 @@ mod tests {
     #[test]
     fn num_threads_positive() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn par_dag_respects_dependencies() {
+        // chain 0 -> 1 -> 2 plus a diamond 3 -> {4, 5} -> 6
+        let deps: Vec<Vec<u32>> = vec![
+            vec![],
+            vec![0],
+            vec![1],
+            vec![],
+            vec![3],
+            vec![3],
+            vec![4, 5],
+        ];
+        let order = std::sync::Mutex::new(Vec::new());
+        par_dag(&deps, |i| {
+            order.lock().unwrap().push(i);
+        });
+        let order = order.into_inner().unwrap();
+        assert_eq!(order.len(), 7);
+        let pos = |x: usize| order.iter().position(|&v| v == x).unwrap();
+        assert!(pos(0) < pos(1) && pos(1) < pos(2));
+        assert!(pos(3) < pos(4) && pos(3) < pos(5));
+        assert!(pos(4) < pos(6) && pos(5) < pos(6));
+    }
+
+    #[test]
+    fn par_dag_runs_every_task_once() {
+        // layered random-ish DAG: task i depends on i - 1 and i / 2
+        let n = 500;
+        let deps: Vec<Vec<u32>> = (0..n)
+            .map(|i| {
+                let mut d = Vec::new();
+                if i > 0 {
+                    d.push((i - 1) as u32 / 2);
+                }
+                if i >= 10 {
+                    d.push((i - 7) as u32);
+                }
+                d
+            })
+            .collect();
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_dag(&deps, |i| {
+            // all deps must have completed
+            for &d in &deps[i] {
+                assert_eq!(hits[d as usize].load(Ordering::SeqCst), 1);
+            }
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_dag_empty() {
+        par_dag(&[], |_| panic!("must not run"));
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency cycle")]
+    fn par_dag_rejects_cycles() {
+        // task 0 is ready, but 1 and 2 depend on each other
+        par_dag(&[vec![], vec![2], vec![1]], |_| {});
+    }
+
+    #[test]
+    fn par_dag_propagates_panics() {
+        let deps: Vec<Vec<u32>> = (0..64).map(|_| Vec::new()).collect();
+        let res = std::panic::catch_unwind(|| {
+            par_dag(&deps, |i| {
+                if i == 13 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(res.is_err());
     }
 }

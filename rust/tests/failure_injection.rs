@@ -5,7 +5,7 @@ use rapid_graph::coordinator::config::SystemConfig;
 use rapid_graph::coordinator::executor::Executor;
 use rapid_graph::graph::csr::CsrGraph;
 use rapid_graph::graph::io;
-use rapid_graph::runtime::{Manifest, PjrtRuntime};
+use rapid_graph::runtime::Manifest;
 use std::path::PathBuf;
 
 fn tmpdir(name: &str) -> PathBuf {
@@ -15,8 +15,10 @@ fn tmpdir(name: &str) -> PathBuf {
     dir
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn corrupted_hlo_artifact_fails_at_load() {
+    use rapid_graph::runtime::PjrtRuntime;
     let dir = tmpdir("bad_hlo");
     std::fs::write(dir.join("fw_block_64.hlo.txt"), "this is not HLO").unwrap();
     std::fs::write(dir.join("minplus_64.hlo.txt"), "nor is this").unwrap();
@@ -34,6 +36,18 @@ fn corrupted_hlo_artifact_fails_at_load() {
     };
     let msg = format!("{err:#}");
     assert!(msg.contains("fw_block_64"), "error should name the file: {msg}");
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_backend_unavailable_without_feature() {
+    // without the `pjrt` cargo feature the runtime must fail loudly at
+    // load time (never silently fall back to native numerics)
+    let err = rapid_graph::runtime::PjrtRuntime::load_default().unwrap_err();
+    assert!(format!("{err}").contains("pjrt"), "error must name the feature: {err}");
+    let mut cfg = SystemConfig::default();
+    cfg.backend = rapid_graph::coordinator::config::BackendKind::Pjrt;
+    assert!(Executor::new(cfg).is_err(), "pjrt backend must not construct");
 }
 
 #[test]

@@ -2,17 +2,19 @@
 //! recursive solve -> simulate -> validate), both compute backends, and
 //! the independent Algorithm-1 implementation as a cross-oracle.
 
-use rapid_graph::apsp::backend::{NativeBackend, SerialBackend, TileBackend};
+use rapid_graph::apsp::backend::{NativeBackend, SerialBackend};
 use rapid_graph::apsp::partitioned::partitioned_apsp;
 use rapid_graph::apsp::plan::{build_plan, PlanOptions};
-use rapid_graph::apsp::recursive::{solve, SolveOptions};
+use rapid_graph::apsp::recursive::{solve, LevelSolution, SolveOptions};
 use rapid_graph::apsp::validate::{validate_full, validate_sampled};
-use rapid_graph::apsp::{dijkstra, trace::Phase};
+use rapid_graph::apsp::{dijkstra, scheduler, taskgraph, trace::Phase};
 use rapid_graph::coordinator::config::{Mode, SystemConfig};
 use rapid_graph::coordinator::executor::Executor;
+use rapid_graph::graph::csr::CsrGraph;
 use rapid_graph::graph::generators::{self, Topology, Weights};
-use rapid_graph::sim::engine::simulate;
+use rapid_graph::sim::engine::{simulate, simulate_dag};
 use rapid_graph::sim::params::HwParams;
+use rapid_graph::INF;
 
 fn plan_opts(tile: usize, seed: u64) -> PlanOptions {
     PlanOptions {
@@ -104,7 +106,166 @@ fn trace_covers_full_dataflow() {
 }
 
 #[test]
+fn dag_and_barrier_schedulers_bit_identical_on_pipeline_graphs() {
+    // the acceptance gate for the DAG host executor: same graphs as
+    // `exactness_across_topologies_and_tiles`, max_diff must be 0.0
+    for (topo, n, tile) in [
+        (Topology::Nws, 500usize, 64usize),
+        (Topology::Er, 300, 48),
+        (Topology::OgbnProxy, 600, 96),
+        (Topology::Grid, 400, 32),
+    ] {
+        let g = generators::generate(topo, n, 10.0, Weights::Uniform(0.5, 5.0), 11);
+        let plan = build_plan(&g, plan_opts(tile, 11));
+        let be = NativeBackend;
+        let barrier = solve(&g, &plan, Some(&be), SolveOptions::default());
+        let dag = scheduler::solve_dag(&g, &plan, &be, SolveOptions::default());
+        assert_eq!(barrier.trace, dag.trace, "{}: traces differ", topo.name());
+        let diff = barrier
+            .materialize_full(&be)
+            .max_diff(&dag.materialize_full(&be));
+        assert_eq!(diff, 0.0, "{}: schedulers disagree by {diff}", topo.name());
+        // spot queries bit-identical too
+        let mut rng = rapid_graph::util::rng::Rng::new(n as u64);
+        for _ in 0..200 {
+            let (u, v) = (rng.gen_range(g.n()), rng.gen_range(g.n()));
+            let (a, b) = (barrier.query(u, v), dag.query(u, v));
+            assert!(
+                a == b || (a.is_infinite() && b.is_infinite()),
+                "{}: query({u},{v}) {a} != {b}",
+                topo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn cross_component_query_matches_dijkstra_on_all_pairs() {
+    // ApspSolution::query's cross-component stitching through dB,
+    // exhaustively: multi-component partitioned graph with bridged
+    // communities plus a disconnected island (INF pairs included)
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    let mut rng = rapid_graph::util::rng::Rng::new(47);
+    let commns = 5u32;
+    let csize = 30u32;
+    for c in 0..commns {
+        let base = c * csize;
+        for i in 0..csize {
+            for j in (i + 1)..csize {
+                if rng.gen_bool(0.3) {
+                    edges.push((base + i, base + j, rng.gen_f32_range(1.0, 5.0)));
+                }
+            }
+            // ring inside the community keeps it connected
+            edges.push((base + i, base + (i + 1) % csize, rng.gen_f32_range(1.0, 3.0)));
+        }
+        if c > 0 {
+            // two bridges to the previous community
+            for _ in 0..2 {
+                let u = (c - 1) * csize + rng.gen_range(csize as usize) as u32;
+                let v = base + rng.gen_range(csize as usize) as u32;
+                edges.push((u, v, rng.gen_f32_range(2.0, 6.0)));
+            }
+        }
+    }
+    // disconnected island
+    let ibase = commns * csize;
+    for i in 0..20u32 {
+        for j in (i + 1)..20 {
+            edges.push((ibase + i, ibase + j, rng.gen_f32_range(1.0, 2.0)));
+        }
+    }
+    let n = (ibase + 20) as usize;
+    let g = CsrGraph::from_undirected_edges(n, &edges);
+    let plan = build_plan(&g, plan_opts(32, 47));
+    assert!(plan.depth() >= 1, "graph must actually partition");
+    let be = NativeBackend;
+    for sol in [
+        solve(&g, &plan, Some(&be), SolveOptions::default()),
+        scheduler::solve_dag(&g, &plan, &be, SolveOptions::default()),
+    ] {
+        match sol.top().unwrap() {
+            LevelSolution::Partitioned { comp_dist, .. } => {
+                assert!(comp_dist.len() >= 2, "want a multi-component solution")
+            }
+            LevelSolution::Direct(_) => panic!("expected a partitioned solution"),
+        }
+        let oracle = dijkstra::apsp(&g);
+        let mut cross_checked = 0u32;
+        let mut inf_checked = 0u32;
+        for u in 0..n {
+            for v in 0..n {
+                let q = sol.query(u, v);
+                let o = oracle.get(u, v);
+                if o.is_finite() {
+                    assert!(
+                        (q - o).abs() < 1e-3,
+                        "query({u},{v}) = {q}, dijkstra {o}"
+                    );
+                } else {
+                    assert_eq!(q, INF, "query({u},{v}) must be INF");
+                    inf_checked += 1;
+                }
+                if u < ibase as usize && v < ibase as usize && u / 30 != v / 30 {
+                    cross_checked += 1;
+                }
+            }
+        }
+        assert!(cross_checked > 10_000, "cross-component pairs exercised");
+        assert!(inf_checked > 1_000, "disconnected pairs exercised");
+    }
+}
+
+#[test]
+fn dag_sim_makespan_never_exceeds_barrier_on_figure_workloads() {
+    // fig-workload shapes (scaled to test budget): the dependency-aware
+    // schedule may only improve the modeled makespan
+    use rapid_graph::bench::workload::Workload;
+    let cfgs = [
+        Workload::nws(8_000, 70),
+        Workload::ogbn_proxy_at(12_000, 88),
+        Workload {
+            topo: Topology::Er,
+            n: 6_000,
+            degree: 25.25,
+            seed: 99,
+        },
+    ];
+    for w in cfgs {
+        let g = w.generate();
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 1024,
+                max_depth: usize::MAX,
+                seed: w.seed,
+            },
+        );
+        let tg = taskgraph::lower(&plan);
+        for prefetch in [true, false] {
+            let p = HwParams {
+                prefetch,
+                ..HwParams::default()
+            };
+            let barrier = simulate(&tg.to_trace(), &p);
+            let dag = simulate_dag(&tg, &p);
+            assert!(
+                dag.seconds <= barrier.seconds * (1.0 + 1e-9),
+                "{} prefetch={prefetch}: dag {} > barrier {}",
+                w.label(),
+                dag.seconds,
+                barrier.seconds
+            );
+            let ediff = (dag.dynamic_joules - barrier.dynamic_joules).abs();
+            assert!(ediff <= 1e-9 * barrier.dynamic_joules.max(1.0));
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+#[test]
 fn pjrt_backend_agrees_with_native_when_artifacts_exist() {
+    use rapid_graph::apsp::backend::TileBackend;
     let dir = rapid_graph::runtime::Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: no artifacts (run `make artifacts`)");
