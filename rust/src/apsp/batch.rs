@@ -1,0 +1,177 @@
+//! Multi-graph batch engine: merge N independent task graphs into one
+//! shared-resource schedule.
+//!
+//! One `Executor::run` keeps the modeled dies busy only along a single
+//! graph's critical path — its bubbles leave FW tiles and channels
+//! idle. Independent graphs have zero cross dependencies, so their
+//! tile-task DAGs ([`super::taskgraph`]) can be unioned and interleaved
+//! on one resource model: while graph A waits on its boundary merge,
+//! graph B's component FW fills the die.
+//!
+//! [`BatchGraph::build`] lowers each graph's recursion plan via
+//! [`super::taskgraph::lower`], offsets every task id and trace-step id
+//! into a disjoint per-graph namespace, tags every node with its owning
+//! graph, and unions the results into a single [`TaskGraph`]. No
+//! cross-graph edge exists by construction (debug-asserted), so any
+//! schedule of the merged graph is a legal interleaving of the N solo
+//! schedules. Two consumers:
+//!
+//! * the host executor ([`super::scheduler::execute_batch`]) runs the
+//!   merged graph with one work-stealing worker pool — per-graph buffer
+//!   namespaces (each graph owns its own slot set) keep the runs
+//!   isolated, and per-graph results are **bit-identical** to N
+//!   sequential solo runs;
+//! * the simulator ([`crate::sim::engine::simulate_batch`]) costs the
+//!   interleaving on the shared FW-die slots / MP die / UCIe-HBM-FeNAND
+//!   channels and attributes makespan, busy time, and dynamic energy
+//!   back to each graph by node ownership.
+
+use super::plan::ApspPlan;
+use super::taskgraph::{lower, TaskGraph, TaskId};
+
+/// N independent task graphs merged into one schedulable workload.
+#[derive(Debug, Clone, Default)]
+pub struct BatchGraph {
+    /// The solo lowering of each submitted graph, in submission order
+    /// (kept for per-graph baselines: solo simulation, trace assembly).
+    pub per_graph: Vec<TaskGraph>,
+    /// Disjoint union of `per_graph` with task and step ids offset into
+    /// per-graph namespaces.
+    pub merged: TaskGraph,
+    /// Owning graph index of every merged node (parallel to
+    /// `merged.nodes`).
+    pub owner: Vec<u32>,
+    /// Merged-id range of graph `i`: `node_offset[i]..node_offset[i+1]`
+    /// (length `n_graphs + 1`).
+    pub node_offset: Vec<TaskId>,
+}
+
+impl BatchGraph {
+    /// Lower every plan and merge the results.
+    pub fn build(plans: &[&ApspPlan]) -> BatchGraph {
+        Self::merge(plans.iter().map(|p| lower(p)).collect())
+    }
+
+    /// Merge already-lowered graphs into one batch.
+    pub fn merge(per_graph: Vec<TaskGraph>) -> BatchGraph {
+        let mut merged = TaskGraph::default();
+        let mut owner = Vec::new();
+        let mut node_offset: Vec<TaskId> = vec![0];
+        for (gi, tg) in per_graph.iter().enumerate() {
+            let noff = merged.nodes.len() as TaskId;
+            let soff = merged.steps.len() as u32;
+            merged.steps.extend(tg.steps.iter().copied());
+            for n in &tg.nodes {
+                let mut node = n.clone();
+                node.id += noff;
+                node.step += soff;
+                for d in &mut node.deps {
+                    *d += noff;
+                }
+                // disjoint namespaces: every edge must stay inside the
+                // owning graph's id range
+                debug_assert!(
+                    node.deps.iter().all(|&d| d >= noff && d < node.id),
+                    "cross-graph edge in merged batch graph"
+                );
+                merged.nodes.push(node);
+                owner.push(gi as u32);
+            }
+            node_offset.push(merged.nodes.len() as TaskId);
+        }
+        debug_assert!(merged.validate().is_ok(), "{:?}", merged.validate());
+        BatchGraph {
+            per_graph,
+            merged,
+            owner,
+            node_offset,
+        }
+    }
+
+    pub fn n_graphs(&self) -> usize {
+        self.per_graph.len()
+    }
+
+    /// Owning graph and graph-local task id of a merged node.
+    pub fn local(&self, id: TaskId) -> (u32, TaskId) {
+        let g = self.owner[id as usize];
+        (g, id - self.node_offset[g as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::plan::{build_plan, PlanOptions};
+    use crate::graph::generators::{self, Topology, Weights};
+
+    fn lowered(topo: Topology, n: usize, tile: usize, seed: u64) -> TaskGraph {
+        let g = generators::generate(topo, n, 10.0, Weights::Uniform(1.0, 5.0), seed);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: tile,
+                max_depth: usize::MAX,
+                seed,
+            },
+        );
+        lower(&plan)
+    }
+
+    #[test]
+    fn merge_is_disjoint_union() {
+        let a = lowered(Topology::Nws, 500, 48, 1);
+        let b = lowered(Topology::Er, 350, 32, 2);
+        let c = lowered(Topology::Grid, 400, 40, 3);
+        let (na, nb, nc) = (a.n_tasks(), b.n_tasks(), c.n_tasks());
+        let batch = BatchGraph::merge(vec![a, b, c]);
+        batch.merged.validate().unwrap();
+        assert_eq!(batch.n_graphs(), 3);
+        assert_eq!(batch.merged.n_tasks(), na + nb + nc);
+        assert_eq!(batch.node_offset, vec![0, na as u32, (na + nb) as u32, (na + nb + nc) as u32]);
+        // ownership matches the id ranges, and edges never cross graphs
+        for node in &batch.merged.nodes {
+            let (gi, local) = batch.local(node.id);
+            let lo = batch.node_offset[gi as usize];
+            let hi = batch.node_offset[gi as usize + 1];
+            assert!(node.id >= lo && node.id < hi);
+            for &d in &node.deps {
+                assert!(d >= lo && d < hi, "edge {d}->{} crosses graphs", node.id);
+            }
+            // the merged node is the solo node shifted by the offset
+            let solo = &batch.per_graph[gi as usize].nodes[local as usize];
+            assert_eq!(node.kind, solo.kind);
+            assert_eq!(node.ops, solo.ops);
+            assert_eq!(node.deps.len(), solo.deps.len());
+            for (&d, &sd) in node.deps.iter().zip(&solo.deps) {
+                assert_eq!(d, sd + lo);
+            }
+        }
+    }
+
+    #[test]
+    fn merged_trace_is_concatenation_of_solo_traces() {
+        let a = lowered(Topology::Nws, 400, 48, 4);
+        let b = lowered(Topology::OgbnProxy, 600, 64, 5);
+        let ta = a.to_trace();
+        let tb = b.to_trace();
+        let batch = BatchGraph::merge(vec![a, b]);
+        let merged = batch.merged.to_trace();
+        assert_eq!(merged.steps.len(), ta.steps.len() + tb.steps.len());
+        for (i, s) in ta.steps.iter().enumerate() {
+            assert_eq!(&merged.steps[i], s);
+        }
+        for (i, s) in tb.steps.iter().enumerate() {
+            assert_eq!(&merged.steps[ta.steps.len() + i], s);
+        }
+    }
+
+    #[test]
+    fn single_graph_batch_is_identity() {
+        let a = lowered(Topology::Nws, 300, 48, 6);
+        let batch = BatchGraph::merge(vec![a.clone()]);
+        assert_eq!(batch.merged.n_tasks(), a.n_tasks());
+        assert!(batch.owner.iter().all(|&o| o == 0));
+        assert_eq!(batch.merged.to_trace(), a.to_trace());
+    }
+}

@@ -13,11 +13,14 @@
 //!   the simulator).
 //! * [`scheduler`] — dependency-aware work-stealing host executor over
 //!   the task graph (bit-identical to the barrier walk).
+//! * [`batch`] — multi-graph batch engine: union of independent task
+//!   graphs into one shared-resource schedule.
 //! * [`trace`] — the operation trace consumed by the PIM simulator
 //!   (a deterministic topological lowering of the task graph).
 //! * [`validate`] — cross-implementation validation helpers.
 
 pub mod backend;
+pub mod batch;
 pub mod dijkstra;
 pub mod floyd_warshall;
 pub mod minplus;

@@ -196,8 +196,9 @@ pub(crate) fn vert_locations(plan: &ApspPlan, g: &CsrGraph) -> Vec<(u32, u32)> {
     loc
 }
 
-/// Rough peak matrix footprint for the functional-mode guard.
-fn projected_bytes(plan: &ApspPlan, g: &CsrGraph) -> u64 {
+/// Rough peak matrix footprint for the functional-mode guard (the
+/// batch executor sums it across all co-resident graphs).
+pub(crate) fn projected_bytes(plan: &ApspPlan, g: &CsrGraph) -> u64 {
     let mut total = 0u64;
     for lvl in &plan.levels {
         let comp: u64 = lvl

@@ -17,13 +17,15 @@
 //! access below).
 
 use super::backend::{fw_any, TileBackend};
+use super::batch::BatchGraph;
 use super::plan::ApspPlan;
 use super::recursive::{
     batch_uses_serial_kernel, check_memory_guard, fill_block_from_boundary,
-    fill_block_from_graph, materialize_partitioned, vert_locations, ApspSolution, LevelSolution,
-    SolveOptions,
+    fill_block_from_graph, materialize_partitioned, projected_bytes, vert_locations,
+    ApspSolution, LevelSolution, SolveOptions,
 };
 use super::taskgraph::{lower, TaskGraph, TaskKind};
+use super::trace::Trace;
 use crate::apsp::floyd_warshall;
 use crate::graph::csr::CsrGraph;
 use crate::graph::dense::DistMatrix;
@@ -114,12 +116,96 @@ pub fn execute<'p>(
     opts: SolveOptions,
 ) -> ApspSolution<'p> {
     check_memory_guard(plan, g, &opts);
-    let depth = plan.depth();
     let mut slots = Slots::new(plan);
+    let (local_serial, rerun_serial) = kernel_choices(plan, backend);
 
-    // Mirror the barrier walk's per-batch kernel choice so results stay
-    // bit-identical even where fw_rowwise and the backend's own FW
-    // could differ in rounding.
+    {
+        let slots = &slots;
+        let deps = tg.dep_lists();
+        threads::par_dag(&deps, |ti| {
+            run_task(
+                &tg.nodes[ti].kind,
+                g,
+                plan,
+                backend,
+                slots,
+                &local_serial,
+                &rerun_serial,
+            )
+        });
+    }
+
+    assemble(g, plan, tg.to_trace(), &mut slots)
+}
+
+/// Execute a merged batch of independent graphs ([`BatchGraph`]) with
+/// one work-stealing worker pool over the union DAG. Each graph owns a
+/// private slot namespace, so the interleaved execution is isolated per
+/// graph and every returned solution is **bit-identical** to a solo
+/// [`execute`] of that graph (same kernels, same inputs, same rounding
+/// order — only the schedule differs).
+pub fn execute_batch<'p>(
+    graphs: &[(&CsrGraph, &'p ApspPlan)],
+    batch: &BatchGraph,
+    backend: &dyn TileBackend,
+    opts: SolveOptions,
+) -> Vec<ApspSolution<'p>> {
+    assert_eq!(
+        graphs.len(),
+        batch.n_graphs(),
+        "batch graph count mismatch"
+    );
+    // every graph's slots are resident concurrently, so the memory
+    // guard applies to the batch's aggregate footprint
+    let need: u64 = graphs
+        .iter()
+        .map(|&(g, plan)| projected_bytes(plan, g))
+        .sum();
+    assert!(
+        need <= opts.memory_limit_bytes,
+        "functional solve needs ~{need} bytes of matrices across the {}-graph batch \
+         (> limit {}); use estimate mode or a smaller batch",
+        graphs.len(),
+        opts.memory_limit_bytes
+    );
+    let mut slots: Vec<Slots> = graphs.iter().map(|&(_, plan)| Slots::new(plan)).collect();
+    let choices: Vec<(Vec<bool>, Vec<bool>)> = graphs
+        .iter()
+        .map(|&(_, plan)| kernel_choices(plan, backend))
+        .collect();
+
+    {
+        let slots = &slots;
+        let deps = batch.merged.dep_lists();
+        threads::par_dag(&deps, |ti| {
+            let gi = batch.owner[ti] as usize;
+            let (g, plan) = graphs[gi];
+            let (local_serial, rerun_serial) = &choices[gi];
+            run_task(
+                &batch.merged.nodes[ti].kind,
+                g,
+                plan,
+                backend,
+                &slots[gi],
+                local_serial,
+                rerun_serial,
+            )
+        });
+    }
+
+    graphs
+        .iter()
+        .zip(slots.iter_mut())
+        .zip(&batch.per_graph)
+        .map(|((&(g, plan), s), tg)| assemble(g, plan, tg.to_trace(), s))
+        .collect()
+}
+
+/// Mirror the barrier walk's per-batch kernel choice (serial rowwise FW
+/// vs the backend's own FW) so results stay bit-identical even where
+/// the two kernels could differ in rounding. Returns the per-level
+/// choices for the LocalFw and RerunFw phases.
+fn kernel_choices(plan: &ApspPlan, backend: &dyn TileBackend) -> (Vec<bool>, Vec<bool>) {
     let local_serial: Vec<bool> = plan
         .levels
         .iter()
@@ -138,25 +224,17 @@ pub fn execute<'p>(
             batch_uses_serial_kernel(backend, reruns)
         })
         .collect();
+    (local_serial, rerun_serial)
+}
 
-    {
-        let slots = &slots;
-        let deps = tg.dep_lists();
-        threads::par_dag(&deps, |ti| {
-            run_task(
-                &tg.nodes[ti].kind,
-                g,
-                plan,
-                backend,
-                slots,
-                &local_serial,
-                &rerun_serial,
-            )
-        });
-    }
-
-    // ---- assemble the level-0 solution
-    let top = if depth == 0 {
+/// Assemble the level-0 solution out of a finished run's slots.
+fn assemble<'p>(
+    g: &CsrGraph,
+    plan: &'p ApspPlan,
+    trace: Trace,
+    slots: &mut Slots,
+) -> ApspSolution<'p> {
+    let top = if plan.depth() == 0 {
         LevelSolution::Direct(
             slots
                 .terminal
@@ -179,7 +257,7 @@ pub fn execute<'p>(
     };
     ApspSolution {
         plan,
-        trace: tg.to_trace(),
+        trace,
         top: Some(top),
         vert_loc: vert_locations(plan, g),
     }
@@ -510,6 +588,85 @@ mod tests {
         assert_eq!(
             a.materialize_full(&be).max_diff(&b.materialize_full(&be)),
             0.0
+        );
+    }
+
+    #[test]
+    fn batch_execution_bit_identical_to_solo() {
+        use crate::apsp::batch::BatchGraph;
+        // heterogeneous batch: partitioned, clustered, and a
+        // single-tile direct solve
+        let gs = vec![
+            generators::newman_watts_strogatz(300, 4, 0.12, Weights::Uniform(1.0, 5.0), 31),
+            generators::ogbn_proxy(400, 10.0, Weights::Uniform(1.0, 3.0), 32),
+            generators::complete(24, Weights::Uniform(1.0, 2.0), 33),
+        ];
+        let plans: Vec<_> = gs
+            .iter()
+            .map(|g| {
+                build_plan(
+                    g,
+                    PlanOptions {
+                        tile_limit: 48,
+                        max_depth: usize::MAX,
+                        seed: 31,
+                    },
+                )
+            })
+            .collect();
+        let batch = BatchGraph::build(&plans.iter().collect::<Vec<_>>());
+        let pairs: Vec<(&CsrGraph, &ApspPlan)> = gs.iter().zip(&plans).collect();
+        let be = NativeBackend;
+        let sols = execute_batch(&pairs, &batch, &be, SolveOptions::default());
+        assert_eq!(sols.len(), gs.len());
+        for (i, sol) in sols.iter().enumerate() {
+            let solo = solve_dag(&gs[i], &plans[i], &be, SolveOptions::default());
+            assert_eq!(solo.trace, sol.trace, "graph {i}: traces differ");
+            let diff = solo
+                .materialize_full(&be)
+                .max_diff(&sol.materialize_full(&be));
+            assert_eq!(diff, 0.0, "graph {i}: batch differs from solo");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "smaller batch")]
+    fn batch_memory_guard_is_aggregate() {
+        use crate::apsp::batch::BatchGraph;
+        use crate::apsp::recursive::projected_bytes;
+        // every graph fits the limit alone; the co-resident batch must
+        // still be rejected
+        let gs: Vec<CsrGraph> = (0..4u64)
+            .map(|i| generators::newman_watts_strogatz(400, 4, 0.1, Weights::Unit, 40 + i))
+            .collect();
+        let plans: Vec<ApspPlan> = gs
+            .iter()
+            .map(|g| {
+                build_plan(
+                    g,
+                    PlanOptions {
+                        tile_limit: 64,
+                        max_depth: usize::MAX,
+                        seed: 40,
+                    },
+                )
+            })
+            .collect();
+        let limit = gs
+            .iter()
+            .zip(&plans)
+            .map(|(g, p)| projected_bytes(p, g))
+            .max()
+            .unwrap();
+        let batch = BatchGraph::build(&plans.iter().collect::<Vec<_>>());
+        let pairs: Vec<(&CsrGraph, &ApspPlan)> = gs.iter().zip(&plans).collect();
+        let _ = execute_batch(
+            &pairs,
+            &batch,
+            &NativeBackend,
+            SolveOptions {
+                memory_limit_bytes: limit,
+            },
         );
     }
 

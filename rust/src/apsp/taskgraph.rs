@@ -86,8 +86,9 @@ pub struct TaskNode {
 #[derive(Debug, Clone, Default)]
 pub struct TaskGraph {
     pub nodes: Vec<TaskNode>,
-    /// `(level, phase)` of each trace step, in emission order.
-    steps: Vec<(u32, Phase)>,
+    /// `(level, phase)` of each trace step, in emission order
+    /// (crate-visible so [`super::batch`] can union graphs).
+    pub(crate) steps: Vec<(u32, Phase)>,
 }
 
 impl TaskGraph {

@@ -101,8 +101,13 @@ pub struct SystemConfig {
     /// Sampled-validation effort (sources x cols); 0 disables.
     pub validate_sources: usize,
     pub validate_cols: usize,
+    /// Absolute tolerance for exactness validation (vs Dijkstra).
+    pub validate_tolerance: f32,
     /// Functional-mode matrix memory guard.
     pub memory_limit_bytes: u64,
+    /// Graphs per batch submission (`Executor::run_batch` and the
+    /// `--batch` CLI mode generate/accept this many).
+    pub batch_size: usize,
 }
 
 impl Default for SystemConfig {
@@ -117,7 +122,9 @@ impl Default for SystemConfig {
             scheduler: SchedulerKind::Dag,
             validate_sources: 16,
             validate_cols: 64,
+            validate_tolerance: 1e-3,
             memory_limit_bytes: 12 << 30,
+            batch_size: 4,
         }
     }
 }
@@ -145,6 +152,9 @@ impl SystemConfig {
         }
         self.validate_sources = cf.get_usize("run.validate_sources", self.validate_sources);
         self.validate_cols = cf.get_usize("run.validate_cols", self.validate_cols);
+        self.validate_tolerance =
+            cf.get_f64("run.validate_tolerance", self.validate_tolerance as f64) as f32;
+        self.batch_size = cf.get_usize("run.batch_size", self.batch_size);
         // hardware overrides
         let hw = &mut self.hw;
         hw.tiles_per_die = cf.get_usize("hardware.tiles_per_die", hw.tiles_per_die);
@@ -182,6 +192,9 @@ impl SystemConfig {
         if args.flag("no-validate") {
             self.validate_sources = 0;
         }
+        self.validate_tolerance =
+            args.get_f64("validate-tolerance", self.validate_tolerance as f64) as f32;
+        self.batch_size = args.get_usize("batch-size", self.batch_size);
     }
 
     pub fn plan_options(&self) -> crate::apsp::plan::PlanOptions {
@@ -205,6 +218,27 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Native);
         assert_eq!(c.scheduler, SchedulerKind::Dag);
         assert!(c.hw.prefetch);
+        assert_eq!(c.validate_tolerance, 1e-3);
+        assert_eq!(c.batch_size, 4);
+    }
+
+    #[test]
+    fn batch_and_tolerance_knobs() {
+        let cf = ConfigFile::parse(
+            "[run]\nbatch_size = 8\nvalidate_tolerance = 0.01",
+        )
+        .unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        assert_eq!(c.batch_size, 8);
+        assert!((c.validate_tolerance - 0.01).abs() < 1e-9);
+        let args = crate::util::cli::Args::parse(
+            ["--batch-size", "3", "--validate-tolerance", "0.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.batch_size, 3);
+        assert!((c.validate_tolerance - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -1,16 +1,21 @@
 //! End-to-end orchestration: partition → recursive APSP → PIM
-//! simulation → validation. One `Executor::run` call is one experiment.
+//! simulation → validation. One `Executor::run` call is one
+//! experiment; one `Executor::run_batch` call is one scheduled
+//! workload set — N independent graphs merged into a single
+//! shared-resource schedule.
 
 use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig};
 use crate::apsp::backend::{NativeBackend, TileBackend};
+use crate::apsp::batch::BatchGraph;
 use crate::apsp::plan::{build_plan, ApspPlan};
 use crate::apsp::recursive::{self, solve, ApspSolution, SolveOptions};
 use crate::apsp::validate::{validate_sampled, Validation};
 use crate::apsp::{scheduler, taskgraph};
 use crate::graph::csr::CsrGraph;
 use crate::runtime::{PjrtBackend, PjrtRuntime};
-use crate::sim::engine::{simulate, simulate_dag, SimReport};
+use crate::sim::engine::{simulate, simulate_batch, simulate_dag, GraphSimStat, SimReport};
 use crate::util::error::Result;
+use crate::{ensure, err};
 
 /// Everything one run produces.
 pub struct RunResult {
@@ -25,6 +30,9 @@ pub struct RunResult {
     pub host_solve_seconds: f64,
     /// Sampled exactness validation (functional mode with validation on).
     pub validation: Option<Validation>,
+    /// Tolerance the validation was / should be judged at
+    /// (`SystemConfig::validate_tolerance`).
+    pub validate_tolerance: f32,
     /// Which backend executed the numerics.
     pub backend_name: &'static str,
     /// Which scheduler ordered the tile work.
@@ -78,15 +86,7 @@ impl Executor {
         };
         let native = NativeBackend;
         let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
-        let backend: Option<&dyn TileBackend> = match (self.config.mode, self.config.backend) {
-            (Mode::Estimate, _) => None,
-            (Mode::Functional, BackendKind::Native) => Some(&native),
-            (Mode::Functional, BackendKind::Pjrt) => Some(
-                pjrt_adapter
-                    .as_ref()
-                    .expect("pjrt runtime not loaded (Executor::new loads it)"),
-            ),
-        };
+        let backend = self.select_backend(&native, &pjrt_adapter)?;
 
         // in dag mode one lowering of the plan feeds the executor, the
         // solution's trace, and the simulator; barrier mode lowers once
@@ -113,13 +113,97 @@ impl Executor {
                 &sol,
                 s,
                 self.config.validate_cols,
-                1e-3,
+                self.config.validate_tolerance,
                 self.config.seed ^ 0xFEED,
             )),
             _ => None,
         };
 
-        Ok(RunResult {
+        Ok(self.make_result(g, plan, sim, validation, host_solve_seconds))
+    }
+
+    /// Run N independent graphs as **one scheduled workload set**: the
+    /// tile-task DAGs are merged into a single [`BatchGraph`], executed
+    /// by one work-stealing pool (functional mode), and costed on one
+    /// shared resource model. Per-graph numerics are bit-identical to N
+    /// sequential [`Executor::run`] calls; the modeled batch interleaves
+    /// every graph's tasks on the same FW/MP dies and channels, which is
+    /// where the utilization/throughput gain comes from. The merged
+    /// execution is inherently dependency-driven (the `scheduler` knob
+    /// cannot reorder it), but each graph's solo baseline honors the
+    /// knob so it matches what an individual `run` reports.
+    pub fn run_batch(&self, graphs: &[CsrGraph]) -> Result<BatchRunResult> {
+        ensure!(!graphs.is_empty(), "run_batch needs at least one graph");
+        let plans: Vec<ApspPlan> = graphs.iter().map(|g| self.plan(g)).collect();
+        let plan_refs: Vec<&ApspPlan> = plans.iter().collect();
+        let batch = BatchGraph::build(&plan_refs);
+
+        let solve_opts = SolveOptions {
+            memory_limit_bytes: self.config.memory_limit_bytes,
+        };
+        let native = NativeBackend;
+        let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
+        let backend = self.select_backend(&native, &pjrt_adapter)?;
+
+        let t0 = std::time::Instant::now();
+        let sols: Option<Vec<ApspSolution>> = backend.map(|be| {
+            let pairs: Vec<(&CsrGraph, &ApspPlan)> = graphs.iter().zip(&plans).collect();
+            scheduler::execute_batch(&pairs, &batch, be, solve_opts)
+        });
+        // estimate mode runs no host numerics — don't report the
+        // Instant overhead as solve time
+        let host_solve_seconds = if sols.is_some() {
+            t0.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+
+        let (batch_sim, batch_stats) = simulate_batch(&batch, &self.config.hw);
+
+        let mut per_graph = Vec::with_capacity(graphs.len());
+        for (i, (g, plan)) in graphs.iter().zip(&plans).enumerate() {
+            // solo baseline on the same hardware model — the latency
+            // this graph would see submitted alone, under the
+            // configured scheduler (identical to an individual `run`)
+            let sim = match self.config.scheduler {
+                SchedulerKind::Dag => simulate_dag(&batch.per_graph[i], &self.config.hw),
+                SchedulerKind::Barrier => {
+                    simulate(&batch.per_graph[i].to_trace(), &self.config.hw)
+                }
+            };
+            let validation = match (&sols, self.config.validate_sources) {
+                (Some(sols), s) if s > 0 => Some(validate_sampled(
+                    g,
+                    &sols[i],
+                    s,
+                    self.config.validate_cols,
+                    self.config.validate_tolerance,
+                    self.config.seed ^ 0xFEED ^ (i as u64),
+                )),
+                _ => None,
+            };
+            // host time is attributed to the merged run, not per graph
+            per_graph.push(self.make_result(g, plan, sim, validation, 0.0));
+        }
+        Ok(BatchRunResult {
+            per_graph,
+            batch_stats,
+            batch_sim,
+            host_solve_seconds,
+        })
+    }
+
+    /// Assemble one graph's [`RunResult`] (shared by `run_with_plan`
+    /// and `run_batch` so solo and batch rows can't drift).
+    fn make_result(
+        &self,
+        g: &CsrGraph,
+        plan: &ApspPlan,
+        sim: SimReport,
+        validation: Option<Validation>,
+        host_solve_seconds: f64,
+    ) -> RunResult {
+        RunResult {
             sim,
             depth: plan.depth(),
             boundary_sizes: plan.boundary_sizes(),
@@ -131,16 +215,79 @@ impl Executor {
                 .unwrap_or(1),
             host_solve_seconds,
             validation,
-            backend_name: match (self.config.mode, self.config.backend) {
-                (Mode::Estimate, _) => "estimate",
-                (_, BackendKind::Native) => "native",
-                (_, BackendKind::Pjrt) => "pjrt",
-            },
+            validate_tolerance: self.config.validate_tolerance,
+            backend_name: self.backend_name(),
             scheduler: self.config.scheduler,
             mode: self.config.mode,
             graph_n: g.n(),
             graph_m: g.m(),
+        }
+    }
+
+    /// Resolve the tile backend for the configured mode. `None` means
+    /// estimate mode (no numerics); a configured-but-unloaded pjrt
+    /// runtime is a clean error, not a panic.
+    fn select_backend<'a>(
+        &self,
+        native: &'a NativeBackend,
+        pjrt: &'a Option<PjrtBackend<'_>>,
+    ) -> Result<Option<&'a dyn TileBackend>> {
+        Ok(match (self.config.mode, self.config.backend) {
+            (Mode::Estimate, _) => None,
+            (Mode::Functional, BackendKind::Native) => Some(native),
+            (Mode::Functional, BackendKind::Pjrt) => match pjrt.as_ref() {
+                Some(p) => Some(p),
+                None => {
+                    return Err(err!(
+                        "pjrt backend requested but the runtime is not loaded \
+                         (the Executor must be constructed with backend = pjrt)"
+                    ))
+                }
+            },
         })
+    }
+
+    fn backend_name(&self) -> &'static str {
+        match (self.config.mode, self.config.backend) {
+            (Mode::Estimate, _) => "estimate",
+            (_, BackendKind::Native) => "native",
+            (_, BackendKind::Pjrt) => "pjrt",
+        }
+    }
+}
+
+/// Everything one batched run produces.
+pub struct BatchRunResult {
+    /// Per-graph results in submission order. Each `sim` is the graph's
+    /// **solo** baseline (identical to an individual `run`); the
+    /// validation comes from the shared batch execution.
+    pub per_graph: Vec<RunResult>,
+    /// Per-graph attribution inside the shared schedule (completion
+    /// time, busy work, dynamic energy by node ownership).
+    pub batch_stats: Vec<GraphSimStat>,
+    /// The merged workload on the shared resource model.
+    pub batch_sim: SimReport,
+    /// Host wall time of the merged functional execution.
+    pub host_solve_seconds: f64,
+}
+
+impl BatchRunResult {
+    pub fn batch_size(&self) -> usize {
+        self.per_graph.len()
+    }
+
+    /// Σ solo makespans — the serial-submission baseline.
+    pub fn solo_makespan_sum(&self) -> f64 {
+        self.per_graph.iter().map(|r| r.sim.seconds).sum()
+    }
+
+    /// Batch throughput gain: Σ solo makespans / batch makespan.
+    pub fn batch_speedup(&self) -> f64 {
+        if self.batch_sim.seconds == 0.0 {
+            1.0
+        } else {
+            self.solo_makespan_sum() / self.batch_sim.seconds
+        }
     }
 }
 
@@ -227,6 +374,48 @@ mod tests {
         assert!((dag.sim.dynamic_joules - barrier.sim.dynamic_joules).abs() < 1e-9);
         assert_eq!(dag.scheduler.name(), "dag");
         assert_eq!(barrier.scheduler.name(), "barrier");
+    }
+
+    #[test]
+    fn run_batch_matches_solo_and_gains_throughput() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 128;
+        let ex = Executor::new(cfg).unwrap();
+        let graphs = vec![graph(700, 11), graph(900, 12), graph(500, 13)];
+        let b = ex.run_batch(&graphs).unwrap();
+        assert_eq!(b.batch_size(), 3);
+        for (i, r) in b.per_graph.iter().enumerate() {
+            let v = r.validation.as_ref().expect("validation on");
+            assert!(v.ok(r.validate_tolerance), "graph {i}: {v:?}");
+            // the per-graph solo baseline matches an individual run
+            let solo = ex.run(&graphs[i]).unwrap();
+            assert_eq!(r.sim.seconds, solo.sim.seconds, "graph {i}");
+            assert_eq!(r.sim.dynamic_joules, solo.sim.dynamic_joules, "graph {i}");
+        }
+        // modeled batch bounded by the serial-submission baseline
+        assert!(
+            b.batch_sim.seconds <= b.solo_makespan_sum() * (1.0 + 1e-9),
+            "batch {} > serial {}",
+            b.batch_sim.seconds,
+            b.solo_makespan_sum()
+        );
+        assert!(b.batch_speedup() >= 1.0 - 1e-9);
+        // per-graph energy attribution partitions the batch total
+        let esum: f64 = b.batch_stats.iter().map(|s| s.dynamic_joules).sum();
+        assert_eq!(esum, b.batch_sim.dynamic_joules);
+    }
+
+    #[test]
+    fn run_batch_estimate_mode_needs_no_numerics() {
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        cfg.tile_limit = 128;
+        let ex = Executor::new(cfg).unwrap();
+        let graphs = vec![graph(1_000, 21), graph(1_500, 22)];
+        let b = ex.run_batch(&graphs).unwrap();
+        assert!(b.batch_sim.seconds > 0.0);
+        assert!(b.per_graph.iter().all(|r| r.validation.is_none()));
+        assert_eq!(b.batch_stats.len(), 2);
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! Human-readable run reports: the coordinator's metrics output.
 
-use super::executor::RunResult;
+use super::executor::{BatchRunResult, RunResult};
 use crate::apsp::trace::Phase;
-use crate::util::table::{fmt_count, fmt_energy, fmt_time, Table};
+use crate::util::table::{fmt_count, fmt_energy, fmt_ratio, fmt_time, Table};
 
 /// Render a full report for one run.
 pub fn render(r: &RunResult) -> String {
@@ -48,7 +48,11 @@ pub fn render(r: &RunResult) -> String {
             v.checked,
             v.max_abs_err,
             v.mismatches,
-            if v.ok(1e-3) { "EXACT" } else { "FAILED" },
+            if v.ok(r.validate_tolerance) {
+                "EXACT"
+            } else {
+                "FAILED"
+            },
         ));
     }
     // per-phase table. Shares are of the summed per-phase busy time:
@@ -79,6 +83,60 @@ pub fn render(r: &RunResult) -> String {
     out
 }
 
+/// Render the report for one batched workload set: a per-graph table
+/// (solo latency vs completion inside the shared schedule) plus the
+/// batch-level utilization and speedup summary.
+pub fn render_batch(b: &BatchRunResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "RAPID-Graph batch: {} graphs, mode={} backend={}\n",
+        b.batch_size(),
+        b.per_graph.first().map(|r| r.mode.name()).unwrap_or("?"),
+        b.per_graph.first().map(|r| r.backend_name).unwrap_or("?"),
+    ));
+    let mut t = Table::new(
+        "batch schedule (per graph)",
+        &[
+            "graph", "n", "m", "depth", "solo time", "batch finish", "busy work", "dyn energy",
+            "valid",
+        ],
+    );
+    for (i, (r, s)) in b.per_graph.iter().zip(&b.batch_stats).enumerate() {
+        t.row(&[
+            i.to_string(),
+            fmt_count(r.graph_n),
+            fmt_count(r.graph_m),
+            r.depth.to_string(),
+            fmt_time(r.sim.seconds),
+            fmt_time(s.makespan),
+            fmt_time(s.busy),
+            fmt_energy(s.dynamic_joules),
+            match &r.validation {
+                Some(v) if v.ok(r.validate_tolerance) => "EXACT".to_string(),
+                Some(_) => "FAILED".to_string(),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "batch: makespan={} vs serial {} -> speedup {}; FW util {:.1}%, MP util {:.1}%, energy={}\n",
+        fmt_time(b.batch_sim.seconds),
+        fmt_time(b.solo_makespan_sum()),
+        fmt_ratio(b.batch_speedup()),
+        100.0 * b.batch_sim.fw_utilization(),
+        100.0 * b.batch_sim.mp_utilization(),
+        fmt_energy(b.batch_sim.joules),
+    ));
+    if b.host_solve_seconds > 0.0 {
+        out.push_str(&format!(
+            "host numerics (merged): {}\n",
+            fmt_time(b.host_solve_seconds)
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use crate::coordinator::config::SystemConfig;
@@ -98,5 +156,22 @@ mod tests {
         assert!(text.contains("modeled hardware"));
         assert!(text.contains("validation"));
         assert!(text.contains("local_fw"));
+    }
+
+    #[test]
+    fn batch_report_contains_key_sections() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        let ex = Executor::new(cfg).unwrap();
+        let graphs = vec![
+            generators::generate(Topology::Nws, 300, 8.0, Weights::Unit, 1),
+            generators::generate(Topology::Er, 250, 8.0, Weights::Unit, 2),
+        ];
+        let b = ex.run_batch(&graphs).unwrap();
+        let text = super::render_batch(&b);
+        assert!(text.contains("RAPID-Graph batch: 2 graphs"));
+        assert!(text.contains("batch schedule"));
+        assert!(text.contains("speedup"));
+        assert!(text.contains("EXACT"));
     }
 }

@@ -3,13 +3,17 @@
 //! Subcommands:
 //!   generate   synthesize a workload graph and write it to disk
 //!   apsp       run the full pipeline (partition -> recursive APSP ->
-//!              PIM simulation -> validation) and print the report
+//!              PIM simulation -> validation) and print the report;
+//!              with --batch, merge N independent graphs into one
+//!              shared-resource schedule and print the batch table
 //!   figure     regenerate a paper figure/table (7, 8, 9a, 9b, 9c, table3)
 //!   validate   exhaustive Dijkstra validation on a small graph
 //!
 //! Examples:
 //!   rapid-graph apsp --topo nws --nodes 20000 --degree 25.25
 //!   rapid-graph apsp --graph g.bin --mode estimate
+//!   rapid-graph apsp --batch --batch-size 8 --nodes 5000 --mode estimate
+//!   rapid-graph apsp --batch --graphs a.bin,b.bin,c.bin
 //!   rapid-graph figure --id 7
 //!   rapid-graph generate --topo ogbn --nodes 100000 --out g.bin
 
@@ -46,7 +50,8 @@ fn dispatch(args: &Args) -> Result<()> {
                     "recursive APSP on a simulated processing-in-memory stack",
                     &[
                         ("generate", "--topo nws|er|ogbn|grid --nodes N [--degree D] [--seed S] --out FILE"),
-                        ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--scheduler dag|barrier] [--tile T] [--max-depth D] [--config FILE]"),
+                        ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--scheduler dag|barrier] [--tile T] [--max-depth D] [--validate-tolerance TOL] [--config FILE]"),
+                        ("apsp --batch", "[--batch-size N] [--graphs F1,F2,.. | --topo T --nodes N] merge N graphs into one shared-resource schedule"),
                         ("figure", "--id 7|8|9a|9b|9c|table3 [--full]"),
                         ("validate", "--nodes N [--topo T] [--tile T]"),
                     ]
@@ -67,13 +72,19 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     Ok(cfg)
 }
 
+/// Load a graph file: `.bin` is the binary format, anything else is an
+/// edge list.
+fn load_graph(path: &str) -> Result<rapid_graph::CsrGraph> {
+    if path.ends_with(".bin") {
+        io::read_binary(Path::new(path))
+    } else {
+        io::read_edge_list(Path::new(path))
+    }
+}
+
 fn graph_from_args(args: &Args) -> Result<rapid_graph::CsrGraph> {
     if let Some(path) = args.get("graph") {
-        return if path.ends_with(".bin") {
-            io::read_binary(Path::new(path))
-        } else {
-            io::read_edge_list(Path::new(path))
-        };
+        return load_graph(path);
     }
     let topo = Topology::parse(args.get_or("topo", "nws"))
         .context("unknown --topo (nws|er|ogbn|grid)")?;
@@ -112,13 +123,65 @@ fn cmd_apsp(args: &Args) -> Result<()> {
     if args.subcommand() == Some("simulate") {
         cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
     }
+    if args.flag("batch") || args.get("batch").is_some() || args.get("graphs").is_some() {
+        return cmd_batch(args, cfg);
+    }
     let g = graph_from_args(args)?;
     let ex = Executor::new(cfg)?;
     let r = ex.run(&g)?;
     print!("{}", report::render(&r));
     if let Some(v) = &r.validation {
-        if !v.ok(1e-3) {
+        if !v.ok(r.validate_tolerance) {
             bail!("validation FAILED");
+        }
+    }
+    Ok(())
+}
+
+/// `apsp --batch`: merge N independent graphs into one shared-resource
+/// schedule. Graphs come from `--graphs f1,f2,..` (load) or are
+/// generated — `--batch-size` (or `run.batch_size`) graphs of `--nodes`
+/// vertices each, cycling through the four topologies for a
+/// heterogeneous mix.
+fn cmd_batch(args: &Args, cfg: rapid_graph::coordinator::config::SystemConfig) -> Result<()> {
+    ensure!(
+        args.get("graph").is_none(),
+        "--graph is the solo-run input; batch mode loads --graphs F1,F2,.."
+    );
+    let graphs: Vec<rapid_graph::CsrGraph> = if let Some(list) = args.get("graphs") {
+        list.split(',').map(load_graph).collect::<Result<_>>()?
+    } else {
+        // `--batch N` is accepted as a count shorthand for --batch-size
+        let count = args.get_usize("batch", cfg.batch_size).max(1);
+        let n = args.get_usize("nodes", 10_000);
+        let degree = args.get_f64("degree", 25.25);
+        let seed = args.get_u64("seed", 42);
+        // --topo pins every generated graph to one topology; the
+        // default is the heterogeneous four-topology mix
+        let topos: Vec<Topology> = match args.get("topo") {
+            Some(t) => vec![Topology::parse(t).context("unknown --topo (nws|er|ogbn|grid)")?],
+            None => vec![Topology::Nws, Topology::Er, Topology::Grid, Topology::OgbnProxy],
+        };
+        (0..count)
+            .map(|i| {
+                generators::generate(
+                    topos[i % topos.len()],
+                    n,
+                    degree,
+                    Weights::Uniform(1.0, 8.0),
+                    seed + i as u64,
+                )
+            })
+            .collect()
+    };
+    let ex = Executor::new(cfg)?;
+    let b = ex.run_batch(&graphs)?;
+    print!("{}", report::render_batch(&b));
+    for r in &b.per_graph {
+        if let Some(v) = &r.validation {
+            if !v.ok(r.validate_tolerance) {
+                bail!("validation FAILED");
+            }
         }
     }
     Ok(())
@@ -181,6 +244,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         g.n() <= 3000,
         "exhaustive validation is O(n^2); use --nodes <= 3000 (apsp does sampled validation at any size)"
     );
+    let tol = cfg.validate_tolerance;
     let ex = Executor::new(cfg)?;
     let plan = ex.plan(&g);
     let backend = rapid_graph::apsp::backend::NativeBackend;
@@ -191,15 +255,15 @@ fn cmd_validate(args: &Args) -> Result<()> {
         rapid_graph::apsp::recursive::SolveOptions::default(),
     );
     let full = sol.materialize_full(&backend);
-    let v = rapid_graph::apsp::validate::validate_full(&g, &full, 1e-3);
+    let v = rapid_graph::apsp::validate::validate_full(&g, &full, tol);
     println!(
         "exhaustive validation: {} entries, max err {:.2e}, {} mismatches -> {}",
         v.checked,
         v.max_abs_err,
         v.mismatches,
-        if v.ok(1e-3) { "EXACT" } else { "FAILED" }
+        if v.ok(tol) { "EXACT" } else { "FAILED" }
     );
-    if !v.ok(1e-3) {
+    if !v.ok(tol) {
         bail!("validation failed");
     }
     Ok(())

@@ -28,6 +28,7 @@
 use super::memsys;
 use super::params::HwParams;
 use super::pcm;
+use crate::apsp::batch::BatchGraph;
 use crate::apsp::taskgraph::TaskGraph;
 use crate::apsp::trace::{Op, Phase, Step, Trace};
 use std::collections::HashMap;
@@ -397,6 +398,31 @@ pub fn total_op_seconds(tg: &TaskGraph, p: &HwParams) -> f64 {
         .sum()
 }
 
+/// Per-graph attribution of a batch schedule, by node ownership.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GraphSimStat {
+    /// Completion time of the graph's last unit in the shared schedule
+    /// (its modeled latency inside the batch).
+    pub makespan: f64,
+    /// Summed busy seconds of the graph's units across all resources —
+    /// the schedule-independent work measure
+    /// (equals [`total_op_seconds`] of the solo task graph).
+    pub busy: f64,
+    /// Dynamic energy of the graph's ops. Schedule-independent: equals
+    /// the graph's solo `dynamic_joules` exactly, and the per-graph
+    /// values sum to the batch report's `dynamic_joules`.
+    pub dynamic_joules: f64,
+    /// Min-add candidates contributed by this graph.
+    pub madds: u64,
+}
+
+/// Simulate a merged multi-graph batch ([`BatchGraph`]) on the shared
+/// resource model. Returns the batch-level report (makespan, busy
+/// times, total energy) plus the per-graph attribution.
+pub fn simulate_batch(batch: &BatchGraph, p: &HwParams) -> (SimReport, Vec<GraphSimStat>) {
+    simulate_dag_attributed(&batch.merged, &batch.owner, batch.n_graphs(), p)
+}
+
 /// Simulate a tile-task DAG with dependency-aware list scheduling.
 ///
 /// Greedy, non-idling, critical-path-priority: a unit starts the moment
@@ -406,11 +432,24 @@ pub fn total_op_seconds(tg: &TaskGraph, p: &HwParams) -> f64 {
 /// the same `max(total/tiles, longest)` bound the barrier model charges
 /// per step, while letting independent levels overlap.
 pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
+    let owner = vec![0u32; tg.n_tasks()];
+    simulate_dag_attributed(tg, &owner, 1, p).0
+}
+
+/// The list scheduler proper, with per-graph ownership attribution
+/// (`owner[node]` in `0..n_graphs`; a solo run is a one-graph batch).
+fn simulate_dag_attributed(
+    tg: &TaskGraph,
+    owner: &[u32],
+    n_graphs: usize,
+    p: &HwParams,
+) -> (SimReport, Vec<GraphSimStat>) {
     // ---- explode tasks into op units, chaining ops within a task
     let mut units: Vec<SimUnit> = Vec::new();
+    let mut unit_owner: Vec<u32> = Vec::new();
     let mut deps: Vec<Vec<u32>> = Vec::new();
     let mut last_unit_of_task: Vec<u32> = Vec::with_capacity(tg.nodes.len());
-    for node in &tg.nodes {
+    for (ni, node) in tg.nodes.iter().enumerate() {
         let entry_deps: Vec<u32> = node
             .deps
             .iter()
@@ -424,10 +463,12 @@ pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
                 phase: node.phase,
                 is_load: false,
             });
+            unit_owner.push(owner[ni]);
             deps.push(entry_deps);
         } else {
             for (oi, op) in node.ops.iter().enumerate() {
                 units.push(op_unit(op, node.phase, p));
+                unit_owner.push(owner[ni]);
                 if oi == 0 {
                     deps.push(entry_deps.clone());
                 } else {
@@ -478,15 +519,24 @@ pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
         cp[i] = units[i].secs + tail;
     }
 
-    // ---- schedule-independent accounting
+    // ---- schedule-independent accounting (per graph first, then the
+    // batch totals as sums of the per-graph sums — so per-graph values
+    // are bit-identical to a solo run and sum exactly to the total)
     let mut report = SimReport::default();
-    for u in units.iter().filter(|u| u.res != UnitRes::None) {
-        report.dynamic_joules += u.joules;
+    let mut stats = vec![GraphSimStat::default(); n_graphs];
+    for (i, u) in units.iter().enumerate() {
+        if u.res == UnitRes::None {
+            continue;
+        }
+        let gs = &mut stats[unit_owner[i] as usize];
+        gs.dynamic_joules += u.joules;
+        gs.busy += u.secs;
         let stat = report.per_phase.entry(u.phase).or_default();
         stat.secs += u.secs;
         stat.joules += u.joules;
         stat.ops += 1;
     }
+    report.dynamic_joules = stats.iter().map(|s| s.dynamic_joules).sum();
 
     // ---- event-driven list schedule
     use std::collections::BinaryHeap;
@@ -542,6 +592,9 @@ pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
             }
             done[u as usize] = true;
             remaining -= 1;
+            // per-graph completion: time is monotone, so the last
+            // assignment is the graph's finish time in the schedule
+            stats[unit_owner[u as usize] as usize].makespan = time;
             for &s in &succs[u as usize] {
                 indeg[s as usize] -= 1;
                 if indeg[s as usize] == 0 {
@@ -691,17 +744,16 @@ pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
     report.hbm_busy = chan_busy;
     report.fenand_busy = fenand_busy;
     report.prefetch_hidden = load_fw_overlap;
-    report.madds = tg
-        .nodes
-        .iter()
-        .flat_map(|n| n.ops.iter())
-        .map(|op| op.madds())
-        .sum();
+    for (ni, node) in tg.nodes.iter().enumerate() {
+        stats[owner[ni] as usize].madds +=
+            node.ops.iter().map(|op| op.madds()).sum::<u64>();
+    }
+    report.madds = stats.iter().map(|s| s.madds).sum();
     report.joules = report.dynamic_joules
         + report.seconds * p.background_w
         + report.hbm_busy * p.hbm_active_w
         + report.fenand_busy * p.fenand_active_w;
-    report
+    (report, stats)
 }
 
 /// Spread uniform-ish ops across `tiles` parallel executors: makespan =
@@ -904,6 +956,60 @@ mod tests {
         // with prefetch on, some load time hides under FW compute
         assert!(on.prefetch_hidden > 0.0);
         assert_eq!(off.prefetch_hidden, 0.0);
+    }
+
+    #[test]
+    fn batch_sim_attribution_is_schedule_independent() {
+        use crate::apsp::batch::BatchGraph;
+        let tgs: Vec<TaskGraph> = [
+            (Topology::Nws, 2_000usize, 31u64),
+            (Topology::OgbnProxy, 2_500, 32),
+            (Topology::Er, 1_500, 33),
+            (Topology::Grid, 1_600, 34),
+        ]
+        .iter()
+        .map(|&(topo, n, seed)| {
+            let (_, plan) = graph_for(n, topo, seed);
+            taskgraph::lower(&plan)
+        })
+        .collect();
+        let p = HwParams::default();
+        let solos: Vec<SimReport> = tgs.iter().map(|tg| simulate_dag(tg, &p)).collect();
+        let batch = BatchGraph::merge(tgs);
+        let (rep, stats) = simulate_batch(&batch, &p);
+        // makespan between the longest solo run and the serial sum
+        let sum: f64 = solos.iter().map(|s| s.seconds).sum();
+        let longest = solos.iter().map(|s| s.seconds).fold(0.0, f64::max);
+        assert!(
+            rep.seconds <= sum * (1.0 + 1e-9),
+            "batch {} > serial sum {sum}",
+            rep.seconds
+        );
+        assert!(
+            rep.seconds >= longest * (1.0 - 1e-9),
+            "batch {} < longest solo {longest}",
+            rep.seconds
+        );
+        // per-graph attribution is schedule-independent
+        for (i, (st, solo)) in stats.iter().zip(&solos).enumerate() {
+            assert_eq!(
+                st.dynamic_joules, solo.dynamic_joules,
+                "graph {i}: batch energy attribution != solo energy"
+            );
+            assert_eq!(st.madds, solo.madds, "graph {i}");
+            assert!(st.makespan <= rep.seconds + 1e-12, "graph {i}");
+            assert!(st.makespan > 0.0, "graph {i}");
+            let work = total_op_seconds(&batch.per_graph[i], &p);
+            assert!(
+                (st.busy - work).abs() <= 1e-9 * work.max(1.0),
+                "graph {i}: busy {} != op work {work}",
+                st.busy
+            );
+        }
+        // per-graph attribution partitions the batch totals exactly
+        let esum: f64 = stats.iter().map(|s| s.dynamic_joules).sum();
+        assert_eq!(esum, rep.dynamic_joules);
+        assert_eq!(stats.iter().map(|s| s.madds).sum::<u64>(), rep.madds);
     }
 
     #[test]

@@ -22,5 +22,5 @@ pub mod memsys;
 pub mod params;
 pub mod pcm;
 
-pub use engine::{simulate, simulate_dag, SimReport};
+pub use engine::{simulate, simulate_batch, simulate_dag, GraphSimStat, SimReport};
 pub use params::HwParams;

@@ -101,6 +101,32 @@ fn memory_guard_rejects_oversized_functional_runs() {
 }
 
 #[test]
+fn misconstructed_pjrt_executor_errors_cleanly() {
+    // An Executor constructed for native numerics whose config is then
+    // switched to the pjrt backend has no loaded runtime. Running it
+    // must return a clean error naming the problem — not panic.
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 64;
+    let mut ex = Executor::new(cfg).unwrap();
+    ex.config.backend = rapid_graph::coordinator::config::BackendKind::Pjrt;
+    let g = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+    let err = match ex.run(&g) {
+        Ok(_) => panic!("misconstructed pjrt executor must not run"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err}").contains("pjrt"),
+        "error must name the backend: {err}"
+    );
+    // the batch path fails the same way
+    let err = match ex.run_batch(std::slice::from_ref(&g)) {
+        Ok(_) => panic!("misconstructed pjrt executor must not run_batch"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("pjrt"), "{err}");
+}
+
+#[test]
 fn binary_graph_roundtrip_detects_truncation() {
     let dir = tmpdir("trunc_bin");
     let g = rapid_graph::graph::generators::erdos_renyi(

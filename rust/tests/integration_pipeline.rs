@@ -3,8 +3,9 @@
 //! the independent Algorithm-1 implementation as a cross-oracle.
 
 use rapid_graph::apsp::backend::{NativeBackend, SerialBackend};
+use rapid_graph::apsp::batch::BatchGraph;
 use rapid_graph::apsp::partitioned::partitioned_apsp;
-use rapid_graph::apsp::plan::{build_plan, PlanOptions};
+use rapid_graph::apsp::plan::{build_plan, ApspPlan, PlanOptions};
 use rapid_graph::apsp::recursive::{solve, LevelSolution, SolveOptions};
 use rapid_graph::apsp::validate::{validate_full, validate_sampled};
 use rapid_graph::apsp::{dijkstra, scheduler, taskgraph, trace::Phase};
@@ -12,7 +13,7 @@ use rapid_graph::coordinator::config::{Mode, SystemConfig};
 use rapid_graph::coordinator::executor::Executor;
 use rapid_graph::graph::csr::CsrGraph;
 use rapid_graph::graph::generators::{self, Topology, Weights};
-use rapid_graph::sim::engine::{simulate, simulate_dag};
+use rapid_graph::sim::engine::{simulate, simulate_batch, simulate_dag, total_op_seconds};
 use rapid_graph::sim::params::HwParams;
 use rapid_graph::INF;
 
@@ -260,6 +261,133 @@ fn dag_sim_makespan_never_exceeds_barrier_on_figure_workloads() {
             assert!(ediff <= 1e-9 * barrier.dynamic_joules.max(1.0));
         }
     }
+}
+
+/// Heterogeneous batch workload for the batching invariants: mixed
+/// topologies plus the two edge cases the merge must not trip on — a
+/// fully disconnected graph (zero boundary at level 0) and a
+/// single-tile graph (depth-0 direct solve).
+fn batch_workload() -> Vec<CsrGraph> {
+    let mut graphs = vec![
+        generators::generate(Topology::Nws, 500, 10.0, Weights::Uniform(0.5, 5.0), 61),
+        generators::generate(Topology::Er, 300, 10.0, Weights::Uniform(0.5, 5.0), 62),
+        generators::generate(Topology::Grid, 400, 4.0, Weights::Uniform(0.5, 5.0), 63),
+        generators::generate(Topology::OgbnProxy, 600, 10.0, Weights::Uniform(0.5, 5.0), 64),
+    ];
+    // disconnected: two cliques, no bridge (overfills one 64-tile, so
+    // level 0 partitions with zero boundary)
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    for u in 0..50u32 {
+        for v in (u + 1)..50 {
+            edges.push((u, v, 1.0));
+        }
+    }
+    for u in 50..100u32 {
+        for v in (u + 1)..100 {
+            edges.push((u, v, 1.5));
+        }
+    }
+    graphs.push(CsrGraph::from_undirected_edges(100, &edges));
+    // single tile: complete graph under the tile limit (direct solve)
+    graphs.push(generators::complete(20, Weights::Uniform(1.0, 2.0), 65));
+    graphs
+}
+
+#[test]
+fn batch_solutions_bit_identical_to_solo_runs() {
+    let graphs = batch_workload();
+    let plans: Vec<ApspPlan> = graphs.iter().map(|g| build_plan(g, plan_opts(64, 7))).collect();
+    let batch = BatchGraph::build(&plans.iter().collect::<Vec<_>>());
+    let pairs: Vec<(&CsrGraph, &ApspPlan)> = graphs.iter().zip(&plans).collect();
+    let be = NativeBackend;
+    let sols = scheduler::execute_batch(&pairs, &batch, &be, SolveOptions::default());
+    assert_eq!(sols.len(), graphs.len());
+    for (i, sol) in sols.iter().enumerate() {
+        let solo = scheduler::solve_dag(&graphs[i], &plans[i], &be, SolveOptions::default());
+        assert_eq!(solo.trace, sol.trace, "graph {i}: traces differ");
+        let diff = solo
+            .materialize_full(&be)
+            .max_diff(&sol.materialize_full(&be));
+        assert_eq!(diff, 0.0, "graph {i}: batch and solo disagree by {diff}");
+        // and correct, not just consistent
+        let oracle = dijkstra::apsp(&graphs[i]);
+        assert!(sol.materialize_full(&be).max_diff(&oracle) < 1e-3, "graph {i}");
+    }
+}
+
+#[test]
+fn batch_sim_bounds_and_energy_attribution() {
+    let graphs = batch_workload();
+    let plans: Vec<ApspPlan> = graphs.iter().map(|g| build_plan(g, plan_opts(64, 7))).collect();
+    let batch = BatchGraph::build(&plans.iter().collect::<Vec<_>>());
+    for prefetch in [true, false] {
+        let p = HwParams {
+            prefetch,
+            ..HwParams::default()
+        };
+        let solos: Vec<_> = batch
+            .per_graph
+            .iter()
+            .map(|tg| simulate_dag(tg, &p))
+            .collect();
+        let (rep, stats) = simulate_batch(&batch, &p);
+        // (b) batch makespan <= Σ solo makespans, >= the longest solo
+        let serial: f64 = solos.iter().map(|s| s.seconds).sum();
+        let longest = solos.iter().map(|s| s.seconds).fold(0.0, f64::max);
+        assert!(
+            rep.seconds <= serial * (1.0 + 1e-9),
+            "prefetch={prefetch}: batch {} > serial {serial}",
+            rep.seconds
+        );
+        assert!(
+            rep.seconds >= longest * (1.0 - 1e-9),
+            "prefetch={prefetch}: batch {} < longest solo {longest}",
+            rep.seconds
+        );
+        // (c) per-graph dynamic energy is schedule-independent and
+        // partitions the batch total
+        for (i, (st, solo)) in stats.iter().zip(&solos).enumerate() {
+            assert_eq!(
+                st.dynamic_joules, solo.dynamic_joules,
+                "graph {i} prefetch={prefetch}: attribution != solo energy"
+            );
+            assert_eq!(st.madds, solo.madds, "graph {i}");
+            assert!(st.makespan <= rep.seconds + 1e-12, "graph {i}");
+            let work = total_op_seconds(&batch.per_graph[i], &p);
+            assert!(
+                (st.busy - work).abs() <= 1e-9 * work.max(1.0),
+                "graph {i}: busy {} != op work {work}",
+                st.busy
+            );
+        }
+        let esum: f64 = stats.iter().map(|s| s.dynamic_joules).sum();
+        assert_eq!(esum, rep.dynamic_joules, "prefetch={prefetch}");
+        assert_eq!(stats.iter().map(|s| s.madds).sum::<u64>(), rep.madds);
+    }
+}
+
+#[test]
+fn executor_batch_end_to_end_with_edge_cases() {
+    let graphs = batch_workload();
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 64;
+    let ex = Executor::new(cfg).unwrap();
+    let b = ex.run_batch(&graphs).unwrap();
+    assert_eq!(b.batch_size(), graphs.len());
+    for (i, r) in b.per_graph.iter().enumerate() {
+        let v = r.validation.as_ref().expect("validation on");
+        assert!(v.ok(r.validate_tolerance), "graph {i}: {v:?}");
+    }
+    assert!(b.batch_sim.seconds <= b.solo_makespan_sum() * (1.0 + 1e-9));
+    assert!(b.batch_speedup() >= 1.0 - 1e-9);
+    // on a >= 4-graph mixed workload the interleaving must strictly
+    // beat serial submission (the acceptance gate's utilization gain)
+    assert!(
+        b.batch_sim.seconds < b.solo_makespan_sum(),
+        "no utilization gain: batch {} vs serial {}",
+        b.batch_sim.seconds,
+        b.solo_makespan_sum()
+    );
 }
 
 #[cfg(feature = "pjrt")]
