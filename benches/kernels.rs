@@ -13,6 +13,7 @@ use rapid_graph::apsp::backend::{NativeBackend, TileBackend};
 use rapid_graph::apsp::batch::BatchGraph;
 use rapid_graph::apsp::plan::{build_plan, PlanOptions};
 use rapid_graph::apsp::recursive::{solve, SolveOptions};
+use rapid_graph::apsp::shard::ShardGraph;
 use rapid_graph::apsp::taskgraph::TaskGraph;
 use rapid_graph::apsp::{floyd_warshall, scheduler, taskgraph};
 use rapid_graph::graph::csr::CsrGraph;
@@ -182,9 +183,64 @@ fn bench_batching() {
     t.print();
 }
 
+/// Shard-scaling curve: modeled makespan and interconnect occupancy vs
+/// stack count, on a boundary-light topology (OGBN-proxy communities:
+/// tiny b per component, cross-shard traffic negligible, speedup tracks
+/// the replicated channels/dies) and a boundary-heavy one (ER random:
+/// fat boundary matrices serialize on the capacity-1 interconnect and
+/// the hub's shared recursion, flattening the curve). This is where the
+/// bench shows cross-shard traffic eating the scale-out gain.
+fn bench_sharding() {
+    let hw = HwParams::default();
+    let cases: [(&str, Topology, usize, f64, u64); 2] = [
+        ("boundary-light (OGBN-proxy)", Topology::OgbnProxy, 30_000, 14.0, 11),
+        ("boundary-heavy (ER random)", Topology::Er, 12_000, 25.25, 12),
+    ];
+    for (label, topo, n, degree, seed) in cases {
+        let g = generators::generate(topo, n, degree, Weights::Uniform(1.0, 5.0), seed);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 1024,
+                max_depth: usize::MAX,
+                seed,
+            },
+        );
+        let boundary: usize = plan.boundary_sizes().first().copied().unwrap_or(0);
+        println!(
+            "shard workload [{label}]: n={} m={} tiles={} boundary(L0)={}\n",
+            g.n(),
+            g.m(),
+            rapid_graph::apsp::shard::plan_tiles(&plan),
+            boundary
+        );
+        let mut t = Table::new(
+            &format!("shard scaling: {label} (modeled)"),
+            &["stacks", "makespan", "speedup", "interconnect busy", "xfer bytes"],
+        );
+        let mut base = 0.0f64;
+        for &s in &[1usize, 2, 4, 8] {
+            let shard = ShardGraph::build(&plan, s, seed);
+            let (rep, _) = engine::simulate_sharded(&shard, &hw);
+            if s == 1 {
+                base = rep.seconds;
+            }
+            t.row(&[
+                s.to_string(),
+                fmt_time(rep.seconds),
+                fmt_ratio(base / rep.seconds),
+                fmt_time(rep.interconnect_busy),
+                rapid_graph::util::table::fmt_count(shard.xfer_bytes as usize),
+            ]);
+        }
+        t.print();
+    }
+}
+
 fn main() {
     bench_schedulers();
     bench_batching();
+    bench_sharding();
 
     let runtime = PjrtRuntime::load_default().ok();
     if runtime.is_none() {

@@ -1,0 +1,58 @@
+//! Sharded scale-out scenario — the ROADMAP's "one graph too big for
+//! one stack" shape: an OGBN-proxy workload is partitioned across 1, 2,
+//! 4, and 8 modeled PIM stacks, with the boundary recursion on a hub
+//! stack and every cross-shard boundary/dB transfer serialized on the
+//! inter-stack interconnect.
+//!
+//! Estimate mode (no host numerics) keeps the sweep cheap at a size
+//! where one stack's channels are the bottleneck, so the table shows
+//! the modeled makespan falling as stacks are added — and the
+//! interconnect column shows the cross-shard traffic that eventually
+//! caps the curve.
+//!
+//!     cargo run --release --example sharded_scaleout
+
+use rapid_graph::coordinator::config::{Mode, SystemConfig};
+use rapid_graph::coordinator::executor::Executor;
+use rapid_graph::coordinator::report;
+use rapid_graph::graph::generators::{self, Topology, Weights};
+use rapid_graph::util::table::{fmt_count, fmt_ratio, fmt_time, Table};
+
+fn main() -> rapid_graph::util::error::Result<()> {
+    let n = 60_000;
+    let g = generators::generate(Topology::OgbnProxy, n, 16.0, Weights::Uniform(1.0, 8.0), 7);
+    println!(
+        "OGBN-proxy scale-out workload: n={} m={} (estimate mode)\n",
+        fmt_count(g.n()),
+        fmt_count(g.m())
+    );
+
+    let mut t = Table::new(
+        "sharded scale-out (modeled)",
+        &["stacks", "makespan", "shard_speedup", "interconnect busy", "xfers"],
+    );
+    let mut last = None;
+    for stacks in [1usize, 2, 4, 8] {
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        cfg.num_stacks = stacks;
+        let ex = Executor::new(cfg)?;
+        let r = ex.run_sharded(&g)?;
+        t.row(&[
+            stacks.to_string(),
+            fmt_time(r.shard_sim.seconds),
+            fmt_ratio(r.shard_speedup()),
+            fmt_time(r.shard_sim.interconnect_busy),
+            r.n_xfers.to_string(),
+        ]);
+        last = Some(r);
+    }
+    t.print();
+
+    // full per-stack report for the widest configuration
+    if let Some(r) = last {
+        println!();
+        print!("{}", report::render_sharded(&r));
+    }
+    Ok(())
+}

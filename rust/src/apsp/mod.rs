@@ -15,6 +15,9 @@
 //!   the task graph (bit-identical to the barrier walk).
 //! * [`batch`] — multi-graph batch engine: union of independent task
 //!   graphs into one shared-resource schedule.
+//! * [`shard`] — sharded multi-stack execution: one over-large graph
+//!   partitioned across modeled PIM stacks with explicit inter-stack
+//!   boundary/dB transfers.
 //! * [`trace`] — the operation trace consumed by the PIM simulator
 //!   (a deterministic topological lowering of the task graph).
 //! * [`validate`] — cross-implementation validation helpers.
@@ -28,6 +31,7 @@ pub mod partitioned;
 pub mod plan;
 pub mod recursive;
 pub mod scheduler;
+pub mod shard;
 pub mod taskgraph;
 pub mod trace;
 pub mod validate;

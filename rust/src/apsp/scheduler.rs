@@ -19,6 +19,7 @@
 use super::backend::{fw_any, TileBackend};
 use super::batch::BatchGraph;
 use super::plan::ApspPlan;
+use super::shard::ShardGraph;
 use super::recursive::{
     batch_uses_serial_kernel, check_memory_guard, fill_block_from_boundary,
     fill_block_from_graph, materialize_partitioned, projected_bytes, vert_locations,
@@ -199,6 +200,52 @@ pub fn execute_batch<'p>(
         .zip(&batch.per_graph)
         .map(|((&(g, plan), s), tg)| assemble(g, plan, tg.to_trace(), s))
         .collect()
+}
+
+/// Execute a sharded task graph ([`ShardGraph`]) with **per-stack
+/// worker pools** ([`threads::par_dag_grouped`]): every task runs on a
+/// worker pinned to its stack affinity, modeling each stack's own host
+/// executor, while dependency edges (including the spliced `StackXfer`
+/// nodes) cross pools freely.
+///
+/// Slot namespaces are per-stack by construction: each stack owns
+/// exactly the `d[0][c]` slots of its assigned components, and the hub
+/// stack owns everything else (deeper levels, `db`, the terminal).
+/// `StackXfer` nodes carry no host numerics — they only order the
+/// cross-stack reads the simulator charges — so the solution is
+/// **bit-identical** to a solo [`execute`] run (same kernels, same
+/// inputs, same rounding order; asserted `max_diff == 0.0` in the
+/// integration tests for every tested stack count).
+pub fn execute_sharded<'p>(
+    g: &CsrGraph,
+    plan: &'p ApspPlan,
+    shard: &ShardGraph,
+    backend: &dyn TileBackend,
+    opts: SolveOptions,
+) -> ApspSolution<'p> {
+    check_memory_guard(plan, g, &opts);
+    let mut slots = Slots::new(plan);
+    let (local_serial, rerun_serial) = kernel_choices(plan, backend);
+
+    {
+        let slots = &slots;
+        let deps = shard.sharded.dep_lists();
+        threads::par_dag_grouped(&deps, &shard.affinity, shard.num_stacks, |ti| {
+            run_task(
+                &shard.sharded.nodes[ti].kind,
+                g,
+                plan,
+                backend,
+                slots,
+                &local_serial,
+                &rerun_serial,
+            )
+        });
+    }
+
+    // the reported trace is the solo lowering's — sharding changes the
+    // schedule and adds transfers, not the algorithmic work
+    assemble(g, plan, shard.solo.to_trace(), &mut slots)
 }
 
 /// Mirror the barrier walk's per-batch kernel choice (serial rowwise FW
@@ -410,7 +457,10 @@ fn run_task(
             unsafe { slots.db[m - 1].put(out) };
         }
         // pure transfer/bookkeeping nodes: no host numerics
-        TaskKind::BoundaryBuild { .. } | TaskKind::Sync { .. } | TaskKind::Store { .. } => {}
+        TaskKind::BoundaryBuild { .. }
+        | TaskKind::Sync { .. }
+        | TaskKind::Store { .. }
+        | TaskKind::StackXfer { .. } => {}
     }
 }
 

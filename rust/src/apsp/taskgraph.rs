@@ -62,6 +62,12 @@ pub enum TaskKind {
     /// CSR-compress + FeNAND-program a level's results (also the
     /// terminal store of a direct, unpartitioned solve).
     Store { level: u32 },
+    /// Inter-stack transfer in a sharded run: move a producer's output
+    /// from stack `from` to stack `to` over the shared interconnect.
+    /// Never emitted by [`lower`]; inserted by [`super::shard`] on
+    /// every edge whose producer and consumer carry different stack
+    /// affinities. Pure data movement — no host numerics.
+    StackXfer { from: u32, to: u32 },
 }
 
 /// One node of the tile-task DAG.

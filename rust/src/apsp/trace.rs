@@ -31,6 +31,11 @@ pub enum Phase {
     Store,
     /// terminal dense solve of the last boundary graph
     FinalSolve,
+    /// Inter-stack transfer in a sharded run (boundary matrices and dB
+    /// injections crossing the modeled stack-to-stack interconnect).
+    /// Never emitted by [`super::taskgraph::lower`]; inserted by
+    /// [`super::shard`] on cross-stack edges.
+    StackXfer,
 }
 
 impl Phase {
@@ -45,6 +50,7 @@ impl Phase {
             Phase::Sync => "sync",
             Phase::Store => "store",
             Phase::FinalSolve => "final_solve",
+            Phase::StackXfer => "stack_xfer",
         }
     }
 }
@@ -88,6 +94,9 @@ pub enum Op {
     StoreDense { bytes: u64 },
     /// Fetch interleaved boundary matrices from FeNAND (step 7).
     FetchBoundary { bytes: u64 },
+    /// Move `bytes` across the inter-stack interconnect (sharded
+    /// execution: boundary matrices to the hub, dB slices back).
+    StackXfer { bytes: u64 },
 }
 
 impl Op {

@@ -108,6 +108,9 @@ pub struct SystemConfig {
     /// Graphs per batch submission (`Executor::run_batch` and the
     /// `--batch` CLI mode generate/accept this many).
     pub batch_size: usize,
+    /// Modeled PIM stacks for sharded execution
+    /// (`Executor::run_sharded` / `apsp --stacks`). 1 = solo run.
+    pub num_stacks: usize,
 }
 
 impl Default for SystemConfig {
@@ -125,6 +128,7 @@ impl Default for SystemConfig {
             validate_tolerance: 1e-3,
             memory_limit_bytes: 12 << 30,
             batch_size: 4,
+            num_stacks: 1,
         }
     }
 }
@@ -155,6 +159,7 @@ impl SystemConfig {
         self.validate_tolerance =
             cf.get_f64("run.validate_tolerance", self.validate_tolerance as f64) as f32;
         self.batch_size = cf.get_usize("run.batch_size", self.batch_size);
+        self.num_stacks = cf.get_usize("run.num_stacks", self.num_stacks);
         // hardware overrides
         let hw = &mut self.hw;
         hw.tiles_per_die = cf.get_usize("hardware.tiles_per_die", hw.tiles_per_die);
@@ -195,6 +200,7 @@ impl SystemConfig {
         self.validate_tolerance =
             args.get_f64("validate-tolerance", self.validate_tolerance as f64) as f32;
         self.batch_size = args.get_usize("batch-size", self.batch_size);
+        self.num_stacks = args.get_usize("stacks", self.num_stacks);
     }
 
     pub fn plan_options(&self) -> crate::apsp::plan::PlanOptions {
@@ -220,6 +226,25 @@ mod tests {
         assert!(c.hw.prefetch);
         assert_eq!(c.validate_tolerance, 1e-3);
         assert_eq!(c.batch_size, 4);
+        assert_eq!(c.num_stacks, 1);
+    }
+
+    #[test]
+    fn stacks_knob_parses_and_overrides() {
+        let cf = ConfigFile::parse("[run]\nnum_stacks = 4").unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        assert_eq!(c.num_stacks, 4);
+        let args = crate::util::cli::Args::parse(
+            ["--stacks", "8"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.num_stacks, 8);
+        // 0 parses (the executor rejects it with a clean error)
+        let args = crate::util::cli::Args::parse(
+            ["--stacks", "0"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.num_stacks, 0);
     }
 
     #[test]

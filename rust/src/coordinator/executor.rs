@@ -2,18 +2,22 @@
 //! simulation → validation. One `Executor::run` call is one
 //! experiment; one `Executor::run_batch` call is one scheduled
 //! workload set — N independent graphs merged into a single
-//! shared-resource schedule.
+//! shared-resource schedule; one `Executor::run_sharded` call is one
+//! over-large graph split across `run.num_stacks` modeled PIM stacks.
 
 use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig};
 use crate::apsp::backend::{NativeBackend, TileBackend};
 use crate::apsp::batch::BatchGraph;
 use crate::apsp::plan::{build_plan, ApspPlan};
 use crate::apsp::recursive::{self, solve, ApspSolution, SolveOptions};
+use crate::apsp::shard::{plan_tiles, ShardGraph};
 use crate::apsp::validate::{validate_sampled, Validation};
 use crate::apsp::{scheduler, taskgraph};
 use crate::graph::csr::CsrGraph;
 use crate::runtime::{PjrtBackend, PjrtRuntime};
-use crate::sim::engine::{simulate, simulate_batch, simulate_dag, GraphSimStat, SimReport};
+use crate::sim::engine::{
+    simulate, simulate_batch, simulate_dag, simulate_sharded, GraphSimStat, SimReport,
+};
 use crate::util::error::Result;
 use crate::{ensure, err};
 
@@ -133,7 +137,19 @@ impl Executor {
     /// cannot reorder it), but each graph's solo baseline honors the
     /// knob so it matches what an individual `run` reports.
     pub fn run_batch(&self, graphs: &[CsrGraph]) -> Result<BatchRunResult> {
-        ensure!(!graphs.is_empty(), "run_batch needs at least one graph");
+        ensure!(
+            !graphs.is_empty(),
+            "run_batch needs at least one graph (an empty batch has no \
+             makespan to schedule, so batch_speedup would be 0/0)"
+        );
+        for (i, g) in graphs.iter().enumerate() {
+            ensure!(
+                g.n() > 0,
+                "run_batch: graph {i} of {} is empty (0 vertices) — it \
+                 contributes no schedulable work",
+                graphs.len()
+            );
+        }
         let plans: Vec<ApspPlan> = graphs.iter().map(|g| self.plan(g)).collect();
         let plan_refs: Vec<&ApspPlan> = plans.iter().collect();
         let batch = BatchGraph::build(&plan_refs);
@@ -189,6 +205,82 @@ impl Executor {
             per_graph,
             batch_stats,
             batch_sim,
+            host_solve_seconds,
+        })
+    }
+
+    /// Shard one over-large graph across `run.num_stacks` modeled PIM
+    /// stacks ([`ShardGraph`]): level-0 components are placed whole on
+    /// a stack (cut-minimized, work-balanced), the boundary recursion
+    /// runs on the hub stack, and every cross-stack edge becomes an
+    /// explicit transfer on the modeled interconnect. Host numerics run
+    /// with per-stack worker pools and are **bit-identical** to a solo
+    /// [`Executor::run`]; the simulator replicates the resource set per
+    /// stack and reports the sharded makespan against the 1-stack solo
+    /// baseline (`shard_speedup = solo makespan / sharded makespan`).
+    pub fn run_sharded(&self, g: &CsrGraph) -> Result<ShardRunResult> {
+        let s = self.config.num_stacks;
+        ensure!(
+            s >= 1,
+            "run.num_stacks must be >= 1 (got 0); use --stacks 1 for the solo baseline"
+        );
+        let plan = self.plan(g);
+        let tiles = plan_tiles(&plan);
+        ensure!(
+            s <= tiles,
+            "run.num_stacks = {s} exceeds the plan's {tiles} tile(s) — every stack \
+             needs at least one component; lower --stacks or shrink --tile"
+        );
+        let shard = ShardGraph::build(&plan, s, self.config.seed);
+
+        let solve_opts = SolveOptions {
+            memory_limit_bytes: self.config.memory_limit_bytes,
+        };
+        let native = NativeBackend;
+        let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
+        let backend = self.select_backend(&native, &pjrt_adapter)?;
+
+        let t0 = std::time::Instant::now();
+        let sol: Option<ApspSolution> =
+            backend.map(|be| scheduler::execute_sharded(g, &plan, &shard, be, solve_opts));
+        let host_solve_seconds = if sol.is_some() {
+            t0.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+
+        let (shard_sim, stack_stats) = simulate_sharded(&shard, &self.config.hw);
+        // 1-stack solo baseline on the same lowering. Sharded execution
+        // is inherently dependency-driven (the `scheduler` knob cannot
+        // reorder it), so the baseline is always the DAG schedule too —
+        // otherwise `shard_speedup` would fold the barrier-vs-dag
+        // scheduler gap into the sharding gain. At S = 1 the sharded
+        // graph *is* the solo graph, so the schedule is reused.
+        let solo_sim = if s == 1 {
+            shard_sim.clone()
+        } else {
+            simulate_dag(&shard.solo, &self.config.hw)
+        };
+        let validation = match (&sol, self.config.validate_sources) {
+            (Some(sol), n) if n > 0 => Some(validate_sampled(
+                g,
+                sol,
+                n,
+                self.config.validate_cols,
+                self.config.validate_tolerance,
+                self.config.seed ^ 0xFEED,
+            )),
+            _ => None,
+        };
+        let comps_per_stack = shard.comps_per_stack();
+        Ok(ShardRunResult {
+            solo: self.make_result(g, &plan, solo_sim, validation, 0.0),
+            stack_stats,
+            shard_sim,
+            num_stacks: s,
+            comps_per_stack,
+            n_xfers: shard.n_xfers,
+            xfer_bytes: shard.xfer_bytes,
             host_solve_seconds,
         })
     }
@@ -287,6 +379,39 @@ impl BatchRunResult {
             1.0
         } else {
             self.solo_makespan_sum() / self.batch_sim.seconds
+        }
+    }
+}
+
+/// Everything one sharded run produces.
+pub struct ShardRunResult {
+    /// The 1-stack solo baseline (its `sim` is what a plain
+    /// [`Executor::run`] would report; the validation comes from the
+    /// sharded host execution).
+    pub solo: RunResult,
+    /// Per-stack attribution inside the sharded schedule (completion
+    /// time, busy work, dynamic energy by node affinity).
+    pub stack_stats: Vec<GraphSimStat>,
+    /// The sharded workload on `num_stacks` replicated resource sets.
+    pub shard_sim: SimReport,
+    pub num_stacks: usize,
+    /// Level-0 components placed on each stack.
+    pub comps_per_stack: Vec<usize>,
+    /// Inter-stack transfers inserted on cross-shard edges.
+    pub n_xfers: usize,
+    /// Total bytes over the inter-stack interconnect.
+    pub xfer_bytes: u64,
+    /// Host wall time of the sharded functional execution.
+    pub host_solve_seconds: f64,
+}
+
+impl ShardRunResult {
+    /// Scale-out gain: solo (1-stack) makespan / sharded makespan.
+    pub fn shard_speedup(&self) -> f64 {
+        if self.shard_sim.seconds == 0.0 {
+            1.0
+        } else {
+            self.solo.sim.seconds / self.shard_sim.seconds
         }
     }
 }
@@ -416,6 +541,52 @@ mod tests {
         assert!(b.batch_sim.seconds > 0.0);
         assert!(b.per_graph.iter().all(|r| r.validation.is_none()));
         assert_eq!(b.batch_stats.len(), 2);
+    }
+
+    #[test]
+    fn run_sharded_end_to_end() {
+        let g = graph(900, 41);
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        cfg.num_stacks = 2;
+        let ex = Executor::new(cfg).unwrap();
+        let r = ex.run_sharded(&g).unwrap();
+        assert_eq!(r.num_stacks, 2);
+        assert!(r.solo.validation.as_ref().unwrap().ok(1e-3));
+        assert!(r.shard_sim.seconds > 0.0);
+        assert!(r.host_solve_seconds > 0.0);
+        assert_eq!(r.stack_stats.len(), 2);
+        assert_eq!(r.comps_per_stack.iter().sum::<usize>(), r.solo.components_l0);
+        assert!(r.n_xfers > 0 && r.xfer_bytes > 0);
+        // per-stack energy partitions the sharded total exactly
+        let esum: f64 = r.stack_stats.iter().map(|s| s.dynamic_joules).sum();
+        assert_eq!(esum, r.shard_sim.dynamic_joules);
+        assert!(r.shard_speedup() > 0.0);
+    }
+
+    #[test]
+    fn run_sharded_one_stack_matches_solo_run() {
+        let g = graph(700, 42);
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        cfg.num_stacks = 1;
+        let ex = Executor::new(cfg).unwrap();
+        let r = ex.run_sharded(&g).unwrap();
+        let solo = ex.run(&g).unwrap();
+        assert_eq!(r.shard_sim.seconds, solo.sim.seconds);
+        assert_eq!(r.shard_sim.dynamic_joules, solo.sim.dynamic_joules);
+        assert_eq!(r.n_xfers, 0);
+        assert!((r.shard_speedup() - 1.0).abs() < 1e-12);
+        // the baseline is scheduler-knob-independent: a barrier-config
+        // 1-stack run must still report speedup 1.0 (not the
+        // barrier-vs-dag scheduler gap)
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        cfg.num_stacks = 1;
+        cfg.scheduler = crate::coordinator::config::SchedulerKind::Barrier;
+        cfg.mode = Mode::Estimate;
+        let rb = Executor::new(cfg).unwrap().run_sharded(&g).unwrap();
+        assert!((rb.shard_speedup() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Human-readable run reports: the coordinator's metrics output.
 
-use super::executor::{BatchRunResult, RunResult};
+use super::executor::{BatchRunResult, RunResult, ShardRunResult};
 use crate::apsp::trace::Phase;
 use crate::util::table::{fmt_count, fmt_energy, fmt_ratio, fmt_time, Table};
 
@@ -137,6 +137,78 @@ pub fn render_batch(b: &BatchRunResult) -> String {
     out
 }
 
+/// Render the report for one sharded run: a per-stack table (placed
+/// components, busy work, energy, finish time) plus the scale-out
+/// summary against the 1-stack solo baseline.
+pub fn render_sharded(r: &ShardRunResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "RAPID-Graph sharded run: n={} m={} stacks={} mode={} backend={}\n",
+        fmt_count(r.solo.graph_n),
+        fmt_count(r.solo.graph_m),
+        r.num_stacks,
+        r.solo.mode.name(),
+        r.solo.backend_name,
+    ));
+    out.push_str(&format!(
+        "recursion: depth={} components(L0)={} boundary={:?} final_n={}\n",
+        r.solo.depth,
+        r.solo.components_l0,
+        r.solo
+            .boundary_sizes
+            .iter()
+            .map(|&b| fmt_count(b))
+            .collect::<Vec<_>>(),
+        r.solo.final_n,
+    ));
+    let mut t = Table::new(
+        "sharded schedule (per stack)",
+        &["stack", "components", "busy work", "dyn energy", "finish"],
+    );
+    for (s, (stat, &comps)) in r.stack_stats.iter().zip(&r.comps_per_stack).enumerate() {
+        t.row(&[
+            s.to_string(),
+            comps.to_string(),
+            fmt_time(stat.busy),
+            fmt_energy(stat.dynamic_joules),
+            fmt_time(stat.makespan),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "sharded: makespan={} vs 1-stack solo {} -> shard_speedup {}; \
+         FW util {:.1}%/stack, interconnect busy {} ({} transfers, {} B), energy={}\n",
+        fmt_time(r.shard_sim.seconds),
+        fmt_time(r.solo.sim.seconds),
+        fmt_ratio(r.shard_speedup()),
+        100.0 * r.shard_sim.fw_utilization(),
+        fmt_time(r.shard_sim.interconnect_busy),
+        r.n_xfers,
+        fmt_count(r.xfer_bytes as usize),
+        fmt_energy(r.shard_sim.joules),
+    ));
+    if let Some(v) = &r.solo.validation {
+        out.push_str(&format!(
+            "validation (sharded host run): {} samples, max err {:.2e}, {} mismatches -> {}\n",
+            v.checked,
+            v.max_abs_err,
+            v.mismatches,
+            if v.ok(r.solo.validate_tolerance) {
+                "EXACT"
+            } else {
+                "FAILED"
+            },
+        ));
+    }
+    if r.host_solve_seconds > 0.0 {
+        out.push_str(&format!(
+            "host numerics (sharded): {}\n",
+            fmt_time(r.host_solve_seconds)
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use crate::coordinator::config::SystemConfig;
@@ -172,6 +244,23 @@ mod tests {
         assert!(text.contains("RAPID-Graph batch: 2 graphs"));
         assert!(text.contains("batch schedule"));
         assert!(text.contains("speedup"));
+        assert!(text.contains("EXACT"));
+    }
+
+    #[test]
+    fn sharded_report_contains_key_sections() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        cfg.num_stacks = 2;
+        let ex = Executor::new(cfg).unwrap();
+        let g = generators::generate(Topology::OgbnProxy, 500, 10.0, Weights::Unit, 3);
+        let r = ex.run_sharded(&g).unwrap();
+        let text = super::render_sharded(&r);
+        assert!(text.contains("RAPID-Graph sharded run"));
+        assert!(text.contains("stacks=2"));
+        assert!(text.contains("sharded schedule"));
+        assert!(text.contains("shard_speedup"));
+        assert!(text.contains("interconnect busy"));
         assert!(text.contains("EXACT"));
     }
 }

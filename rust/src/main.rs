@@ -5,7 +5,9 @@
 //!   apsp       run the full pipeline (partition -> recursive APSP ->
 //!              PIM simulation -> validation) and print the report;
 //!              with --batch, merge N independent graphs into one
-//!              shared-resource schedule and print the batch table
+//!              shared-resource schedule and print the batch table;
+//!              with --stacks S, shard one graph across S modeled PIM
+//!              stacks and print the scale-out table
 //!   figure     regenerate a paper figure/table (7, 8, 9a, 9b, 9c, table3)
 //!   validate   exhaustive Dijkstra validation on a small graph
 //!
@@ -14,6 +16,7 @@
 //!   rapid-graph apsp --graph g.bin --mode estimate
 //!   rapid-graph apsp --batch --batch-size 8 --nodes 5000 --mode estimate
 //!   rapid-graph apsp --batch --graphs a.bin,b.bin,c.bin
+//!   rapid-graph apsp --stacks 4 --topo ogbn --nodes 50000 --mode estimate
 //!   rapid-graph figure --id 7
 //!   rapid-graph generate --topo ogbn --nodes 100000 --out g.bin
 
@@ -52,6 +55,7 @@ fn dispatch(args: &Args) -> Result<()> {
                         ("generate", "--topo nws|er|ogbn|grid --nodes N [--degree D] [--seed S] --out FILE"),
                         ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--scheduler dag|barrier] [--tile T] [--max-depth D] [--validate-tolerance TOL] [--config FILE]"),
                         ("apsp --batch", "[--batch-size N] [--graphs F1,F2,.. | --topo T --nodes N] merge N graphs into one shared-resource schedule"),
+                        ("apsp --stacks", "S [--graph FILE | --topo T --nodes N] shard one graph across S modeled PIM stacks"),
                         ("figure", "--id 7|8|9a|9b|9c|table3 [--full]"),
                         ("validate", "--nodes N [--topo T] [--tile T]"),
                     ]
@@ -123,8 +127,21 @@ fn cmd_apsp(args: &Args) -> Result<()> {
     if args.subcommand() == Some("simulate") {
         cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
     }
-    if args.flag("batch") || args.get("batch").is_some() || args.get("graphs").is_some() {
+    let batch_mode =
+        args.flag("batch") || args.get("batch").is_some() || args.get("graphs").is_some();
+    if batch_mode {
+        // an explicit --batch wins over a config file's run.num_stacks
+        // (so a sharding config doesn't lock batch mode out); combining
+        // it with an explicit multi-stack request is ambiguous
+        ensure!(
+            args.get_usize("stacks", 1) <= 1,
+            "--batch and --stacks are separate modes; pick one"
+        );
+        cfg.num_stacks = 1;
         return cmd_batch(args, cfg);
+    }
+    if args.get("stacks").is_some() || cfg.num_stacks != 1 {
+        return cmd_sharded(args, cfg);
     }
     let g = graph_from_args(args)?;
     let ex = Executor::new(cfg)?;
@@ -182,6 +199,22 @@ fn cmd_batch(args: &Args, cfg: rapid_graph::coordinator::config::SystemConfig) -
             if !v.ok(r.validate_tolerance) {
                 bail!("validation FAILED");
             }
+        }
+    }
+    Ok(())
+}
+
+/// `apsp --stacks S`: shard one graph across S modeled PIM stacks and
+/// report the scale-out table (per-stack attribution, interconnect
+/// traffic, speedup over the 1-stack solo baseline).
+fn cmd_sharded(args: &Args, cfg: rapid_graph::coordinator::config::SystemConfig) -> Result<()> {
+    let g = graph_from_args(args)?;
+    let ex = Executor::new(cfg)?;
+    let r = ex.run_sharded(&g)?;
+    print!("{}", report::render_sharded(&r));
+    if let Some(v) = &r.solo.validation {
+        if !v.ok(r.solo.validate_tolerance) {
+            bail!("validation FAILED");
         }
     }
     Ok(())

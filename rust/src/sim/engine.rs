@@ -29,6 +29,7 @@ use super::memsys;
 use super::params::HwParams;
 use super::pcm;
 use crate::apsp::batch::BatchGraph;
+use crate::apsp::shard::ShardGraph;
 use crate::apsp::taskgraph::TaskGraph;
 use crate::apsp::trace::{Op, Phase, Step, Trace};
 use std::collections::HashMap;
@@ -56,6 +57,13 @@ pub struct SimReport {
     pub mp_busy: f64,
     pub hbm_busy: f64,
     pub fenand_busy: f64,
+    /// Busy-seconds of the inter-stack interconnect (sharded runs only;
+    /// 0 for solo and batch schedules).
+    pub interconnect_busy: f64,
+    /// Modeled stack count of the run (1 for solo/batch schedules, `S`
+    /// for [`simulate_sharded`]). Busy seconds are summed across
+    /// stacks, so the utilization methods normalize by this.
+    pub stacks: usize,
     /// Total min-add candidates (work measure).
     pub madds: u64,
     /// Seconds hidden by load/compute prefetch overlap.
@@ -63,19 +71,20 @@ pub struct SimReport {
 }
 
 impl SimReport {
-    /// FW-die utilization in [0,1].
+    /// FW-die utilization in [0,1] (averaged over the run's stacks).
     pub fn fw_utilization(&self) -> f64 {
         if self.seconds == 0.0 {
             0.0
         } else {
-            self.fw_busy / self.seconds
+            self.fw_busy / (self.seconds * self.stacks.max(1) as f64)
         }
     }
+    /// MP-die utilization in [0,1] (averaged over the run's stacks).
     pub fn mp_utilization(&self) -> f64 {
         if self.seconds == 0.0 {
             0.0
         } else {
-            self.mp_busy / self.seconds
+            self.mp_busy / (self.seconds * self.stacks.max(1) as f64)
         }
     }
     /// Effective min-add throughput (per second).
@@ -108,7 +117,10 @@ enum ResKind {
 /// Simulate a trace; returns the report.
 pub fn simulate(trace: &Trace, p: &HwParams) -> SimReport {
     let costs: Vec<StepCost> = trace.steps.iter().map(|s| step_cost(s, p)).collect();
-    let mut report = SimReport::default();
+    let mut report = SimReport {
+        stacks: 1,
+        ..SimReport::default()
+    };
     let mut i = 0;
     while i < trace.steps.len() {
         let step = &trace.steps[i];
@@ -233,6 +245,28 @@ fn step_cost(step: &Step, p: &HwParams) -> StepCost {
                 kind: ResKind::Channel,
             }
         }
+        Phase::StackXfer => {
+            // sharded traces are dag-scheduled; cost the ops anyway so
+            // a stray barrier pass stays total
+            let mut secs = 0.0;
+            let mut joules = 0.0;
+            for op in &step.ops {
+                match op {
+                    Op::StackXfer { bytes } => {
+                        let x = memsys::interstack(p, *bytes);
+                        secs += x.secs;
+                        joules += x.joules;
+                    }
+                    other => panic!("unexpected op {other:?} in StackXfer step"),
+                }
+            }
+            StepCost {
+                secs,
+                joules,
+                min_visible: secs,
+                kind: ResKind::Channel,
+            }
+        }
         Phase::BoundaryBuild | Phase::Inject | Phase::Sync | Phase::Store => {
             let mut secs = 0.0;
             let mut joules = 0.0;
@@ -291,6 +325,9 @@ enum UnitRes {
     Hbm,
     /// FeNAND channels (CSR store, dense store, boundary fetch).
     Fenand,
+    /// The inter-stack interconnect: one capacity-1 channel shared by
+    /// all stacks of a sharded run.
+    Interstack,
     /// Pure dependency bookkeeping, zero cost.
     None,
 }
@@ -360,6 +397,10 @@ fn op_unit(op: &Op, phase: Phase, p: &HwParams) -> SimUnit {
             let x = memsys::fenand_read(p, *bytes);
             (UnitRes::Fenand, x.secs, x.joules, false)
         }
+        Op::StackXfer { bytes } => {
+            let x = memsys::interstack(p, *bytes);
+            (UnitRes::Interstack, x.secs, x.joules, false)
+        }
     };
     SimUnit {
         res,
@@ -420,7 +461,26 @@ pub struct GraphSimStat {
 /// resource model. Returns the batch-level report (makespan, busy
 /// times, total energy) plus the per-graph attribution.
 pub fn simulate_batch(batch: &BatchGraph, p: &HwParams) -> (SimReport, Vec<GraphSimStat>) {
-    simulate_dag_attributed(&batch.merged, &batch.owner, batch.n_graphs(), p)
+    let stack = vec![0u32; batch.merged.n_tasks()];
+    simulate_dag_attributed(&batch.merged, &batch.owner, batch.n_graphs(), &stack, 1, p)
+}
+
+/// Simulate a sharded run ([`ShardGraph`]): `num_stacks` replicated
+/// FW/MP/UCIe/HBM/FeNAND resource sets (one per modeled stack) plus the
+/// capacity-1 inter-stack interconnect serializing every `StackXfer`.
+/// Returns the sharded report plus the per-stack attribution by node
+/// affinity (makespan, busy work, dynamic energy — exactly as
+/// [`simulate_batch`] attributes by owner, so the per-stack energies
+/// partition the total bit-exactly).
+pub fn simulate_sharded(shard: &ShardGraph, p: &HwParams) -> (SimReport, Vec<GraphSimStat>) {
+    simulate_dag_attributed(
+        &shard.sharded,
+        &shard.affinity,
+        shard.num_stacks,
+        &shard.affinity,
+        shard.num_stacks,
+        p,
+    )
 }
 
 /// Simulate a tile-task DAG with dependency-aware list scheduling.
@@ -433,20 +493,28 @@ pub fn simulate_batch(batch: &BatchGraph, p: &HwParams) -> (SimReport, Vec<Graph
 /// per step, while letting independent levels overlap.
 pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
     let owner = vec![0u32; tg.n_tasks()];
-    simulate_dag_attributed(tg, &owner, 1, p).0
+    simulate_dag_attributed(tg, &owner, 1, &owner, 1, p).0
 }
 
-/// The list scheduler proper, with per-graph ownership attribution
-/// (`owner[node]` in `0..n_graphs`; a solo run is a one-graph batch).
+/// The list scheduler proper, with per-owner attribution (`owner[node]`
+/// in `0..n_owners`; a solo run is a one-owner batch) and per-stack
+/// resource placement (`stack[node]` in `0..n_stacks`: each stack has
+/// its own FW die, MP die, and UCIe/HBM/FeNAND channels; the
+/// inter-stack interconnect is one shared capacity-1 channel). Batch
+/// runs attribute by graph on one stack; sharded runs attribute by
+/// stack with `owner == stack`.
 fn simulate_dag_attributed(
     tg: &TaskGraph,
     owner: &[u32],
-    n_graphs: usize,
+    n_owners: usize,
+    stack: &[u32],
+    n_stacks: usize,
     p: &HwParams,
 ) -> (SimReport, Vec<GraphSimStat>) {
     // ---- explode tasks into op units, chaining ops within a task
     let mut units: Vec<SimUnit> = Vec::new();
     let mut unit_owner: Vec<u32> = Vec::new();
+    let mut unit_stack: Vec<u32> = Vec::new();
     let mut deps: Vec<Vec<u32>> = Vec::new();
     let mut last_unit_of_task: Vec<u32> = Vec::with_capacity(tg.nodes.len());
     for (ni, node) in tg.nodes.iter().enumerate() {
@@ -464,11 +532,13 @@ fn simulate_dag_attributed(
                 is_load: false,
             });
             unit_owner.push(owner[ni]);
+            unit_stack.push(stack[ni]);
             deps.push(entry_deps);
         } else {
             for (oi, op) in node.ops.iter().enumerate() {
                 units.push(op_unit(op, node.phase, p));
                 unit_owner.push(owner[ni]);
+                unit_stack.push(stack[ni]);
                 if oi == 0 {
                     deps.push(entry_deps.clone());
                 } else {
@@ -519,11 +589,14 @@ fn simulate_dag_attributed(
         cp[i] = units[i].secs + tail;
     }
 
-    // ---- schedule-independent accounting (per graph first, then the
-    // batch totals as sums of the per-graph sums — so per-graph values
-    // are bit-identical to a solo run and sum exactly to the total)
-    let mut report = SimReport::default();
-    let mut stats = vec![GraphSimStat::default(); n_graphs];
+    // ---- schedule-independent accounting (per owner first, then the
+    // totals as sums of the per-owner sums — so per-owner values are
+    // bit-identical to a solo run and sum exactly to the total)
+    let mut report = SimReport {
+        stacks: n_stacks,
+        ..SimReport::default()
+    };
+    let mut stats = vec![GraphSimStat::default(); n_owners];
     for (i, u) in units.iter().enumerate() {
         if u.res == UnitRes::None {
             continue;
@@ -538,38 +611,54 @@ fn simulate_dag_attributed(
     }
     report.dynamic_joules = stats.iter().map(|s| s.dynamic_joules).sum();
 
-    // ---- event-driven list schedule
+    // ---- event-driven list schedule over per-stack resource sets.
+    // Channel kinds per stack, in fixed start/completion order:
     use std::collections::BinaryHeap;
-    let mut ready_q: HashMap<UnitRes, BinaryHeap<Pri>> = HashMap::new();
+    const MP: usize = 0;
+    const UCIE: usize = 1;
+    const HBM: usize = 2;
+    const FENAND: usize = 3;
+    let ch_idx = |r: UnitRes| -> usize {
+        match r {
+            UnitRes::MpDie => MP,
+            UnitRes::Ucie => UCIE,
+            UnitRes::Hbm => HBM,
+            UnitRes::Fenand => FENAND,
+            _ => unreachable!("not a per-stack channel"),
+        }
+    };
+    let mut ready_ch: Vec<[BinaryHeap<Pri>; 4]> = (0..n_stacks)
+        .map(|_| std::array::from_fn(|_| BinaryHeap::new()))
+        .collect();
+    let mut ready_fw: Vec<BinaryHeap<Pri>> = (0..n_stacks).map(|_| BinaryHeap::new()).collect();
+    let mut ready_inter: BinaryHeap<Pri> = BinaryHeap::new();
     let mut zero_ready: Vec<u32> = Vec::new();
-    let mut fw_active: Vec<(u32, f64)> = Vec::new(); // (unit, remaining)
-    let mut chan: HashMap<UnitRes, Option<(u32, f64)>> = HashMap::new();
-    for r in [UnitRes::MpDie, UnitRes::Ucie, UnitRes::Hbm, UnitRes::Fenand] {
-        chan.insert(r, None);
-        ready_q.insert(r, BinaryHeap::new());
-    }
-    ready_q.insert(UnitRes::FwDie, BinaryHeap::new());
+    // (unit, remaining) per stack's malleable FW die
+    let mut fw_active: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n_stacks];
+    let mut chan: Vec<[Option<(u32, f64)>; 4]> = vec![[None; 4]; n_stacks];
+    let mut inter: Option<(u32, f64)> = None;
 
     let mut remaining = n;
     let mut done = vec![false; n];
-    let enqueue = |u: u32,
-                   units: &[SimUnit],
-                   cp: &[f64],
-                   ready_q: &mut HashMap<UnitRes, BinaryHeap<Pri>>,
-                   zero_ready: &mut Vec<u32>| {
-        let unit = &units[u as usize];
-        if unit.res == UnitRes::None || unit.secs <= 0.0 {
-            zero_ready.push(u);
-        } else {
-            ready_q
-                .get_mut(&unit.res)
-                .unwrap()
-                .push(Pri(cp[u as usize], u));
-        }
-    };
+    macro_rules! enqueue {
+        ($u:expr) => {{
+            let u: u32 = $u;
+            let unit = &units[u as usize];
+            if unit.res == UnitRes::None || unit.secs <= 0.0 {
+                zero_ready.push(u);
+            } else {
+                let pri = Pri(cp[u as usize], u);
+                match unit.res {
+                    UnitRes::FwDie => ready_fw[unit_stack[u as usize] as usize].push(pri),
+                    UnitRes::Interstack => ready_inter.push(pri),
+                    r => ready_ch[unit_stack[u as usize] as usize][ch_idx(r)].push(pri),
+                }
+            }
+        }};
+    }
     for i in 0..n {
         if indeg[i] == 0 {
-            enqueue(i as u32, &units, &cp, &mut ready_q, &mut zero_ready);
+            enqueue!(i as u32);
         }
     }
 
@@ -578,6 +667,7 @@ fn simulate_dag_attributed(
     let mut fw_busy = 0.0f64;
     let mut chan_busy = 0.0f64;
     let mut fenand_busy = 0.0f64;
+    let mut interconnect_busy = 0.0f64;
     let mut load_fw_overlap = 0.0f64;
 
     let mut retired: Vec<u32> = Vec::new();
@@ -592,13 +682,13 @@ fn simulate_dag_attributed(
             }
             done[u as usize] = true;
             remaining -= 1;
-            // per-graph completion: time is monotone, so the last
-            // assignment is the graph's finish time in the schedule
+            // per-owner completion: time is monotone, so the last
+            // assignment is the owner's finish time in the schedule
             stats[unit_owner[u as usize] as usize].makespan = time;
             for &s in &succs[u as usize] {
                 indeg[s as usize] -= 1;
                 if indeg[s as usize] == 0 {
-                    enqueue(s, &units, &cp, &mut ready_q, &mut zero_ready);
+                    enqueue!(s);
                 }
             }
         }
@@ -606,85 +696,106 @@ fn simulate_dag_attributed(
             continue;
         }
 
-        // start channel units (capacity 1 each, critical path first);
-        // with prefetch off, a component load may not start while FW
-        // compute is running
-        for r in [UnitRes::MpDie, UnitRes::Ucie, UnitRes::Hbm, UnitRes::Fenand] {
-            if chan[&r].is_some() {
-                continue;
-            }
-            let q = ready_q.get_mut(&r).unwrap();
-            let mut stash: Vec<Pri> = Vec::new();
-            let mut started = None;
-            while let Some(top) = q.pop() {
-                let u = top.1;
-                let blocked =
-                    !p.prefetch && units[u as usize].is_load && !fw_active.is_empty();
-                if blocked {
-                    stash.push(top);
-                } else {
-                    started = Some(u);
-                    break;
+        // start channel units (capacity 1 each per stack, critical path
+        // first); with prefetch off, a component load may not start
+        // while its stack's FW compute is running
+        for s in 0..n_stacks {
+            for ri in [MP, UCIE, HBM, FENAND] {
+                if chan[s][ri].is_some() {
+                    continue;
+                }
+                let q = &mut ready_ch[s][ri];
+                let mut stash: Vec<Pri> = Vec::new();
+                let mut started = None;
+                while let Some(top) = q.pop() {
+                    let u = top.1;
+                    let blocked = !p.prefetch
+                        && units[u as usize].is_load
+                        && !fw_active[s].is_empty();
+                    if blocked {
+                        stash.push(top);
+                    } else {
+                        started = Some(u);
+                        break;
+                    }
+                }
+                for x in stash {
+                    q.push(x);
+                }
+                if let Some(u) = started {
+                    chan[s][ri] = Some((u, units[u as usize].secs));
                 }
             }
-            for s in stash {
-                q.push(s);
-            }
-            if let Some(u) = started {
-                chan.insert(r, Some((u, units[u as usize].secs)));
+        }
+        // the inter-stack interconnect: one shared capacity-1 channel
+        if inter.is_none() {
+            if let Some(Pri(_, u)) = ready_inter.pop() {
+                inter = Some((u, units[u as usize].secs));
             }
         }
-        // admit FW units (the die is malleable; admission just makes
-        // them eligible for a tile slot), unless a non-prefetch load is
-        // streaming in
-        let load_running =
-            matches!(chan[&UnitRes::Ucie], Some((u, _)) if units[u as usize].is_load);
-        if p.prefetch || !load_running {
-            let q = ready_q.get_mut(&UnitRes::FwDie).unwrap();
-            while let Some(Pri(_, u)) = q.pop() {
-                fw_active.push((u, units[u as usize].secs));
+        // admit FW units per stack (the die is malleable; admission
+        // just makes them eligible for a tile slot), unless a
+        // non-prefetch load is streaming into that stack
+        for s in 0..n_stacks {
+            let load_running =
+                matches!(chan[s][UCIE], Some((u, _)) if units[u as usize].is_load);
+            if p.prefetch || !load_running {
+                while let Some(Pri(_, u)) = ready_fw[s].pop() {
+                    fw_active[s].push((u, units[u as usize].secs));
+                }
             }
         }
 
-        // FW rate assignment: longest-remaining-first, rate 1 per tile,
-        // processor sharing inside (near-)tied groups
-        fw_active.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
-        let mut rates = vec![0.0f64; fw_active.len()];
-        {
+        // FW rate assignment per stack: longest-remaining-first, rate 1
+        // per tile, processor sharing inside (near-)tied groups
+        let mut rates: Vec<Vec<f64>> = Vec::with_capacity(n_stacks);
+        for s in 0..n_stacks {
+            let fa = &mut fw_active[s];
+            fa.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            let mut r = vec![0.0f64; fa.len()];
             let mut avail = tiles;
             let mut i = 0;
-            while i < fw_active.len() && avail > 0.0 {
+            while i < fa.len() && avail > 0.0 {
                 // group (near-)equal remainings
                 let mut j = i + 1;
-                let r = fw_active[i].1;
-                while j < fw_active.len() && (r - fw_active[j].1) <= r * 1e-9 + 1e-18 {
+                let rem = fa[i].1;
+                while j < fa.len() && (rem - fa[j].1) <= rem * 1e-9 + 1e-18 {
                     j += 1;
                 }
                 let k = (j - i) as f64;
                 let rate = (avail / k).min(1.0);
-                for slot in rates.iter_mut().take(j).skip(i) {
+                for slot in r.iter_mut().take(j).skip(i) {
                     *slot = rate;
                 }
                 avail -= rate * k;
                 i = j;
             }
+            rates.push(r);
         }
 
         // next event
         let mut dt = f64::INFINITY;
-        for v in chan.values().flatten() {
-            dt = dt.min(v.1);
+        for ch in &chan {
+            for v in ch.iter().flatten() {
+                dt = dt.min(v.1);
+            }
         }
-        for (i, &(_, rem)) in fw_active.iter().enumerate() {
-            if rates[i] > 0.0 {
-                dt = dt.min(rem / rates[i]);
-                // merge event: a running group drains to the next
-                // (slower) group's remaining
-                if i + 1 < fw_active.len() && rates[i + 1] < rates[i] {
-                    let gap = rem - fw_active[i + 1].1;
-                    if gap > 0.0 {
-                        let closing = rates[i] - rates[i + 1];
-                        dt = dt.min(gap / closing);
+        if let Some((_, rem)) = inter {
+            dt = dt.min(rem);
+        }
+        for s in 0..n_stacks {
+            let fa = &fw_active[s];
+            for (i, &(_, rem)) in fa.iter().enumerate() {
+                if rates[s][i] > 0.0 {
+                    dt = dt.min(rem / rates[s][i]);
+                    // merge event: a running group drains to the next
+                    // (slower) group's remaining
+                    if i + 1 < fa.len() && rates[s][i + 1] < rates[s][i] {
+                        let gap = rem - fa[i + 1].1;
+                        if gap > 0.0 {
+                            let closing = rates[s][i] - rates[s][i + 1];
+                            dt = dt.min(gap / closing);
+                        }
                     }
                 }
             }
@@ -695,62 +806,85 @@ fn simulate_dag_attributed(
         }
 
         // advance time + accounting (busy = wall time the resource has
-        // >= 1 running unit; the channel bucket mirrors the barrier
-        // model's lumped UCIe/HBM/FeNAND accounting)
-        let any_chan = [UnitRes::Ucie, UnitRes::Hbm, UnitRes::Fenand]
-            .iter()
-            .any(|r| chan[r].is_some());
-        if !fw_active.is_empty() {
-            fw_busy += dt;
+        // >= 1 running unit, summed over stacks; the channel bucket
+        // mirrors the barrier model's lumped UCIe/HBM/FeNAND
+        // accounting)
+        for s in 0..n_stacks {
+            let load_running =
+                matches!(chan[s][UCIE], Some((u, _)) if units[u as usize].is_load);
+            let any_chan =
+                chan[s][UCIE].is_some() || chan[s][HBM].is_some() || chan[s][FENAND].is_some();
+            if !fw_active[s].is_empty() {
+                fw_busy += dt;
+            }
+            if any_chan {
+                chan_busy += dt;
+            }
+            if chan[s][FENAND].is_some() {
+                fenand_busy += dt;
+            }
+            if load_running && !fw_active[s].is_empty() {
+                load_fw_overlap += dt;
+            }
+            if chan[s][MP].is_some() {
+                report.mp_busy += dt;
+            }
         }
-        if any_chan {
-            chan_busy += dt;
-        }
-        if chan[&UnitRes::Fenand].is_some() {
-            fenand_busy += dt;
-        }
-        if load_running && !fw_active.is_empty() {
-            load_fw_overlap += dt;
-        }
-        if chan[&UnitRes::MpDie].is_some() {
-            report.mp_busy += dt;
+        if inter.is_some() {
+            interconnect_busy += dt;
         }
         time += dt;
-        for r in [UnitRes::MpDie, UnitRes::Ucie, UnitRes::Hbm, UnitRes::Fenand] {
-            if let Some((u, rem)) = chan[&r] {
-                let rem = rem - dt;
-                if rem <= 1e-15 {
-                    chan.insert(r, None);
-                    retired.push(u);
-                } else {
-                    chan.insert(r, Some((u, rem)));
+        for s in 0..n_stacks {
+            for ri in [MP, UCIE, HBM, FENAND] {
+                if let Some((u, rem)) = chan[s][ri] {
+                    let rem = rem - dt;
+                    if rem <= 1e-15 {
+                        chan[s][ri] = None;
+                        retired.push(u);
+                    } else {
+                        chan[s][ri] = Some((u, rem));
+                    }
                 }
             }
         }
-        let mut still: Vec<(u32, f64)> = Vec::with_capacity(fw_active.len());
-        for (i, &(u, rem)) in fw_active.iter().enumerate() {
-            let rem = rem - rates[i] * dt;
+        if let Some((u, rem)) = inter {
+            let rem = rem - dt;
             if rem <= 1e-15 {
+                inter = None;
                 retired.push(u);
             } else {
-                still.push((u, rem));
+                inter = Some((u, rem));
             }
         }
-        fw_active = still;
+        for s in 0..n_stacks {
+            let mut still: Vec<(u32, f64)> = Vec::with_capacity(fw_active[s].len());
+            for (i, &(u, rem)) in fw_active[s].iter().enumerate() {
+                let rem = rem - rates[s][i] * dt;
+                if rem <= 1e-15 {
+                    retired.push(u);
+                } else {
+                    still.push((u, rem));
+                }
+            }
+            fw_active[s] = still;
+        }
     }
 
     report.seconds = time;
     report.fw_busy = fw_busy;
     report.hbm_busy = chan_busy;
     report.fenand_busy = fenand_busy;
+    report.interconnect_busy = interconnect_busy;
     report.prefetch_hidden = load_fw_overlap;
     for (ni, node) in tg.nodes.iter().enumerate() {
         stats[owner[ni] as usize].madds +=
             node.ops.iter().map(|op| op.madds()).sum::<u64>();
     }
     report.madds = stats.iter().map(|s| s.madds).sum();
+    // static power draws in every replicated stack for the whole run;
+    // the busy-based active terms are already summed over stacks
     report.joules = report.dynamic_joules
-        + report.seconds * p.background_w
+        + report.seconds * p.background_w * n_stacks as f64
         + report.hbm_busy * p.hbm_active_w
         + report.fenand_busy * p.fenand_active_w;
     (report, stats)

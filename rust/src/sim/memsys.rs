@@ -38,6 +38,15 @@ pub fn ucie(p: &HwParams, bytes: u64) -> Xfer {
     }
 }
 
+/// Inter-stack interconnect transfer of `bytes` (sharded execution:
+/// boundary matrices to the hub stack, dB slices back).
+pub fn interstack(p: &HwParams, bytes: u64) -> Xfer {
+    Xfer {
+        secs: bytes as f64 / p.interstack_bytes_per_s(),
+        joules: bytes as f64 * 8.0 * p.interstack_pj_per_bit * 1e-12,
+    }
+}
+
 /// FeNAND read of `bytes` (ONFI channels, interleaved).
 pub fn fenand_read(p: &HwParams, bytes: u64) -> Xfer {
     Xfer {

@@ -22,5 +22,7 @@ pub mod memsys;
 pub mod params;
 pub mod pcm;
 
-pub use engine::{simulate, simulate_batch, simulate_dag, GraphSimStat, SimReport};
+pub use engine::{
+    simulate, simulate_batch, simulate_dag, simulate_sharded, GraphSimStat, SimReport,
+};
 pub use params::HwParams;

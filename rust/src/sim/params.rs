@@ -80,6 +80,15 @@ pub struct HwParams {
     pub fenand_write_pj_per_bit: f64,
     pub fenand_active_w: f64,
 
+    // ---- inter-stack interconnect (sharded execution): UCIe-class
+    // stack-to-stack links off the interposer. Fewer lanes than the
+    // in-stack UCIe fabric and pricier per bit (retimed off-package
+    // reach), so cross-shard traffic is the scarce resource the shard
+    // partitioner minimizes.
+    pub interstack_lanes: u64,
+    pub interstack_gbps_per_lane: f64,
+    pub interstack_pj_per_bit: f64,
+
     // ---- logic die stream engines (CSR <-> dense, §III-B)
     pub stream_engines: u64,
     pub stream_bytes_per_cycle: u64,
@@ -130,6 +139,9 @@ impl Default for HwParams {
             fenand_read_pj_per_bit: 0.5,
             fenand_write_pj_per_bit: 2.0,
             fenand_active_w: 6.4,
+            interstack_lanes: 16,
+            interstack_gbps_per_lane: 32.0,
+            interstack_pj_per_bit: 1.3,
             stream_engines: 2,
             stream_bytes_per_cycle: 64,
             background_w: 3.5,
@@ -154,6 +166,12 @@ impl HwParams {
     /// HBM3 bandwidth in bytes/s.
     pub fn hbm_bytes_per_s(&self) -> f64 {
         self.hbm_gbps * 1e9 / 8.0
+    }
+
+    /// Inter-stack interconnect bandwidth in bytes/s (one shared
+    /// capacity-1 channel between all modeled stacks).
+    pub fn interstack_bytes_per_s(&self) -> f64 {
+        self.interstack_lanes as f64 * self.interstack_gbps_per_lane * 1e9 / 8.0
     }
 
     pub fn fenand_read_bytes_per_s(&self) -> f64 {
@@ -227,6 +245,10 @@ mod tests {
         assert!(p.ucie_bytes_per_s() > 2.0e11); // 2 Tb/s class (paper §V)
         assert!(p.hbm_bytes_per_s() > p.fenand_read_bytes_per_s());
         assert!(p.fenand_read_bytes_per_s() > p.fenand_write_bytes_per_s());
+        // the stack-to-stack link is narrower than the in-stack fabric
+        assert!(p.interstack_bytes_per_s() < p.ucie_bytes_per_s());
+        assert!(p.interstack_bytes_per_s() > 0.0);
+        assert!(p.interstack_pj_per_bit > p.ucie_pj_per_bit);
     }
 
     #[test]

@@ -79,6 +79,37 @@ impl<T> SendPtr<T> {
     }
 }
 
+/// Shared DAG precompute for [`par_dag`] / [`par_dag_grouped`]:
+/// in-degrees and successor adjacency, plus the up-front cycle check (a
+/// cheap Kahn sweep) so a cycle panics instead of deadlocking a ready
+/// queue.
+fn dag_precompute(deps: &[Vec<u32>]) -> (Vec<usize>, Vec<Vec<u32>>) {
+    let n = deps.len();
+    let indeg: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+    let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (i, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            assert!((d as usize) < n, "dep {d} out of range");
+            succs[d as usize].push(i as u32);
+        }
+    }
+    let mut count = vec![0usize; n];
+    let mut stack: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(i) = stack.pop() {
+        seen += 1;
+        for &s in &succs[i] {
+            let s = s as usize;
+            count[s] += 1;
+            if count[s] == deps[s].len() {
+                stack.push(s);
+            }
+        }
+    }
+    assert_eq!(seen, n, "dependency cycle in par_dag");
+    (indeg, succs)
+}
+
 /// Execute a dependency DAG of `deps.len()` tasks with work-stealing
 /// workers: task `i` runs (via `f(i)`) only after every task in
 /// `deps[i]` finished; independent ready tasks run concurrently on up to
@@ -92,31 +123,7 @@ pub fn par_dag<F: Fn(usize) + Sync>(deps: &[Vec<u32>], f: F) {
     if n == 0 {
         return;
     }
-    let mut indeg: Vec<usize> = deps.iter().map(|d| d.len()).collect();
-    let mut succs: Vec<Vec<u32>> = vec![Vec::new(); n];
-    for (i, ds) in deps.iter().enumerate() {
-        for &d in ds {
-            assert!((d as usize) < n, "dep {d} out of range");
-            succs[d as usize].push(i as u32);
-        }
-    }
-    // reject cycles before any worker can block on one
-    {
-        let mut count = vec![0usize; n];
-        let mut stack: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
-        let mut seen = 0usize;
-        while let Some(i) = stack.pop() {
-            seen += 1;
-            for &s in &succs[i] {
-                let s = s as usize;
-                count[s] += 1;
-                if count[s] == deps[s].len() {
-                    stack.push(s);
-                }
-            }
-        }
-        assert_eq!(seen, n, "dependency cycle in par_dag");
-    }
+    let (mut indeg, succs) = dag_precompute(deps);
     let workers = num_threads().min(n).max(1);
     if workers == 1 {
         // deterministic serial fallback: repeated ready sweeps
@@ -181,6 +188,98 @@ pub fn par_dag<F: Fn(usize) + Sync>(deps: &[Vec<u32>], f: F) {
                     g.indeg[sx] -= 1;
                     if g.indeg[sx] == 0 {
                         g.ready.push(sx);
+                    }
+                }
+                drop(g);
+                cv.notify_all();
+                if let Err(p) = res {
+                    std::panic::resume_unwind(p);
+                }
+            });
+        }
+    });
+}
+
+/// [`par_dag`] with per-group worker pools: every task carries a group
+/// id (`group_of[i] < n_groups`), each group gets its own ready queue
+/// and a dedicated worker subset, and a worker only executes tasks of
+/// its own group. This models per-stack host execution for sharded runs
+/// — stack-affine tasks never migrate — while dependency edges may
+/// cross groups freely. Worker count is `num_threads()` rounded up to
+/// at least one worker per group (round-robin assignment).
+///
+/// Like [`par_dag`], `deps` must be acyclic (checked up front) and a
+/// panic in `f` aborts the remaining tasks and resurfaces.
+pub fn par_dag_grouped<F: Fn(usize) + Sync>(
+    deps: &[Vec<u32>],
+    group_of: &[u32],
+    n_groups: usize,
+    f: F,
+) {
+    let n = deps.len();
+    assert_eq!(group_of.len(), n, "group_of must cover every task");
+    assert!(n_groups >= 1);
+    if n == 0 {
+        return;
+    }
+    debug_assert!(group_of.iter().all(|&g| (g as usize) < n_groups));
+    if num_threads() == 1 || n_groups == 1 {
+        // single worker (or single group): plain par_dag semantics
+        return par_dag(deps, f);
+    }
+    let (indeg, succs) = dag_precompute(deps);
+
+    struct GroupState {
+        ready: Vec<Vec<usize>>, // per group
+        indeg: Vec<usize>,
+        remaining: usize,
+        panicked: bool,
+    }
+    let mut ready: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+    for i in (0..n).filter(|&i| indeg[i] == 0) {
+        ready[group_of[i] as usize].push(i);
+    }
+    let state = std::sync::Mutex::new(GroupState {
+        ready,
+        indeg,
+        remaining: n,
+        panicked: false,
+    });
+    let cv = std::sync::Condvar::new();
+    // never more workers than tasks, but at least one per group —
+    // a workerless group's tasks would never run
+    let workers = num_threads().min(n).max(n_groups);
+    let succs = &succs;
+    let state = &state;
+    let cv = &cv;
+    let f = &f;
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let my_group = w % n_groups;
+            s.spawn(move || loop {
+                let task = {
+                    let mut g = state.lock().unwrap();
+                    loop {
+                        if g.remaining == 0 || g.panicked {
+                            return;
+                        }
+                        if let Some(t) = g.ready[my_group].pop() {
+                            break t;
+                        }
+                        g = cv.wait(g).unwrap();
+                    }
+                };
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
+                let mut g = state.lock().unwrap();
+                if res.is_err() {
+                    g.panicked = true;
+                }
+                g.remaining -= 1;
+                for &sx in &succs[task] {
+                    let sx = sx as usize;
+                    g.indeg[sx] -= 1;
+                    if g.indeg[sx] == 0 {
+                        g.ready[group_of[sx] as usize].push(sx);
                     }
                 }
                 drop(g);
@@ -311,6 +410,53 @@ mod tests {
     #[test]
     fn par_dag_empty() {
         par_dag(&[], |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn par_dag_grouped_respects_deps_and_groups() {
+        // cross-group diamond: group 0 feeds group 1 and back
+        let deps: Vec<Vec<u32>> = vec![vec![], vec![0], vec![0], vec![1, 2], vec![3]];
+        let groups = vec![0u32, 1, 0, 1, 0];
+        let order = std::sync::Mutex::new(Vec::new());
+        par_dag_grouped(&deps, &groups, 2, |i| {
+            order.lock().unwrap().push(i);
+        });
+        let order = order.into_inner().unwrap();
+        assert_eq!(order.len(), 5);
+        let pos = |x: usize| order.iter().position(|&v| v == x).unwrap();
+        assert!(pos(0) < pos(1) && pos(0) < pos(2));
+        assert!(pos(1) < pos(3) && pos(2) < pos(3) && pos(3) < pos(4));
+    }
+
+    #[test]
+    fn par_dag_grouped_runs_every_task_once() {
+        let n = 400;
+        let deps: Vec<Vec<u32>> = (0..n)
+            .map(|i| if i > 0 { vec![(i - 1) as u32 / 2] } else { vec![] })
+            .collect();
+        let groups: Vec<u32> = (0..n).map(|i| (i % 3) as u32).collect();
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_dag_grouped(&deps, &groups, 3, |i| {
+            for &d in &deps[i] {
+                assert_eq!(hits[d as usize].load(Ordering::SeqCst), 1);
+            }
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_dag_grouped_propagates_panics() {
+        let deps: Vec<Vec<u32>> = (0..32).map(|_| Vec::new()).collect();
+        let groups: Vec<u32> = (0..32).map(|i| (i % 4) as u32).collect();
+        let res = std::panic::catch_unwind(|| {
+            par_dag_grouped(&deps, &groups, 4, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(res.is_err());
     }
 
     #[test]

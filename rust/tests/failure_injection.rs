@@ -127,6 +127,85 @@ fn misconstructed_pjrt_executor_errors_cleanly() {
 }
 
 #[test]
+fn empty_batch_rejected_cleanly() {
+    // a zero-graph batch has no makespan to schedule — it must be a
+    // clean error, never a NaN batch_speedup (0/0)
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 64;
+    let ex = Executor::new(cfg).unwrap();
+    let err = match ex.run_batch(&[]) {
+        Ok(_) => panic!("empty batch must not run"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err}").contains("at least one graph"),
+        "error must explain the empty batch: {err}"
+    );
+}
+
+#[test]
+fn empty_graph_in_batch_rejected_cleanly() {
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 64;
+    let ex = Executor::new(cfg).unwrap();
+    let good = CsrGraph::from_undirected_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+    let empty = CsrGraph::from_edges(0, &[]);
+    let err = match ex.run_batch(&[good, empty]) {
+        Ok(_) => panic!("a 0-vertex graph contributes no schedulable work"),
+        Err(e) => e,
+    };
+    let msg = format!("{err}");
+    assert!(msg.contains("empty"), "error must name the problem: {msg}");
+    assert!(msg.contains("1"), "error should say which graph: {msg}");
+}
+
+#[test]
+fn zero_stacks_rejected_cleanly() {
+    // --stacks 0 / run.num_stacks = 0 must be a clean error, not a
+    // panic somewhere inside the shard lowering
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 64;
+    cfg.num_stacks = 0;
+    let ex = Executor::new(cfg).unwrap();
+    let g = rapid_graph::graph::generators::newman_watts_strogatz(
+        200,
+        4,
+        0.1,
+        rapid_graph::graph::generators::Weights::Unit,
+        1,
+    );
+    let err = match ex.run_sharded(&g) {
+        Ok(_) => panic!("0 stacks must not run"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err}").contains("num_stacks"),
+        "error must name the knob: {err}"
+    );
+}
+
+#[test]
+fn more_stacks_than_tiles_rejected_cleanly() {
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 64;
+    cfg.num_stacks = 4096; // far above any tile count of a 200-vertex graph
+    let ex = Executor::new(cfg).unwrap();
+    let g = rapid_graph::graph::generators::newman_watts_strogatz(
+        200,
+        4,
+        0.1,
+        rapid_graph::graph::generators::Weights::Unit,
+        1,
+    );
+    let err = match ex.run_sharded(&g) {
+        Ok(_) => panic!("stacks > tile count must not run"),
+        Err(e) => e,
+    };
+    let msg = format!("{err}");
+    assert!(msg.contains("tile"), "error must explain the bound: {msg}");
+}
+
+#[test]
 fn binary_graph_roundtrip_detects_truncation() {
     let dir = tmpdir("trunc_bin");
     let g = rapid_graph::graph::generators::erdos_renyi(

@@ -7,13 +7,16 @@ use rapid_graph::apsp::batch::BatchGraph;
 use rapid_graph::apsp::partitioned::partitioned_apsp;
 use rapid_graph::apsp::plan::{build_plan, ApspPlan, PlanOptions};
 use rapid_graph::apsp::recursive::{solve, LevelSolution, SolveOptions};
+use rapid_graph::apsp::shard::ShardGraph;
 use rapid_graph::apsp::validate::{validate_full, validate_sampled};
 use rapid_graph::apsp::{dijkstra, scheduler, taskgraph, trace::Phase};
 use rapid_graph::coordinator::config::{Mode, SystemConfig};
 use rapid_graph::coordinator::executor::Executor;
 use rapid_graph::graph::csr::CsrGraph;
 use rapid_graph::graph::generators::{self, Topology, Weights};
-use rapid_graph::sim::engine::{simulate, simulate_batch, simulate_dag, total_op_seconds};
+use rapid_graph::sim::engine::{
+    simulate, simulate_batch, simulate_dag, simulate_sharded, total_op_seconds,
+};
 use rapid_graph::sim::params::HwParams;
 use rapid_graph::INF;
 
@@ -411,6 +414,130 @@ fn pjrt_backend_agrees_with_native_when_artifacts_exist() {
     assert!(full_p.max_diff(&full_n) < 1e-3);
     let v = validate_sampled(&g, &sol_p, 12, 30, 1e-3, 31);
     assert!(v.ok(1e-3), "{v:?}");
+}
+
+/// Shard-equivalence workload: the pipeline topologies plus the two
+/// edge cases sharding must not trip on — a fully disconnected graph
+/// (no boundary, no dB) and a single-tile graph smaller than the stack
+/// count (every stack but the hub idles).
+fn shard_workload() -> Vec<CsrGraph> {
+    let mut graphs = vec![
+        generators::generate(Topology::Nws, 500, 10.0, Weights::Uniform(0.5, 5.0), 71),
+        generators::generate(Topology::Er, 300, 10.0, Weights::Uniform(0.5, 5.0), 72),
+        generators::generate(Topology::Grid, 400, 4.0, Weights::Uniform(0.5, 5.0), 73),
+        generators::generate(Topology::OgbnProxy, 600, 10.0, Weights::Uniform(0.5, 5.0), 74),
+    ];
+    // disconnected: two cliques, no bridge (zero boundary at level 0)
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    for u in 0..50u32 {
+        for v in (u + 1)..50 {
+            edges.push((u, v, 1.0));
+        }
+    }
+    for u in 50..100u32 {
+        for v in (u + 1)..100 {
+            edges.push((u, v, 1.5));
+        }
+    }
+    graphs.push(CsrGraph::from_undirected_edges(100, &edges));
+    // smaller than the stack count: a single-tile direct solve sharded
+    // across up to 4 stacks
+    graphs.push(generators::complete(20, Weights::Uniform(1.0, 2.0), 75));
+    graphs
+}
+
+#[test]
+fn sharded_execution_bit_identical_to_solo_for_every_stack_count() {
+    let be = NativeBackend;
+    for (gi, g) in shard_workload().iter().enumerate() {
+        let plan = build_plan(g, plan_opts(64, 7));
+        let solo = scheduler::solve_dag(g, &plan, &be, SolveOptions::default());
+        let oracle = dijkstra::apsp(g);
+        for stacks in [1usize, 2, 4] {
+            let shard = ShardGraph::build(&plan, stacks, 7);
+            let sol = scheduler::execute_sharded(g, &plan, &shard, &be, SolveOptions::default());
+            assert_eq!(solo.trace, sol.trace, "graph {gi} S={stacks}: traces differ");
+            let diff = solo
+                .materialize_full(&be)
+                .max_diff(&sol.materialize_full(&be));
+            assert_eq!(
+                diff, 0.0,
+                "graph {gi} S={stacks}: sharded and solo disagree by {diff}"
+            );
+            // and correct, not just consistent
+            assert!(
+                sol.materialize_full(&be).max_diff(&oracle) < 1e-3,
+                "graph {gi} S={stacks}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_sim_energy_attribution_partitions_total() {
+    for g in shard_workload() {
+        let plan = build_plan(&g, plan_opts(64, 7));
+        for stacks in [1usize, 2, 4] {
+            let shard = ShardGraph::build(&plan, stacks, 7);
+            let p = HwParams::default();
+            let (rep, stats) = simulate_sharded(&shard, &p);
+            assert_eq!(stats.len(), stacks);
+            // per-stack dynamic energy partitions the sharded total
+            // exactly (same construction as the batch attribution)
+            let esum: f64 = stats.iter().map(|s| s.dynamic_joules).sum();
+            assert_eq!(esum, rep.dynamic_joules, "S={stacks}");
+            assert_eq!(stats.iter().map(|s| s.madds).sum::<u64>(), rep.madds);
+            for (s, st) in stats.iter().enumerate() {
+                assert!(st.makespan <= rep.seconds + 1e-12, "stack {s}");
+            }
+            // sharded dynamic work = solo work + interconnect traffic
+            let solo = simulate_dag(&shard.solo, &p);
+            assert!(
+                rep.dynamic_joules >= solo.dynamic_joules - 1e-12,
+                "S={stacks}: sharding must not lose work"
+            );
+            if stacks == 1 {
+                assert_eq!(rep.seconds, solo.seconds);
+                assert_eq!(rep.interconnect_busy, 0.0);
+            } else if shard.xfer_bytes > 0 {
+                assert!(rep.interconnect_busy > 0.0, "S={stacks}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_makespan_at_4_stacks_beats_solo_on_figure_workloads() {
+    // the acceptance gate: on the large figure workload shapes (the
+    // fig-8/9 OGBN-proxy headline and the fig-9 topology sweep's NWS)
+    // the 4-stack sharded schedule must beat the 1-stack solo makespan
+    use rapid_graph::bench::workload::Workload;
+    let cfgs = [
+        Workload::ogbn_proxy_at(30_000, 88),
+        Workload::nws(24_000, 70),
+    ];
+    for w in cfgs {
+        let g = w.generate();
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 1024,
+                max_depth: usize::MAX,
+                seed: w.seed,
+            },
+        );
+        let p = HwParams::default();
+        let shard = ShardGraph::build(&plan, 4, w.seed);
+        let (rep, _) = simulate_sharded(&shard, &p);
+        let solo = simulate_dag(&shard.solo, &p);
+        assert!(
+            rep.seconds < solo.seconds,
+            "{}: sharded {} !< solo {}",
+            w.label(),
+            rep.seconds,
+            solo.seconds
+        );
+    }
 }
 
 #[test]
