@@ -2,7 +2,10 @@
 //! engines for FW blocks and min-plus merges, across size classes —
 //! plus the scheduler benchmark (barrier walk vs tile-task DAG) on a
 //! multi-component graph, for both the host executor's wall clock and
-//! the simulator's modeled makespan.
+//! the simulator's modeled makespan — and the admission benchmark
+//! (async admission vs drain-and-rebatch on staggered arrivals), which
+//! `--admission-only --json BENCH_admission.json` reduces to the CI
+//! perf-snapshot artifact.
 //!
 //! This quantifies the L3 hot path (the functional backend) and the
 //! PJRT dispatch overhead — see EXPERIMENTS.md §Perf.
@@ -237,10 +240,120 @@ fn bench_sharding() {
     }
 }
 
+/// Admission-pipeline workload: six heterogeneous graphs submitted on
+/// a staggered modeled arrival schedule (15% of the first graph's solo
+/// makespan between arrivals) through a depth-4 bounded admission
+/// queue. Quick/estimate mode — pure lowering +
+/// simulation, no host numerics — so CI can snapshot the modeled
+/// makespans and the admission latency percentiles cheaply. With
+/// `--json PATH` the numbers are also dumped as machine-readable JSON
+/// (the CI perf-snapshot artifact `BENCH_admission.json`).
+fn bench_admission(json_out: Option<&str>) {
+    use rapid_graph::util::json;
+    let specs: [(Topology, usize, f64, u64); 6] = [
+        (Topology::Nws, 3_000, 12.0, 21),
+        (Topology::Er, 2_000, 10.0, 22),
+        (Topology::Grid, 2_500, 4.0, 23),
+        (Topology::OgbnProxy, 4_000, 14.0, 24),
+        (Topology::Nws, 1_500, 20.0, 25),
+        (Topology::OgbnProxy, 2_500, 10.0, 26),
+    ];
+    let hw = HwParams::default();
+    let tgs: Vec<TaskGraph> = specs
+        .iter()
+        .map(|&(topo, n, degree, seed)| {
+            let g = generators::generate(topo, n, degree, Weights::Uniform(1.0, 5.0), seed);
+            let plan = build_plan(
+                &g,
+                PlanOptions {
+                    tile_limit: 1024,
+                    max_depth: usize::MAX,
+                    seed,
+                },
+            );
+            taskgraph::lower(&plan)
+        })
+        .collect();
+    let first = engine::simulate_dag(&tgs[0], &hw).seconds;
+    let arrivals: Vec<f64> = (0..tgs.len()).map(|i| i as f64 * 0.15 * first).collect();
+    let queue_depth = 4;
+    let batch = BatchGraph::merge(tgs);
+    let (rep, stats) = engine::simulate_admission(&batch, &arrivals, queue_depth, &hw);
+    let (drain, drain_completion) =
+        engine::simulate_drain_rebatch(&batch.per_graph, &arrivals, &hw);
+
+    let mut t = Table::new(
+        "async admission vs drain-and-rebatch (modeled, staggered arrivals)",
+        &["graph", "arrival", "finish", "latency", "drain latency"],
+    );
+    for (i, (st, &a)) in stats.iter().zip(&arrivals).enumerate() {
+        t.row(&[
+            i.to_string(),
+            fmt_time(a),
+            fmt_time(st.makespan),
+            fmt_time(st.makespan - a),
+            fmt_time(drain_completion[i] - a),
+        ]);
+    }
+    t.print();
+    println!(
+        "admission makespan {} (queue depth {queue_depth}) vs drain-and-rebatch {} \
+         -> {} throughput, FW util {:.1}%\n",
+        fmt_time(rep.seconds),
+        fmt_time(drain),
+        fmt_ratio(drain / rep.seconds),
+        100.0 * rep.fw_utilization(),
+    );
+
+    let lat: Vec<f64> = stats
+        .iter()
+        .zip(&arrivals)
+        .map(|(st, &a)| st.makespan - a)
+        .collect();
+    let pct = |p: f64| rapid_graph::util::bench::percentile(&lat, p);
+    if let Some(path) = json_out {
+        let per_graph: Vec<json::Json> = stats
+            .iter()
+            .zip(&arrivals)
+            .zip(&drain_completion)
+            .map(|((st, &a), &dc)| {
+                json::obj(vec![
+                    ("arrival_s", json::num(a)),
+                    ("finish_s", json::num(st.makespan)),
+                    ("latency_s", json::num(st.makespan - a)),
+                    ("drain_latency_s", json::num(dc - a)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("workload", json::s("admission_staggered_6")),
+            ("graphs", json::num(batch.n_graphs() as f64)),
+            ("queue_depth", json::num(queue_depth as f64)),
+            ("admission_makespan_s", json::num(rep.seconds)),
+            ("drain_makespan_s", json::num(drain)),
+            ("speedup_vs_drain", json::num(drain / rep.seconds)),
+            ("latency_p50_s", json::num(pct(0.5))),
+            ("latency_p90_s", json::num(pct(0.9))),
+            ("latency_max_s", json::num(pct(1.0))),
+            ("per_graph", json::arr(per_graph)),
+        ]);
+        std::fs::write(path, doc.render() + "\n").expect("write bench json");
+        println!("wrote {path}\n");
+    }
+}
+
 fn main() {
+    let args = rapid_graph::util::cli::Args::from_env();
+    let json_out = args.get("json");
+    if args.flag("admission-only") {
+        // the CI perf-snapshot job: just the admission numbers, quick
+        bench_admission(json_out);
+        return;
+    }
     bench_schedulers();
     bench_batching();
     bench_sharding();
+    bench_admission(json_out);
 
     let runtime = PjrtRuntime::load_default().ok();
     if runtime.is_none() {

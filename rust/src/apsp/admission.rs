@@ -1,0 +1,341 @@
+//! Async admission pipeline: admit new graphs into a live batch
+//! schedule without draining it.
+//!
+//! The batch engine ([`super::batch`]) merges a workload known up
+//! front; a serving system does not get that luxury — requests arrive
+//! while the schedule is running, and draining the machine for every
+//! arrival throws away exactly the always-busy property the PIM stack
+//! is built around. Admission is cheap here because independent graphs
+//! share no edges: admitting one is a lock-scoped graph union — lower
+//! the plan into a fresh task/step id namespace
+//! ([`super::taskgraph::TaskGraph::append_offset`] via
+//! [`BatchGraph::push`]) and splice the new roots into the live ready
+//! queue. No barrier, no drain, nothing running is disturbed.
+//!
+//! [`AdmissionGraph::build`] runs the admission *policy* over an
+//! arrival-ordered workload: a bounded queue (at most `queue_depth`
+//! graphs in flight) plus deterministic per-graph verdicts — empty
+//! graphs, graphs that could never fit the stack's functional-matrix
+//! capacity, and graphs that would overflow the aggregate memory guard
+//! next to their worst-case co-resident predecessors are rejected
+//! cleanly while the pipeline keeps running. Two consumers execute the
+//! admitted schedule:
+//!
+//! * the host executor ([`super::scheduler::execute_admission`])
+//!   splices each admitted graph into a long-lived worker pool
+//!   ([`crate::util::threads::dag_pool_scope`]) in arrival order, with
+//!   per-graph completion callbacks and results **bit-identical** to
+//!   solo runs;
+//! * the simulator ([`crate::sim::engine::simulate_admission`]) costs
+//!   the workload on the shared resource model through the same
+//!   bounded queue: each graph enters at `max(arrival, first free
+//!   slot)` (arrivals come from config, never wall-clock) and its
+//!   admit-to-complete latency — queue wait included — is attributed
+//!   alongside the energy partition.
+
+use super::batch::BatchGraph;
+use super::plan::ApspPlan;
+use super::recursive::projected_bytes;
+use super::taskgraph::lower;
+use crate::graph::csr::CsrGraph;
+
+/// Admission-control policy of the pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Max graphs in flight (admitted, not yet complete). The next
+    /// arrival waits for a slot; the bound also caps the worst-case
+    /// co-resident footprint the aggregate memory guard checks.
+    pub queue_depth: usize,
+    /// Functional-matrix capacity of one modeled stack. Admission
+    /// rejects graphs that would let the in-flight footprint exceed it
+    /// under the queue bound; the host executor honors the window by
+    /// dropping a graph's intermediate buffers the moment it completes.
+    pub memory_limit_bytes: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            queue_depth: 4,
+            memory_limit_bytes: 12 << 30,
+        }
+    }
+}
+
+/// Why a submission was turned away (the pipeline keeps running).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// 0 vertices: no schedulable work.
+    Empty,
+    /// The graph alone exceeds the stack's functional-matrix capacity —
+    /// it could never be resident, even with the queue to itself.
+    StackCapacity,
+    /// The graph fits alone, but next to the worst-case set of
+    /// co-resident predecessors (the `queue_depth - 1` largest admitted
+    /// graphs) it would overflow the aggregate memory guard.
+    MemoryGuard,
+}
+
+impl RejectReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::Empty => "empty graph",
+            RejectReason::StackCapacity => "exceeds stack capacity",
+            RejectReason::MemoryGuard => "trips aggregate memory guard",
+        }
+    }
+}
+
+/// Admission verdict of one submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Admitted as graph `admitted_index` of the merged schedule.
+    Admitted { admitted_index: u32 },
+    Rejected(RejectReason),
+}
+
+impl Verdict {
+    pub fn admitted(&self) -> bool {
+        matches!(self, Verdict::Admitted { .. })
+    }
+}
+
+/// An arrival-stamped workload run through admission control and
+/// lowered into one growable merged schedule.
+#[derive(Debug, Clone)]
+pub struct AdmissionGraph {
+    /// Verdict per submission, in arrival order.
+    pub verdicts: Vec<Verdict>,
+    /// Merged union of the admitted graphs — disjoint task/step id
+    /// namespaces, the same invariant [`BatchGraph`] maintains, built
+    /// incrementally here ([`BatchGraph::push`]).
+    pub batch: BatchGraph,
+    /// Submission index of each admitted graph.
+    pub submission_of: Vec<usize>,
+    /// Modeled arrival time of each admitted graph (seconds on the
+    /// simulated timeline, non-decreasing).
+    pub arrivals: Vec<f64>,
+    /// The in-flight bound the host executor enforces.
+    pub queue_depth: usize,
+}
+
+impl AdmissionGraph {
+    /// Run admission control over an arrival-ordered workload and lower
+    /// every admitted graph into the merged schedule.
+    ///
+    /// Verdicts are deterministic: the aggregate memory guard is
+    /// checked against the worst-case co-resident set the queue bound
+    /// permits (the `queue_depth - 1` largest previously admitted
+    /// graphs), never against execution timing — the same submission
+    /// sequence always draws the same verdicts, in functional and
+    /// estimate mode alike.
+    pub fn build(
+        subs: &[(&CsrGraph, &ApspPlan)],
+        arrivals: &[f64],
+        cfg: &AdmissionConfig,
+    ) -> AdmissionGraph {
+        assert!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
+        assert_eq!(
+            subs.len(),
+            arrivals.len(),
+            "one arrival time per submission"
+        );
+        assert!(
+            arrivals.windows(2).all(|w| w[0] <= w[1]),
+            "arrival schedule must be non-decreasing"
+        );
+        assert!(
+            arrivals.iter().all(|a| a.is_finite() && *a >= 0.0),
+            "arrival times must be finite and non-negative"
+        );
+        let mut out = AdmissionGraph {
+            verdicts: Vec::with_capacity(subs.len()),
+            batch: BatchGraph::default(),
+            submission_of: Vec::new(),
+            arrivals: Vec::new(),
+            queue_depth: cfg.queue_depth,
+        };
+        // footprints of the already-admitted graphs, for the
+        // worst-case co-resident sum
+        let mut admitted_bytes: Vec<u64> = Vec::new();
+        for (si, &(g, plan)) in subs.iter().enumerate() {
+            let verdict = if g.n() == 0 {
+                Verdict::Rejected(RejectReason::Empty)
+            } else {
+                let need = projected_bytes(plan, g);
+                let resident = worst_case_resident(&admitted_bytes, cfg.queue_depth);
+                if need > cfg.memory_limit_bytes {
+                    Verdict::Rejected(RejectReason::StackCapacity)
+                } else if need + resident > cfg.memory_limit_bytes {
+                    Verdict::Rejected(RejectReason::MemoryGuard)
+                } else {
+                    let gi = out.batch.push(lower(plan));
+                    out.submission_of.push(si);
+                    out.arrivals.push(arrivals[si]);
+                    admitted_bytes.push(need);
+                    Verdict::Admitted { admitted_index: gi }
+                }
+            };
+            out.verdicts.push(verdict);
+        }
+        debug_assert!(
+            out.batch.merged.validate().is_ok(),
+            "{:?}",
+            out.batch.merged.validate()
+        );
+        out
+    }
+
+    pub fn n_submissions(&self) -> usize {
+        self.verdicts.len()
+    }
+
+    pub fn n_admitted(&self) -> usize {
+        self.batch.n_graphs()
+    }
+
+    pub fn n_rejected(&self) -> usize {
+        self.n_submissions() - self.n_admitted()
+    }
+}
+
+/// Worst-case footprint co-resident with a new admission: the
+/// `queue_depth - 1` largest already-admitted graphs. The queue bound
+/// guarantees no more than that many predecessors can still be in
+/// flight; *which* ones is timing-dependent, so the guard takes the
+/// largest — sound for every execution, and deterministic.
+fn worst_case_resident(admitted_bytes: &[u64], queue_depth: usize) -> u64 {
+    let mut v = admitted_bytes.to_vec();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v.iter().take(queue_depth.saturating_sub(1)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::plan::{build_plan, PlanOptions};
+    use crate::graph::generators::{self, Topology, Weights};
+
+    fn workload(n: usize, tile: usize, seed: u64) -> (CsrGraph, ApspPlan) {
+        let g = generators::generate(Topology::Nws, n, 10.0, Weights::Uniform(1.0, 5.0), seed);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: tile,
+                max_depth: usize::MAX,
+                seed,
+            },
+        );
+        (g, plan)
+    }
+
+    #[test]
+    fn admits_everything_under_a_loose_guard() {
+        let ws: Vec<_> = (0..3).map(|i| workload(300 + 50 * i, 48, i as u64)).collect();
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = ws.iter().map(|(g, p)| (g, p)).collect();
+        let arrivals = [0.0, 1e-3, 2e-3];
+        let adm = AdmissionGraph::build(&subs, &arrivals, &AdmissionConfig::default());
+        assert_eq!(adm.n_submissions(), 3);
+        assert_eq!(adm.n_admitted(), 3);
+        assert_eq!(adm.n_rejected(), 0);
+        assert_eq!(adm.submission_of, vec![0, 1, 2]);
+        assert_eq!(adm.arrivals, arrivals);
+        assert!(adm.verdicts.iter().all(|v| v.admitted()));
+        // the merged schedule is the batch union of the admitted solos
+        let solos: Vec<_> = ws
+            .iter()
+            .map(|(_, p)| crate::apsp::taskgraph::lower(p))
+            .collect();
+        let batch = BatchGraph::merge(solos);
+        assert_eq!(adm.batch.merged.n_tasks(), batch.merged.n_tasks());
+        assert_eq!(adm.batch.node_offset, batch.node_offset);
+    }
+
+    #[test]
+    fn empty_graph_rejected_pipeline_continues() {
+        let (g0, p0) = workload(300, 48, 1);
+        let empty = CsrGraph::from_edges(0, &[]);
+        let pe = build_plan(&empty, PlanOptions::default());
+        let (g2, p2) = workload(250, 48, 2);
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g0, &p0), (&empty, &pe), (&g2, &p2)];
+        let adm = AdmissionGraph::build(&subs, &[0.0, 0.0, 0.0], &AdmissionConfig::default());
+        assert_eq!(adm.verdicts[1], Verdict::Rejected(RejectReason::Empty));
+        assert_eq!(adm.n_admitted(), 2);
+        assert_eq!(adm.submission_of, vec![0, 2]);
+    }
+
+    #[test]
+    fn oversized_graph_rejected_as_stack_capacity() {
+        let (g0, p0) = workload(300, 48, 3);
+        let (g1, p1) = workload(600, 48, 4);
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g0, &p0), (&g1, &p1)];
+        // limit below the second graph's solo footprint: it can never
+        // be resident, even with the queue to itself
+        let limit = projected_bytes(&p1, &g1) - 1;
+        assert!(projected_bytes(&p0, &g0) <= limit);
+        let cfg = AdmissionConfig {
+            queue_depth: 4,
+            memory_limit_bytes: limit,
+        };
+        let adm = AdmissionGraph::build(&subs, &[0.0, 1e-3], &cfg);
+        assert!(adm.verdicts[0].admitted());
+        assert_eq!(
+            adm.verdicts[1],
+            Verdict::Rejected(RejectReason::StackCapacity)
+        );
+        assert_eq!(adm.n_admitted(), 1);
+    }
+
+    #[test]
+    fn aggregate_guard_rejects_but_pipeline_keeps_running() {
+        // each graph fits the limit alone; two co-resident do not. With
+        // queue_depth = 2 the second submission trips the aggregate
+        // guard; a later, smaller graph is still admitted.
+        let (g0, p0) = workload(500, 64, 5);
+        let (g1, p1) = workload(500, 64, 6);
+        let (g2, p2) = workload(120, 64, 7);
+        let b0 = projected_bytes(&p0, &g0);
+        let b1 = projected_bytes(&p1, &g1);
+        let b2 = projected_bytes(&p2, &g2);
+        let limit = b0.max(b1) + b2 + 1;
+        assert!(b0 + b1 > limit, "workload must exceed the paired limit");
+        let cfg = AdmissionConfig {
+            queue_depth: 2,
+            memory_limit_bytes: limit,
+        };
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g0, &p0), (&g1, &p1), (&g2, &p2)];
+        let adm = AdmissionGraph::build(&subs, &[0.0, 1e-4, 2e-4], &cfg);
+        assert!(adm.verdicts[0].admitted());
+        assert_eq!(
+            adm.verdicts[1],
+            Verdict::Rejected(RejectReason::MemoryGuard)
+        );
+        assert!(adm.verdicts[2].admitted(), "pipeline must keep running");
+        assert_eq!(adm.submission_of, vec![0, 2]);
+        // queue_depth = 1 serializes residency: the same workload is
+        // fully admitted
+        let cfg1 = AdmissionConfig {
+            queue_depth: 1,
+            memory_limit_bytes: limit,
+        };
+        let adm1 = AdmissionGraph::build(&subs, &[0.0, 1e-4, 2e-4], &cfg1);
+        assert_eq!(adm1.n_admitted(), 3);
+    }
+
+    #[test]
+    fn zero_length_arrival_queue_is_well_formed() {
+        let adm = AdmissionGraph::build(&[], &[], &AdmissionConfig::default());
+        assert_eq!(adm.n_submissions(), 0);
+        assert_eq!(adm.n_admitted(), 0);
+        assert_eq!(adm.batch.node_offset, vec![0]);
+        assert_eq!(adm.batch.merged.n_tasks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn decreasing_arrivals_rejected() {
+        let (g0, p0) = workload(200, 48, 8);
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g0, &p0), (&g0, &p0)];
+        let _ = AdmissionGraph::build(&subs, &[1.0, 0.5], &AdmissionConfig::default());
+    }
+}

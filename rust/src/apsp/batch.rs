@@ -30,7 +30,7 @@ use super::plan::ApspPlan;
 use super::taskgraph::{lower, TaskGraph, TaskId};
 
 /// N independent task graphs merged into one schedulable workload.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct BatchGraph {
     /// The solo lowering of each submitted graph, in submission order
     /// (kept for per-graph baselines: solo simulation, trace assembly).
@@ -46,6 +46,21 @@ pub struct BatchGraph {
     pub node_offset: Vec<TaskId>,
 }
 
+impl Default for BatchGraph {
+    /// The empty batch — `node_offset` carries its length-`n + 1`
+    /// sentinel shape from the start, so every construction path
+    /// ([`BatchGraph::push`] and friends) upholds the
+    /// `node_offset[i]..node_offset[i + 1]` range contract.
+    fn default() -> Self {
+        BatchGraph {
+            per_graph: Vec::new(),
+            merged: TaskGraph::default(),
+            owner: Vec::new(),
+            node_offset: vec![0],
+        }
+    }
+}
+
 impl BatchGraph {
     /// Lower every plan and merge the results.
     pub fn build(plans: &[&ApspPlan]) -> BatchGraph {
@@ -54,38 +69,32 @@ impl BatchGraph {
 
     /// Merge already-lowered graphs into one batch.
     pub fn merge(per_graph: Vec<TaskGraph>) -> BatchGraph {
-        let mut merged = TaskGraph::default();
-        let mut owner = Vec::new();
-        let mut node_offset: Vec<TaskId> = vec![0];
-        for (gi, tg) in per_graph.iter().enumerate() {
-            let noff = merged.nodes.len() as TaskId;
-            let soff = merged.steps.len() as u32;
-            merged.steps.extend(tg.steps.iter().copied());
-            for n in &tg.nodes {
-                let mut node = n.clone();
-                node.id += noff;
-                node.step += soff;
-                for d in &mut node.deps {
-                    *d += noff;
-                }
-                // disjoint namespaces: every edge must stay inside the
-                // owning graph's id range
-                debug_assert!(
-                    node.deps.iter().all(|&d| d >= noff && d < node.id),
-                    "cross-graph edge in merged batch graph"
-                );
-                merged.nodes.push(node);
-                owner.push(gi as u32);
-            }
-            node_offset.push(merged.nodes.len() as TaskId);
+        let mut batch = BatchGraph::default();
+        for tg in per_graph {
+            batch.push(tg);
         }
-        debug_assert!(merged.validate().is_ok(), "{:?}", merged.validate());
-        BatchGraph {
-            per_graph,
-            merged,
-            owner,
-            node_offset,
-        }
+        debug_assert!(
+            batch.merged.validate().is_ok(),
+            "{:?}",
+            batch.merged.validate()
+        );
+        batch
+    }
+
+    /// Append one more lowered graph to the union, in its own task and
+    /// step id namespace (the admission pipeline grows its merged
+    /// schedule one admitted graph at a time with exactly this call).
+    /// Returns the new graph's index.
+    pub fn push(&mut self, tg: TaskGraph) -> u32 {
+        let gi = self.per_graph.len() as u32;
+        let (noff, _) = self.merged.append_offset(&tg);
+        debug_assert_eq!(noff, self.node_offset[gi as usize]);
+        // disjoint namespaces: append_offset asserts no edge leaves the
+        // new graph's id range
+        self.owner.resize(self.merged.nodes.len(), gi);
+        self.node_offset.push(self.merged.nodes.len() as TaskId);
+        self.per_graph.push(tg);
+        gi
     }
 
     pub fn n_graphs(&self) -> usize {
@@ -164,6 +173,31 @@ mod tests {
         for (i, s) in tb.steps.iter().enumerate() {
             assert_eq!(&merged.steps[ta.steps.len() + i], s);
         }
+    }
+
+    #[test]
+    fn incremental_push_equals_merge() {
+        let a = lowered(Topology::Nws, 400, 48, 7);
+        let b = lowered(Topology::Er, 300, 32, 8);
+        let c = lowered(Topology::Grid, 350, 40, 9);
+        let merged = BatchGraph::merge(vec![a.clone(), b.clone(), c.clone()]);
+        let mut inc = BatchGraph::default();
+        assert_eq!(inc.push(a), 0);
+        assert_eq!(inc.push(b), 1);
+        assert_eq!(inc.push(c), 2);
+        assert_eq!(inc.node_offset, merged.node_offset);
+        assert_eq!(inc.owner, merged.owner);
+        assert_eq!(inc.merged.n_tasks(), merged.merged.n_tasks());
+        assert_eq!(inc.merged.to_trace(), merged.merged.to_trace());
+        inc.merged.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_merge_is_well_formed() {
+        let batch = BatchGraph::merge(Vec::new());
+        assert_eq!(batch.n_graphs(), 0);
+        assert_eq!(batch.merged.n_tasks(), 0);
+        assert_eq!(batch.node_offset, vec![0]);
     }
 
     #[test]

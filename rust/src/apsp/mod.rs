@@ -15,6 +15,9 @@
 //!   the task graph (bit-identical to the barrier walk).
 //! * [`batch`] — multi-graph batch engine: union of independent task
 //!   graphs into one shared-resource schedule.
+//! * [`admission`] — async admission pipeline: admit arrival-stamped
+//!   graphs into a live schedule without draining it (bounded queue,
+//!   deterministic rejection verdicts).
 //! * [`shard`] — sharded multi-stack execution: one over-large graph
 //!   partitioned across modeled PIM stacks with explicit inter-stack
 //!   boundary/dB transfers.
@@ -22,6 +25,7 @@
 //!   (a deterministic topological lowering of the task graph).
 //! * [`validate`] — cross-implementation validation helpers.
 
+pub mod admission;
 pub mod backend;
 pub mod batch;
 pub mod dijkstra;

@@ -16,6 +16,7 @@
 //! ordered behind that writer by a dependency path (documented per
 //! access below).
 
+use super::admission::AdmissionGraph;
 use super::backend::{fw_any, TileBackend};
 use super::batch::BatchGraph;
 use super::plan::ApspPlan;
@@ -92,6 +93,35 @@ impl Slots {
                 .collect(),
             db: (0..plan.depth()).map(|_| Slot::new()).collect(),
             terminal: Slot::new(),
+        }
+    }
+
+    /// Drop every buffer the final solution will not keep: the deeper
+    /// levels' component blocks and dBs, and (for a partitioned solve)
+    /// the terminal matrix, which CrossMerge already copied into the
+    /// last dB. The admission pipeline calls this the moment a graph
+    /// completes, so a finished graph's working set leaves the bounded
+    /// queue window instead of lingering until the run ends (on the
+    /// modeled stack the same bytes leave PCM/HBM for FeNAND at the
+    /// Store phase).
+    ///
+    /// SAFETY: caller must be the unique accessor — every task of the
+    /// owning graph has finished, and `assemble` (which only reads
+    /// level 0, `db[0]`, and — for direct solves — the terminal) has
+    /// not run yet.
+    unsafe fn release_intermediate(&self) {
+        for lvl in self.d.iter().skip(1) {
+            for s in lvl {
+                (*s.0.get()).take();
+            }
+        }
+        for s in self.db.iter().skip(1) {
+            (*s.0.get()).take();
+        }
+        if !self.db.is_empty() {
+            // partitioned solve: the solution keeps db[0], not the
+            // terminal (depth-0 direct solves keep the terminal)
+            (*self.terminal.0.get()).take();
         }
     }
 }
@@ -200,6 +230,122 @@ pub fn execute_batch<'p>(
         .zip(&batch.per_graph)
         .map(|((&(g, plan), s), tg)| assemble(g, plan, tg.to_trace(), s))
         .collect()
+}
+
+/// Execute an admission workload ([`AdmissionGraph`]) with one
+/// long-lived work-stealing pool ([`threads::dag_pool_scope`]): the
+/// admitted graphs are spliced into the live ready queue in arrival
+/// order — tasks of earlier graphs keep running across every admission
+/// (no drain, no barrier) — with at most `queue_depth` graphs in
+/// flight. `on_complete(submission_index)` fires from a worker thread
+/// the moment a graph's last task retires.
+///
+/// Host execution follows admission *order* and the queue bound, never
+/// wall-clock arrival times — the modeled arrival timeline lives in the
+/// simulator ([`crate::sim::engine::simulate_admission`]).
+///
+/// Returns one entry per submission: `Some(solution)` for admitted
+/// graphs — each **bit-identical** to a solo [`execute`] run, because
+/// per-graph slot namespaces isolate the numerics exactly as in
+/// [`execute_batch`] — and `None` for rejected ones. The memory guard
+/// was enforced at admission time ([`AdmissionGraph::build`]) against
+/// the queue window, and the executor honors that window: a completed
+/// graph's intermediate buffers are dropped on its last task (only the
+/// level-0 result blocks the caller receives accumulate, mirroring the
+/// modeled stack where finished results leave PCM/HBM for FeNAND).
+pub fn execute_admission<'p>(
+    subs: &[(&CsrGraph, &'p ApspPlan)],
+    adm: &AdmissionGraph,
+    backend: &dyn TileBackend,
+    on_complete: impl Fn(usize) + Sync,
+) -> Vec<Option<ApspSolution<'p>>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    assert_eq!(
+        subs.len(),
+        adm.n_submissions(),
+        "admission graph count mismatch"
+    );
+    let batch = &adm.batch;
+    let mut slots: Vec<Slots> = adm
+        .submission_of
+        .iter()
+        .map(|&si| Slots::new(subs[si].1))
+        .collect();
+    let choices: Vec<(Vec<bool>, Vec<bool>)> = adm
+        .submission_of
+        .iter()
+        .map(|&si| kernel_choices(subs[si].1, backend))
+        .collect();
+    // per-graph outstanding-task counters: the worker that retires a
+    // graph's last task frees its queue slot and fires the callback
+    let remaining: Vec<AtomicUsize> = batch
+        .per_graph
+        .iter()
+        .map(|tg| AtomicUsize::new(tg.n_tasks()))
+        .collect();
+    let in_flight = AtomicUsize::new(0);
+
+    {
+        let slots = &slots;
+        let choices = &choices;
+        let remaining = &remaining;
+        let in_flight = &in_flight;
+        let on_complete = &on_complete;
+        threads::dag_pool_scope(
+            threads::num_threads(),
+            |ti| {
+                let gi = batch.owner[ti] as usize;
+                let (g, plan) = subs[adm.submission_of[gi]];
+                let (local_serial, rerun_serial) = &choices[gi];
+                run_task(
+                    &batch.merged.nodes[ti].kind,
+                    g,
+                    plan,
+                    backend,
+                    &slots[gi],
+                    local_serial,
+                    rerun_serial,
+                );
+                if remaining[gi].fetch_sub(1, Ordering::AcqRel) == 1 {
+                    // every task of this graph is done, so this worker
+                    // is the unique accessor of its slots: drop what
+                    // the solution won't keep before freeing the queue
+                    // slot — a completed graph's working set leaves the
+                    // bounded in-flight window.
+                    // SAFETY: see `Slots::release_intermediate`.
+                    unsafe { slots[gi].release_intermediate() };
+                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                    on_complete(adm.submission_of[gi]);
+                }
+            },
+            |pool| {
+                for gi in 0..batch.n_graphs() {
+                    // bounded admission queue: wait for a free slot
+                    // (woken on every task completion)
+                    pool.wait(|_| in_flight.load(Ordering::Acquire) < adm.queue_depth);
+                    in_flight.fetch_add(1, Ordering::AcqRel);
+                    // lock-scoped graph union: splice this graph's DAG
+                    // into the live ready queue in its own id namespace
+                    let off = batch.node_offset[gi];
+                    let deps: Vec<Vec<u32>> = batch.per_graph[gi]
+                        .nodes
+                        .iter()
+                        .map(|n| n.deps.iter().map(|&d| d + off).collect())
+                        .collect();
+                    let range = pool.inject(&deps);
+                    debug_assert_eq!(range.start, off as usize);
+                }
+            },
+        );
+    }
+
+    let mut out: Vec<Option<ApspSolution<'p>>> = subs.iter().map(|_| None).collect();
+    for (gi, s) in slots.iter_mut().enumerate() {
+        let si = adm.submission_of[gi];
+        let (g, plan) = subs[si];
+        out[si] = Some(assemble(g, plan, batch.per_graph[gi].to_trace(), s));
+    }
+    out
 }
 
 /// Execute a sharded task graph ([`ShardGraph`]) with **per-stack
@@ -677,6 +823,77 @@ mod tests {
                 .max_diff(&sol.materialize_full(&be));
             assert_eq!(diff, 0.0, "graph {i}: batch differs from solo");
         }
+    }
+
+    #[test]
+    fn admission_execution_bit_identical_to_solo() {
+        use crate::apsp::admission::{AdmissionConfig, AdmissionGraph};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let gs = vec![
+            generators::newman_watts_strogatz(300, 4, 0.12, Weights::Uniform(1.0, 5.0), 51),
+            generators::ogbn_proxy(400, 10.0, Weights::Uniform(1.0, 3.0), 52),
+            generators::complete(24, Weights::Uniform(1.0, 2.0), 53),
+        ];
+        let plans: Vec<ApspPlan> = gs
+            .iter()
+            .map(|g| {
+                build_plan(
+                    g,
+                    PlanOptions {
+                        tile_limit: 48,
+                        max_depth: usize::MAX,
+                        seed: 51,
+                    },
+                )
+            })
+            .collect();
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = gs.iter().zip(&plans).collect();
+        let be = NativeBackend;
+        // queue depth 1 forces strictly serial admission: every graph
+        // is spliced into a fully drained (parked) pool
+        for queue_depth in [1usize, 2, 8] {
+            let cfg = AdmissionConfig {
+                queue_depth,
+                ..AdmissionConfig::default()
+            };
+            let adm = AdmissionGraph::build(&subs, &[0.0, 1e-4, 2e-4], &cfg);
+            assert_eq!(adm.n_admitted(), 3);
+            let completions = AtomicUsize::new(0);
+            let sols = execute_admission(&subs, &adm, &be, |_| {
+                completions.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(completions.load(Ordering::SeqCst), 3);
+            for (i, sol) in sols.iter().enumerate() {
+                let sol = sol.as_ref().expect("admitted graph must produce a solution");
+                let solo = solve_dag(&gs[i], &plans[i], &be, SolveOptions::default());
+                assert_eq!(solo.trace, sol.trace, "graph {i}: traces differ");
+                let diff = solo
+                    .materialize_full(&be)
+                    .max_diff(&sol.materialize_full(&be));
+                assert_eq!(diff, 0.0, "graph {i} depth {queue_depth}: differs from solo");
+            }
+        }
+    }
+
+    #[test]
+    fn admission_rejected_graphs_yield_none() {
+        use crate::apsp::admission::{AdmissionConfig, AdmissionGraph};
+        let good = generators::newman_watts_strogatz(200, 4, 0.1, Weights::Uniform(1.0, 4.0), 54);
+        let empty = CsrGraph::from_edges(0, &[]);
+        let pg = build_plan(
+            &good,
+            PlanOptions {
+                tile_limit: 48,
+                max_depth: usize::MAX,
+                seed: 54,
+            },
+        );
+        let pe = build_plan(&empty, PlanOptions::default());
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&good, &pg), (&empty, &pe)];
+        let adm = AdmissionGraph::build(&subs, &[0.0, 0.0], &AdmissionConfig::default());
+        let sols = execute_admission(&subs, &adm, &NativeBackend, |_| {});
+        assert!(sols[0].is_some());
+        assert!(sols[1].is_none(), "rejected submission must yield None");
     }
 
     #[test]

@@ -156,6 +156,35 @@ impl TaskGraph {
         trace
     }
 
+    /// Splice `other` into `self` as a fresh task/step id namespace:
+    /// every step is appended and every node re-homed with its task ids
+    /// and step index offset past the existing contents. Returns the
+    /// `(task, step)` offsets the new nodes received. The union gains
+    /// no cross-namespace edge — `other`'s dependencies stay inside its
+    /// own id range (debug-asserted) — so any schedule of the result is
+    /// a legal interleaving of the originals. This is the primitive
+    /// both [`super::batch`] and the admission pipeline
+    /// ([`super::admission`]) build their merged schedules from.
+    pub(crate) fn append_offset(&mut self, other: &TaskGraph) -> (TaskId, u32) {
+        let noff = self.nodes.len() as TaskId;
+        let soff = self.steps.len() as u32;
+        self.steps.extend(other.steps.iter().copied());
+        for n in &other.nodes {
+            let mut node = n.clone();
+            node.id += noff;
+            node.step += soff;
+            for d in &mut node.deps {
+                *d += noff;
+            }
+            debug_assert!(
+                node.deps.iter().all(|&d| d >= noff && d < node.id),
+                "cross-namespace edge in task-graph union"
+            );
+            self.nodes.push(node);
+        }
+        (noff, soff)
+    }
+
     /// Structural invariants: forward-only edges (acyclicity), in-range
     /// deps, monotone step assignment.
     pub fn validate(&self) -> Result<(), String> {

@@ -15,7 +15,10 @@ use crate::util::table::{fmt_count, fmt_energy, fmt_ratio, fmt_time, Table};
 
 /// RAPID-Graph modeled cost for a workload (estimate mode — the trace,
 /// and therefore the modeled cost, is identical to functional mode).
-pub fn rapid_cost(w: &Workload, cfg: &SystemConfig) -> (CostPoint, crate::coordinator::executor::RunResult) {
+pub fn rapid_cost(
+    w: &Workload,
+    cfg: &SystemConfig,
+) -> (CostPoint, crate::coordinator::executor::RunResult) {
     let mut cfg = cfg.clone();
     cfg.mode = Mode::Estimate;
     let ex = Executor::new(cfg).expect("estimate executor");

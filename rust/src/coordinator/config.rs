@@ -4,6 +4,7 @@
 use crate::sim::params::HwParams;
 use crate::util::cli::Args;
 use crate::util::config::ConfigFile;
+use crate::util::error::Result;
 
 /// Execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,6 +112,21 @@ pub struct SystemConfig {
     /// Modeled PIM stacks for sharded execution
     /// (`Executor::run_sharded` / `apsp --stacks`). 1 = solo run.
     pub num_stacks: usize,
+    /// Admission pipeline: max graphs in flight
+    /// (`run.admission.queue_depth` / `--admit-queue`). The next
+    /// arrival waits for a slot; the bound also caps the worst-case
+    /// co-resident footprint the aggregate memory guard checks.
+    pub admission_queue_depth: usize,
+    /// Admission pipeline: explicit arrival schedule in modeled seconds
+    /// (`run.admission.arrivals = "0,1e-3,2e-3"` / `--arrivals`).
+    /// Empty = derive a uniform schedule from `admission_interval`.
+    /// Arrivals are simulation-timeline stamps, never wall-clock.
+    pub admission_arrivals: Vec<f64>,
+    /// Admission pipeline: uniform arrival spacing (modeled seconds)
+    /// used when no explicit schedule is given
+    /// (`run.admission.interval` / `--admit-interval`). 0 = everything
+    /// arrives at t = 0 (a batch-shaped admission workload).
+    pub admission_interval: f64,
 }
 
 impl Default for SystemConfig {
@@ -129,6 +145,9 @@ impl Default for SystemConfig {
             memory_limit_bytes: 12 << 30,
             batch_size: 4,
             num_stacks: 1,
+            admission_queue_depth: 4,
+            admission_arrivals: Vec::new(),
+            admission_interval: 0.0,
         }
     }
 }
@@ -160,6 +179,21 @@ impl SystemConfig {
             cf.get_f64("run.validate_tolerance", self.validate_tolerance as f64) as f32;
         self.batch_size = cf.get_usize("run.batch_size", self.batch_size);
         self.num_stacks = cf.get_usize("run.num_stacks", self.num_stacks);
+        // [run.admission] block. A malformed arrival list is a hard
+        // error (not a silent fallback like the scalar knobs): quietly
+        // substituting the uniform-interval schedule would report
+        // latencies for arrivals the user never configured.
+        self.admission_queue_depth =
+            cf.get_usize("run.admission.queue_depth", self.admission_queue_depth);
+        self.admission_interval = cf.get_f64("run.admission.interval", self.admission_interval);
+        if let Some(list) = cf.get("run.admission.arrivals") {
+            match parse_arrivals(list) {
+                Some(v) => self.admission_arrivals = v,
+                None => {
+                    panic!("run.admission.arrivals expects comma-separated numbers, got {list:?}")
+                }
+            }
+        }
         // hardware overrides
         let hw = &mut self.hw;
         hw.tiles_per_die = cf.get_usize("hardware.tiles_per_die", hw.tiles_per_die);
@@ -201,6 +235,14 @@ impl SystemConfig {
             args.get_f64("validate-tolerance", self.validate_tolerance as f64) as f32;
         self.batch_size = args.get_usize("batch-size", self.batch_size);
         self.num_stacks = args.get_usize("stacks", self.num_stacks);
+        self.admission_queue_depth = args.get_usize("admit-queue", self.admission_queue_depth);
+        self.admission_interval = args.get_f64("admit-interval", self.admission_interval);
+        if let Some(list) = args.get("arrivals") {
+            match parse_arrivals(list) {
+                Some(v) => self.admission_arrivals = v,
+                None => panic!("--arrivals expects comma-separated numbers, got {list:?}"),
+            }
+        }
     }
 
     pub fn plan_options(&self) -> crate::apsp::plan::PlanOptions {
@@ -210,6 +252,85 @@ impl SystemConfig {
             seed: self.seed,
         }
     }
+
+    /// The arrival schedule for an `n`-graph admission workload:
+    /// the explicit `run.admission.arrivals` list when given, else
+    /// uniform `admission_interval` spacing starting at t = 0.
+    pub fn admission_schedule(&self, n: usize) -> Vec<f64> {
+        if self.admission_arrivals.is_empty() {
+            (0..n).map(|i| i as f64 * self.admission_interval).collect()
+        } else {
+            self.admission_arrivals.clone()
+        }
+    }
+}
+
+/// Parse a comma-separated arrival schedule (`"0,1e-3,2e-3"`); `None`
+/// on any malformed entry.
+pub fn parse_arrivals(s: &str) -> Option<Vec<f64>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(tok.parse::<f64>().ok()?);
+    }
+    Some(out)
+}
+
+/// Which top-level execution shape the `apsp` CLI selects. The
+/// selecting flags are mutually exclusive — combining them is a clean
+/// error, never a silent priority pick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CliMode {
+    /// One graph, one run.
+    Solo,
+    /// `--batch` / a bare `--graphs` list: merge N graphs known up
+    /// front into one shared-resource schedule.
+    Batch,
+    /// `--stacks S` (or `run.num_stacks` from the config file): shard
+    /// one graph across S modeled stacks.
+    Sharded,
+    /// `--admit`: submit N graphs to the async admission pipeline on a
+    /// modeled arrival schedule.
+    Admission,
+}
+
+/// Resolve the `apsp` execution mode from the CLI flags.
+/// `config_stacks` is the config-file `run.num_stacks`, which selects
+/// sharded mode only when no explicit flag overrides it. A bare
+/// `--graphs` list keeps its legacy meaning (batch mode) unless
+/// `--admit` claims it for the admission workload.
+pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
+    let admit = args.flag("admit") || args.get("admit").is_some();
+    let batch_flag = args.flag("batch") || args.get("batch").is_some();
+    let batch = batch_flag || (args.get("graphs").is_some() && !admit);
+    let sharded = args.get("stacks").is_some();
+    let mut picked: Vec<&str> = Vec::new();
+    if batch {
+        picked.push(if batch_flag { "--batch" } else { "--graphs" });
+    }
+    if sharded {
+        picked.push("--stacks");
+    }
+    if admit {
+        picked.push("--admit");
+    }
+    crate::ensure!(
+        picked.len() <= 1,
+        "{} select different execution modes; pick one",
+        picked.join(" and ")
+    );
+    Ok(if batch {
+        CliMode::Batch
+    } else if admit {
+        CliMode::Admission
+    } else if sharded || config_stacks != 1 {
+        CliMode::Sharded
+    } else {
+        CliMode::Solo
+    })
 }
 
 #[cfg(test)]
@@ -264,6 +385,69 @@ mod tests {
         c.apply_args(&args);
         assert_eq!(c.batch_size, 3);
         assert!((c.validate_tolerance - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admission_block_parses_and_overrides() {
+        let cf = ConfigFile::parse(
+            "[run.admission]\nqueue_depth = 2\ninterval = 0.25\narrivals = \"0,1e-3,2e-3\"",
+        )
+        .unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        assert_eq!(c.admission_queue_depth, 2);
+        assert!((c.admission_interval - 0.25).abs() < 1e-12);
+        assert_eq!(c.admission_arrivals, vec![0.0, 1e-3, 2e-3]);
+        assert_eq!(c.admission_schedule(3), vec![0.0, 1e-3, 2e-3]);
+        let args = crate::util::cli::Args::parse(
+            ["--admit-queue", "8", "--arrivals", "0,0.5", "--admit-interval", "1.0"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.admission_queue_depth, 8);
+        assert_eq!(c.admission_arrivals, vec![0.0, 0.5]);
+        // uniform fallback when no explicit list is configured
+        c.admission_arrivals.clear();
+        assert_eq!(c.admission_schedule(3), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn arrivals_parser_accepts_lists_rejects_garbage() {
+        assert_eq!(parse_arrivals("0, 1e-3 ,2e-3"), Some(vec![0.0, 1e-3, 2e-3]));
+        assert_eq!(parse_arrivals(""), Some(vec![]));
+        assert_eq!(parse_arrivals("1,two,3"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "run.admission.arrivals")]
+    fn malformed_config_arrival_list_is_a_hard_error() {
+        // silently falling back to the uniform-interval schedule would
+        // report latencies for arrivals the user never configured
+        let cf = ConfigFile::parse("[run.admission]\narrivals = \"0;1e-3;2e-3\"").unwrap();
+        let _ = SystemConfig::from_file(&cf);
+    }
+
+    // mode-flag conflict combos live in tests/failure_injection.rs
+    // (the satellite's named home); this covers only the resolution
+    // rules that aren't conflicts
+    #[test]
+    fn cli_mode_resolution_rules() {
+        let parse = |v: &[&str]| crate::util::cli::Args::parse(v.iter().map(|s| s.to_string()));
+        // a bare --graphs list keeps its legacy batch meaning
+        assert_eq!(
+            resolve_cli_mode(&parse(&["--graphs", "a.bin,b.bin"]), 1).unwrap(),
+            CliMode::Batch
+        );
+        // --admit claims --graphs for the admission workload
+        assert_eq!(
+            resolve_cli_mode(&parse(&["--admit", "--graphs", "a.bin"]), 1).unwrap(),
+            CliMode::Admission
+        );
+        // a config-file run.num_stacks selects sharded mode only when
+        // no explicit flag overrides it
+        assert_eq!(resolve_cli_mode(&parse(&[]), 4).unwrap(), CliMode::Sharded);
+        assert_eq!(resolve_cli_mode(&parse(&["--batch"]), 4).unwrap(), CliMode::Batch);
+        assert_eq!(resolve_cli_mode(&parse(&["--admit", "6"]), 4).unwrap(), CliMode::Admission);
     }
 
     #[test]

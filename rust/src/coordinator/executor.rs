@@ -3,9 +3,12 @@
 //! experiment; one `Executor::run_batch` call is one scheduled
 //! workload set — N independent graphs merged into a single
 //! shared-resource schedule; one `Executor::run_sharded` call is one
-//! over-large graph split across `run.num_stacks` modeled PIM stacks.
+//! over-large graph split across `run.num_stacks` modeled PIM stacks;
+//! one `Executor::run_admission` call is one arrival-stamped serving
+//! workload admitted into a live schedule without draining it.
 
 use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig};
+use crate::apsp::admission::{AdmissionConfig, AdmissionGraph, Verdict};
 use crate::apsp::backend::{NativeBackend, TileBackend};
 use crate::apsp::batch::BatchGraph;
 use crate::apsp::plan::{build_plan, ApspPlan};
@@ -16,7 +19,8 @@ use crate::apsp::{scheduler, taskgraph};
 use crate::graph::csr::CsrGraph;
 use crate::runtime::{PjrtBackend, PjrtRuntime};
 use crate::sim::engine::{
-    simulate, simulate_batch, simulate_dag, simulate_sharded, GraphSimStat, SimReport,
+    simulate, simulate_admission, simulate_batch, simulate_dag, simulate_drain_rebatch,
+    simulate_sharded, GraphSimStat, SimReport,
 };
 use crate::util::error::Result;
 use crate::{ensure, err};
@@ -285,6 +289,133 @@ impl Executor {
         })
     }
 
+    /// Submit N graphs to the **async admission pipeline**: arrivals
+    /// (modeled seconds, from `run.admission` — never wall-clock) are
+    /// run through admission control ([`AdmissionGraph::build`]:
+    /// bounded queue, deterministic memory-guard/capacity verdicts),
+    /// every admitted graph is spliced into the live schedule without
+    /// draining what is already running, and the simulator attributes
+    /// each graph's admit-to-complete latency on the shared timeline.
+    /// Functional mode executes the admitted workload on a long-lived
+    /// worker pool ([`scheduler::execute_admission`]) with per-graph
+    /// completion callbacks; results are bit-identical to solo runs.
+    /// The drain-and-rebatch baseline
+    /// ([`simulate_drain_rebatch`]) quantifies what mid-flight
+    /// admission buys over draining the schedule for every arrival.
+    pub fn run_admission(&self, graphs: &[CsrGraph]) -> Result<AdmissionRunResult> {
+        let arrivals = self.config.admission_schedule(graphs.len());
+        ensure!(
+            arrivals.len() == graphs.len(),
+            "arrival schedule has {} entries for {} graphs",
+            arrivals.len(),
+            graphs.len()
+        );
+        ensure!(
+            arrivals.windows(2).all(|w| w[0] <= w[1]),
+            "arrival schedule must be non-decreasing (submission order is arrival order)"
+        );
+        ensure!(
+            arrivals.iter().all(|a| a.is_finite() && *a >= 0.0),
+            "arrival times must be finite and non-negative"
+        );
+        ensure!(
+            self.config.admission_queue_depth >= 1,
+            "run.admission.queue_depth must be >= 1 (got 0)"
+        );
+        let plans: Vec<ApspPlan> = graphs.iter().map(|g| self.plan(g)).collect();
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = graphs.iter().zip(&plans).collect();
+        let adm_cfg = AdmissionConfig {
+            queue_depth: self.config.admission_queue_depth,
+            memory_limit_bytes: self.config.memory_limit_bytes,
+        };
+        let adm = AdmissionGraph::build(&subs, &arrivals, &adm_cfg);
+
+        let native = NativeBackend;
+        let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
+        let backend = self.select_backend(&native, &pjrt_adapter)?;
+
+        let completion_log = std::sync::Mutex::new(Vec::new());
+        let t0 = std::time::Instant::now();
+        let sols: Option<Vec<Option<ApspSolution>>> = backend.map(|be| {
+            scheduler::execute_admission(&subs, &adm, be, |si| {
+                completion_log.lock().unwrap().push(si);
+            })
+        });
+        let host_solve_seconds = if sols.is_some() {
+            t0.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+        let completion_order = completion_log.into_inner().unwrap();
+
+        let (admission_sim, stats) = simulate_admission(
+            &adm.batch,
+            &adm.arrivals,
+            self.config.admission_queue_depth,
+            &self.config.hw,
+        );
+        let (drain_makespan, drain_completion) =
+            simulate_drain_rebatch(&adm.batch.per_graph, &adm.arrivals, &self.config.hw);
+
+        let mut per_graph = Vec::with_capacity(graphs.len());
+        for (si, &(g, plan)) in subs.iter().enumerate() {
+            let verdict = adm.verdicts[si];
+            let row = match verdict {
+                Verdict::Admitted { admitted_index } => {
+                    let gi = admitted_index as usize;
+                    // solo baseline under the configured scheduler —
+                    // identical to an individual `run`
+                    let sim = match self.config.scheduler {
+                        SchedulerKind::Dag => {
+                            simulate_dag(&adm.batch.per_graph[gi], &self.config.hw)
+                        }
+                        SchedulerKind::Barrier => {
+                            simulate(&adm.batch.per_graph[gi].to_trace(), &self.config.hw)
+                        }
+                    };
+                    let validation = match (&sols, self.config.validate_sources) {
+                        (Some(sols), s) if s > 0 => sols[si].as_ref().map(|sol| {
+                            validate_sampled(
+                                g,
+                                sol,
+                                s,
+                                self.config.validate_cols,
+                                self.config.validate_tolerance,
+                                self.config.seed ^ 0xFEED ^ (si as u64),
+                            )
+                        }),
+                        _ => None,
+                    };
+                    AdmissionGraphResult {
+                        verdict,
+                        arrival: arrivals[si],
+                        solo: Some(self.make_result(g, plan, sim, validation, 0.0)),
+                        stat: Some(stats[gi]),
+                        latency: stats[gi].makespan - adm.arrivals[gi],
+                        drain_latency: drain_completion[gi] - adm.arrivals[gi],
+                    }
+                }
+                Verdict::Rejected(_) => AdmissionGraphResult {
+                    verdict,
+                    arrival: arrivals[si],
+                    solo: None,
+                    stat: None,
+                    latency: 0.0,
+                    drain_latency: 0.0,
+                },
+            };
+            per_graph.push(row);
+        }
+        Ok(AdmissionRunResult {
+            per_graph,
+            admission_sim,
+            drain_makespan,
+            completion_order,
+            queue_depth: self.config.admission_queue_depth,
+            host_solve_seconds,
+        })
+    }
+
     /// Assemble one graph's [`RunResult`] (shared by `run_with_plan`
     /// and `run_batch` so solo and batch rows can't drift).
     fn make_result(
@@ -416,6 +547,78 @@ impl ShardRunResult {
     }
 }
 
+/// One submission's outcome in an admission run.
+pub struct AdmissionGraphResult {
+    /// Admission verdict (admitted, or the rejection reason).
+    pub verdict: Verdict,
+    /// Modeled arrival time from the configured schedule.
+    pub arrival: f64,
+    /// Solo-baseline result (admitted graphs only; identical to an
+    /// individual [`Executor::run`]). The validation inside comes from
+    /// the shared admission execution.
+    pub solo: Option<RunResult>,
+    /// Attribution inside the shared schedule (admitted only);
+    /// `stat.makespan` is the completion time on the shared timeline.
+    pub stat: Option<GraphSimStat>,
+    /// Modeled admit-to-complete latency (0 for rejected graphs).
+    pub latency: f64,
+    /// Latency the same graph sees under the drain-and-rebatch
+    /// baseline (0 for rejected graphs).
+    pub drain_latency: f64,
+}
+
+/// Everything one admission run produces.
+pub struct AdmissionRunResult {
+    /// Per-submission outcomes, in arrival order.
+    pub per_graph: Vec<AdmissionGraphResult>,
+    /// The admitted workload on the shared resource model, every
+    /// graph's units released at its modeled arrival time.
+    pub admission_sim: SimReport,
+    /// Drain-and-rebatch baseline makespan for the same admitted
+    /// workload and arrival schedule.
+    pub drain_makespan: f64,
+    /// Order in which graphs completed in the functional host run
+    /// (submission indices; empty in estimate mode).
+    pub completion_order: Vec<usize>,
+    /// The in-flight bound the pipeline enforced.
+    pub queue_depth: usize,
+    /// Host wall time of the merged functional execution.
+    pub host_solve_seconds: f64,
+}
+
+impl AdmissionRunResult {
+    pub fn n_submissions(&self) -> usize {
+        self.per_graph.len()
+    }
+
+    pub fn n_admitted(&self) -> usize {
+        self.per_graph.iter().filter(|r| r.verdict.admitted()).count()
+    }
+
+    pub fn n_rejected(&self) -> usize {
+        self.n_submissions() - self.n_admitted()
+    }
+
+    /// Throughput gain over the drain-and-rebatch baseline.
+    pub fn admission_speedup(&self) -> f64 {
+        if self.admission_sim.seconds == 0.0 {
+            1.0
+        } else {
+            self.drain_makespan / self.admission_sim.seconds
+        }
+    }
+
+    /// Admit-to-complete latencies of the admitted graphs, in arrival
+    /// order.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.per_graph
+            .iter()
+            .filter(|r| r.verdict.admitted())
+            .map(|r| r.latency)
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -541,6 +744,99 @@ mod tests {
         assert!(b.batch_sim.seconds > 0.0);
         assert!(b.per_graph.iter().all(|r| r.validation.is_none()));
         assert_eq!(b.batch_stats.len(), 2);
+    }
+
+    #[test]
+    fn run_admission_end_to_end() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 128;
+        cfg.admission_queue_depth = 2;
+        cfg.admission_interval = 1e-4;
+        let ex = Executor::new(cfg).unwrap();
+        let graphs = vec![graph(700, 61), graph(900, 62), graph(500, 63)];
+        let a = ex.run_admission(&graphs).unwrap();
+        assert_eq!(a.n_submissions(), 3);
+        assert_eq!(a.n_admitted(), 3);
+        assert_eq!(a.n_rejected(), 0);
+        assert_eq!(a.queue_depth, 2);
+        // every admitted graph completed exactly once in the host run
+        let mut order = a.completion_order.clone();
+        order.sort_unstable();
+        assert_eq!(order, vec![0, 1, 2]);
+        assert!(a.host_solve_seconds > 0.0);
+        for (i, r) in a.per_graph.iter().enumerate() {
+            assert!(r.verdict.admitted());
+            assert!((r.arrival - i as f64 * 1e-4).abs() < 1e-15);
+            let solo = r.solo.as_ref().expect("admitted");
+            let v = solo.validation.as_ref().expect("validation on");
+            assert!(v.ok(solo.validate_tolerance), "graph {i}: {v:?}");
+            // the solo baseline matches an individual run
+            let plain = ex.run(&graphs[i]).unwrap();
+            assert_eq!(solo.sim.seconds, plain.sim.seconds, "graph {i}");
+            // latency is completion minus arrival on the shared timeline
+            let stat = r.stat.as_ref().expect("admitted");
+            assert!((r.latency - (stat.makespan - r.arrival)).abs() < 1e-15);
+            assert!(r.latency > 0.0);
+        }
+        assert!(a.admission_sim.seconds > 0.0);
+        assert!(a.drain_makespan > 0.0);
+        assert!(a.admission_speedup() > 0.0);
+        assert_eq!(a.latencies().len(), 3);
+    }
+
+    #[test]
+    fn run_admission_rejects_oversized_but_keeps_running() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        cfg.mode = Mode::Estimate;
+        // fits the two small graphs, never the big one
+        cfg.memory_limit_bytes = 4 << 20;
+        cfg.admission_queue_depth = 1;
+        let ex = Executor::new(cfg).unwrap();
+        let graphs = vec![graph(200, 71), graph(6_000, 72), graph(250, 73)];
+        let a = ex.run_admission(&graphs).unwrap();
+        assert_eq!(a.n_admitted(), 2);
+        assert_eq!(a.n_rejected(), 1);
+        assert!(!a.per_graph[1].verdict.admitted());
+        assert!(a.per_graph[0].verdict.admitted());
+        assert!(a.per_graph[2].verdict.admitted(), "pipeline keeps running");
+        assert!(a.per_graph[1].solo.is_none());
+        assert_eq!(a.per_graph[1].latency, 0.0);
+        assert!(a.admission_sim.seconds > 0.0);
+    }
+
+    #[test]
+    fn run_admission_zero_length_queue_is_clean() {
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        let ex = Executor::new(cfg).unwrap();
+        let a = ex.run_admission(&[]).unwrap();
+        assert_eq!(a.n_submissions(), 0);
+        assert_eq!(a.n_admitted(), 0);
+        assert_eq!(a.admission_sim.seconds, 0.0);
+        assert_eq!(a.drain_makespan, 0.0);
+        assert!((a.admission_speedup() - 1.0).abs() < 1e-12);
+        assert!(a.completion_order.is_empty());
+    }
+
+    #[test]
+    fn run_admission_validates_arrival_schedule() {
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        cfg.admission_arrivals = vec![0.0, 2e-3];
+        let ex = Executor::new(cfg).unwrap();
+        // schedule length mismatch is a clean error
+        let graphs = vec![graph(200, 81), graph(200, 82), graph(200, 83)];
+        let err = ex.run_admission(&graphs).unwrap_err();
+        assert!(format!("{err}").contains("entries"), "{err}");
+        // decreasing schedule is a clean error
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        cfg.admission_arrivals = vec![1e-3, 0.0];
+        let ex = Executor::new(cfg).unwrap();
+        let graphs = vec![graph(200, 84), graph(200, 85)];
+        let err = ex.run_admission(&graphs).unwrap_err();
+        assert!(format!("{err}").contains("non-decreasing"), "{err}");
     }
 
     #[test]

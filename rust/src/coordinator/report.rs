@@ -1,7 +1,9 @@
 //! Human-readable run reports: the coordinator's metrics output.
 
-use super::executor::{BatchRunResult, RunResult, ShardRunResult};
+use super::executor::{AdmissionRunResult, BatchRunResult, RunResult, ShardRunResult};
+use crate::apsp::admission::Verdict;
 use crate::apsp::trace::Phase;
+use crate::util::bench::percentile;
 use crate::util::table::{fmt_count, fmt_energy, fmt_ratio, fmt_time, Table};
 
 /// Render a full report for one run.
@@ -137,6 +139,89 @@ pub fn render_batch(b: &BatchRunResult) -> String {
     out
 }
 
+/// Render the report for one admission run: a per-submission table
+/// (arrival, verdict, completion, admit-to-complete latency vs the
+/// drain-and-rebatch baseline), the latency percentiles, and the
+/// utilization/speedup summary against the drain baseline.
+pub fn render_admission(a: &AdmissionRunResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "RAPID-Graph admission pipeline: {} submissions ({} admitted, {} rejected), \
+         queue depth {}\n",
+        a.n_submissions(),
+        a.n_admitted(),
+        a.n_rejected(),
+        a.queue_depth,
+    ));
+    let mut t = Table::new(
+        "admission schedule (per submission)",
+        &["graph", "arrival", "n", "verdict", "solo", "finish", "latency", "drain lat", "valid"],
+    );
+    for (i, r) in a.per_graph.iter().enumerate() {
+        match (&r.solo, &r.stat) {
+            (Some(solo), Some(stat)) => t.row(&[
+                i.to_string(),
+                fmt_time(r.arrival),
+                fmt_count(solo.graph_n),
+                "admitted".to_string(),
+                fmt_time(solo.sim.seconds),
+                fmt_time(stat.makespan),
+                fmt_time(r.latency),
+                fmt_time(r.drain_latency),
+                match &solo.validation {
+                    Some(v) if v.ok(solo.validate_tolerance) => "EXACT".to_string(),
+                    Some(_) => "FAILED".to_string(),
+                    None => "-".to_string(),
+                },
+            ]),
+            _ => {
+                let reason = match r.verdict {
+                    Verdict::Rejected(why) => why.name(),
+                    Verdict::Admitted { .. } => "admitted",
+                };
+                t.row(&[
+                    i.to_string(),
+                    fmt_time(r.arrival),
+                    "-".to_string(),
+                    format!("REJECTED: {reason}"),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]);
+            }
+        }
+    }
+    out.push_str(&t.render());
+    let lats = a.latencies();
+    if !lats.is_empty() {
+        out.push_str(&format!(
+            "latency (admit -> complete): p50 {} p90 {} max {}\n",
+            fmt_time(percentile(&lats, 0.5)),
+            fmt_time(percentile(&lats, 0.9)),
+            fmt_time(percentile(&lats, 1.0)),
+        ));
+    }
+    out.push_str(&format!(
+        "admission: makespan={} vs drain-and-rebatch {} -> speedup {}; \
+         FW util {:.1}%, MP util {:.1}%, energy={}\n",
+        fmt_time(a.admission_sim.seconds),
+        fmt_time(a.drain_makespan),
+        fmt_ratio(a.admission_speedup()),
+        100.0 * a.admission_sim.fw_utilization(),
+        100.0 * a.admission_sim.mp_utilization(),
+        fmt_energy(a.admission_sim.joules),
+    ));
+    if a.host_solve_seconds > 0.0 {
+        out.push_str(&format!(
+            "host numerics (admission): {}\n",
+            fmt_time(a.host_solve_seconds)
+        ));
+    }
+    out
+}
+
 /// Render the report for one sharded run: a per-stack table (placed
 /// components, busy work, energy, finish time) plus the scale-out
 /// summary against the 1-stack solo baseline.
@@ -243,6 +328,33 @@ mod tests {
         let text = super::render_batch(&b);
         assert!(text.contains("RAPID-Graph batch: 2 graphs"));
         assert!(text.contains("batch schedule"));
+        assert!(text.contains("speedup"));
+        assert!(text.contains("EXACT"));
+    }
+
+    #[test]
+    fn admission_report_contains_key_sections() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        cfg.admission_queue_depth = 2;
+        cfg.admission_interval = 1e-4;
+        // reject the middle graph: it alone exceeds the guard
+        cfg.memory_limit_bytes = 1 << 20;
+        let ex = Executor::new(cfg).unwrap();
+        let graphs = vec![
+            generators::generate(Topology::Nws, 200, 8.0, Weights::Unit, 1),
+            generators::generate(Topology::OgbnProxy, 6_000, 10.0, Weights::Unit, 2),
+            generators::generate(Topology::Er, 180, 8.0, Weights::Unit, 3),
+        ];
+        let a = ex.run_admission(&graphs).unwrap();
+        assert_eq!(a.n_rejected(), 1);
+        let text = super::render_admission(&a);
+        assert!(text.contains("RAPID-Graph admission pipeline"));
+        assert!(text.contains("admission schedule"));
+        assert!(text.contains("admitted"));
+        assert!(text.contains("REJECTED"));
+        assert!(text.contains("latency (admit -> complete)"));
+        assert!(text.contains("drain-and-rebatch"));
         assert!(text.contains("speedup"));
         assert!(text.contains("EXACT"));
     }

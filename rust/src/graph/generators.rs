@@ -70,7 +70,13 @@ impl Topology {
 
 /// Generate a graph of the given topology with ~`avg_degree` and `n`
 /// vertices (undirected; avg degree counts both directions).
-pub fn generate(topo: Topology, n: usize, avg_degree: f64, weights: Weights, seed: u64) -> CsrGraph {
+pub fn generate(
+    topo: Topology,
+    n: usize,
+    avg_degree: f64,
+    weights: Weights,
+    seed: u64,
+) -> CsrGraph {
     match topo {
         Topology::Nws => {
             // degree is carried by the ring half-width k; the shortcut

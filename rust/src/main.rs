@@ -7,7 +7,10 @@
 //!              with --batch, merge N independent graphs into one
 //!              shared-resource schedule and print the batch table;
 //!              with --stacks S, shard one graph across S modeled PIM
-//!              stacks and print the scale-out table
+//!              stacks and print the scale-out table;
+//!              with --admit, submit N graphs to the async admission
+//!              pipeline on a modeled arrival schedule and print the
+//!              per-graph latency table vs the drain baseline
 //!   figure     regenerate a paper figure/table (7, 8, 9a, 9b, 9c, table3)
 //!   validate   exhaustive Dijkstra validation on a small graph
 //!
@@ -17,6 +20,7 @@
 //!   rapid-graph apsp --batch --batch-size 8 --nodes 5000 --mode estimate
 //!   rapid-graph apsp --batch --graphs a.bin,b.bin,c.bin
 //!   rapid-graph apsp --stacks 4 --topo ogbn --nodes 50000 --mode estimate
+//!   rapid-graph apsp --admit 6 --admit-interval 1e-4 --admit-queue 2 --mode estimate
 //!   rapid-graph figure --id 7
 //!   rapid-graph generate --topo ogbn --nodes 100000 --out g.bin
 
@@ -24,7 +28,8 @@ use rapid_graph::baselines::cpu::CpuModel;
 use rapid_graph::util::error::{Context, Result};
 use rapid_graph::{bail, ensure};
 use rapid_graph::bench::figures;
-use rapid_graph::coordinator::{config::SystemConfig, executor::Executor, report};
+use rapid_graph::coordinator::config::{resolve_cli_mode, CliMode, SystemConfig};
+use rapid_graph::coordinator::{executor::Executor, report};
 use rapid_graph::graph::generators::{self, Topology, Weights};
 use rapid_graph::graph::io;
 use rapid_graph::util::cli::{render_help, Args};
@@ -56,6 +61,7 @@ fn dispatch(args: &Args) -> Result<()> {
                         ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--scheduler dag|barrier] [--tile T] [--max-depth D] [--validate-tolerance TOL] [--config FILE]"),
                         ("apsp --batch", "[--batch-size N] [--graphs F1,F2,.. | --topo T --nodes N] merge N graphs into one shared-resource schedule"),
                         ("apsp --stacks", "S [--graph FILE | --topo T --nodes N] shard one graph across S modeled PIM stacks"),
+                        ("apsp --admit", "[N] [--arrivals T1,T2,.. | --admit-interval DT] [--admit-queue Q] admit N graphs into a live schedule"),
                         ("figure", "--id 7|8|9a|9b|9c|table3 [--full]"),
                         ("validate", "--nodes N [--topo T] [--tile T]"),
                     ]
@@ -127,32 +133,73 @@ fn cmd_apsp(args: &Args) -> Result<()> {
     if args.subcommand() == Some("simulate") {
         cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
     }
-    let batch_mode =
-        args.flag("batch") || args.get("batch").is_some() || args.get("graphs").is_some();
-    if batch_mode {
-        // an explicit --batch wins over a config file's run.num_stacks
-        // (so a sharding config doesn't lock batch mode out); combining
-        // it with an explicit multi-stack request is ambiguous
-        ensure!(
-            args.get_usize("stacks", 1) <= 1,
-            "--batch and --stacks are separate modes; pick one"
-        );
-        cfg.num_stacks = 1;
-        return cmd_batch(args, cfg);
-    }
-    if args.get("stacks").is_some() || cfg.num_stacks != 1 {
-        return cmd_sharded(args, cfg);
-    }
-    let g = graph_from_args(args)?;
-    let ex = Executor::new(cfg)?;
-    let r = ex.run(&g)?;
-    print!("{}", report::render(&r));
-    if let Some(v) = &r.validation {
-        if !v.ok(r.validate_tolerance) {
-            bail!("validation FAILED");
+    // the mode flags (--batch/--graphs, --stacks, --admit) are mutually
+    // exclusive; combining them is a clean error, never a silent pick
+    match resolve_cli_mode(args, cfg.num_stacks)? {
+        CliMode::Batch => {
+            // an explicit --batch wins over a config file's
+            // run.num_stacks (so a sharding config doesn't lock batch
+            // mode out)
+            cfg.num_stacks = 1;
+            cmd_batch(args, cfg)
+        }
+        CliMode::Admission => {
+            cfg.num_stacks = 1;
+            cmd_admit(args, cfg)
+        }
+        CliMode::Sharded => cmd_sharded(args, cfg),
+        CliMode::Solo => {
+            let g = graph_from_args(args)?;
+            let ex = Executor::new(cfg)?;
+            let r = ex.run(&g)?;
+            print!("{}", report::render(&r));
+            if let Some(v) = &r.validation {
+                if !v.ok(r.validate_tolerance) {
+                    bail!("validation FAILED");
+                }
+            }
+            Ok(())
         }
     }
-    Ok(())
+}
+
+/// The multi-graph workload of a batch or admission run: `--graphs
+/// f1,f2,..` (load) or generated — `--<count_key> N` (falling back to
+/// `run.batch_size`) graphs of `--nodes` vertices each, cycling
+/// through the four topologies for a heterogeneous mix (`--topo` pins
+/// them to one).
+fn workload_graphs(
+    args: &Args,
+    count_key: &str,
+    default_count: usize,
+) -> Result<Vec<rapid_graph::CsrGraph>> {
+    ensure!(
+        args.get("graph").is_none(),
+        "--graph is the solo-run input; multi-graph modes load --graphs F1,F2,.."
+    );
+    if let Some(list) = args.get("graphs") {
+        return list.split(',').map(load_graph).collect::<Result<_>>();
+    }
+    // `--batch N` / `--admit N` are count shorthands for --batch-size
+    let count = args.get_usize(count_key, default_count).max(1);
+    let n = args.get_usize("nodes", 10_000);
+    let degree = args.get_f64("degree", 25.25);
+    let seed = args.get_u64("seed", 42);
+    let topos: Vec<Topology> = match args.get("topo") {
+        Some(t) => vec![Topology::parse(t).context("unknown --topo (nws|er|ogbn|grid)")?],
+        None => vec![Topology::Nws, Topology::Er, Topology::Grid, Topology::OgbnProxy],
+    };
+    Ok((0..count)
+        .map(|i| {
+            generators::generate(
+                topos[i % topos.len()],
+                n,
+                degree,
+                Weights::Uniform(1.0, 8.0),
+                seed + i as u64,
+            )
+        })
+        .collect())
 }
 
 /// `apsp --batch`: merge N independent graphs into one shared-resource
@@ -160,37 +207,8 @@ fn cmd_apsp(args: &Args) -> Result<()> {
 /// generated — `--batch-size` (or `run.batch_size`) graphs of `--nodes`
 /// vertices each, cycling through the four topologies for a
 /// heterogeneous mix.
-fn cmd_batch(args: &Args, cfg: rapid_graph::coordinator::config::SystemConfig) -> Result<()> {
-    ensure!(
-        args.get("graph").is_none(),
-        "--graph is the solo-run input; batch mode loads --graphs F1,F2,.."
-    );
-    let graphs: Vec<rapid_graph::CsrGraph> = if let Some(list) = args.get("graphs") {
-        list.split(',').map(load_graph).collect::<Result<_>>()?
-    } else {
-        // `--batch N` is accepted as a count shorthand for --batch-size
-        let count = args.get_usize("batch", cfg.batch_size).max(1);
-        let n = args.get_usize("nodes", 10_000);
-        let degree = args.get_f64("degree", 25.25);
-        let seed = args.get_u64("seed", 42);
-        // --topo pins every generated graph to one topology; the
-        // default is the heterogeneous four-topology mix
-        let topos: Vec<Topology> = match args.get("topo") {
-            Some(t) => vec![Topology::parse(t).context("unknown --topo (nws|er|ogbn|grid)")?],
-            None => vec![Topology::Nws, Topology::Er, Topology::Grid, Topology::OgbnProxy],
-        };
-        (0..count)
-            .map(|i| {
-                generators::generate(
-                    topos[i % topos.len()],
-                    n,
-                    degree,
-                    Weights::Uniform(1.0, 8.0),
-                    seed + i as u64,
-                )
-            })
-            .collect()
-    };
+fn cmd_batch(args: &Args, cfg: SystemConfig) -> Result<()> {
+    let graphs = workload_graphs(args, "batch", cfg.batch_size)?;
     let ex = Executor::new(cfg)?;
     let b = ex.run_batch(&graphs)?;
     print!("{}", report::render_batch(&b));
@@ -204,10 +222,33 @@ fn cmd_batch(args: &Args, cfg: rapid_graph::coordinator::config::SystemConfig) -
     Ok(())
 }
 
+/// `apsp --admit`: submit N graphs to the async admission pipeline on
+/// a modeled arrival schedule (`--arrivals T1,T2,..` or uniform
+/// `--admit-interval` spacing, never wall-clock) with an in-flight
+/// bound of `--admit-queue` graphs, and report the per-graph
+/// admit-to-complete latency table against the drain-and-rebatch
+/// baseline.
+fn cmd_admit(args: &Args, cfg: SystemConfig) -> Result<()> {
+    let graphs = workload_graphs(args, "admit", cfg.batch_size)?;
+    let ex = Executor::new(cfg)?;
+    let a = ex.run_admission(&graphs)?;
+    print!("{}", report::render_admission(&a));
+    for r in &a.per_graph {
+        if let Some(solo) = &r.solo {
+            if let Some(v) = &solo.validation {
+                if !v.ok(solo.validate_tolerance) {
+                    bail!("validation FAILED");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// `apsp --stacks S`: shard one graph across S modeled PIM stacks and
 /// report the scale-out table (per-stack attribution, interconnect
 /// traffic, speedup over the 1-stack solo baseline).
-fn cmd_sharded(args: &Args, cfg: rapid_graph::coordinator::config::SystemConfig) -> Result<()> {
+fn cmd_sharded(args: &Args, cfg: SystemConfig) -> Result<()> {
     let g = graph_from_args(args)?;
     let ex = Executor::new(cfg)?;
     let r = ex.run_sharded(&g)?;

@@ -124,7 +124,8 @@ mod tests {
     #[test]
     fn refinement_never_worsens_cut() {
         for seed in 0..5u64 {
-            let g = generators::newman_watts_strogatz(200, 4, 0.1, Weights::Uniform(1.0, 4.0), seed);
+            let g =
+                generators::newman_watts_strogatz(200, 4, 0.1, Weights::Uniform(1.0, 4.0), seed);
             let mut rng = Rng::new(seed);
             let mut side: Vec<bool> = (0..g.n()).map(|_| rng.gen_bool(0.5)).collect();
             let before = cut_of(&g, &side);

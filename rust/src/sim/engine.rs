@@ -462,7 +462,111 @@ pub struct GraphSimStat {
 /// times, total energy) plus the per-graph attribution.
 pub fn simulate_batch(batch: &BatchGraph, p: &HwParams) -> (SimReport, Vec<GraphSimStat>) {
     let stack = vec![0u32; batch.merged.n_tasks()];
-    simulate_dag_attributed(&batch.merged, &batch.owner, batch.n_graphs(), &stack, 1, p)
+    simulate_dag_attributed(
+        &batch.merged,
+        &batch.owner,
+        batch.n_graphs(),
+        &stack,
+        1,
+        &[],
+        usize::MAX,
+        p,
+    )
+}
+
+/// Simulate an admission workload: the merged admitted graphs on the
+/// shared resource model, with every graph entering the schedule at
+/// `max(arrival, first free queue slot)` — work submitted at `t`
+/// cannot start (or occupy a channel) before `t`, at most
+/// `queue_depth` graphs are in flight concurrently (the host
+/// pipeline's bounded admission queue, enforced on the modeled
+/// timeline too, so the memory guard's in-flight window is what the
+/// simulator actually schedules), and everything already admitted
+/// keeps running across every arrival, exactly like the live-spliced
+/// ready queue. Arrival times come from the caller's configured
+/// schedule (non-decreasing), never from wall-clock.
+///
+/// Returns the workload report plus per-graph stats whose `makespan`
+/// is the graph's completion time on the shared timeline, so its
+/// admit-to-complete latency is `makespan - arrivals[g]` (queue wait
+/// included). Dynamic energy attribution is schedule-, arrival-, and
+/// queue-independent (identical to [`simulate_batch`] on the same
+/// merged graph).
+pub fn simulate_admission(
+    batch: &BatchGraph,
+    arrivals: &[f64],
+    queue_depth: usize,
+    p: &HwParams,
+) -> (SimReport, Vec<GraphSimStat>) {
+    assert_eq!(arrivals.len(), batch.n_graphs(), "one arrival per graph");
+    assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "arrival schedule must be non-decreasing"
+    );
+    assert!(queue_depth >= 1, "queue_depth must be >= 1");
+    let stack = vec![0u32; batch.merged.n_tasks()];
+    simulate_dag_attributed(
+        &batch.merged,
+        &batch.owner,
+        batch.n_graphs(),
+        &stack,
+        1,
+        arrivals,
+        queue_depth,
+        p,
+    )
+}
+
+/// The drain-and-rebatch baseline for the same arrival-stamped
+/// workload: a graph arriving while a batch is running waits for the
+/// full drain, then everything queued up is merged into the next
+/// batch-style union and submitted together. This is what a
+/// coordinator without mid-flight admission has to do — the modeled
+/// dies idle out every batch's tail while arrivals queue outside.
+///
+/// Arrivals must be non-decreasing. Returns the total makespan (last
+/// completion on the shared timeline) and each graph's completion
+/// time.
+pub fn simulate_drain_rebatch(
+    per_graph: &[TaskGraph],
+    arrivals: &[f64],
+    p: &HwParams,
+) -> (f64, Vec<f64>) {
+    assert_eq!(arrivals.len(), per_graph.len(), "one arrival per graph");
+    assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "arrival schedule must be non-decreasing"
+    );
+    let n = per_graph.len();
+    let mut completion = vec![0.0f64; n];
+    let mut t = 0.0f64;
+    let mut i = 0usize;
+    while i < n {
+        // the machine is free at t; the next batch starts when its
+        // first graph has arrived and admits everything queued by then
+        let start = t.max(arrivals[i]);
+        let mut j = i + 1;
+        while j < n && arrivals[j] <= start {
+            j += 1;
+        }
+        // union the window's solo lowerings in place (no need for a
+        // full BatchGraph — only the merged view and ownership matter)
+        let mut merged = TaskGraph::default();
+        let mut owner: Vec<u32> = Vec::new();
+        for (k, tg) in per_graph[i..j].iter().enumerate() {
+            merged.append_offset(tg);
+            owner.resize(merged.nodes.len(), k as u32);
+        }
+        let stack = vec![0u32; merged.nodes.len()];
+        let (rep, stats) =
+            simulate_dag_attributed(&merged, &owner, j - i, &stack, 1, &[], usize::MAX, p);
+        for (k, st) in stats.iter().enumerate() {
+            completion[i + k] = start + st.makespan;
+        }
+        t = start + rep.seconds;
+        i = j;
+    }
+    (t, completion)
 }
 
 /// Simulate a sharded run ([`ShardGraph`]): `num_stacks` replicated
@@ -479,6 +583,8 @@ pub fn simulate_sharded(shard: &ShardGraph, p: &HwParams) -> (SimReport, Vec<Gra
         shard.num_stacks,
         &shard.affinity,
         shard.num_stacks,
+        &[],
+        usize::MAX,
         p,
     )
 }
@@ -493,7 +599,7 @@ pub fn simulate_sharded(shard: &ShardGraph, p: &HwParams) -> (SimReport, Vec<Gra
 /// per step, while letting independent levels overlap.
 pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
     let owner = vec![0u32; tg.n_tasks()];
-    simulate_dag_attributed(tg, &owner, 1, &owner, 1, p).0
+    simulate_dag_attributed(tg, &owner, 1, &owner, 1, &[], usize::MAX, p).0
 }
 
 /// The list scheduler proper, with per-owner attribution (`owner[node]`
@@ -502,20 +608,31 @@ pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
 /// its own FW die, MP die, and UCIe/HBM/FeNAND channels; the
 /// inter-stack interconnect is one shared capacity-1 channel). Batch
 /// runs attribute by graph on one stack; sharded runs attribute by
-/// stack with `owner == stack`.
+/// stack with `owner == stack`. `arrival[owner]` (empty = everything
+/// available at t = 0) and `queue_depth` model the admission pipeline:
+/// an owner's units enter the schedule only once it is **admitted** —
+/// arrived on the modeled timeline *and* holding one of the
+/// `queue_depth` in-flight slots, which frees when an owner's last
+/// unit retires. Owners are admitted in index order (arrival order).
+/// Late admission never stalls what is already running.
+#[allow(clippy::too_many_arguments)]
 fn simulate_dag_attributed(
     tg: &TaskGraph,
     owner: &[u32],
     n_owners: usize,
     stack: &[u32],
     n_stacks: usize,
+    arrival: &[f64],
+    queue_depth: usize,
     p: &HwParams,
 ) -> (SimReport, Vec<GraphSimStat>) {
+    debug_assert!(arrival.is_empty() || arrival.len() == n_owners);
     // ---- explode tasks into op units, chaining ops within a task
     let mut units: Vec<SimUnit> = Vec::new();
     let mut unit_owner: Vec<u32> = Vec::new();
     let mut unit_stack: Vec<u32> = Vec::new();
     let mut deps: Vec<Vec<u32>> = Vec::new();
+    let mut owner_units_left = vec![0usize; n_owners.max(1)];
     let mut last_unit_of_task: Vec<u32> = Vec::with_capacity(tg.nodes.len());
     for (ni, node) in tg.nodes.iter().enumerate() {
         let entry_deps: Vec<u32> = node
@@ -533,12 +650,14 @@ fn simulate_dag_attributed(
             });
             unit_owner.push(owner[ni]);
             unit_stack.push(stack[ni]);
+            owner_units_left[owner[ni] as usize] += 1;
             deps.push(entry_deps);
         } else {
             for (oi, op) in node.ops.iter().enumerate() {
                 units.push(op_unit(op, node.phase, p));
                 unit_owner.push(owner[ni]);
                 unit_stack.push(stack[ni]);
+                owner_units_left[owner[ni] as usize] += 1;
                 if oi == 0 {
                     deps.push(entry_deps.clone());
                 } else {
@@ -640,18 +759,32 @@ fn simulate_dag_attributed(
 
     let mut remaining = n;
     let mut done = vec![false; n];
+    let mut time = 0.0f64;
+    // ---- bounded-queue admission state: with no arrival schedule
+    // every owner is admitted up front (plain batch semantics);
+    // otherwise owners enter in index order as slots free up
+    let gated = !arrival.is_empty();
+    let mut owner_admitted = vec![!gated; n_owners.max(1)];
+    let mut next_admit = if gated { 0 } else { n_owners };
+    let mut in_flight = 0usize;
+    // dependency-free units of a not-yet-admitted owner park here
+    let mut waiting: Vec<Vec<u32>> = vec![Vec::new(); n_owners.max(1)];
     macro_rules! enqueue {
         ($u:expr) => {{
             let u: u32 = $u;
-            let unit = &units[u as usize];
-            if unit.res == UnitRes::None || unit.secs <= 0.0 {
-                zero_ready.push(u);
+            if !owner_admitted[unit_owner[u as usize] as usize] {
+                waiting[unit_owner[u as usize] as usize].push(u);
             } else {
-                let pri = Pri(cp[u as usize], u);
-                match unit.res {
-                    UnitRes::FwDie => ready_fw[unit_stack[u as usize] as usize].push(pri),
-                    UnitRes::Interstack => ready_inter.push(pri),
-                    r => ready_ch[unit_stack[u as usize] as usize][ch_idx(r)].push(pri),
+                let unit = &units[u as usize];
+                if unit.res == UnitRes::None || unit.secs <= 0.0 {
+                    zero_ready.push(u);
+                } else {
+                    let pri = Pri(cp[u as usize], u);
+                    match unit.res {
+                        UnitRes::FwDie => ready_fw[unit_stack[u as usize] as usize].push(pri),
+                        UnitRes::Interstack => ready_inter.push(pri),
+                        r => ready_ch[unit_stack[u as usize] as usize][ch_idx(r)].push(pri),
+                    }
                 }
             }
         }};
@@ -663,7 +796,6 @@ fn simulate_dag_attributed(
     }
 
     let tiles = p.tiles_per_die.max(1) as f64;
-    let mut time = 0.0f64;
     let mut fw_busy = 0.0f64;
     let mut chan_busy = 0.0f64;
     let mut fenand_busy = 0.0f64;
@@ -682,15 +814,35 @@ fn simulate_dag_attributed(
             }
             done[u as usize] = true;
             remaining -= 1;
+            let o = unit_owner[u as usize] as usize;
             // per-owner completion: time is monotone, so the last
             // assignment is the owner's finish time in the schedule
-            stats[unit_owner[u as usize] as usize].makespan = time;
+            stats[o].makespan = time;
+            owner_units_left[o] -= 1;
+            if owner_units_left[o] == 0 {
+                // the owner's last unit retired: its in-flight slot
+                // frees for the next queued arrival
+                in_flight = in_flight.saturating_sub(1);
+            }
             for &s in &succs[u as usize] {
                 indeg[s as usize] -= 1;
                 if indeg[s as usize] == 0 {
                     enqueue!(s);
                 }
             }
+        }
+        // bounded-queue admission on the modeled timeline: the next
+        // arrival enters only once it has arrived *and* holds one of
+        // the `queue_depth` in-flight slots — exactly the host
+        // pipeline's queue semantics
+        while next_admit < n_owners && in_flight < queue_depth && arrival[next_admit] <= time {
+            owner_admitted[next_admit] = true;
+            in_flight += 1;
+            let parked = std::mem::take(&mut waiting[next_admit]);
+            for u in parked {
+                enqueue!(u);
+            }
+            next_admit += 1;
         }
         if !zero_ready.is_empty() {
             continue;
@@ -798,6 +950,16 @@ fn simulate_dag_attributed(
                         }
                     }
                 }
+            }
+        }
+        // with a free queue slot, the next modeled arrival is a
+        // schedulable event even while everything current is
+        // mid-flight (a *full* queue instead wakes on a completion,
+        // which is already a candidate above)
+        if next_admit < n_owners && in_flight < queue_depth {
+            let gap = arrival[next_admit] - time;
+            if gap > 0.0 {
+                dt = dt.min(gap);
             }
         }
         if dt == f64::INFINITY {
@@ -1144,6 +1306,188 @@ mod tests {
         let esum: f64 = stats.iter().map(|s| s.dynamic_joules).sum();
         assert_eq!(esum, rep.dynamic_joules);
         assert_eq!(stats.iter().map(|s| s.madds).sum::<u64>(), rep.madds);
+    }
+
+    fn admission_workload(seeds: &[u64]) -> Vec<TaskGraph> {
+        let topos = [
+            Topology::Nws,
+            Topology::OgbnProxy,
+            Topology::Er,
+            Topology::Grid,
+        ];
+        seeds
+            .iter()
+            .enumerate()
+            .map(|(i, &seed)| {
+                let (_, plan) = graph_for(1_500 + 400 * i, topos[i % topos.len()], seed);
+                taskgraph::lower(&plan)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn admission_with_zero_arrivals_matches_batch() {
+        use crate::apsp::batch::BatchGraph;
+        let batch = BatchGraph::merge(admission_workload(&[41, 42, 43]));
+        let p = HwParams::default();
+        let (br, bs) = simulate_batch(&batch, &p);
+        let arrivals = vec![0.0; batch.n_graphs()];
+        let (ar, asx) = simulate_admission(&batch, &arrivals, batch.n_graphs(), &p);
+        // arriving at t = 0 with a deep-enough queue is exactly a
+        // batch submission
+        assert_eq!(ar.seconds, br.seconds);
+        assert_eq!(ar.joules, br.joules);
+        assert_eq!(ar.fw_busy, br.fw_busy);
+        for (a, b) in asx.iter().zip(&bs) {
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.dynamic_joules, b.dynamic_joules);
+            assert_eq!(a.busy, b.busy);
+        }
+    }
+
+    #[test]
+    fn admission_staggered_respects_arrivals_and_partitions_energy() {
+        use crate::apsp::batch::BatchGraph;
+        let batch = BatchGraph::merge(admission_workload(&[44, 45, 46, 47]));
+        let p = HwParams::default();
+        let solos: Vec<SimReport> = batch
+            .per_graph
+            .iter()
+            .map(|tg| simulate_dag(tg, &p))
+            .collect();
+        let first = solos[0].seconds;
+        let arrivals: Vec<f64> = (0..batch.n_graphs())
+            .map(|i| i as f64 * 0.2 * first)
+            .collect();
+        let (rep, stats) = simulate_admission(&batch, &arrivals, batch.n_graphs(), &p);
+        let (batch_rep, _) = simulate_batch(&batch, &p);
+        // delayed releases can only stretch the shared schedule
+        assert!(rep.seconds >= batch_rep.seconds - 1e-12);
+        for (i, st) in stats.iter().enumerate() {
+            // completion never precedes arrival: released units cannot
+            // start before the graph exists
+            assert!(
+                st.makespan > arrivals[i],
+                "graph {i}: finish {} precedes arrival {}",
+                st.makespan,
+                arrivals[i]
+            );
+            assert!(st.makespan <= rep.seconds + 1e-12, "graph {i}");
+            // dynamic energy attribution is arrival-independent
+            assert_eq!(st.dynamic_joules, solos[i].dynamic_joules, "graph {i}");
+            assert_eq!(st.madds, solos[i].madds, "graph {i}");
+        }
+        let esum: f64 = stats.iter().map(|s| s.dynamic_joules).sum();
+        assert_eq!(esum, rep.dynamic_joules);
+        // a graph arriving after everything else finished runs alone:
+        // total = its arrival + its solo makespan
+        let far = rep.seconds * 10.0;
+        let mut late = arrivals.clone();
+        let last = late.len() - 1;
+        late[last] = far;
+        let (lrep, lstats) = simulate_admission(&batch, &late, batch.n_graphs(), &p);
+        assert!(
+            (lstats[last].makespan - (far + solos[last].seconds)).abs()
+                <= 1e-9 * lrep.seconds.max(1.0),
+            "late graph must run at solo speed: {} vs {}",
+            lstats[last].makespan,
+            far + solos[last].seconds
+        );
+    }
+
+    #[test]
+    fn admission_beats_drain_rebatch_on_staggered_arrivals() {
+        use crate::apsp::batch::BatchGraph;
+        let batch = BatchGraph::merge(admission_workload(&[48, 49, 50, 51, 52, 53]));
+        let p = HwParams::default();
+        let first = simulate_dag(&batch.per_graph[0], &p).seconds;
+        let arrivals: Vec<f64> = (0..batch.n_graphs())
+            .map(|i| i as f64 * 0.15 * first)
+            .collect();
+        let (rep, stats) = simulate_admission(&batch, &arrivals, batch.n_graphs(), &p);
+        let (drain, drain_completion) = simulate_drain_rebatch(&batch.per_graph, &arrivals, &p);
+        assert!(
+            rep.seconds < drain,
+            "live admission {} !< drain-and-rebatch {drain}",
+            rep.seconds
+        );
+        // per-graph: completing inside the live schedule never waits
+        // longer than queuing outside a draining one... on average
+        let live_sum: f64 = stats.iter().map(|s| s.makespan).sum();
+        let drain_sum: f64 = drain_completion.iter().sum();
+        assert!(
+            live_sum <= drain_sum * (1.0 + 1e-9),
+            "live completions {live_sum} > drain completions {drain_sum}"
+        );
+    }
+
+    #[test]
+    fn admission_queue_depth_bounds_concurrency() {
+        use crate::apsp::batch::BatchGraph;
+        let batch = BatchGraph::merge(admission_workload(&[57, 58, 59]));
+        let p = HwParams::default();
+        let zeros = vec![0.0; batch.n_graphs()];
+        let solos: Vec<f64> = batch
+            .per_graph
+            .iter()
+            .map(|tg| simulate_dag(tg, &p).seconds)
+            .collect();
+        // queue depth 1 strictly serializes: each graph runs alone on
+        // an empty machine, so completions are the solo prefix sums
+        let (rep1, stats1) = simulate_admission(&batch, &zeros, 1, &p);
+        let total: f64 = solos.iter().sum();
+        let mut prefix = 0.0;
+        for (i, st) in stats1.iter().enumerate() {
+            prefix += solos[i];
+            assert!(
+                (st.makespan - prefix).abs() <= 1e-9 * total,
+                "graph {i}: queue-1 finish {} != prefix sum {prefix}",
+                st.makespan
+            );
+        }
+        assert!((rep1.seconds - total).abs() <= 1e-9 * total);
+        // a deeper queue can only help, and the unbounded queue is the
+        // batch schedule
+        let (rep2, _) = simulate_admission(&batch, &zeros, 2, &p);
+        let (repn, _) = simulate_admission(&batch, &zeros, batch.n_graphs(), &p);
+        let (batch_rep, _) = simulate_batch(&batch, &p);
+        assert!(rep2.seconds <= rep1.seconds * (1.0 + 1e-9));
+        assert!(repn.seconds <= rep2.seconds * (1.0 + 1e-9));
+        assert_eq!(repn.seconds, batch_rep.seconds);
+        // dynamic energy is queue-independent
+        assert!((rep1.dynamic_joules - batch_rep.dynamic_joules).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drain_rebatch_degenerates_correctly() {
+        use crate::apsp::batch::BatchGraph;
+        let batch = BatchGraph::merge(admission_workload(&[54, 55, 56]));
+        let p = HwParams::default();
+        // all at t=0: one batch, identical to simulate_batch
+        let zeros = vec![0.0; batch.n_graphs()];
+        let (drain, completion) = simulate_drain_rebatch(&batch.per_graph, &zeros, &p);
+        let (rep, stats) = simulate_batch(&batch, &p);
+        assert_eq!(drain, rep.seconds);
+        for (c, s) in completion.iter().zip(&stats) {
+            assert_eq!(*c, s.makespan);
+        }
+        // arrivals spaced far apart: every graph runs alone
+        let solos: Vec<f64> = batch
+            .per_graph
+            .iter()
+            .map(|tg| simulate_dag(tg, &p).seconds)
+            .collect();
+        let gap: f64 = solos.iter().sum::<f64>() * 2.0;
+        let spaced: Vec<f64> = (0..batch.n_graphs()).map(|i| i as f64 * gap).collect();
+        let (_, spaced_completion) = simulate_drain_rebatch(&batch.per_graph, &spaced, &p);
+        for i in 0..batch.n_graphs() {
+            assert!(
+                (spaced_completion[i] - (spaced[i] + solos[i])).abs() <= 1e-9 * gap,
+                "graph {i}: {} vs {}",
+                spaced_completion[i],
+                spaced[i] + solos[i]
+            );
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod params;
 pub mod pcm;
 
 pub use engine::{
-    simulate, simulate_batch, simulate_dag, simulate_sharded, GraphSimStat, SimReport,
+    simulate, simulate_admission, simulate_batch, simulate_dag, simulate_drain_rebatch,
+    simulate_sharded, GraphSimStat, SimReport,
 };
 pub use params::HwParams;

@@ -121,6 +121,19 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Nearest-rank percentile of a sample set (`p` in [0, 1]): sorts a
+/// copy by `total_cmp` and indexes `round(p * (n - 1))`. One shared
+/// definition so the admission report and the CI perf-snapshot
+/// (`BENCH_admission.json`) can never drift apart. Panics on an empty
+/// slice.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of an empty sample set");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let idx = (p * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +164,15 @@ mod tests {
         let (v, secs) = time_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&v, 0.9), 5.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
     }
 }

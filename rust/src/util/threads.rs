@@ -292,6 +292,166 @@ pub fn par_dag_grouped<F: Fn(usize) + Sync>(
     });
 }
 
+/// Growable-DAG state shared by a [`dag_pool_scope`] pool: tasks are
+/// appended by [`DagPool::inject`] while the workers run (or park), so
+/// the dependency bookkeeping lives behind one mutex instead of the
+/// fixed-size precompute [`par_dag`] uses.
+struct InjectState {
+    /// Unmet-dependency count per task (grows on inject).
+    deps_left: Vec<usize>,
+    /// Successor adjacency (grows on inject; drained as tasks finish).
+    succs: Vec<Vec<u32>>,
+    /// Completion flag per task. Late injections may depend on tasks
+    /// that already finished — those edges are satisfied immediately.
+    finished: Vec<bool>,
+    ready: Vec<usize>,
+    n_done: usize,
+    closed: bool,
+    panicked: bool,
+}
+
+/// Injection handle of a live [`dag_pool_scope`] pool.
+pub struct DagPool<'a> {
+    state: &'a std::sync::Mutex<InjectState>,
+    cv: &'a std::sync::Condvar,
+}
+
+impl DagPool<'_> {
+    /// Splice `deps.len()` new tasks into the live schedule. `deps[i]`
+    /// holds *global* task ids and must point to already-injected
+    /// tasks; an edge to a task that finished before this call is
+    /// satisfied immediately (injecting into an almost-drained — or
+    /// fully parked — pool is the normal case). Returns the global id
+    /// range assigned to the new tasks. Ready tasks become eligible at
+    /// once and parked workers are woken; nothing already running is
+    /// disturbed.
+    pub fn inject(&self, deps: &[Vec<u32>]) -> std::ops::Range<usize> {
+        let mut g = self.state.lock().unwrap();
+        assert!(!g.closed, "inject into a closed pool");
+        let base = g.finished.len();
+        for (i, ds) in deps.iter().enumerate() {
+            let id = base + i;
+            g.finished.push(false);
+            g.succs.push(Vec::new());
+            let mut left = 0usize;
+            for &d in ds {
+                let d = d as usize;
+                assert!(d < id, "task {id} depends on non-earlier task {d}");
+                if !g.finished[d] {
+                    left += 1;
+                    g.succs[d].push(id as u32);
+                }
+            }
+            g.deps_left.push(left);
+            if left == 0 {
+                g.ready.push(id);
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+        base..base + deps.len()
+    }
+
+    /// Tasks finished so far.
+    pub fn n_done(&self) -> usize {
+        self.state.lock().unwrap().n_done
+    }
+
+    /// Block until `pred(n_done)` holds, re-checking after every task
+    /// completion. Returns early (predicate unmet) only if a worker
+    /// panicked — that panic resurfaces when the scope joins.
+    pub fn wait(&self, mut pred: impl FnMut(usize) -> bool) {
+        let mut g = self.state.lock().unwrap();
+        while !g.panicked && !pred(g.n_done) {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Run a long-lived worker pool over a *growable* dependency DAG: the
+/// workers execute injected tasks (via `f(global_id)`) respecting their
+/// dependencies, while `body` — on the caller's thread — splices new
+/// work into the live schedule through [`DagPool::inject`] at any time,
+/// including while every worker is parked on an empty queue. When
+/// `body` returns, the pool drains the remaining tasks and joins.
+///
+/// This is the substrate of the admission pipeline: a running schedule
+/// accepts newly lowered task graphs without a barrier or a drain.
+/// Like [`par_dag`], a panic in `f` (or in `body`) abandons the queued
+/// tasks and resurfaces on the caller's thread.
+pub fn dag_pool_scope<R, F: Fn(usize) + Sync>(
+    workers: usize,
+    f: F,
+    body: impl FnOnce(&DagPool<'_>) -> R,
+) -> R {
+    let workers = workers.max(1);
+    let state = std::sync::Mutex::new(InjectState {
+        deps_left: Vec::new(),
+        succs: Vec::new(),
+        finished: Vec::new(),
+        ready: Vec::new(),
+        n_done: 0,
+        closed: false,
+        panicked: false,
+    });
+    let cv = std::sync::Condvar::new();
+    let state = &state;
+    let cv = &cv;
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let task = {
+                    let mut g = state.lock().unwrap();
+                    loop {
+                        if g.panicked || (g.closed && g.n_done == g.finished.len()) {
+                            return;
+                        }
+                        if let Some(t) = g.ready.pop() {
+                            break t;
+                        }
+                        g = cv.wait(g).unwrap();
+                    }
+                };
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
+                let mut g = state.lock().unwrap();
+                if res.is_err() {
+                    g.panicked = true;
+                }
+                g.finished[task] = true;
+                g.n_done += 1;
+                let succs = std::mem::take(&mut g.succs[task]);
+                for &sx in &succs {
+                    let sx = sx as usize;
+                    g.deps_left[sx] -= 1;
+                    if g.deps_left[sx] == 0 {
+                        g.ready.push(sx);
+                    }
+                }
+                drop(g);
+                cv.notify_all();
+                if let Err(p) = res {
+                    std::panic::resume_unwind(p);
+                }
+            });
+        }
+        let pool = DagPool { state, cv };
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&pool)));
+        {
+            let mut g = state.lock().unwrap();
+            g.closed = true;
+            if out.is_err() {
+                g.panicked = true;
+            }
+        }
+        cv.notify_all();
+        match out {
+            Ok(v) => v,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    })
+}
+
 /// Process disjoint mutable row-chunks of a flat `data` buffer in parallel:
 /// `f(chunk_index, chunk)` where `chunk` is `rows_per_chunk * row_len`
 /// elements (last chunk may be shorter).
@@ -455,6 +615,85 @@ mod tests {
                     panic!("boom");
                 }
             });
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn dag_pool_injects_into_drained_pool() {
+        // the admission pipeline's key motion: a second DAG spliced in
+        // after the first fully drained (every worker parked), with
+        // dependencies on already-finished tasks
+        let hits: Vec<AtomicU64> = (0..6).map(|_| AtomicU64::new(0)).collect();
+        let order = std::sync::Mutex::new(Vec::new());
+        dag_pool_scope(
+            4,
+            |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+                order.lock().unwrap().push(i);
+            },
+            |pool| {
+                let r = pool.inject(&[vec![], vec![0], vec![1]]);
+                assert_eq!(r, 0..3);
+                pool.wait(|done| done == 3);
+                assert_eq!(pool.n_done(), 3);
+                let r = pool.inject(&[vec![2], vec![0, 3], vec![4]]);
+                assert_eq!(r, 3..6);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        let order = order.into_inner().unwrap();
+        let pos = |x: usize| order.iter().position(|&v| v == x).unwrap();
+        assert!(pos(0) < pos(1) && pos(1) < pos(2));
+        assert!(pos(3) < pos(4) && pos(4) < pos(5));
+    }
+
+    #[test]
+    fn dag_pool_respects_dependencies_across_waves() {
+        let n = 300usize;
+        let deps: Vec<Vec<u32>> = (0..n)
+            .map(|i| if i > 0 { vec![(i as u32) / 2] } else { vec![] })
+            .collect();
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        dag_pool_scope(
+            4,
+            |i| {
+                for &d in &deps[i] {
+                    assert_eq!(hits[d as usize].load(Ordering::SeqCst), 1);
+                }
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            },
+            |pool| {
+                // three waves spliced without waiting for drains
+                pool.inject(&deps[..100]);
+                pool.inject(&deps[100..200]);
+                pool.inject(&deps[200..]);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn dag_pool_zero_tasks() {
+        let out = dag_pool_scope(2, |_| panic!("no tasks injected"), |_| 42);
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn dag_pool_propagates_worker_panics() {
+        let res = std::panic::catch_unwind(|| {
+            dag_pool_scope(
+                4,
+                |i| {
+                    if i == 3 {
+                        panic!("boom");
+                    }
+                },
+                |pool| {
+                    pool.inject(&[vec![], vec![], vec![], vec![], vec![]]);
+                    pool.wait(|done| done == 5);
+                },
+            );
         });
         assert!(res.is_err());
     }

@@ -206,6 +206,104 @@ fn more_stacks_than_tiles_rejected_cleanly() {
 }
 
 #[test]
+fn apsp_mode_flags_mutually_exclusive() {
+    // the CLI used to tolerate `--batch --stacks 1` silently; every
+    // pairing of the mode-selecting flags must now be a clean
+    // util::error, and single-mode invocations still resolve
+    use rapid_graph::coordinator::config::{resolve_cli_mode, CliMode};
+    use rapid_graph::util::cli::Args;
+    let parse = |v: &[&str]| Args::parse(v.iter().map(|s| s.to_string()));
+    for combo in [
+        vec!["--batch", "--stacks", "4"],
+        vec!["--batch", "--stacks", "1"],
+        vec!["--batch", "--admit"],
+        vec!["--admit", "6", "--stacks", "2"],
+        vec!["--graphs", "a.bin,b.bin", "--stacks", "2"],
+        vec!["--batch", "3", "--admit", "2", "--stacks", "2"],
+    ] {
+        let err = resolve_cli_mode(&parse(&combo), 1).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("pick one"), "{combo:?} must conflict: {msg}");
+        assert!(msg.contains("--"), "{combo:?}: message should name the flags: {msg}");
+    }
+    assert_eq!(resolve_cli_mode(&parse(&["--batch"]), 1).unwrap(), CliMode::Batch);
+    assert_eq!(
+        resolve_cli_mode(&parse(&["--stacks", "4"]), 1).unwrap(),
+        CliMode::Sharded
+    );
+    assert_eq!(
+        resolve_cli_mode(&parse(&["--admit"]), 1).unwrap(),
+        CliMode::Admission
+    );
+    assert_eq!(resolve_cli_mode(&parse(&[]), 1).unwrap(), CliMode::Solo);
+}
+
+#[test]
+fn admission_zero_queue_depth_rejected_cleanly() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
+    cfg.admission_queue_depth = 0;
+    let ex = Executor::new(cfg).unwrap();
+    let g = rapid_graph::graph::generators::newman_watts_strogatz(
+        100,
+        4,
+        0.1,
+        rapid_graph::graph::generators::Weights::Unit,
+        1,
+    );
+    let err = match ex.run_admission(std::slice::from_ref(&g)) {
+        Ok(_) => panic!("queue depth 0 must not run"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err}").contains("queue_depth"),
+        "error must name the knob: {err}"
+    );
+}
+
+#[test]
+fn admission_rejections_are_clean_and_nonfatal() {
+    // an empty graph and an over-capacity graph arrive mid-stream:
+    // both are turned away with named verdicts while every other
+    // submission is served
+    use rapid_graph::apsp::admission::{RejectReason, Verdict};
+    let mut cfg = SystemConfig::default();
+    cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
+    cfg.tile_limit = 64;
+    cfg.memory_limit_bytes = 4 << 20;
+    cfg.admission_interval = 1e-4;
+    let ex = Executor::new(cfg).unwrap();
+    let gen = |n: usize, seed: u64| {
+        rapid_graph::graph::generators::newman_watts_strogatz(
+            n,
+            4,
+            0.1,
+            rapid_graph::graph::generators::Weights::Unit,
+            seed,
+        )
+    };
+    let graphs = vec![
+        gen(150, 1),
+        CsrGraph::from_edges(0, &[]),
+        gen(6_000, 2),
+        gen(200, 3),
+    ];
+    let a = ex.run_admission(&graphs).unwrap();
+    assert_eq!(a.n_admitted(), 2);
+    assert_eq!(a.n_rejected(), 2);
+    assert_eq!(
+        a.per_graph[1].verdict,
+        Verdict::Rejected(RejectReason::Empty)
+    );
+    assert_eq!(
+        a.per_graph[2].verdict,
+        Verdict::Rejected(RejectReason::StackCapacity)
+    );
+    assert!(a.per_graph[0].verdict.admitted());
+    assert!(a.per_graph[3].verdict.admitted(), "pipeline keeps running");
+}
+
+#[test]
 fn binary_graph_roundtrip_detects_truncation() {
     let dir = tmpdir("trunc_bin");
     let g = rapid_graph::graph::generators::erdos_renyi(

@@ -393,6 +393,116 @@ fn executor_batch_end_to_end_with_edge_cases() {
     );
 }
 
+#[test]
+fn admission_solutions_bit_identical_to_solo_runs() {
+    use rapid_graph::apsp::admission::{AdmissionConfig, AdmissionGraph};
+    // the batch edge-case workload (mixed topologies, a disconnected
+    // graph, a single-tile direct solve) submitted through the
+    // admission pipeline. queue_depth = 1 splices every graph into an
+    // almost-drained (fully parked) pool; deeper queues interleave.
+    let graphs = batch_workload();
+    let plans: Vec<ApspPlan> = graphs.iter().map(|g| build_plan(g, plan_opts(64, 7))).collect();
+    let subs: Vec<(&CsrGraph, &ApspPlan)> = graphs.iter().zip(&plans).collect();
+    let arrivals: Vec<f64> = (0..subs.len()).map(|i| i as f64 * 1e-4).collect();
+    let be = NativeBackend;
+    for queue_depth in [1usize, 3] {
+        let cfg = AdmissionConfig {
+            queue_depth,
+            ..AdmissionConfig::default()
+        };
+        let adm = AdmissionGraph::build(&subs, &arrivals, &cfg);
+        assert_eq!(adm.n_admitted(), graphs.len());
+        let completions = std::sync::Mutex::new(Vec::new());
+        let sols = scheduler::execute_admission(&subs, &adm, &be, |si| {
+            completions.lock().unwrap().push(si);
+        });
+        // every graph completed exactly once, each callback fired
+        let mut done = completions.into_inner().unwrap();
+        done.sort_unstable();
+        assert_eq!(done, (0..graphs.len()).collect::<Vec<_>>());
+        for (i, sol) in sols.iter().enumerate() {
+            let sol = sol.as_ref().expect("admitted graph must have a solution");
+            let solo = scheduler::solve_dag(&graphs[i], &plans[i], &be, SolveOptions::default());
+            assert_eq!(solo.trace, sol.trace, "graph {i}: traces differ");
+            let diff = solo
+                .materialize_full(&be)
+                .max_diff(&sol.materialize_full(&be));
+            assert_eq!(
+                diff, 0.0,
+                "graph {i} queue {queue_depth}: admission differs from solo"
+            );
+            // and correct, not just consistent
+            let oracle = dijkstra::apsp(&graphs[i]);
+            assert!(sol.materialize_full(&be).max_diff(&oracle) < 1e-3, "graph {i}");
+        }
+    }
+}
+
+#[test]
+fn admission_beats_drain_rebatch_on_staggered_six_graph_workload() {
+    use rapid_graph::apsp::batch::BatchGraph;
+    use rapid_graph::sim::engine::{simulate_admission, simulate_drain_rebatch};
+    // the acceptance gate: six heterogeneous graphs arriving staggered
+    // must finish sooner when spliced into the live schedule than when
+    // the coordinator drains and rebatches between arrivals
+    let specs: [(Topology, usize, f64, u64); 6] = [
+        (Topology::Nws, 3_000, 12.0, 91),
+        (Topology::Er, 2_000, 10.0, 92),
+        (Topology::Grid, 2_500, 4.0, 93),
+        (Topology::OgbnProxy, 4_000, 14.0, 94),
+        (Topology::Nws, 1_500, 20.0, 95),
+        (Topology::OgbnProxy, 2_500, 10.0, 96),
+    ];
+    let tgs: Vec<_> = specs
+        .iter()
+        .map(|&(topo, n, degree, seed)| {
+            let g = generators::generate(topo, n, degree, Weights::Uniform(1.0, 5.0), seed);
+            taskgraph::lower(&build_plan(&g, plan_opts(1024, seed)))
+        })
+        .collect();
+    let p = HwParams::default();
+    let first = simulate_dag(&tgs[0], &p).seconds;
+    let arrivals: Vec<f64> = (0..tgs.len()).map(|i| i as f64 * 0.15 * first).collect();
+    let batch = BatchGraph::merge(tgs);
+    let (rep, stats) = simulate_admission(&batch, &arrivals, batch.n_graphs(), &p);
+    let (drain, _) = simulate_drain_rebatch(&batch.per_graph, &arrivals, &p);
+    assert!(
+        rep.seconds < drain,
+        "live admission {} !< drain-and-rebatch {drain}",
+        rep.seconds
+    );
+    // completion timestamps respect the arrival schedule
+    for (st, &a) in stats.iter().zip(&arrivals) {
+        assert!(st.makespan > a);
+        assert!(st.makespan <= rep.seconds + 1e-12);
+    }
+    // the executor-level view agrees: speedup over the drain baseline
+    // (queue deep enough for the whole workload, so the gain measured
+    // is splice-vs-drain, not queue backpressure)
+    let mut cfg = SystemConfig::default();
+    cfg.mode = Mode::Estimate;
+    cfg.tile_limit = 1024;
+    cfg.admission_arrivals = arrivals;
+    cfg.admission_queue_depth = 6;
+    let ex = Executor::new(cfg).unwrap();
+    let graphs: Vec<CsrGraph> = specs
+        .iter()
+        .map(|&(topo, n, degree, seed)| {
+            generators::generate(topo, n, degree, Weights::Uniform(1.0, 5.0), seed)
+        })
+        .collect();
+    let a = ex.run_admission(&graphs).unwrap();
+    assert_eq!(a.n_admitted(), 6);
+    assert!(
+        a.admission_speedup() > 1.0,
+        "admission speedup {} must beat the drain baseline",
+        a.admission_speedup()
+    );
+    for r in &a.per_graph {
+        assert!(r.latency > 0.0);
+    }
+}
+
 #[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_agrees_with_native_when_artifacts_exist() {
