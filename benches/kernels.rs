@@ -12,9 +12,11 @@
 //!
 //!     make artifacts && cargo bench --bench kernels
 
+use rapid_graph::apsp::admission::{AdmissionConfig, AdmissionGraph};
 use rapid_graph::apsp::backend::{NativeBackend, TileBackend};
 use rapid_graph::apsp::batch::BatchGraph;
-use rapid_graph::apsp::plan::{build_plan, PlanOptions};
+use rapid_graph::apsp::plan::{build_plan, ApspPlan, PlanOptions};
+use rapid_graph::apsp::store::MemoryStore;
 use rapid_graph::apsp::recursive::{solve, SolveOptions};
 use rapid_graph::apsp::shard::ShardGraph;
 use rapid_graph::apsp::taskgraph::TaskGraph;
@@ -305,6 +307,21 @@ fn bench_admission(json_out: Option<&str>) {
         100.0 * rep.fw_utilization(),
     );
 
+    // ---- result store: a duplicate-heavy stream (the same graph
+    // submitted three times through a depth-1 queue), where the
+    // content-addressed store turns two of the three solves into
+    // modeled FeNAND reads. queue depth 1 serializes the stream, so
+    // the cache's makespan gain is isolated from schedule overlap.
+    let (store_hits, store_makespan, store_plain) = store_metrics(&hw);
+    let cache_speedup = store_plain / store_makespan;
+    println!(
+        "result store (duplicate-heavy stream, queue depth 1): {store_hits} hits / 3 \
+         submissions, makespan {} vs no-store {} -> cache_speedup {}\n",
+        fmt_time(store_makespan),
+        fmt_time(store_plain),
+        fmt_ratio(cache_speedup),
+    );
+
     let lat: Vec<f64> = stats
         .iter()
         .zip(&arrivals)
@@ -335,11 +352,45 @@ fn bench_admission(json_out: Option<&str>) {
             ("latency_p50_s", json::num(pct(0.5))),
             ("latency_p90_s", json::num(pct(0.9))),
             ("latency_max_s", json::num(pct(1.0))),
+            ("store_hits", json::num(store_hits as f64)),
+            ("store_makespan_s", json::num(store_makespan)),
+            ("store_no_cache_makespan_s", json::num(store_plain)),
+            ("cache_speedup", json::num(cache_speedup)),
             ("per_graph", json::arr(per_graph)),
         ]);
         std::fs::write(path, doc.render() + "\n").expect("write bench json");
         println!("wrote {path}\n");
     }
+}
+
+/// The store metric of the perf snapshot: hits, with-store makespan,
+/// and the no-store makespan of the identical workload (verdicts match
+/// by construction, so the ratio is apples-to-apples).
+fn store_metrics(hw: &HwParams) -> (usize, f64, f64) {
+    let g = generators::generate(Topology::Nws, 600, 8.0, Weights::Uniform(1.0, 5.0), 27);
+    let plan = build_plan(
+        &g,
+        PlanOptions {
+            tile_limit: 128,
+            max_depth: usize::MAX,
+            seed: 27,
+        },
+    );
+    let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g, &plan); 3];
+    let arrivals = vec![0.0, 1e-4, 2e-4];
+    let cfg = AdmissionConfig {
+        queue_depth: 1,
+        ..AdmissionConfig::default()
+    };
+    let mut store = MemoryStore::new(8, 1 << 32);
+    let (adm, outcomes) =
+        AdmissionGraph::build_with_store(&subs, &arrivals, &cfg, &mut store, true);
+    let hits = outcomes.iter().flatten().filter(|o| o.is_hit()).count();
+    let (rep, _) = engine::simulate_admission(&adm.batch, &adm.arrivals, cfg.queue_depth, hw);
+    let plain = AdmissionGraph::build(&subs, &arrivals, &cfg);
+    let (plain_rep, _) =
+        engine::simulate_admission(&plain.batch, &plain.arrivals, cfg.queue_depth, hw);
+    (hits, rep.seconds, plain_rep.seconds)
 }
 
 fn main() {

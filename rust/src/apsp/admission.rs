@@ -36,8 +36,10 @@
 use super::batch::BatchGraph;
 use super::plan::ApspPlan;
 use super::recursive::projected_bytes;
-use super::taskgraph::lower;
+use super::store::{fingerprint, CompressedMatrix, ResultStore, StoreEntry};
+use super::taskgraph::{append_store_writeback, csr_bytes_estimate, lower, store_hit_graph};
 use crate::graph::csr::CsrGraph;
+use std::collections::HashMap;
 
 /// Admission-control policy of the pipeline.
 #[derive(Debug, Clone, Copy)]
@@ -100,6 +102,46 @@ impl Verdict {
     }
 }
 
+/// Result-store outcome of one *admitted* submission (store-enabled
+/// builds only; rejected submissions never consult the store).
+///
+/// Outcomes never influence verdicts — admission control sees the same
+/// footprints either way, so a store-enabled build admits exactly the
+/// same set as the no-store baseline (apples-to-apples `cache_speedup`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreOutcome {
+    /// Fingerprint hit: lowering is skipped entirely and the graph's
+    /// schedule is one modeled FeNAND read of the stored result.
+    /// `source` is the admitted index whose solve produced the entry in
+    /// this build (the executor serves that solution bit-identically);
+    /// `payload` carries the compressed solution when the store was
+    /// pre-warmed with one.
+    Hit {
+        source: Option<u32>,
+        payload: Option<CompressedMatrix>,
+    },
+    /// Miss: solved, then the result is programmed back into the store
+    /// (the lowered graph gains a FeNAND write-back node).
+    MissStored,
+    /// Miss that was not persisted — the store is disabled (capacity 0)
+    /// or rejected the entry (over budget); the pipeline keeps running.
+    MissUncached,
+}
+
+impl StoreOutcome {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, StoreOutcome::Hit { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreOutcome::Hit { .. } => "HIT",
+            StoreOutcome::MissStored => "miss",
+            StoreOutcome::MissUncached => "miss*",
+        }
+    }
+}
+
 /// An arrival-stamped workload run through admission control and
 /// lowered into one growable merged schedule.
 #[derive(Debug, Clone)]
@@ -134,6 +176,38 @@ impl AdmissionGraph {
         arrivals: &[f64],
         cfg: &AdmissionConfig,
     ) -> AdmissionGraph {
+        Self::build_inner(subs, arrivals, cfg, None).0
+    }
+
+    /// [`build`](Self::build) with a content-addressed result store in
+    /// the loop: every *admitted* submission is fingerprinted first. A
+    /// hit skips lowering entirely — its schedule is a single modeled
+    /// FeNAND read of the stored result — while a miss lowers as usual
+    /// and (when the store accepts the entry) gains a FeNAND write-back
+    /// node. `compression` selects the modeled stored size: worst-case
+    /// CSR bytes (on, the default — matches the `Op::StoreCsr` model)
+    /// or dense bytes (off). Returns the admission graph plus one
+    /// outcome per submission (`None` for rejected submissions).
+    ///
+    /// Verdicts are identical to a plain [`build`](Self::build) of the
+    /// same workload: the store changes what admitted graphs *cost*,
+    /// never whether they are admitted.
+    pub fn build_with_store(
+        subs: &[(&CsrGraph, &ApspPlan)],
+        arrivals: &[f64],
+        cfg: &AdmissionConfig,
+        store: &mut dyn ResultStore,
+        compression: bool,
+    ) -> (AdmissionGraph, Vec<Option<StoreOutcome>>) {
+        Self::build_inner(subs, arrivals, cfg, Some((store, compression)))
+    }
+
+    fn build_inner(
+        subs: &[(&CsrGraph, &ApspPlan)],
+        arrivals: &[f64],
+        cfg: &AdmissionConfig,
+        mut store: Option<(&mut dyn ResultStore, bool)>,
+    ) -> (AdmissionGraph, Vec<Option<StoreOutcome>>) {
         assert!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
         assert_eq!(
             subs.len(),
@@ -155,21 +229,77 @@ impl AdmissionGraph {
             arrivals: Vec::new(),
             queue_depth: cfg.queue_depth,
         };
+        let mut outcomes: Vec<Option<StoreOutcome>> = Vec::with_capacity(subs.len());
         // footprints of the already-admitted graphs, for the
         // worst-case co-resident sum
         let mut admitted_bytes: Vec<u64> = Vec::new();
+        // fingerprint -> admitted index of the miss that will produce
+        // the stored result in this build (serves same-run duplicates)
+        let mut producer: HashMap<u64, u32> = HashMap::new();
         for (si, &(g, plan)) in subs.iter().enumerate() {
             let verdict = if g.n() == 0 {
+                outcomes.push(None);
                 Verdict::Rejected(RejectReason::Empty)
             } else {
                 let need = projected_bytes(plan, g);
                 let resident = worst_case_resident(&admitted_bytes, cfg.queue_depth);
                 if need > cfg.memory_limit_bytes {
+                    outcomes.push(None);
                     Verdict::Rejected(RejectReason::StackCapacity)
                 } else if need + resident > cfg.memory_limit_bytes {
+                    outcomes.push(None);
                     Verdict::Rejected(RejectReason::MemoryGuard)
                 } else {
-                    let gi = out.batch.push(lower(plan));
+                    let mut produced_fp: Option<u64> = None;
+                    let (tg, outcome) = match store.as_mut() {
+                        None => (lower(plan), None),
+                        Some((s, compression)) => {
+                            let fp = fingerprint(g);
+                            let cached = s.get(fp).map(|e| (e.bytes, e.payload.clone()));
+                            match cached {
+                                // servable hit: a producer in this run,
+                                // or a pre-warmed payload
+                                Some((bytes, payload))
+                                    if producer.contains_key(&fp) || payload.is_some() =>
+                                {
+                                    (
+                                        store_hit_graph(bytes),
+                                        Some(StoreOutcome::Hit {
+                                            source: producer.get(&fp).copied(),
+                                            payload,
+                                        }),
+                                    )
+                                }
+                                _ => {
+                                    let mut tg = lower(plan);
+                                    let n = g.n() as u64;
+                                    let bytes = if *compression {
+                                        csr_bytes_estimate(n * n)
+                                    } else {
+                                        n * n * 4
+                                    };
+                                    let cost = tg.to_trace().total_madds() as f64;
+                                    match s.put(fp, StoreEntry::new(bytes, cost, None)) {
+                                        Ok(true) => {
+                                            append_store_writeback(&mut tg, bytes);
+                                            produced_fp = Some(fp);
+                                            (tg, Some(StoreOutcome::MissStored))
+                                        }
+                                        // disabled or over-budget: the
+                                        // pipeline keeps running uncached
+                                        Ok(false) | Err(_) => {
+                                            (tg, Some(StoreOutcome::MissUncached))
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    };
+                    let gi = out.batch.push(tg);
+                    if let Some(fp) = produced_fp {
+                        producer.insert(fp, gi);
+                    }
+                    outcomes.push(outcome);
                     out.submission_of.push(si);
                     out.arrivals.push(arrivals[si]);
                     admitted_bytes.push(need);
@@ -183,7 +313,7 @@ impl AdmissionGraph {
             "{:?}",
             out.batch.merged.validate()
         );
-        out
+        (out, outcomes)
     }
 
     pub fn n_submissions(&self) -> usize {
@@ -337,5 +467,98 @@ mod tests {
         let (g0, p0) = workload(200, 48, 8);
         let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g0, &p0), (&g0, &p0)];
         let _ = AdmissionGraph::build(&subs, &[1.0, 0.5], &AdmissionConfig::default());
+    }
+
+    #[test]
+    fn duplicate_submission_hits_the_store() {
+        use crate::apsp::store::MemoryStore;
+        use crate::apsp::taskgraph::TaskKind;
+        use crate::apsp::trace::Op;
+        let (g0, p0) = workload(300, 48, 9);
+        let (g1, p1) = workload(250, 48, 10);
+        let subs: Vec<(&CsrGraph, &ApspPlan)> =
+            vec![(&g0, &p0), (&g1, &p1), (&g0, &p0)];
+        let arrivals = [0.0, 1e-3, 2e-3];
+        let mut store = MemoryStore::new(8, u64::MAX);
+        let (adm, outcomes) = AdmissionGraph::build_with_store(
+            &subs,
+            &arrivals,
+            &AdmissionConfig::default(),
+            &mut store,
+            true,
+        );
+        assert_eq!(adm.n_admitted(), 3);
+        assert_eq!(outcomes[0], Some(StoreOutcome::MissStored));
+        assert_eq!(outcomes[1], Some(StoreOutcome::MissStored));
+        assert_eq!(
+            outcomes[2],
+            Some(StoreOutcome::Hit {
+                source: Some(0),
+                payload: None
+            })
+        );
+        // the hit's schedule is a single FeNAND read, no lowering
+        let hit_tg = &adm.batch.per_graph[2];
+        assert_eq!(hit_tg.n_tasks(), 1);
+        assert!(matches!(hit_tg.nodes[0].kind, TaskKind::Store { .. }));
+        assert!(matches!(hit_tg.nodes[0].ops[..], [Op::StoreRead { .. }]));
+        // misses gained a terminal write-back node
+        let miss_tg = &adm.batch.per_graph[0];
+        let last = miss_tg.nodes.last().unwrap();
+        assert!(matches!(last.ops[..], [Op::StoreWrite { .. }]));
+        // verdicts are byte-identical to the no-store build
+        let plain = AdmissionGraph::build(&subs, &arrivals, &AdmissionConfig::default());
+        assert_eq!(adm.verdicts, plain.verdicts);
+        assert_eq!(adm.submission_of, plain.submission_of);
+    }
+
+    #[test]
+    fn disabled_store_yields_all_uncached_misses_and_identical_schedule() {
+        use crate::apsp::store::MemoryStore;
+        let (g0, p0) = workload(300, 48, 11);
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g0, &p0), (&g0, &p0)];
+        let arrivals = [0.0, 1e-3];
+        let mut store = MemoryStore::new(0, u64::MAX);
+        let (adm, outcomes) = AdmissionGraph::build_with_store(
+            &subs,
+            &arrivals,
+            &AdmissionConfig::default(),
+            &mut store,
+            true,
+        );
+        assert!(outcomes
+            .iter()
+            .all(|o| *o == Some(StoreOutcome::MissUncached)));
+        // no write-backs, no hit graphs: the schedule matches plain build
+        let plain = AdmissionGraph::build(&subs, &arrivals, &AdmissionConfig::default());
+        assert_eq!(adm.batch.merged.n_tasks(), plain.batch.merged.n_tasks());
+    }
+
+    #[test]
+    fn prewarmed_payload_serves_without_a_run_local_producer() {
+        use crate::apsp::store::{fingerprint, CompressedMatrix, MemoryStore, StoreEntry};
+        use crate::graph::dense::DistMatrix;
+        let (g0, p0) = workload(120, 48, 12);
+        let d = DistMatrix::new_diag0(g0.n());
+        let cm = CompressedMatrix::compress(&d);
+        let mut store = MemoryStore::new(8, u64::MAX);
+        store
+            .put(fingerprint(&g0), StoreEntry::new(64, 1.0, Some(cm.clone())))
+            .unwrap();
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g0, &p0)];
+        let (_, outcomes) = AdmissionGraph::build_with_store(
+            &subs,
+            &[0.0],
+            &AdmissionConfig::default(),
+            &mut store,
+            true,
+        );
+        assert_eq!(
+            outcomes[0],
+            Some(StoreOutcome::Hit {
+                source: None,
+                payload: Some(cm)
+            })
+        );
     }
 }

@@ -21,6 +21,9 @@
 //! * [`shard`] — sharded multi-stack execution: one over-large graph
 //!   partitioned across modeled PIM stacks with explicit inter-stack
 //!   boundary/dB transfers.
+//! * [`store`] — content-addressed result store: fingerprinted,
+//!   compressed APSP results persisted to modeled FeNAND so duplicate
+//!   submissions are served instead of re-solved.
 //! * [`trace`] — the operation trace consumed by the PIM simulator
 //!   (a deterministic topological lowering of the task graph).
 //! * [`validate`] — cross-implementation validation helpers.
@@ -36,6 +39,7 @@ pub mod plan;
 pub mod recursive;
 pub mod scheduler;
 pub mod shard;
+pub mod store;
 pub mod taskgraph;
 pub mod trace;
 pub mod validate;

@@ -16,7 +16,7 @@
 //! ordered behind that writer by a dependency path (documented per
 //! access below).
 
-use super::admission::AdmissionGraph;
+use super::admission::{AdmissionGraph, StoreOutcome};
 use super::backend::{fw_any, TileBackend};
 use super::batch::BatchGraph;
 use super::plan::ApspPlan;
@@ -259,7 +259,36 @@ pub fn execute_admission<'p>(
     backend: &dyn TileBackend,
     on_complete: impl Fn(usize) + Sync,
 ) -> Vec<Option<ApspSolution<'p>>> {
+    let no_store: Vec<Option<StoreOutcome>> = subs.iter().map(|_| None).collect();
+    execute_admission_stored(subs, adm, &no_store, backend, on_complete)
+}
+
+/// [`execute_admission`] with result-store outcomes
+/// ([`AdmissionGraph::build_with_store`]): a submission whose verdict is
+/// a store *hit* carries a degenerate one-task graph (the modeled FeNAND
+/// read), so no numerics run for it — its solution is served after the
+/// pool drains, either from the run-local producer's solution
+/// (`Hit { source: Some(gi), .. }`, materialized once and shared across
+/// all hits of the same fingerprint) or from a pre-warmed compressed
+/// payload (`Hit { payload: Some(..), .. }`, decompressed bit-exactly).
+/// Either way the served matrix is **bit-identical** to a fresh solo
+/// solve of the same graph, because the producer itself is bit-identical
+/// to solo and the store codec is lossless. `outcomes` is indexed by
+/// submission (as returned by `build_with_store`); all-`None` outcomes
+/// reproduce [`execute_admission`] exactly.
+pub fn execute_admission_stored<'p>(
+    subs: &[(&CsrGraph, &'p ApspPlan)],
+    adm: &AdmissionGraph,
+    outcomes: &[Option<StoreOutcome>],
+    backend: &dyn TileBackend,
+    on_complete: impl Fn(usize) + Sync,
+) -> Vec<Option<ApspSolution<'p>>> {
     use std::sync::atomic::{AtomicUsize, Ordering};
+    assert_eq!(
+        subs.len(),
+        outcomes.len(),
+        "store outcome count mismatch"
+    );
     assert_eq!(
         subs.len(),
         adm.n_submissions(),
@@ -340,10 +369,46 @@ pub fn execute_admission<'p>(
     }
 
     let mut out: Vec<Option<ApspSolution<'p>>> = subs.iter().map(|_| None).collect();
+    // full matrices materialized on demand for run-local hit serving,
+    // computed once per producer graph and shared by all of its hits
+    let mut full_of: Vec<Option<DistMatrix>> = (0..batch.n_graphs()).map(|_| None).collect();
+    // ascending gi: a hit's run-local producer always has a smaller
+    // admitted index (the admission build saw it first), so its
+    // solution is already in `out` when the hit is served
     for (gi, s) in slots.iter_mut().enumerate() {
         let si = adm.submission_of[gi];
         let (g, plan) = subs[si];
-        out[si] = Some(assemble(g, plan, batch.per_graph[gi].to_trace(), s));
+        let sol = match &outcomes[si] {
+            Some(StoreOutcome::Hit { source, payload }) => {
+                let full = match (source, payload) {
+                    (Some(&src), _) => {
+                        let src = src as usize;
+                        if full_of[src].is_none() {
+                            let src_sol = out[adm.submission_of[src]]
+                                .as_ref()
+                                .expect("store hit's producer must precede it");
+                            full_of[src] = Some(src_sol.materialize_full(backend));
+                        }
+                        full_of[src].as_ref().unwrap().clone()
+                    }
+                    (None, Some(cm)) => cm.decompress(),
+                    (None, None) => {
+                        unreachable!("admission never declares an unservable hit")
+                    }
+                };
+                // served hits bypass `assemble` (their one-task graph
+                // filled no slots); a full dense matrix is a valid
+                // Direct solution at any plan depth
+                ApspSolution {
+                    plan,
+                    trace: batch.per_graph[gi].to_trace(),
+                    top: Some(LevelSolution::Direct(full)),
+                    vert_loc: vert_locations(plan, g),
+                }
+            }
+            _ => assemble(g, plan, batch.per_graph[gi].to_trace(), s),
+        };
+        out[si] = Some(sol);
     }
     out
 }
@@ -894,6 +959,55 @@ mod tests {
         let sols = execute_admission(&subs, &adm, &NativeBackend, |_| {});
         assert!(sols[0].is_some());
         assert!(sols[1].is_none(), "rejected submission must yield None");
+    }
+
+    #[test]
+    fn admission_store_hit_served_bit_identical() {
+        use crate::apsp::admission::{AdmissionConfig, AdmissionGraph, StoreOutcome};
+        use crate::apsp::store::MemoryStore;
+        // submission 2 is byte-identical to submission 0 (same generator
+        // seed), so the store serves it instead of re-solving
+        let g = generators::newman_watts_strogatz(260, 4, 0.12, Weights::Uniform(1.0, 5.0), 61);
+        let dup = generators::newman_watts_strogatz(260, 4, 0.12, Weights::Uniform(1.0, 5.0), 61);
+        let other = generators::ogbn_proxy(300, 10.0, Weights::Uniform(1.0, 3.0), 62);
+        let popt = |seed| PlanOptions {
+            tile_limit: 48,
+            max_depth: usize::MAX,
+            seed,
+        };
+        let pg = build_plan(&g, popt(61));
+        let po = build_plan(&other, popt(62));
+        let pd = build_plan(&dup, popt(61));
+        let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(&g, &pg), (&other, &po), (&dup, &pd)];
+        let mut store = MemoryStore::new(8, 1 << 32);
+        let (adm, outcomes) = AdmissionGraph::build_with_store(
+            &subs,
+            &[0.0, 1e-4, 2e-4],
+            &AdmissionConfig::default(),
+            &mut store,
+            true,
+        );
+        assert!(matches!(outcomes[2], Some(StoreOutcome::Hit { .. })));
+        let be = NativeBackend;
+        let sols = execute_admission_stored(&subs, &adm, &outcomes, &be, |_| {});
+        let hit = sols[2].as_ref().expect("hit submission must be served");
+        assert!(hit.is_functional());
+        let solo = solve_dag(&dup, &pd, &be, SolveOptions::default());
+        assert_eq!(
+            hit.materialize_full(&be).max_diff(&solo.materialize_full(&be)),
+            0.0,
+            "served hit must be bit-identical to a fresh solve"
+        );
+        // the miss submissions are untouched by the store
+        let solo0 = solve_dag(&g, &pg, &be, SolveOptions::default());
+        assert_eq!(
+            sols[0]
+                .as_ref()
+                .unwrap()
+                .materialize_full(&be)
+                .max_diff(&solo0.materialize_full(&be)),
+            0.0
+        );
     }
 
     #[test]

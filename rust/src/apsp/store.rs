@@ -1,0 +1,370 @@
+//! Content-addressed APSP result store: the modeled FeNAND persistence
+//! layer that serves repeated submissions instead of re-solving them
+//! (paper §III-B: the external storage stack exists so large results
+//! persist across queries).
+//!
+//! A result is keyed by [`fingerprint`] — a stable hash of the graph's
+//! canonical CSR structure plus edge-weight bits. `CsrGraph::from_edges`
+//! sorts, dedups, and drops self-loops, so the fingerprint is invariant
+//! to edge insertion order and batch-order permutation, but any single
+//! edge insert/delete/reweight changes it.
+//!
+//! The store sits behind the [`ResultStore`] trait (SurrealDB-kvs
+//! style: an in-memory backend now, a file-backed one later can slot in
+//! without touching the admission pipeline). Payloads are
+//! [`CompressedMatrix`] — a sparse finite-entry codec over the dense
+//! distance matrix that round-trips bit-exactly, including `INF`
+//! (unreachable) entries of disconnected graphs. Eviction is cost-aware
+//! LRU: when over capacity, the entry that is *cheapest to recompute*
+//! goes first (ties broken oldest-use-first, then by key), so the store
+//! keeps the results whose cache hits save the most modeled work.
+
+use crate::ensure;
+use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
+use crate::util::error::Result;
+use crate::INF;
+
+// ---------------------------------------------------------------------
+// Fingerprinting
+// ---------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a(h: u64, word: u64) -> u64 {
+    let mut h = h;
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content fingerprint of a graph: FNV-1a over the vertex count, the
+/// CSR row pointers, the column indices, and the raw weight bits.
+/// Stable across clones and admission order (the CSR form is canonical);
+/// sensitive to any structural edit or reweight.
+pub fn fingerprint(g: &CsrGraph) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, g.n() as u64);
+    for &r in &g.rowptr {
+        h = fnv1a(h, r as u64);
+    }
+    for &c in &g.col {
+        h = fnv1a(h, c as u64);
+    }
+    for &v in &g.val {
+        h = fnv1a(h, v.to_bits() as u64);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// Compressed payload
+// ---------------------------------------------------------------------
+
+/// Sparse (CSR-style) compression of a dense distance matrix: only the
+/// finite entries are kept, as `(flat index, raw f32 bits)` pairs.
+/// Decompression rebuilds the matrix from an all-`INF` canvas, so the
+/// round trip is bit-exact for every matrix whose non-finite entries
+/// are `+INF` — which is all distance matrices (unreachable pairs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedMatrix {
+    n: usize,
+    idx: Vec<u64>,
+    bits: Vec<u32>,
+}
+
+impl CompressedMatrix {
+    /// Compress a dense matrix (keeps finite entries only).
+    pub fn compress(d: &DistMatrix) -> Self {
+        let n = d.n();
+        let mut idx = Vec::new();
+        let mut bits = Vec::new();
+        for (i, &v) in d.as_slice().iter().enumerate() {
+            if v.is_finite() {
+                idx.push(i as u64);
+                bits.push(v.to_bits());
+            }
+        }
+        Self { n, idx, bits }
+    }
+
+    /// Rebuild the dense matrix.
+    pub fn decompress(&self) -> DistMatrix {
+        let mut data = vec![INF; self.n * self.n];
+        for (&i, &b) in self.idx.iter().zip(&self.bits) {
+            data[i as usize] = f32::from_bits(b);
+        }
+        DistMatrix::from_vec(self.n, data)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored finite entries.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Payload bytes of the compressed form (8 per finite entry: a
+    /// 4-byte column index + 4-byte value, matching the worst-case CSR
+    /// model in [`super::taskgraph`]).
+    pub fn payload_bytes(&self) -> u64 {
+        self.idx.len() as u64 * 8
+    }
+}
+
+// ---------------------------------------------------------------------
+// The store trait + in-memory backend
+// ---------------------------------------------------------------------
+
+/// One stored result with its modeled footprint and recompute cost.
+#[derive(Debug, Clone)]
+pub struct StoreEntry {
+    /// Modeled FeNAND bytes of the stored (compressed) result — what a
+    /// hit reads back and a miss programs.
+    pub bytes: u64,
+    /// Recompute-cost proxy (the lowered task graph's total min-add
+    /// candidates): eviction drops the *cheapest-to-recompute* first.
+    pub cost: f64,
+    /// The actual compressed solution (functional runs; `None` in
+    /// estimate mode, where only the cost model is exercised).
+    pub payload: Option<CompressedMatrix>,
+    /// LRU clock value of the last touch (managed by the store).
+    last_used: u64,
+}
+
+impl StoreEntry {
+    pub fn new(bytes: u64, cost: f64, payload: Option<CompressedMatrix>) -> Self {
+        Self {
+            bytes,
+            cost,
+            payload,
+            last_used: 0,
+        }
+    }
+}
+
+/// A content-addressed result store (SurrealDB-kvs-style trait: the
+/// admission pipeline codes against this, backends are swappable).
+pub trait ResultStore {
+    /// Look up a fingerprint, refreshing its LRU position on a hit.
+    fn get(&mut self, key: u64) -> Option<&StoreEntry>;
+    /// Insert (or refresh) an entry. Returns `Ok(true)` when stored —
+    /// evicting cheapest-to-recompute entries as needed — `Ok(false)`
+    /// when the store is disabled (zero capacity), and a clean error
+    /// when the entry alone exceeds the byte budget (nothing evicted).
+    fn put(&mut self, key: u64, entry: StoreEntry) -> Result<bool>;
+    /// Whether a fingerprint is present (no LRU refresh).
+    fn contains(&self, key: u64) -> bool;
+    /// Stored entry count.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Entry-capacity knob (0 = disabled).
+    fn capacity(&self) -> usize;
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// The in-memory backend: a flat association list (deterministic
+/// iteration order) with an LRU clock and a byte budget.
+#[derive(Debug, Default)]
+pub struct MemoryStore {
+    capacity: usize,
+    byte_budget: u64,
+    tick: u64,
+    entries: Vec<(u64, StoreEntry)>,
+}
+
+impl MemoryStore {
+    pub fn new(capacity: usize, byte_budget: u64) -> Self {
+        Self {
+            capacity,
+            byte_budget,
+            tick: 0,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Total modeled bytes currently resident.
+    pub fn bytes_used(&self) -> u64 {
+        self.entries.iter().map(|(_, e)| e.bytes).sum()
+    }
+
+    /// Stored fingerprints in eviction-safe (insertion) order.
+    pub fn keys(&self) -> Vec<u64> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+
+    /// Evict one entry: cheapest to recompute first, ties broken by
+    /// least-recent use, then by key — fully deterministic.
+    fn evict_one(&mut self) -> Option<u64> {
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by(|(_, (ka, a)), (_, (kb, b))| {
+                a.cost
+                    .total_cmp(&b.cost)
+                    .then(a.last_used.cmp(&b.last_used))
+                    .then(ka.cmp(kb))
+            })
+            .map(|(i, _)| i)?;
+        Some(self.entries.remove(victim).0)
+    }
+}
+
+impl ResultStore for MemoryStore {
+    fn get(&mut self, key: u64) -> Option<&StoreEntry> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.entries.iter_mut().find(|(k, _)| *k == key)?;
+        e.1.last_used = tick;
+        Some(&e.1)
+    }
+
+    fn put(&mut self, key: u64, mut entry: StoreEntry) -> Result<bool> {
+        if self.capacity == 0 {
+            return Ok(false);
+        }
+        ensure!(
+            entry.bytes <= self.byte_budget,
+            "result store: entry of {} bytes exceeds the store byte budget ({} bytes); \
+             rejecting instead of evicting everything",
+            entry.bytes,
+            self.byte_budget
+        );
+        self.tick += 1;
+        entry.last_used = self.tick;
+        if let Some(slot) = self.entries.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = entry;
+            return Ok(true);
+        }
+        while self.entries.len() >= self.capacity
+            || self.bytes_used() + entry.bytes > self.byte_budget
+        {
+            if self.evict_one().is_none() {
+                break;
+            }
+        }
+        self.entries.push((key, entry));
+        Ok(true)
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.entries.iter().any(|(k, _)| *k == key)
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Topology, Weights};
+
+    fn entry(bytes: u64, cost: f64) -> StoreEntry {
+        StoreEntry::new(bytes, cost, None)
+    }
+
+    #[test]
+    fn fingerprint_stable_and_sensitive() {
+        let g = generators::generate(Topology::Nws, 200, 8.0, Weights::Uniform(1.0, 4.0), 7);
+        let h = fingerprint(&g);
+        assert_eq!(h, fingerprint(&g.clone()));
+        // rebuilding from a reversed edge list canonicalizes to the
+        // same CSR, hence the same fingerprint
+        let mut edges: Vec<(u32, u32, f32)> = g.edges().collect();
+        edges.reverse();
+        let g2 = CsrGraph::from_edges(g.n(), &edges);
+        assert_eq!(h, fingerprint(&g2));
+        // a single reweight changes it
+        let mut g3 = g.clone();
+        g3.val[0] += 0.25;
+        assert_ne!(h, fingerprint(&g3));
+    }
+
+    #[test]
+    fn compress_roundtrip_bit_exact() {
+        let mut d = DistMatrix::new_diag0(5);
+        d.set(0, 1, 1.5);
+        d.set(3, 2, 7.25);
+        // row 4 left unreachable
+        let c = CompressedMatrix::compress(&d);
+        let back = c.decompress();
+        assert_eq!(back.max_diff(&d), 0.0);
+        assert_eq!(back.as_slice(), d.as_slice());
+        assert_eq!(c.nnz(), d.finite_count());
+    }
+
+    #[test]
+    fn lru_hit_refresh_and_cost_aware_eviction() {
+        let mut s = MemoryStore::new(2, u64::MAX);
+        s.put(1, entry(10, 5.0)).unwrap();
+        s.put(2, entry(10, 1.0)).unwrap();
+        // key 2 is cheaper to recompute: it is the victim even though
+        // key 1 is older
+        s.put(3, entry(10, 9.0)).unwrap();
+        assert!(s.contains(1) && s.contains(3) && !s.contains(2));
+        // equal costs fall back to LRU: touch 1, then 3 is the victim
+        let mut s = MemoryStore::new(2, u64::MAX);
+        s.put(1, entry(10, 2.0)).unwrap();
+        s.put(3, entry(10, 2.0)).unwrap();
+        assert!(s.get(1).is_some());
+        s.put(4, entry(10, 2.0)).unwrap();
+        assert!(s.contains(1) && s.contains(4) && !s.contains(3));
+    }
+
+    #[test]
+    fn capacity_zero_disables() {
+        let mut s = MemoryStore::new(0, u64::MAX);
+        assert!(!s.put(1, entry(10, 1.0)).unwrap());
+        assert!(s.is_empty());
+        assert!(s.get(1).is_none());
+    }
+
+    #[test]
+    fn oversized_entry_rejected_cleanly() {
+        let mut s = MemoryStore::new(4, 100);
+        s.put(1, entry(60, 1.0)).unwrap();
+        let err = s.put(2, entry(101, 9.0)).unwrap_err();
+        assert!(format!("{err}").contains("exceeds the store byte budget"));
+        // nothing was evicted
+        assert!(s.contains(1));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts_until_fit() {
+        let mut s = MemoryStore::new(10, 100);
+        s.put(1, entry(40, 1.0)).unwrap();
+        s.put(2, entry(40, 2.0)).unwrap();
+        s.put(3, entry(40, 3.0)).unwrap(); // evicts key 1 (cheapest)
+        assert!(!s.contains(1));
+        assert_eq!(s.bytes_used(), 80);
+    }
+
+    #[test]
+    fn put_same_key_replaces() {
+        let mut s = MemoryStore::new(2, u64::MAX);
+        s.put(1, entry(10, 1.0)).unwrap();
+        s.put(1, entry(20, 2.0)).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(1).unwrap().bytes, 20);
+    }
+}

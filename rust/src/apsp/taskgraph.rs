@@ -216,6 +216,43 @@ pub(crate) fn csr_bytes_estimate(dense_elems: u64) -> u64 {
     dense_elems * 8
 }
 
+/// The degenerate task graph of a result-store hit: one FeNAND read of
+/// the cached (compressed) distance matrix, no lowering, no compute.
+/// Never emitted by [`lower`]; built by [`super::admission`] when a
+/// submission's fingerprint matches a stored result.
+pub(crate) fn store_hit_graph(bytes: u64) -> TaskGraph {
+    let mut tg = TaskGraph::default();
+    let step = tg.begin_step(0, Phase::Store);
+    tg.add(
+        TaskKind::Store { level: 0 },
+        step,
+        vec![Op::StoreRead { bytes }],
+        Vec::new(),
+    );
+    tg
+}
+
+/// Append the result-store write-back to a lowered graph (admission
+/// miss path): one FeNAND program of the compressed solution, gated on
+/// every current sink so it models the post-solve persist.
+pub(crate) fn append_store_writeback(tg: &mut TaskGraph, bytes: u64) {
+    let succ = tg.successors();
+    let sinks: Vec<TaskId> = tg
+        .nodes
+        .iter()
+        .filter(|n| succ[n.id as usize].is_empty())
+        .map(|n| n.id)
+        .collect();
+    let step = tg.begin_step(0, Phase::Store);
+    tg.add(
+        TaskKind::Store { level: 0 },
+        step,
+        vec![Op::StoreWrite { bytes }],
+        sinks,
+    );
+    debug_assert!(tg.validate().is_ok(), "{:?}", tg.validate());
+}
+
 /// The aggregated cross-merge ops of one partitioned level (Algorithm
 /// step 4 / dataflow step 7) — fetch the interleaved boundary matrices,
 /// then the two-stage MP merges for every ordered component pair.

@@ -97,6 +97,15 @@ pub enum Op {
     /// Move `bytes` across the inter-stack interconnect (sharded
     /// execution: boundary matrices to the hub, dB slices back).
     StackXfer { bytes: u64 },
+    /// Serve a cached APSP result from the FeNAND result store (a
+    /// fingerprint hit in the admission pipeline reads the compressed
+    /// distance matrix instead of re-solving). Never emitted by
+    /// [`super::taskgraph::lower`]; inserted by [`super::admission`].
+    StoreRead { bytes: u64 },
+    /// Write a freshly solved distance matrix back into the FeNAND
+    /// result store (admission-pipeline miss path). Never emitted by
+    /// [`super::taskgraph::lower`]; inserted by [`super::admission`].
+    StoreWrite { bytes: u64 },
 }
 
 impl Op {

@@ -127,6 +127,22 @@ pub struct SystemConfig {
     /// (`run.admission.interval` / `--admit-interval`). 0 = everything
     /// arrives at t = 0 (a batch-shaped admission workload).
     pub admission_interval: f64,
+    /// Result store: fingerprint-keyed cache of solved APSP results on
+    /// modeled FeNAND, consulted at admission time
+    /// (`run.store.enabled` / `--store-capacity`). Off by default; the
+    /// CLI flag both sizes and enables it.
+    pub store_enabled: bool,
+    /// Result store: max cached results (`run.store.capacity` /
+    /// `--store-capacity`). 0 disables cleanly: every submission is a
+    /// miss and nothing is written.
+    pub store_capacity: usize,
+    /// Result store: total byte budget across cached payloads
+    /// (`run.store.bytes`). An entry larger than the whole budget is
+    /// rejected with a clean error instead of evicting everything.
+    pub store_bytes: u64,
+    /// Result store: persist compressed (finite-entry) payloads instead
+    /// of dense f32 matrices (`run.store.compression`).
+    pub store_compression: bool,
 }
 
 impl Default for SystemConfig {
@@ -148,6 +164,10 @@ impl Default for SystemConfig {
             admission_queue_depth: 4,
             admission_arrivals: Vec::new(),
             admission_interval: 0.0,
+            store_enabled: false,
+            store_capacity: 8,
+            store_bytes: 1 << 32,
+            store_compression: true,
         }
     }
 }
@@ -194,6 +214,11 @@ impl SystemConfig {
                 }
             }
         }
+        // [run.store] block
+        self.store_enabled = cf.get_bool("run.store.enabled", self.store_enabled);
+        self.store_capacity = cf.get_usize("run.store.capacity", self.store_capacity);
+        self.store_bytes = cf.get_usize("run.store.bytes", self.store_bytes as usize) as u64;
+        self.store_compression = cf.get_bool("run.store.compression", self.store_compression);
         // hardware overrides
         let hw = &mut self.hw;
         hw.tiles_per_die = cf.get_usize("hardware.tiles_per_die", hw.tiles_per_die);
@@ -242,6 +267,11 @@ impl SystemConfig {
                 Some(v) => self.admission_arrivals = v,
                 None => panic!("--arrivals expects comma-separated numbers, got {list:?}"),
             }
+        }
+        // --store-capacity both sizes and enables the result store
+        if args.get("store-capacity").is_some() {
+            self.store_enabled = true;
+            self.store_capacity = args.get_usize("store-capacity", self.store_capacity);
         }
     }
 
@@ -322,7 +352,7 @@ pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
         "{} select different execution modes; pick one",
         picked.join(" and ")
     );
-    Ok(if batch {
+    let mode = if batch {
         CliMode::Batch
     } else if admit {
         CliMode::Admission
@@ -330,7 +360,12 @@ pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
         CliMode::Sharded
     } else {
         CliMode::Solo
-    })
+    };
+    crate::ensure!(
+        args.get("store-capacity").is_none() || mode == CliMode::Admission,
+        "--store-capacity applies to the admission pipeline only; combine it with --admit"
+    );
+    Ok(mode)
 }
 
 #[cfg(test)]
@@ -409,6 +444,47 @@ mod tests {
         // uniform fallback when no explicit list is configured
         c.admission_arrivals.clear();
         assert_eq!(c.admission_schedule(3), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn store_block_parses_and_cli_enables() {
+        let c = SystemConfig::default();
+        assert!(!c.store_enabled, "store is opt-in");
+        assert_eq!(c.store_capacity, 8);
+        assert_eq!(c.store_bytes, 1 << 32);
+        assert!(c.store_compression);
+        let cf = ConfigFile::parse(
+            "[run.store]\nenabled = true\ncapacity = 3\nbytes = 4096\ncompression = false",
+        )
+        .unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        assert!(c.store_enabled);
+        assert_eq!(c.store_capacity, 3);
+        assert_eq!(c.store_bytes, 4096);
+        assert!(!c.store_compression);
+        // --store-capacity both sizes and enables the store
+        let args = crate::util::cli::Args::parse(
+            ["--store-capacity", "5"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.store_capacity, 5);
+        let mut d = SystemConfig::default();
+        d.apply_args(&args);
+        assert!(d.store_enabled);
+        assert_eq!(d.store_capacity, 5);
+    }
+
+    #[test]
+    fn store_capacity_flag_requires_admission_mode() {
+        let parse = |v: &[&str]| crate::util::cli::Args::parse(v.iter().map(|s| s.to_string()));
+        assert_eq!(
+            resolve_cli_mode(&parse(&["--admit", "--store-capacity", "4"]), 1).unwrap(),
+            CliMode::Admission
+        );
+        // non-admission shapes reject it (full combos in
+        // tests/failure_injection.rs)
+        let err = resolve_cli_mode(&parse(&["--store-capacity", "4"]), 1).unwrap_err();
+        assert!(format!("{err}").contains("--admit"), "{err}");
     }
 
     #[test]

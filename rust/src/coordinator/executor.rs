@@ -8,12 +8,13 @@
 //! workload admitted into a live schedule without draining it.
 
 use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig};
-use crate::apsp::admission::{AdmissionConfig, AdmissionGraph, Verdict};
+use crate::apsp::admission::{AdmissionConfig, AdmissionGraph, StoreOutcome, Verdict};
 use crate::apsp::backend::{NativeBackend, TileBackend};
 use crate::apsp::batch::BatchGraph;
 use crate::apsp::plan::{build_plan, ApspPlan};
 use crate::apsp::recursive::{self, solve, ApspSolution, SolveOptions};
 use crate::apsp::shard::{plan_tiles, ShardGraph};
+use crate::apsp::store::MemoryStore;
 use crate::apsp::validate::{validate_sampled, Validation};
 use crate::apsp::{scheduler, taskgraph};
 use crate::graph::csr::CsrGraph;
@@ -328,7 +329,24 @@ impl Executor {
             queue_depth: self.config.admission_queue_depth,
             memory_limit_bytes: self.config.memory_limit_bytes,
         };
-        let adm = AdmissionGraph::build(&subs, &arrivals, &adm_cfg);
+        // the result store never changes admission verdicts (both paths
+        // run the same capacity/memory-guard checks), so the with-store
+        // and no-store schedules admit the same set and cache_speedup
+        // compares apples to apples
+        let mut store = MemoryStore::new(self.config.store_capacity, self.config.store_bytes);
+        let (adm, outcomes) = if self.config.store_enabled {
+            AdmissionGraph::build_with_store(
+                &subs,
+                &arrivals,
+                &adm_cfg,
+                &mut store,
+                self.config.store_compression,
+            )
+        } else {
+            let adm = AdmissionGraph::build(&subs, &arrivals, &adm_cfg);
+            let none = subs.iter().map(|_| None).collect();
+            (adm, none)
+        };
 
         let native = NativeBackend;
         let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
@@ -337,7 +355,7 @@ impl Executor {
         let completion_log = std::sync::Mutex::new(Vec::new());
         let t0 = std::time::Instant::now();
         let sols: Option<Vec<Option<ApspSolution>>> = backend.map(|be| {
-            scheduler::execute_admission(&subs, &adm, be, |si| {
+            scheduler::execute_admission_stored(&subs, &adm, &outcomes, be, |si| {
                 completion_log.lock().unwrap().push(si);
             })
         });
@@ -356,6 +374,21 @@ impl Executor {
         );
         let (drain_makespan, drain_completion) =
             simulate_drain_rebatch(&adm.batch.per_graph, &adm.arrivals, &self.config.hw);
+        // no-store baseline: the identical workload with the store off
+        // (same verdicts by construction), so the report can attribute
+        // what the cache bought on the shared timeline
+        let no_store_makespan = if self.config.store_enabled {
+            let plain = AdmissionGraph::build(&subs, &arrivals, &adm_cfg);
+            let (plain_sim, _) = simulate_admission(
+                &plain.batch,
+                &plain.arrivals,
+                self.config.admission_queue_depth,
+                &self.config.hw,
+            );
+            Some(plain_sim.seconds)
+        } else {
+            None
+        };
 
         let mut per_graph = Vec::with_capacity(graphs.len());
         for (si, &(g, plan)) in subs.iter().enumerate() {
@@ -364,13 +397,25 @@ impl Executor {
                 Verdict::Admitted { admitted_index } => {
                     let gi = admitted_index as usize;
                     // solo baseline under the configured scheduler —
-                    // identical to an individual `run`
+                    // identical to an individual `run`. A store hit's
+                    // admitted graph is the one-task FeNAND read, so
+                    // its solo baseline is a fresh lowering (the solve
+                    // this submission would run alone, store cold); a
+                    // stored miss keeps its write-back in the baseline
+                    // (persisting is part of that graph's work).
+                    let is_hit =
+                        matches!(outcomes[si], Some(StoreOutcome::Hit { .. }));
+                    let solo_tg;
+                    let tg = if is_hit {
+                        solo_tg = taskgraph::lower(plan);
+                        &solo_tg
+                    } else {
+                        &adm.batch.per_graph[gi]
+                    };
                     let sim = match self.config.scheduler {
-                        SchedulerKind::Dag => {
-                            simulate_dag(&adm.batch.per_graph[gi], &self.config.hw)
-                        }
+                        SchedulerKind::Dag => simulate_dag(tg, &self.config.hw),
                         SchedulerKind::Barrier => {
-                            simulate(&adm.batch.per_graph[gi].to_trace(), &self.config.hw)
+                            simulate(&tg.to_trace(), &self.config.hw)
                         }
                     };
                     let validation = match (&sols, self.config.validate_sources) {
@@ -393,6 +438,7 @@ impl Executor {
                         stat: Some(stats[gi]),
                         latency: stats[gi].makespan - adm.arrivals[gi],
                         drain_latency: drain_completion[gi] - adm.arrivals[gi],
+                        store: outcomes[si].clone(),
                     }
                 }
                 Verdict::Rejected(_) => AdmissionGraphResult {
@@ -402,6 +448,7 @@ impl Executor {
                     stat: None,
                     latency: 0.0,
                     drain_latency: 0.0,
+                    store: None,
                 },
             };
             per_graph.push(row);
@@ -410,6 +457,7 @@ impl Executor {
             per_graph,
             admission_sim,
             drain_makespan,
+            no_store_makespan,
             completion_order,
             queue_depth: self.config.admission_queue_depth,
             host_solve_seconds,
@@ -565,6 +613,9 @@ pub struct AdmissionGraphResult {
     /// Latency the same graph sees under the drain-and-rebatch
     /// baseline (0 for rejected graphs).
     pub drain_latency: f64,
+    /// Result-store verdict for this submission (`None` when the store
+    /// is off or the submission was rejected).
+    pub store: Option<StoreOutcome>,
 }
 
 /// Everything one admission run produces.
@@ -577,6 +628,9 @@ pub struct AdmissionRunResult {
     /// Drain-and-rebatch baseline makespan for the same admitted
     /// workload and arrival schedule.
     pub drain_makespan: f64,
+    /// Makespan of the identical workload with the result store
+    /// disabled (same admitted set); `None` when the store was off.
+    pub no_store_makespan: Option<f64>,
     /// Order in which graphs completed in the functional host run
     /// (submission indices; empty in estimate mode).
     pub completion_order: Vec<usize>,
@@ -606,6 +660,26 @@ impl AdmissionRunResult {
         } else {
             self.drain_makespan / self.admission_sim.seconds
         }
+    }
+
+    /// Store hits among the admitted submissions.
+    pub fn n_store_hits(&self) -> usize {
+        self.per_graph
+            .iter()
+            .filter(|r| matches!(&r.store, Some(o) if o.is_hit()))
+            .count()
+    }
+
+    /// Throughput gain the result store delivered over the identical
+    /// workload with the store off (`None` when the store was off).
+    pub fn cache_speedup(&self) -> Option<f64> {
+        self.no_store_makespan.map(|m| {
+            if self.admission_sim.seconds == 0.0 {
+                1.0
+            } else {
+                m / self.admission_sim.seconds
+            }
+        })
     }
 
     /// Admit-to-complete latencies of the admitted graphs, in arrival
@@ -782,6 +856,73 @@ mod tests {
         assert!(a.drain_makespan > 0.0);
         assert!(a.admission_speedup() > 0.0);
         assert_eq!(a.latencies().len(), 3);
+    }
+
+    #[test]
+    fn run_admission_with_store_serves_duplicates() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 128;
+        cfg.admission_interval = 1e-4;
+        cfg.store_enabled = true;
+        cfg.store_capacity = 4;
+        let ex = Executor::new(cfg).unwrap();
+        // submission 2 duplicates submission 0 byte-for-byte
+        let graphs = vec![graph(500, 91), graph(700, 92), graph(500, 91)];
+        let a = ex.run_admission(&graphs).unwrap();
+        assert_eq!(a.n_admitted(), 3);
+        assert_eq!(a.n_store_hits(), 1);
+        assert!(matches!(a.per_graph[0].store, Some(StoreOutcome::MissStored)));
+        assert!(matches!(a.per_graph[2].store, Some(StoreOutcome::Hit { .. })));
+        let hit = &a.per_graph[2];
+        let solo = hit.solo.as_ref().expect("admitted");
+        // the served solution validates exactly against Dijkstra
+        let v = solo.validation.as_ref().expect("validation on");
+        assert!(v.ok(solo.validate_tolerance), "{v:?}");
+        // the modeled FeNAND read completes before the solve it skipped
+        assert!(hit.latency > 0.0);
+        assert!(
+            hit.latency < solo.sim.seconds,
+            "hit latency {} must beat the solo solve {}",
+            hit.latency,
+            solo.sim.seconds
+        );
+        // the no-store baseline exists and the ratio is well-formed (a
+        // mixed workload may pay more in write-backs than one hit saves;
+        // the >1 case is covered below with a duplicate-heavy stream)
+        let cs = a.cache_speedup().expect("store on");
+        assert!(cs.is_finite() && cs > 0.0, "cache speedup {cs}");
+        // store off: no cache metrics, no hit verdicts
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        cfg.admission_interval = 1e-4;
+        let b = Executor::new(cfg).unwrap().run_admission(&graphs).unwrap();
+        assert!(b.no_store_makespan.is_none());
+        assert!(b.cache_speedup().is_none());
+        assert_eq!(b.n_store_hits(), 0);
+        assert!(b.per_graph.iter().all(|r| r.store.is_none()));
+    }
+
+    #[test]
+    fn duplicate_heavy_stream_gains_cache_speedup() {
+        // queue depth 1 serializes the schedule, so the no-store
+        // baseline pays the full solve three times while the store
+        // solves once and serves two FeNAND reads — the cache win must
+        // clear the write-back overhead with room to spare
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        cfg.tile_limit = 128;
+        cfg.admission_queue_depth = 1;
+        cfg.admission_interval = 1e-4;
+        cfg.store_enabled = true;
+        let ex = Executor::new(cfg).unwrap();
+        let g = graph(600, 95);
+        let graphs = vec![g.clone(), g.clone(), g];
+        let a = ex.run_admission(&graphs).unwrap();
+        assert_eq!(a.n_admitted(), 3);
+        assert_eq!(a.n_store_hits(), 2);
+        let cs = a.cache_speedup().expect("store on");
+        assert!(cs > 1.0, "duplicate-heavy stream must gain, got {cs}");
+        assert!(a.no_store_makespan.unwrap() > a.admission_sim.seconds);
     }
 
     #[test]

@@ -155,15 +155,22 @@ pub fn render_admission(a: &AdmissionRunResult) -> String {
     ));
     let mut t = Table::new(
         "admission schedule (per submission)",
-        &["graph", "arrival", "n", "verdict", "solo", "finish", "latency", "drain lat", "valid"],
+        &[
+            "graph", "arrival", "n", "verdict", "store", "solo", "finish", "latency",
+            "drain lat", "valid",
+        ],
     );
     for (i, r) in a.per_graph.iter().enumerate() {
+        // store column: `-` (store off), HIT, miss (stored), miss*
+        // (solved but not cached — disabled or rejected by the store)
+        let store = r.store.as_ref().map(|o| o.name()).unwrap_or("-");
         match (&r.solo, &r.stat) {
             (Some(solo), Some(stat)) => t.row(&[
                 i.to_string(),
                 fmt_time(r.arrival),
                 fmt_count(solo.graph_n),
                 "admitted".to_string(),
+                store.to_string(),
                 fmt_time(solo.sim.seconds),
                 fmt_time(stat.makespan),
                 fmt_time(r.latency),
@@ -184,6 +191,7 @@ pub fn render_admission(a: &AdmissionRunResult) -> String {
                     fmt_time(r.arrival),
                     "-".to_string(),
                     format!("REJECTED: {reason}"),
+                    store.to_string(),
                     "-".to_string(),
                     "-".to_string(),
                     "-".to_string(),
@@ -213,6 +221,15 @@ pub fn render_admission(a: &AdmissionRunResult) -> String {
         100.0 * a.admission_sim.mp_utilization(),
         fmt_energy(a.admission_sim.joules),
     ));
+    if let (Some(ms), Some(cs)) = (a.no_store_makespan, a.cache_speedup()) {
+        out.push_str(&format!(
+            "result store: {} hit(s) / {} admitted; makespan vs no-store {} -> cache_speedup {}\n",
+            a.n_store_hits(),
+            a.n_admitted(),
+            fmt_time(ms),
+            fmt_ratio(cs),
+        ));
+    }
     if a.host_solve_seconds > 0.0 {
         out.push_str(&format!(
             "host numerics (admission): {}\n",
@@ -357,6 +374,27 @@ mod tests {
         assert!(text.contains("drain-and-rebatch"));
         assert!(text.contains("speedup"));
         assert!(text.contains("EXACT"));
+    }
+
+    #[test]
+    fn admission_report_shows_store_verdicts() {
+        use crate::coordinator::config::Mode;
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        cfg.tile_limit = 64;
+        cfg.admission_interval = 1e-4;
+        cfg.store_enabled = true;
+        let ex = Executor::new(cfg).unwrap();
+        let g = generators::generate(Topology::Nws, 300, 8.0, Weights::Unit, 7);
+        let graphs = vec![g.clone(), g];
+        let a = ex.run_admission(&graphs).unwrap();
+        assert_eq!(a.n_store_hits(), 1);
+        let text = super::render_admission(&a);
+        assert!(text.contains("store"), "{text}");
+        assert!(text.contains("HIT"), "{text}");
+        assert!(text.contains("miss"), "{text}");
+        assert!(text.contains("cache_speedup"), "{text}");
+        assert!(text.contains("result store: 1 hit(s) / 2 admitted"), "{text}");
     }
 
     #[test]

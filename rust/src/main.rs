@@ -61,7 +61,7 @@ fn dispatch(args: &Args) -> Result<()> {
                         ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--scheduler dag|barrier] [--tile T] [--max-depth D] [--validate-tolerance TOL] [--config FILE]"),
                         ("apsp --batch", "[--batch-size N] [--graphs F1,F2,.. | --topo T --nodes N] merge N graphs into one shared-resource schedule"),
                         ("apsp --stacks", "S [--graph FILE | --topo T --nodes N] shard one graph across S modeled PIM stacks"),
-                        ("apsp --admit", "[N] [--arrivals T1,T2,.. | --admit-interval DT] [--admit-queue Q] admit N graphs into a live schedule"),
+                        ("apsp --admit", "[N] [--arrivals T1,T2,.. | --admit-interval DT] [--admit-queue Q] [--store-capacity C] admit N graphs into a live schedule; the result store serves duplicate submissions from modeled FeNAND"),
                         ("figure", "--id 7|8|9a|9b|9c|table3 [--full]"),
                         ("validate", "--nodes N [--topo T] [--tile T]"),
                     ]
@@ -227,7 +227,10 @@ fn cmd_batch(args: &Args, cfg: SystemConfig) -> Result<()> {
 /// `--admit-interval` spacing, never wall-clock) with an in-flight
 /// bound of `--admit-queue` graphs, and report the per-graph
 /// admit-to-complete latency table against the drain-and-rebatch
-/// baseline.
+/// baseline. `--store-capacity C` enables the content-addressed result
+/// store: duplicate submissions are served as FeNAND reads (HIT rows)
+/// instead of re-solved, and the summary adds `cache_speedup` vs the
+/// same workload with the store off.
 fn cmd_admit(args: &Args, cfg: SystemConfig) -> Result<()> {
     let graphs = workload_graphs(args, "admit", cfg.batch_size)?;
     let ex = Executor::new(cfg)?;

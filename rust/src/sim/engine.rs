@@ -291,6 +291,8 @@ fn step_cost(step: &Step, p: &HwParams) -> StepCost {
                     } => memsys::store_csr(p, *dense_elems, *csr_bytes),
                     Op::StoreDense { bytes } => memsys::fenand_write(p, *bytes),
                     Op::FetchBoundary { bytes } => memsys::fenand_read(p, *bytes),
+                    Op::StoreRead { bytes } => memsys::fenand_read(p, *bytes),
+                    Op::StoreWrite { bytes } => memsys::fenand_write(p, *bytes),
                     other => panic!("unexpected op {other:?} in {:?} step", step.phase),
                 };
                 secs += x.secs;
@@ -400,6 +402,14 @@ fn op_unit(op: &Op, phase: Phase, p: &HwParams) -> SimUnit {
         Op::StackXfer { bytes } => {
             let x = memsys::interstack(p, *bytes);
             (UnitRes::Interstack, x.secs, x.joules, false)
+        }
+        Op::StoreRead { bytes } => {
+            let x = memsys::fenand_read(p, *bytes);
+            (UnitRes::Fenand, x.secs, x.joules, false)
+        }
+        Op::StoreWrite { bytes } => {
+            let x = memsys::fenand_write(p, *bytes);
+            (UnitRes::Fenand, x.secs, x.joules, false)
         }
     };
     SimUnit {

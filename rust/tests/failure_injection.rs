@@ -304,6 +304,126 @@ fn admission_rejections_are_clean_and_nonfatal() {
 }
 
 #[test]
+fn store_capacity_zero_disables_cleanly() {
+    // `run.store.capacity = 0` must mean "store off": every submission
+    // is an uncached miss, nothing errors, and the pipeline result is
+    // still fully populated
+    use rapid_graph::apsp::admission::StoreOutcome;
+    let mut cfg = SystemConfig::default();
+    cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
+    cfg.admission_interval = 1e-4;
+    cfg.store_enabled = true;
+    cfg.store_capacity = 0;
+    let ex = Executor::new(cfg).unwrap();
+    let g = rapid_graph::graph::generators::newman_watts_strogatz(
+        200,
+        4,
+        0.1,
+        rapid_graph::graph::generators::Weights::Unit,
+        1,
+    );
+    let graphs = vec![g.clone(), g];
+    let a = ex.run_admission(&graphs).unwrap();
+    assert_eq!(a.n_admitted(), 2);
+    assert_eq!(a.n_store_hits(), 0, "a disabled store can never hit");
+    for r in &a.per_graph {
+        assert_eq!(r.store, Some(StoreOutcome::MissUncached));
+        assert!(r.latency > 0.0);
+    }
+}
+
+#[test]
+fn store_capacity_one_evicts_deterministically() {
+    // capacity 1 is the degenerate LRU: every distinct put evicts the
+    // sole resident, repeatably
+    use rapid_graph::apsp::store::{MemoryStore, ResultStore, StoreEntry};
+    let run = || {
+        let mut s = MemoryStore::new(1, u64::MAX);
+        let mut residents = Vec::new();
+        for key in [7u64, 3, 9, 3] {
+            s.put(key, StoreEntry::new(16, key as f64, None)).unwrap();
+            assert_eq!(s.len(), 1, "capacity 1 holds exactly one entry");
+            assert!(s.contains(key), "latest put must be resident");
+            residents.push(s.keys());
+        }
+        residents
+    };
+    let a = run();
+    assert_eq!(a, run(), "eviction must be deterministic");
+    assert_eq!(a.last().unwrap(), &vec![3u64]);
+}
+
+#[test]
+fn oversized_store_entry_rejected_without_mass_eviction() {
+    // an entry that alone exceeds the byte budget must be a clean
+    // util::error that leaves the resident set untouched — never a
+    // panic, never "evict everything then fail anyway"
+    use rapid_graph::apsp::store::{MemoryStore, ResultStore, StoreEntry};
+    let mut s = MemoryStore::new(8, 1_000);
+    s.put(1, StoreEntry::new(400, 1.0, None)).unwrap();
+    s.put(2, StoreEntry::new(400, 2.0, None)).unwrap();
+    let err = s.put(3, StoreEntry::new(1_001, 99.0, None)).unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("exceeds the store byte budget"),
+        "error must explain the rejection: {msg}"
+    );
+    assert!(s.contains(1) && s.contains(2), "nothing may be evicted");
+    assert_eq!(s.bytes_used(), 800);
+}
+
+#[test]
+fn over_budget_store_keeps_admission_running_uncached() {
+    // end-to-end: a byte budget too small for any result degrades to
+    // uncached misses while every submission is still served
+    use rapid_graph::apsp::admission::StoreOutcome;
+    let mut cfg = SystemConfig::default();
+    cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
+    cfg.admission_interval = 1e-4;
+    cfg.store_enabled = true;
+    cfg.store_capacity = 8;
+    cfg.store_bytes = 64; // far below any n x n result payload
+    let ex = Executor::new(cfg).unwrap();
+    let g = rapid_graph::graph::generators::newman_watts_strogatz(
+        200,
+        4,
+        0.1,
+        rapid_graph::graph::generators::Weights::Unit,
+        2,
+    );
+    let graphs = vec![g.clone(), g];
+    let a = ex.run_admission(&graphs).unwrap();
+    assert_eq!(a.n_admitted(), 2);
+    assert_eq!(a.n_store_hits(), 0);
+    for r in &a.per_graph {
+        assert_eq!(r.store, Some(StoreOutcome::MissUncached));
+    }
+}
+
+#[test]
+fn store_capacity_flag_conflicts_with_non_admission_modes() {
+    // `--store-capacity` rides on the admission pipeline; pairing it
+    // with any other mode selector (or no mode at all) must be a clean
+    // util::error naming `--admit`
+    use rapid_graph::coordinator::config::{resolve_cli_mode, CliMode};
+    use rapid_graph::util::cli::Args;
+    let parse = |v: &[&str]| Args::parse(v.iter().map(|s| s.to_string()));
+    for combo in [
+        vec!["--store-capacity", "4"],
+        vec!["--batch", "--store-capacity", "4"],
+        vec!["--stacks", "2", "--store-capacity", "4"],
+    ] {
+        let err = resolve_cli_mode(&parse(&combo), 1).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--admit"), "{combo:?} must point at --admit: {msg}");
+    }
+    assert_eq!(
+        resolve_cli_mode(&parse(&["--admit", "--store-capacity", "4"]), 1).unwrap(),
+        CliMode::Admission
+    );
+}
+
+#[test]
 fn binary_graph_roundtrip_detects_truncation() {
     let dir = tmpdir("trunc_bin");
     let g = rapid_graph::graph::generators::erdos_renyi(

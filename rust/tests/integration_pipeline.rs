@@ -503,6 +503,96 @@ fn admission_beats_drain_rebatch_on_staggered_six_graph_workload() {
     }
 }
 
+#[test]
+fn admission_store_serves_midstream_duplicate_end_to_end() {
+    use rapid_graph::apsp::admission::{AdmissionConfig, AdmissionGraph, StoreOutcome};
+    use rapid_graph::apsp::store::MemoryStore;
+    // a duplicate of the first graph re-submitted mid-stream: the
+    // executor must give it a HIT verdict, a modeled latency strictly
+    // below the solve it skipped, a solution bit-identical to a fresh
+    // solve, and energy attribution that still partitions the shared
+    // timeline exactly
+    let gen = |n: usize, seed: u64| {
+        generators::generate(Topology::Nws, n, 8.0, Weights::Uniform(1.0, 5.0), seed)
+    };
+    let graphs = vec![gen(400, 81), gen(300, 82), gen(400, 81), gen(350, 83)];
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 64;
+    cfg.admission_interval = 1e-4;
+    cfg.store_enabled = true;
+    cfg.store_capacity = 4;
+    let ex = Executor::new(cfg).unwrap();
+    let a = ex.run_admission(&graphs).unwrap();
+    assert_eq!(a.n_admitted(), 4);
+    assert_eq!(a.n_store_hits(), 1);
+    // verdicts: producer stored, duplicate hit, the rest miss
+    assert_eq!(a.per_graph[0].store, Some(StoreOutcome::MissStored));
+    assert!(matches!(
+        a.per_graph[2].store,
+        Some(StoreOutcome::Hit { source: Some(0), .. })
+    ));
+    assert_eq!(a.per_graph[3].store, Some(StoreOutcome::MissStored));
+    // every admitted solution — the hit-served one included — validates
+    // against Dijkstra ground truth
+    for (i, r) in a.per_graph.iter().enumerate() {
+        let solo = r.solo.as_ref().expect("admitted");
+        let v = solo.validation.as_ref().expect("functional mode validates");
+        assert!(v.ok(solo.validate_tolerance), "graph {i}: {v:?}");
+    }
+    // the hit's admit-to-complete latency sits strictly below the solo
+    // solve it skipped (the FeNAND read is far cheaper than the solve)
+    let hit = &a.per_graph[2];
+    let hit_solo = hit.solo.as_ref().unwrap();
+    assert!(hit.latency > 0.0);
+    assert!(
+        hit.latency < hit_solo.sim.seconds,
+        "hit latency {} !< solo solve {}",
+        hit.latency,
+        hit_solo.sim.seconds
+    );
+    // per-graph dynamic energy partitions the admission total exactly,
+    // store ops included (same construction as the batch attribution)
+    let esum: f64 = a
+        .per_graph
+        .iter()
+        .filter_map(|r| r.stat.as_ref())
+        .map(|s| s.dynamic_joules)
+        .sum();
+    assert_eq!(esum, a.admission_sim.dynamic_joules);
+    let msum: u64 = a
+        .per_graph
+        .iter()
+        .filter_map(|r| r.stat.as_ref())
+        .map(|s| s.madds)
+        .sum();
+    assert_eq!(msum, a.admission_sim.madds);
+    // the cache summary is populated and the no-store baseline exists
+    assert!(a.no_store_makespan.unwrap() > 0.0);
+    assert!(a.cache_speedup().unwrap().is_finite());
+
+    // bit-identity of the served solution, at the scheduler layer on
+    // the same workload (max_diff must be exactly 0.0, not tolerant)
+    let plans: Vec<ApspPlan> = graphs.iter().map(|g| build_plan(g, plan_opts(64, 7))).collect();
+    let subs: Vec<(&CsrGraph, &ApspPlan)> = graphs.iter().zip(&plans).collect();
+    let arrivals: Vec<f64> = (0..subs.len()).map(|i| i as f64 * 1e-4).collect();
+    let mut store = MemoryStore::new(4, 1 << 32);
+    let (adm, outcomes) = AdmissionGraph::build_with_store(
+        &subs,
+        &arrivals,
+        &AdmissionConfig::default(),
+        &mut store,
+        true,
+    );
+    let be = NativeBackend;
+    let sols = scheduler::execute_admission_stored(&subs, &adm, &outcomes, &be, |_| {});
+    let served = sols[2].as_ref().expect("hit solution");
+    let fresh = scheduler::solve_dag(&graphs[2], &plans[2], &be, SolveOptions::default());
+    let diff = served
+        .materialize_full(&be)
+        .max_diff(&fresh.materialize_full(&be));
+    assert_eq!(diff, 0.0, "hit-served solution must be bit-identical");
+}
+
 #[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_agrees_with_native_when_artifacts_exist() {

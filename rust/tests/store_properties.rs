@@ -1,0 +1,374 @@
+//! Property tests for the content-addressed result store
+//! (`apsp::store`): fingerprint stability/sensitivity, bit-exact
+//! payload round trips, store invariants under random operation
+//! sequences, and hit-served solutions bit-identical to fresh solves.
+//!
+//! All properties run on the seeded harness (`util::prop`); set
+//! `RAPID_PROP_SEED` to explore fresh inputs, failures report a replay
+//! seed.
+
+use rapid_graph::apsp::admission::{AdmissionConfig, AdmissionGraph, StoreOutcome};
+use rapid_graph::apsp::backend::NativeBackend;
+use rapid_graph::apsp::dijkstra;
+use rapid_graph::apsp::plan::{build_plan, ApspPlan, PlanOptions};
+use rapid_graph::apsp::recursive::SolveOptions;
+use rapid_graph::apsp::scheduler;
+use rapid_graph::apsp::store::{
+    fingerprint, CompressedMatrix, MemoryStore, ResultStore, StoreEntry,
+};
+use rapid_graph::graph::csr::CsrGraph;
+use rapid_graph::graph::generators::{self, Topology, Weights};
+use rapid_graph::util::prop::assert_prop;
+use rapid_graph::util::rng::Rng;
+
+fn plan_opts(tile: usize, seed: u64) -> PlanOptions {
+    PlanOptions {
+        tile_limit: tile,
+        max_depth: usize::MAX,
+        seed,
+    }
+}
+
+/// A random connected-ish workload graph across topologies.
+fn random_graph(r: &mut Rng) -> CsrGraph {
+    let n = 20 + r.gen_range(100);
+    let topo = match r.gen_range(3) {
+        0 => Topology::Nws,
+        1 => Topology::Er,
+        _ => Topology::Grid,
+    };
+    let degree = 3.0 + r.gen_f64() * 5.0;
+    generators::generate(topo, n, degree, Weights::Uniform(0.5, 8.0), r.next_u64())
+}
+
+// -----------------------------------------------------------------
+// Fingerprinting
+// -----------------------------------------------------------------
+
+#[test]
+fn fingerprint_invariant_under_clone_and_edge_order_permutation() {
+    assert_prop(
+        30,
+        |r| {
+            let g = random_graph(r);
+            let shuffle_seed = r.next_u64();
+            (g, shuffle_seed)
+        },
+        |(g, shuffle_seed)| {
+            let h = fingerprint(g);
+            if fingerprint(&g.clone()) != h {
+                return Err("clone changed the fingerprint".into());
+            }
+            // rebuild from a randomly permuted edge list: `from_edges`
+            // canonicalizes, so the fingerprint must not move
+            let mut edges: Vec<(u32, u32, f32)> = g.edges().collect();
+            let mut r = Rng::new(*shuffle_seed);
+            r.shuffle(&mut edges);
+            let g2 = CsrGraph::from_edges(g.n(), &edges);
+            if fingerprint(&g2) != h {
+                return Err(format!(
+                    "edge-order permutation changed the fingerprint ({} edges)",
+                    edges.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fingerprint_sensitive_to_any_single_edge_edit() {
+    assert_prop(
+        30,
+        |r| {
+            let g = random_graph(r);
+            let pick = r.next_u64();
+            (g, pick)
+        },
+        |(g, pick)| {
+            let h = fingerprint(g);
+            let m = g.m();
+            if m == 0 {
+                return Err("generator produced an edgeless graph".into());
+            }
+            let mut r = Rng::new(*pick);
+            // (1) reweight one directed edge in place (CSR is already
+            // canonical, so this is a pure weight-bits change)
+            let mut g_rw = g.clone();
+            let k = r.gen_range(m);
+            g_rw.val[k] += 0.5;
+            if fingerprint(&g_rw) == h {
+                return Err(format!("reweight of edge {k} kept the fingerprint"));
+            }
+            // (2) delete one directed edge
+            let edges: Vec<(u32, u32, f32)> = g.edges().collect();
+            let del = r.gen_range(edges.len());
+            let mut fewer = edges.clone();
+            fewer.remove(del);
+            let g_del = CsrGraph::from_edges(g.n(), &fewer);
+            if fingerprint(&g_del) == h {
+                return Err(format!("delete of edge {del} kept the fingerprint"));
+            }
+            // (3) insert one absent edge (skip if the graph is complete)
+            let mut absent = None;
+            'outer: for u in 0..g.n() {
+                for v in 0..g.n() {
+                    if u != v && g.edge_weight(u, v).is_none() {
+                        absent = Some((u as u32, v as u32));
+                        break 'outer;
+                    }
+                }
+            }
+            if let Some((u, v)) = absent {
+                let mut more = edges;
+                more.push((u, v, 1.0));
+                let g_ins = CsrGraph::from_edges(g.n(), &more);
+                if fingerprint(&g_ins) == h {
+                    return Err(format!("insert of ({u},{v}) kept the fingerprint"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// Compressed payload round trip
+// -----------------------------------------------------------------
+
+#[test]
+fn compress_roundtrip_bit_exact_including_disconnected_inf() {
+    assert_prop(
+        25,
+        |r| {
+            // a graph with guaranteed isolated vertices, so the solved
+            // distance matrix carries INF (unreachable) entries
+            let n = 12 + r.gen_range(40);
+            let live = n - 4;
+            let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+            for _ in 0..(2 * n) {
+                let u = r.gen_range(live) as u32;
+                let v = r.gen_range(live) as u32;
+                if u != v {
+                    edges.push((u, v, r.gen_f32_range(0.5, 4.0)));
+                }
+            }
+            CsrGraph::from_undirected_edges(n, &edges)
+        },
+        |g| {
+            let d = dijkstra::apsp(g);
+            let c = CompressedMatrix::compress(&d);
+            let back = c.decompress();
+            if back.n() != d.n() {
+                return Err("dimension lost in round trip".into());
+            }
+            // bit-exact, not approximately equal
+            for (i, (a, b)) in d.as_slice().iter().zip(back.as_slice()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "entry {i} not bit-exact: {a} ({:#x}) vs {b} ({:#x})",
+                        a.to_bits(),
+                        b.to_bits()
+                    ));
+                }
+            }
+            let finite = d.finite_count();
+            if finite == d.n() * d.n() {
+                return Err("workload must contain INF entries".into());
+            }
+            if c.nnz() != finite {
+                return Err(format!("nnz {} != finite count {finite}", c.nnz()));
+            }
+            if c.payload_bytes() != finite as u64 * 8 {
+                return Err("payload bytes must be 8 per finite entry".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// Store invariants under random operation sequences
+// -----------------------------------------------------------------
+
+/// One randomized store-op script: (key, bytes, cost) puts with
+/// interleaved gets, replayed against the capacity/budget invariants.
+struct StoreScript {
+    capacity: usize,
+    budget: u64,
+    ops: Vec<(u64, u64, f64)>,
+}
+
+#[test]
+fn store_respects_capacity_budget_and_rejection_invariants() {
+    assert_prop(
+        60,
+        |r| StoreScript {
+            capacity: r.gen_range(4),
+            budget: 50 + r.gen_range(250) as u64,
+            ops: (0..24)
+                .map(|_| {
+                    (
+                        r.gen_range(8) as u64,
+                        1 + r.gen_range(320) as u64,
+                        r.gen_f64() * 100.0,
+                    )
+                })
+                .collect(),
+        },
+        |s| {
+            let mut store = MemoryStore::new(s.capacity, s.budget);
+            for &(key, bytes, cost) in &s.ops {
+                let before = (store.len(), store.bytes_used(), store.keys());
+                let res = store.put(key, StoreEntry::new(bytes, cost, None));
+                if bytes > s.budget {
+                    // oversized: clean error, nothing evicted
+                    if res.is_ok() {
+                        return Err(format!("oversized put ({bytes} > {}) accepted", s.budget));
+                    }
+                    if (store.len(), store.bytes_used(), store.keys()) != before {
+                        return Err("oversized put mutated the store".into());
+                    }
+                    continue;
+                }
+                let stored = res.map_err(|e| format!("in-budget put failed: {e}"))?;
+                if s.capacity == 0 {
+                    if stored || !store.is_empty() {
+                        return Err("capacity 0 must stay disabled and empty".into());
+                    }
+                    continue;
+                }
+                if !stored || !store.contains(key) {
+                    return Err(format!("in-budget put of key {key} not stored"));
+                }
+                if store.get(key).is_none() {
+                    return Err("get after put missed".into());
+                }
+                if store.len() > s.capacity {
+                    return Err(format!(
+                        "len {} exceeds capacity {}",
+                        store.len(),
+                        s.capacity
+                    ));
+                }
+                if store.bytes_used() > s.budget {
+                    return Err(format!(
+                        "bytes_used {} exceeds budget {}",
+                        store.bytes_used(),
+                        s.budget
+                    ));
+                }
+            }
+            // determinism: replaying the same script reproduces the
+            // same resident set (eviction has no hidden state)
+            let mut replay = MemoryStore::new(s.capacity, s.budget);
+            for &(key, bytes, cost) in &s.ops {
+                let _ = replay.put(key, StoreEntry::new(bytes, cost, None));
+                if bytes <= s.budget && s.capacity > 0 {
+                    let _ = replay.get(key);
+                }
+            }
+            // (the first pass also did a get after each successful put,
+            // so the LRU clocks advance identically)
+            if replay.keys() != store.keys() {
+                return Err(format!(
+                    "replay diverged: {:?} vs {:?}",
+                    replay.keys(),
+                    store.keys()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// Hit-served solutions: bit-identical to fresh solves
+// -----------------------------------------------------------------
+
+fn solve_workload(r: &mut Rng) -> (CsrGraph, u64) {
+    let n = 60 + r.gen_range(80);
+    let seed = r.next_u64();
+    let g = generators::generate(Topology::Nws, n, 6.0, Weights::Uniform(1.0, 5.0), seed);
+    (g, seed)
+}
+
+#[test]
+fn run_local_hit_served_bit_identical_to_fresh_solve() {
+    assert_prop(
+        5,
+        |r| solve_workload(r),
+        |(g, seed)| {
+            let plan = build_plan(g, plan_opts(32, *seed));
+            let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(g, &plan), (g, &plan)];
+            let arrivals = [0.0, 1e-4];
+            let mut store = MemoryStore::new(8, 1 << 32);
+            let (adm, outcomes) = AdmissionGraph::build_with_store(
+                &subs,
+                &arrivals,
+                &AdmissionConfig::default(),
+                &mut store,
+                true,
+            );
+            match &outcomes[1] {
+                Some(o) if o.is_hit() => {}
+                o => return Err(format!("duplicate must hit, got {o:?}")),
+            }
+            let be = NativeBackend;
+            let sols = scheduler::execute_admission_stored(&subs, &adm, &outcomes, &be, |_| {});
+            let served = sols[1].as_ref().ok_or("hit must yield a solution")?;
+            let fresh = scheduler::solve_dag(g, &plan, &be, SolveOptions::default());
+            let diff = served.materialize_full(&be).max_diff(&fresh.materialize_full(&be));
+            if diff != 0.0 {
+                return Err(format!("hit-served solution differs by {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prewarmed_hit_roundtrips_through_compressed_payload() {
+    assert_prop(
+        4,
+        |r| solve_workload(r),
+        |(g, seed)| {
+            let plan = build_plan(g, plan_opts(32, *seed));
+            let be = NativeBackend;
+            let fresh = scheduler::solve_dag(g, &plan, &be, SolveOptions::default());
+            let full = fresh.materialize_full(&be);
+            // warm the store with the compressed solved result, as a
+            // persistent deployment would across runs
+            let cm = CompressedMatrix::compress(&full);
+            let mut store = MemoryStore::new(8, 1 << 32);
+            store
+                .put(
+                    fingerprint(g),
+                    StoreEntry::new(cm.payload_bytes(), 1.0, Some(cm)),
+                )
+                .map_err(|e| format!("warm put failed: {e}"))?;
+            let subs: Vec<(&CsrGraph, &ApspPlan)> = vec![(g, &plan)];
+            let (adm, outcomes) = AdmissionGraph::build_with_store(
+                &subs,
+                &[0.0],
+                &AdmissionConfig::default(),
+                &mut store,
+                true,
+            );
+            match &outcomes[0] {
+                Some(StoreOutcome::Hit {
+                    source: None,
+                    payload: Some(_),
+                }) => {}
+                o => return Err(format!("pre-warmed submission must hit, got {o:?}")),
+            }
+            let sols = scheduler::execute_admission_stored(&subs, &adm, &outcomes, &be, |_| {});
+            let served = sols[0].as_ref().ok_or("hit must yield a solution")?;
+            let diff = served.materialize_full(&be).max_diff(&full);
+            if diff != 0.0 {
+                return Err(format!("payload-served solution differs by {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
