@@ -28,6 +28,42 @@ use rapid_graph::sim::{engine, HwParams};
 use rapid_graph::util::bench::{bench, BenchOpts};
 use rapid_graph::util::rng::Rng;
 use rapid_graph::util::table::{fmt_ratio, fmt_time, Table};
+use rapid_graph::util::threads;
+
+/// Counting global allocator (`--features count_alloc`): every heap
+/// allocation increments a counter, so `--host-perf` can *assert* the
+/// warmed kernel hot path is allocation-free rather than eyeball it.
+#[cfg(feature = "count_alloc")]
+mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub struct Counting;
+
+    // SAFETY: defers every operation to `System`; only adds a counter.
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(l)
+        }
+        unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+            System.dealloc(p, l)
+        }
+        unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(p, l, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTER: Counting = Counting;
+
+    pub fn allocs() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+}
 
 /// Multi-component scheduler workload: 8 bridged communities (shared
 /// boundary hierarchy) plus one large isolated clique. The barrier walk
@@ -342,7 +378,10 @@ fn bench_admission(json_out: Option<&str>) {
                 ])
             })
             .collect();
-        let doc = json::obj(vec![
+        // host wall-clock keys ride along for trend inspection; CI never
+        // drift-gates them (machine-dependent)
+        let host = measure_host_perf(BenchOpts::quick());
+        let mut fields = vec![
             ("workload", json::s("admission_staggered_6")),
             ("graphs", json::num(batch.n_graphs() as f64)),
             ("queue_depth", json::num(queue_depth as f64)),
@@ -357,8 +396,234 @@ fn bench_admission(json_out: Option<&str>) {
             ("store_no_cache_makespan_s", json::num(store_plain)),
             ("cache_speedup", json::num(cache_speedup)),
             ("per_graph", json::arr(per_graph)),
-        ]);
+        ];
+        fields.extend(host.json_fields());
+        let doc = json::obj(fields);
         std::fs::write(path, doc.render() + "\n").expect("write bench json");
+        println!("wrote {path}\n");
+    }
+}
+
+/// Host hot-path throughput snapshot: the microkernel rates and the
+/// scheduler dispatch overhead that PR's host-wall-clock work targets.
+/// All of these are machine-dependent, so CI records them for trend
+/// inspection but never drift-gates them (see `.github/workflows/ci.yml`).
+struct HostPerf {
+    /// Dispatched (SIMD-capable) row-wise FW, Gmadd/s at n=256.
+    fw_gmadds_per_s: f64,
+    /// Scalar-oracle triple loop on the same matrix.
+    fw_scalar_gmadds_per_s: f64,
+    /// Blocked min-plus microkernel, Gmadd/s at m=k=n=256.
+    minplus_gmadds_per_s: f64,
+    /// Scalar-oracle one-row-at-a-time min-plus.
+    minplus_scalar_gmadds_per_s: f64,
+    /// Per-task overhead of the batched-dequeue DAG executor on
+    /// trivial tasks (pure scheduling cost).
+    dispatch_ns_per_task: f64,
+    /// Which relax microkernel the dispatch resolved to.
+    kernel: &'static str,
+}
+
+fn measure_host_perf(opts: BenchOpts) -> HostPerf {
+    let n = 256usize;
+    let g = generators::newman_watts_strogatz(n, 5, 0.1, Weights::Uniform(1.0, 5.0), 0x5EED);
+    let base = g.to_dense();
+    // steady state: caller-held matrix + pivot scratch, no per-call heap
+    let mut d = base.clone();
+    let mut row_k = vec![0f32; n];
+    let m_fw = bench(opts, || {
+        d.as_mut_slice().copy_from_slice(base.as_slice());
+        floyd_warshall::fw_rowwise_scratch(&mut d, &mut row_k);
+        std::hint::black_box(d.get(0, 1));
+    });
+    let m_fw_scalar = bench(opts, || {
+        d.as_mut_slice().copy_from_slice(base.as_slice());
+        floyd_warshall::fw_inplace(&mut d);
+        std::hint::black_box(d.get(0, 1));
+    });
+
+    let mut rng = Rng::new(0x5EED);
+    let mk = |rng: &mut Rng| -> Vec<f32> {
+        (0..n * n)
+            .map(|_| {
+                if rng.gen_bool(0.2) {
+                    f32::INFINITY
+                } else {
+                    rng.gen_f32_range(0.0, 9.0)
+                }
+            })
+            .collect()
+    };
+    let a = mk(&mut rng);
+    let b = mk(&mut rng);
+    let mut c = vec![f32::INFINITY; n * n];
+    let m_mp = bench(opts, || {
+        c.fill(f32::INFINITY);
+        rapid_graph::apsp::minplus::minplus_into(&mut c, &a, &b, n, n, n);
+        std::hint::black_box(c[0]);
+    });
+    let m_mp_scalar = bench(opts, || {
+        c.fill(f32::INFINITY);
+        rapid_graph::apsp::minplus::minplus_into_scalar(&mut c, &a, &b, n, n, n);
+        std::hint::black_box(c[0]);
+    });
+
+    // scheduler dispatch: a wide DAG of no-op tasks isolates the
+    // ready-queue cost per task (batched pops amortize the lock)
+    let tasks = 4096usize;
+    let deps: Vec<Vec<u32>> = vec![Vec::new(); tasks];
+    let m_dispatch = bench(opts, || {
+        threads::par_dag(&deps, |i| {
+            std::hint::black_box(i);
+        });
+    });
+
+    let gmadds = |secs: f64| (n as f64).powi(3) / secs / 1e9;
+    HostPerf {
+        fw_gmadds_per_s: gmadds(m_fw.mean_secs()),
+        fw_scalar_gmadds_per_s: gmadds(m_fw_scalar.mean_secs()),
+        minplus_gmadds_per_s: gmadds(m_mp.mean_secs()),
+        minplus_scalar_gmadds_per_s: gmadds(m_mp_scalar.mean_secs()),
+        dispatch_ns_per_task: m_dispatch.mean_secs() / tasks as f64 * 1e9,
+        kernel: floyd_warshall::relax_kernel_name(),
+    }
+}
+
+impl HostPerf {
+    fn json_fields(&self) -> Vec<(&'static str, rapid_graph::util::json::Json)> {
+        use rapid_graph::util::json;
+        vec![
+            ("host_relax_kernel", json::s(self.kernel)),
+            ("host_fw_gmadds_per_s", json::num(self.fw_gmadds_per_s)),
+            (
+                "host_fw_scalar_gmadds_per_s",
+                json::num(self.fw_scalar_gmadds_per_s),
+            ),
+            (
+                "host_fw_speedup_vs_scalar",
+                json::num(self.fw_gmadds_per_s / self.fw_scalar_gmadds_per_s),
+            ),
+            (
+                "host_minplus_gmadds_per_s",
+                json::num(self.minplus_gmadds_per_s),
+            ),
+            (
+                "host_minplus_scalar_gmadds_per_s",
+                json::num(self.minplus_scalar_gmadds_per_s),
+            ),
+            (
+                "host_minplus_speedup_vs_scalar",
+                json::num(self.minplus_gmadds_per_s / self.minplus_scalar_gmadds_per_s),
+            ),
+            (
+                "host_dispatch_ns_per_task",
+                json::num(self.dispatch_ns_per_task),
+            ),
+        ]
+    }
+}
+
+/// With `--features count_alloc`: run the warmed tile-task kernels
+/// (row-wise FW on held scratch, arena-backed FW, blocked min-plus) and
+/// assert the steady state performs **zero** heap allocations. Returns
+/// the counted allocations across the measured loop.
+#[cfg(feature = "count_alloc")]
+fn assert_alloc_free_steady_state() -> u64 {
+    let n = 192usize;
+    let g = generators::newman_watts_strogatz(n, 5, 0.1, Weights::Uniform(1.0, 5.0), 0xA110C);
+    let base = g.to_dense();
+    let mut d = base.clone();
+    let mut row_k = vec![0f32; n];
+    let mut rng = Rng::new(0xA110C);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.gen_f32_range(0.0, 9.0)).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.gen_f32_range(0.0, 9.0)).collect();
+    let mut c = vec![f32::INFINITY; n * n];
+    let mut steady = || {
+        // caller-scratch FW (the blocked backend's shape)
+        d.as_mut_slice().copy_from_slice(base.as_slice());
+        floyd_warshall::fw_rowwise_scratch(&mut d, &mut row_k);
+        // arena-scratch FW (the tile task's shape): the pivot row is
+        // leased from the warmed thread pool, not the allocator
+        d.as_mut_slice().copy_from_slice(base.as_slice());
+        floyd_warshall::fw_rowwise(&mut d);
+        // blocked min-plus into a held accumulator
+        c.fill(f32::INFINITY);
+        rapid_graph::apsp::minplus::minplus_into(&mut c, &a, &b, n, n, n);
+        std::hint::black_box((d.get(0, 1), c[0]));
+    };
+    steady(); // warm the arena free lists
+    let before = alloc_count::allocs();
+    for _ in 0..8 {
+        steady();
+    }
+    let counted = alloc_count::allocs() - before;
+    assert_eq!(
+        counted, 0,
+        "steady-state kernel loop allocated {counted} times; the tile arena \
+         or the scratch threading regressed"
+    );
+    counted
+}
+
+/// `--host-perf`: per-kernel host throughput snapshot (the CI
+/// perf-snapshot job runs this next to `--admission-only`). With
+/// `--json PATH` the numbers land in a machine-readable artifact; with
+/// `--features count_alloc` the allocation-free steady state is asserted
+/// and recorded.
+fn bench_host_perf(json_out: Option<&str>) {
+    use rapid_graph::util::json;
+    let hp = measure_host_perf(BenchOpts::default());
+    let mut t = Table::new(
+        "host hot-path kernels (n=256, per call)",
+        &["metric", "value"],
+    );
+    t.row(&["relax kernel".into(), hp.kernel.into()]);
+    t.row(&[
+        "FW rowwise".into(),
+        format!("{:.2} Gmadd/s", hp.fw_gmadds_per_s),
+    ]);
+    t.row(&[
+        "FW scalar oracle".into(),
+        format!("{:.2} Gmadd/s", hp.fw_scalar_gmadds_per_s),
+    ]);
+    t.row(&[
+        "FW speedup vs scalar".into(),
+        fmt_ratio(hp.fw_gmadds_per_s / hp.fw_scalar_gmadds_per_s),
+    ]);
+    t.row(&[
+        "min-plus blocked".into(),
+        format!("{:.2} Gmadd/s", hp.minplus_gmadds_per_s),
+    ]);
+    t.row(&[
+        "min-plus speedup vs scalar".into(),
+        fmt_ratio(hp.minplus_gmadds_per_s / hp.minplus_scalar_gmadds_per_s),
+    ]);
+    t.row(&[
+        "DAG dispatch".into(),
+        format!("{:.0} ns/task", hp.dispatch_ns_per_task),
+    ]);
+    t.print();
+
+    #[cfg(feature = "count_alloc")]
+    let steady_allocs = Some(assert_alloc_free_steady_state());
+    #[cfg(not(feature = "count_alloc"))]
+    let steady_allocs: Option<u64> = None;
+    match steady_allocs {
+        Some(0) => println!("allocation-free steady state: OK (counting allocator)\n"),
+        Some(k) => println!("steady-state allocations: {k} (unexpected)\n"),
+        None => {
+            println!("allocation counting off (rerun with --features count_alloc to assert)\n")
+        }
+    }
+
+    if let Some(path) = json_out {
+        let mut fields = hp.json_fields();
+        if let Some(k) = steady_allocs {
+            fields.push(("steady_state_allocs", json::num(k as f64)));
+        }
+        let mut doc = vec![("workload", json::s("host_perf_n256"))];
+        doc.extend(fields);
+        std::fs::write(path, json::obj(doc).render() + "\n").expect("write host-perf json");
         println!("wrote {path}\n");
     }
 }
@@ -401,10 +666,16 @@ fn main() {
         bench_admission(json_out);
         return;
     }
+    if args.flag("host-perf") {
+        // per-kernel host throughput (the other CI perf-snapshot step)
+        bench_host_perf(json_out);
+        return;
+    }
     bench_schedulers();
     bench_batching();
     bench_sharding();
     bench_admission(json_out);
+    bench_host_perf(None);
 
     let runtime = PjrtRuntime::load_default().ok();
     if runtime.is_none() {

@@ -10,6 +10,7 @@
 
 use crate::apsp::{floyd_warshall, minplus};
 use crate::graph::dense::DistMatrix;
+use crate::util::arena;
 use crate::INF;
 
 /// A tile-granular compute engine.
@@ -44,11 +45,12 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
     }
     let nb = n.div_ceil(block);
     let dim = |i: usize| -> usize { (n - i * block).min(block) };
-    // extract a (rows x cols) block at block-coords (bi, bj)
+    // extract a (rows x cols) block at block-coords (bi, bj) into an
+    // arena-leased buffer (recycled by the caller after `put`)
     let get = |d: &DistMatrix, bi: usize, bj: usize| -> Vec<f32> {
         let (r0, c0) = (bi * block, bj * block);
         let (rs, cs) = (dim(bi), dim(bj));
-        let mut out = vec![0f32; rs * cs];
+        let mut out = arena::lease_filled(rs * cs, 0.0);
         for r in 0..rs {
             out[r * cs..(r + 1) * cs].copy_from_slice(&d.row(r0 + r)[c0..c0 + cs]);
         }
@@ -65,8 +67,10 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
     // one scratch buffer reused for every panel relax (replaces the
     // per-panel `orig` clone the old code allocated), and the row
     // panels of the current pivot kept resident so step (3) does not
-    // re-extract them once per block-row
-    let mut scratch = vec![0f32; block * block];
+    // re-extract them once per block-row; all block buffers are
+    // arena-leased, so a steady-state pivot loop performs no heap
+    // allocation at all
+    let mut scratch = arena::scratch_filled(block * block, 0.0);
     let mut row_panels: Vec<Vec<f32>> = vec![Vec::new(); nb];
     for k in 0..nb {
         let ks = dim(k);
@@ -93,7 +97,10 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
                 }
             }
             put(d, k, j, &panel);
-            row_panels[j] = panel;
+            let stale = std::mem::replace(&mut row_panels[j], panel);
+            if stale.capacity() > 0 {
+                arena::recycle(stale);
+            }
         }
         //     column panels: D[i][k] = min(D[i][k], D[i][k] (+) diag)
         for i in 0..nb {
@@ -111,7 +118,9 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
                 }
             }
             put(d, i, k, &panel);
+            arena::recycle(panel);
         }
+        arena::recycle(diag);
         // (3) outer update: D[i][j] = min(D[i][j], D[i][k] (+) D[k][j]),
         // with the row panels hoisted out of the i loop
         for i in 0..nb {
@@ -128,7 +137,14 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
                 let mut blk = get(d, i, j);
                 be.minplus_into(&mut blk, &col_panel, &row_panels[j], is, ks, js);
                 put(d, i, j, &blk);
+                arena::recycle(blk);
             }
+            arena::recycle(col_panel);
+        }
+    }
+    for panel in row_panels {
+        if panel.capacity() > 0 {
+            arena::recycle(panel);
         }
     }
 }
@@ -177,6 +193,48 @@ impl TileBackend for SerialBackend {
     }
 }
 
+/// Always-available scalar oracle: kernels pinned to the plain scalar
+/// microkernels (never the explicit-SIMD dispatch), regardless of CPU.
+/// Every other backend is required to agree with this one bit-for-bit.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ScalarBackend;
+
+impl TileBackend for ScalarBackend {
+    fn fw(&self, d: &mut DistMatrix) {
+        floyd_warshall::fw_inplace(d);
+    }
+
+    fn minplus_into(&self, c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        minplus::minplus_into_scalar(c, a, b, m, k, n);
+    }
+
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+}
+
+/// Explicit-SIMD variant of the serial backend: the same register-tiled
+/// kernels, routed through the `#[cfg]`-gated AVX2 relax microkernel
+/// when the CPU supports it (elsewhere it degrades to the identical
+/// auto-vectorized scalar path — results are bit-equal either way, see
+/// `tests/kernel_properties.rs`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SimdBackend;
+
+impl TileBackend for SimdBackend {
+    fn fw(&self, d: &mut DistMatrix) {
+        floyd_warshall::fw_rowwise(d);
+    }
+
+    fn minplus_into(&self, c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        minplus::minplus_into(c, a, b, m, k, n);
+    }
+
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,9 +247,11 @@ mod tests {
         let base = g.to_dense();
         let mut a = base.clone();
         NativeBackend.fw(&mut a);
-        let mut b = base.clone();
-        SerialBackend.fw(&mut b);
-        assert_eq!(a.max_diff(&b), 0.0);
+        for be in [&SerialBackend as &dyn TileBackend, &ScalarBackend, &SimdBackend] {
+            let mut b = base.clone();
+            be.fw(&mut b);
+            assert_eq!(a.max_diff(&b), 0.0, "backend {}", be.name());
+        }
     }
 
     #[test]
@@ -257,9 +317,11 @@ mod tests {
             .collect();
         let kn: Vec<f32> = (0..k * n).map(|_| rng.gen_f32_range(0.0, 9.0)).collect();
         let mut c1 = vec![INF; m * n];
-        let mut c2 = c1.clone();
         NativeBackend.minplus_into(&mut c1, &mk, &kn, m, k, n);
-        SerialBackend.minplus_into(&mut c2, &mk, &kn, m, k, n);
-        assert_eq!(c1, c2);
+        for be in [&SerialBackend as &dyn TileBackend, &ScalarBackend, &SimdBackend] {
+            let mut c2 = vec![INF; m * n];
+            be.minplus_into(&mut c2, &mk, &kn, m, k, n);
+            assert_eq!(c1, c2, "backend {}", be.name());
+        }
     }
 }

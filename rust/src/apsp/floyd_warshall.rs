@@ -4,18 +4,45 @@
 //! dense dynamic program the PCM-FW die executes in-place. Three
 //! implementations with identical results:
 //!
-//! * [`fw_inplace`] — straightforward triple loop (reference).
-//! * [`fw_rowwise`] — pivot-row snapshot + vectorizable inner loop; this
+//! * [`fw_inplace`] — straightforward triple loop (the always-available
+//!   scalar oracle every other kernel is tested against).
+//! * [`fw_rowwise`] — pivot-row snapshot + register-tiled row sweep; this
 //!   is the same "Panel_Row broadcast into the Main_Block" structure the
 //!   paper's remapping uses (Fig. 6b), expressed for a CPU cache.
 //! * [`fw_parallel`] — `fw_rowwise` with the row sweep fanned out across
 //!   threads per pivot (used by the native tile backend and the CPU
 //!   baseline).
+//!
+//! # Microkernel structure
+//!
+//! The hot loop is [`relax_row`]: `row_i[j] = min(row_i[j], dik +
+//! row_k[j])`. It dispatches once (cached feature probe) between a
+//! scalar path written so LLVM auto-vectorizes it — equal-length
+//! re-sliced iterators, no bounds checks, branchless `f32::min` — and an
+//! explicit AVX2 path (`vaddps`/`vminps`). Both are elementwise IEEE
+//! min/add over the same operands in the same order, so results are
+//! bit-identical; the property suite in `tests/kernel_properties.rs`
+//! pins this. Row sweeps go 4 rows per pass ([`relax_rows4`]) so one
+//! load of the pivot-row panel feeds four accumulator rows — rows are
+//! independent within a pivot, so the tiling cannot change results.
+//!
+//! Pivot-row / panel scratch comes from [`crate::util::arena`]; the
+//! `_scratch` variants take caller-provided buffers for callers that
+//! hold their own (the blocked backend, the property suite).
 
 use crate::graph::dense::DistMatrix;
-use crate::util::threads;
+use crate::util::{arena, threads};
 
-/// Reference triple-loop FW. O(n^3) time, in-place.
+#[cfg(test)]
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counts entries into the bounds-check-free relax microkernel, so tests
+/// can assert the hot path is actually the one being exercised.
+#[cfg(test)]
+pub(crate) static RELAX_FAST_PATH_ENTRIES: AtomicU64 = AtomicU64::new(0);
+
+/// Reference triple-loop FW. O(n^3) time, in-place. Deliberately naive:
+/// this is the scalar oracle the vectorized kernels are compared to.
 pub fn fw_inplace(d: &mut DistMatrix) {
     let n = d.n();
     for k in 0..n {
@@ -35,21 +62,56 @@ pub fn fw_inplace(d: &mut DistMatrix) {
 }
 
 /// Row-wise FW: snapshot the pivot row once per `k`, then stream every
-/// row `i` against it. The inner loop is a pure `min(a, b + c)` map that
-/// the compiler auto-vectorizes.
+/// row `i` against it through the register-tiled microkernel.
 pub fn fw_rowwise(d: &mut DistMatrix) {
+    let mut row_k = arena::scratch_filled(d.n(), 0.0);
+    fw_rowwise_scratch(d, &mut row_k);
+}
+
+/// [`fw_rowwise`] with caller-provided pivot-row scratch (`row_k.len()
+/// >= d.n()`); no allocation inside the pivot loop.
+pub fn fw_rowwise_scratch(d: &mut DistMatrix, row_k: &mut [f32]) {
     let n = d.n();
-    let mut row_k = vec![0f32; n];
+    let row_k = &mut row_k[..n];
     for k in 0..n {
         row_k.copy_from_slice(d.row(k));
-        let data = d.as_mut_slice();
-        for i in 0..n {
-            let row_i = &mut data[i * n..(i + 1) * n];
-            let dik = row_i[k];
-            if !(dik < f32::INFINITY) {
+        relax_rows_against(d.as_mut_slice(), n, k, row_k);
+    }
+}
+
+/// Sweep all rows of `data` (`rows x n`, row-major) against the pivot-row
+/// snapshot `row_k`, reading each row's `dik` from column `k`. Rows are
+/// processed 4 at a time so one pass over `row_k` feeds four register
+/// accumulators; rows are mutually independent within a pivot, so the
+/// grouping is bit-identical to a plain row loop.
+fn relax_rows_against(data: &mut [f32], n: usize, k: usize, row_k: &[f32]) {
+    debug_assert_eq!(data.len() % n, 0);
+    for quad in data.chunks_mut(4 * n) {
+        if quad.len() == 4 * n {
+            let (r0, rest) = quad.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            let (d0, d1, d2, d3) = (r0[k], r1[k], r2[k], r3[k]);
+            if d0 < f32::INFINITY
+                && d1 < f32::INFINITY
+                && d2 < f32::INFINITY
+                && d3 < f32::INFINITY
+            {
+                relax_rows4(r0, r1, r2, r3, [d0, d1, d2, d3], row_k);
                 continue;
             }
-            relax_row(row_i, dik, &row_k);
+            for (r, dk) in [(r0, d0), (r1, d1), (r2, d2), (r3, d3)] {
+                if dk < f32::INFINITY {
+                    relax_row(r, dk, row_k);
+                }
+            }
+        } else {
+            for r in quad.chunks_mut(n) {
+                let dk = r[k];
+                if dk < f32::INFINITY {
+                    relax_row(r, dk, row_k);
+                }
+            }
         }
     }
 }
@@ -57,18 +119,202 @@ pub fn fw_rowwise(d: &mut DistMatrix) {
 /// One FW row update: `row_i[j] = min(row_i[j], dik + row_k[j])`.
 /// `dik` must be finite. This is the hot loop of the whole crate.
 ///
-/// Branchless form: `f32::min` compiles to `minps` so LLVM vectorizes
-/// the whole loop (the earlier `if cand < row_i[j]` store-guard blocked
-/// vectorization — 2x slower; EXPERIMENTS.md §Perf). NaN caveat does not
-/// apply: `dik` is finite and `row_k[j]` is never NaN, so `cand` is
-/// never NaN. `min(x, inf+w) = x` keeps infinity semantics.
+/// Dispatches to the explicit AVX2 kernel when the CPU supports it
+/// (probe cached; `RAPID_SIMD=0` forces scalar), otherwise the
+/// auto-vectorizing scalar path. Both are bit-identical — elementwise
+/// IEEE add/min, same operands, same order. NaN caveat does not apply:
+/// `dik` is finite and `row_k[j]` is never NaN, so `cand` is never NaN.
+/// `min(x, inf+w) = x` keeps infinity semantics.
 #[inline]
 pub fn relax_row(row_i: &mut [f32], dik: f32, row_k: &[f32]) {
     debug_assert_eq!(row_i.len(), row_k.len());
     let m = row_i.len().min(row_k.len());
     let (ri, rk) = (&mut row_i[..m], &row_k[..m]);
+    #[cfg(test)]
+    RELAX_FAST_PATH_ENTRIES.fetch_add(1, Ordering::Relaxed);
+    #[cfg(target_arch = "x86_64")]
+    if simd::enabled() {
+        // SAFETY: AVX2 support verified by the cached runtime probe.
+        unsafe { simd::relax_row_avx2(ri, dik, rk) };
+        return;
+    }
+    relax_row_scalar(ri, dik, rk);
+}
+
+/// Scalar relax microkernel — the always-available oracle. Branchless
+/// form: `f32::min` compiles to `minps` so LLVM vectorizes the whole
+/// loop (the earlier `if cand < row_i[j]` store-guard blocked
+/// vectorization — 2x slower; EXPERIMENTS.md §Perf). The equal-length
+/// zip over re-sliced operands carries no bounds checks.
+#[inline]
+pub fn relax_row_scalar(row_i: &mut [f32], dik: f32, row_k: &[f32]) {
+    let m = row_i.len().min(row_k.len());
+    let (ri, rk) = (&mut row_i[..m], &row_k[..m]);
+    for (x, &b) in ri.iter_mut().zip(rk.iter()) {
+        *x = x.min(dik + b);
+    }
+}
+
+/// Fused 4-row relax: one pass over `row_k` updates four rows. `dik`
+/// entries may be `INF` — an infinite candidate never wins a min, so the
+/// fused form stays bit-identical to four sequential [`relax_row`]s
+/// (with infinite rows skipped).
+#[inline]
+pub fn relax_rows4(
+    r0: &mut [f32],
+    r1: &mut [f32],
+    r2: &mut [f32],
+    r3: &mut [f32],
+    dik: [f32; 4],
+    row_k: &[f32],
+) {
+    let m = row_k
+        .len()
+        .min(r0.len())
+        .min(r1.len())
+        .min(r2.len())
+        .min(r3.len());
+    #[cfg(test)]
+    RELAX_FAST_PATH_ENTRIES.fetch_add(1, Ordering::Relaxed);
+    #[cfg(target_arch = "x86_64")]
+    if simd::enabled() {
+        // SAFETY: AVX2 support verified by the cached runtime probe.
+        unsafe {
+            simd::relax_rows4_avx2(
+                &mut r0[..m],
+                &mut r1[..m],
+                &mut r2[..m],
+                &mut r3[..m],
+                dik,
+                &row_k[..m],
+            )
+        };
+        return;
+    }
+    let (r0, r1, r2, r3) = (&mut r0[..m], &mut r1[..m], &mut r2[..m], &mut r3[..m]);
+    let rk = &row_k[..m];
     for j in 0..m {
-        ri[j] = ri[j].min(dik + rk[j]);
+        let b = rk[j];
+        r0[j] = r0[j].min(dik[0] + b);
+        r1[j] = r1[j].min(dik[1] + b);
+        r2[j] = r2[j].min(dik[2] + b);
+        r3[j] = r3[j].min(dik[3] + b);
+    }
+}
+
+/// Name of the relax microkernel variant in use (for bench reports).
+pub fn relax_kernel_name() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    if simd::enabled() {
+        return "avx2";
+    }
+    "scalar"
+}
+
+/// Explicit-SIMD relax microkernels (x86-64 AVX2). Each lane computes
+/// the same IEEE single-rounded `dik + row_k[j]` and elementwise min as
+/// the scalar path, so outputs are bit-identical; the scalar tail uses
+/// `f32::min` to match exactly.
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use std::arch::x86_64::*;
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    /// 0 = unprobed, 1 = AVX2 on, 2 = off.
+    static STATE: AtomicU8 = AtomicU8::new(0);
+
+    #[inline]
+    pub fn enabled() -> bool {
+        match STATE.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let on = is_x86_feature_detected!("avx2")
+                    && !matches!(std::env::var("RAPID_SIMD").as_deref(), Ok("0"));
+                STATE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+                on
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available (see [`enabled`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relax_row_avx2(ri: &mut [f32], dik: f32, rk: &[f32]) {
+        let n = ri.len().min(rk.len());
+        let rip = ri.as_mut_ptr();
+        let rkp = rk.as_ptr();
+        let va = _mm256_set1_ps(dik);
+        let mut j = 0;
+        while j + 8 <= n {
+            let cand = _mm256_add_ps(va, _mm256_loadu_ps(rkp.add(j)));
+            let cur = _mm256_loadu_ps(rip.add(j));
+            _mm256_storeu_ps(rip.add(j), _mm256_min_ps(cur, cand));
+            j += 8;
+        }
+        while j < n {
+            let x = *rip.add(j);
+            *rip.add(j) = x.min(dik + *rkp.add(j));
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available (see [`enabled`]). All four
+    /// row slices and `rk` must have equal length.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn relax_rows4_avx2(
+        r0: &mut [f32],
+        r1: &mut [f32],
+        r2: &mut [f32],
+        r3: &mut [f32],
+        dik: [f32; 4],
+        rk: &[f32],
+    ) {
+        let n = rk.len();
+        let (p0, p1, p2, p3) = (
+            r0.as_mut_ptr(),
+            r1.as_mut_ptr(),
+            r2.as_mut_ptr(),
+            r3.as_mut_ptr(),
+        );
+        let rkp = rk.as_ptr();
+        let (v0, v1, v2, v3) = (
+            _mm256_set1_ps(dik[0]),
+            _mm256_set1_ps(dik[1]),
+            _mm256_set1_ps(dik[2]),
+            _mm256_set1_ps(dik[3]),
+        );
+        let mut j = 0;
+        while j + 8 <= n {
+            let b = _mm256_loadu_ps(rkp.add(j));
+            _mm256_storeu_ps(
+                p0.add(j),
+                _mm256_min_ps(_mm256_loadu_ps(p0.add(j)), _mm256_add_ps(v0, b)),
+            );
+            _mm256_storeu_ps(
+                p1.add(j),
+                _mm256_min_ps(_mm256_loadu_ps(p1.add(j)), _mm256_add_ps(v1, b)),
+            );
+            _mm256_storeu_ps(
+                p2.add(j),
+                _mm256_min_ps(_mm256_loadu_ps(p2.add(j)), _mm256_add_ps(v2, b)),
+            );
+            _mm256_storeu_ps(
+                p3.add(j),
+                _mm256_min_ps(_mm256_loadu_ps(p3.add(j)), _mm256_add_ps(v3, b)),
+            );
+            j += 8;
+        }
+        while j < n {
+            let b = *rkp.add(j);
+            *p0.add(j) = (*p0.add(j)).min(dik[0] + b);
+            *p1.add(j) = (*p1.add(j)).min(dik[1] + b);
+            *p2.add(j) = (*p2.add(j)).min(dik[2] + b);
+            *p3.add(j) = (*p3.add(j)).min(dik[3] + b);
+            j += 1;
+        }
     }
 }
 
@@ -85,8 +331,8 @@ pub fn fw_parallel(d: &mut DistMatrix) {
         return fw_rowwise(d);
     }
     let data_ptr = d.as_mut_slice().as_mut_ptr() as usize;
-    let row_k = vec![0f32; n];
-    let row_k_ptr = row_k.as_ptr() as usize;
+    let mut row_k = arena::scratch_filled(n, 0.0);
+    let row_k_ptr = row_k.as_mut_ptr() as usize;
     let barrier = std::sync::Barrier::new(workers);
     // static row ranges per worker
     let rows_per = n.div_ceil(workers);
@@ -113,13 +359,11 @@ pub fn fw_parallel(d: &mut DistMatrix) {
                     barrier.wait();
                     let row_k_slice =
                         unsafe { std::slice::from_raw_parts(row_k as *const f32, n) };
-                    for i in lo..hi {
-                        let row_i =
-                            unsafe { std::slice::from_raw_parts_mut(data.add(i * n), n) };
-                        let dik = row_i[k];
-                        if dik < f32::INFINITY {
-                            relax_row(row_i, dik, row_k_slice);
-                        }
+                    if lo < hi {
+                        let rows = unsafe {
+                            std::slice::from_raw_parts_mut(data.add(lo * n), (hi - lo) * n)
+                        };
+                        relax_rows_against(rows, n, k, row_k_slice);
                     }
                 }
             });
@@ -135,25 +379,33 @@ pub fn fw_parallel(d: &mut DistMatrix) {
 /// simulator's op costs map 1:1 onto code.
 pub fn fw_panel(d: &mut DistMatrix) {
     let n = d.n();
-    let mut panel_row = vec![0f32; n];
-    let mut panel_col = vec![0f32; n];
+    let mut panel_row = arena::scratch_filled(n, 0.0);
+    let mut panel_col = arena::scratch_filled(n, 0.0);
+    fw_panel_scratch(d, &mut panel_row, &mut panel_col);
+}
+
+/// [`fw_panel`] with caller-provided panel scratch (both `>= d.n()`).
+pub fn fw_panel_scratch(d: &mut DistMatrix, panel_row: &mut [f32], panel_col: &mut [f32]) {
+    let n = d.n();
+    let panel_row = &mut panel_row[..n];
+    let panel_col = &mut panel_col[..n];
     for k in 0..n {
         // Panel extraction (permutation unit, Fig. 5d)
         panel_row.copy_from_slice(d.row(k));
-        for i in 0..n {
-            panel_col[i] = d.get(i, k);
+        for (i, pc) in panel_col.iter_mut().enumerate() {
+            *pc = d.get(i, k);
         }
         // Main_Block update: Temp = Panel_Col + Panel_Row (bit-serial
         // add), then selective write where Temp < Main_Block (bit-serial
         // min via sign bit). Pivot row/col are also updated through the
         // same pass (d[k][k] = 0 keeps them fixed).
         let data = d.as_mut_slice();
-        for i in 0..n {
+        for (i, row_i) in data.chunks_exact_mut(n).enumerate() {
             let dik = panel_col[i];
             if !(dik < f32::INFINITY) {
                 continue;
             }
-            relax_row(&mut data[i * n..(i + 1) * n], dik, &panel_row);
+            relax_row(row_i, dik, panel_row);
         }
     }
 }
@@ -164,16 +416,18 @@ mod tests {
     use crate::graph::generators::{self, Weights};
     use crate::INF;
 
+    /// Fixture: run every FW variant on its own copy of `d` and return
+    /// the results (reference `fw_inplace` first).
     fn fw_all(d: &DistMatrix) -> Vec<DistMatrix> {
-        let mut a = d.clone();
-        fw_inplace(&mut a);
-        let mut b = d.clone();
-        fw_rowwise(&mut b);
-        let mut c = d.clone();
-        fw_parallel(&mut c);
-        let mut e = d.clone();
-        fw_panel(&mut e);
-        vec![a, b, c, e]
+        let variants: [fn(&mut DistMatrix); 4] = [fw_inplace, fw_rowwise, fw_parallel, fw_panel];
+        variants
+            .iter()
+            .map(|f| {
+                let mut m = d.clone();
+                f(&mut m);
+                m
+            })
+            .collect()
     }
 
     #[test]
@@ -281,5 +535,77 @@ mod tests {
         let row_k = vec![1.0, 2.0, INF, -0.0];
         relax_row(&mut row_i, 4.0, &row_k);
         assert_eq!(row_i, vec![5.0, 6.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn relax_dispatch_uses_fast_path() {
+        // the dispatching microkernel (not some bounds-checked detour)
+        // must be what the row sweep drives
+        let g = generators::random_connected(20, 40, Weights::Uniform(0.5, 2.0), 11);
+        let mut d = g.to_dense();
+        let before = RELAX_FAST_PATH_ENTRIES.load(Ordering::Relaxed);
+        fw_rowwise(&mut d);
+        let after = RELAX_FAST_PATH_ENTRIES.load(Ordering::Relaxed);
+        assert!(after > before, "row sweep bypassed the relax microkernel");
+    }
+
+    #[test]
+    fn scratch_variants_match_owned() {
+        let g = generators::random_connected(50, 150, Weights::Uniform(0.5, 3.0), 13);
+        let d = g.to_dense();
+        let n = d.n();
+        let mut a = d.clone();
+        fw_rowwise(&mut a);
+        let mut b = d.clone();
+        let mut row_k = vec![0f32; n];
+        fw_rowwise_scratch(&mut b, &mut row_k);
+        assert_eq!(a.max_diff(&b), 0.0);
+        let mut c = d.clone();
+        let (mut pr, mut pc) = (vec![0f32; n], vec![0f32; n]);
+        fw_panel_scratch(&mut c, &mut pr, &mut pc);
+        assert_eq!(a.max_diff(&c), 0.0);
+    }
+
+    #[test]
+    fn rows4_matches_sequential_relax() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        for _ in 0..20 {
+            let n = 1 + rng.gen_range(40);
+            let mk = |rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+                (0..n)
+                    .map(|_| {
+                        if rng.gen_bool(0.2) {
+                            INF
+                        } else {
+                            rng.gen_f32_range(0.0, 9.0)
+                        }
+                    })
+                    .collect()
+            };
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| mk(&mut rng)).collect();
+            let rk = mk(&mut rng);
+            let dik = [
+                rng.gen_f32_range(0.0, 5.0),
+                rng.gen_f32_range(0.0, 5.0),
+                INF,
+                rng.gen_f32_range(0.0, 5.0),
+            ];
+            let mut fused = rows.clone();
+            {
+                let (a, rest) = fused.split_at_mut(1);
+                let (b, rest2) = rest.split_at_mut(1);
+                let (c, e) = rest2.split_at_mut(1);
+                relax_rows4(&mut a[0], &mut b[0], &mut c[0], &mut e[0], dik, &rk);
+            }
+            let mut seq = rows.clone();
+            for (r, &dk) in seq.iter_mut().zip(&dik) {
+                if dk < INF {
+                    relax_row(r, dk, &rk);
+                }
+            }
+            for (f, s) in fused.iter().zip(&seq) {
+                assert_eq!(f, s);
+            }
+        }
     }
 }

@@ -12,21 +12,64 @@ use crate::util::threads;
 /// `m x n`, all row-major. Accumulating (keeps existing C entries).
 ///
 /// Loop order is i-k-j with a row snapshot of `B[k]`, the min-plus
-/// analogue of the cache-friendly GEMM ikj order; the inner loop
-/// auto-vectorizes like `floyd_warshall::relax_row`.
+/// analogue of the cache-friendly GEMM ikj order; rows of C go through
+/// the 4-row register-tiled relax microkernel
+/// (`floyd_warshall::relax_rows4`) so each loaded panel of `B[k]` feeds
+/// four accumulator rows — one quarter the B traffic of a plain row
+/// loop, bit-identical results (an `INF` coefficient contributes only
+/// `min(c, INF) = c`, exactly like skipping the row).
 pub fn minplus_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k, "A dims");
     assert_eq!(b.len(), k * n, "B dims");
     assert_eq!(c.len(), m * n, "C dims");
-    for i in 0..m {
-        let row_a = &a[i * k..(i + 1) * k];
-        let row_c = &mut c[i * n..(i + 1) * n];
-        for (kk, &aik) in row_a.iter().enumerate() {
-            if !(aik < f32::INFINITY) {
-                continue;
+    minplus_rows(c, a, b, 0, k, n);
+}
+
+/// Microkernel body shared by the serial and parallel entry points:
+/// relax the rows of `c` (a contiguous strip of C starting at row `i0`)
+/// against the full `a`/`b`, four rows per pass.
+fn minplus_rows(c: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: usize) {
+    if n == 0 || k == 0 {
+        return;
+    }
+    debug_assert_eq!(c.len() % n, 0);
+    let mut i = i0;
+    for quad in c.chunks_mut(4 * n) {
+        if quad.len() == 4 * n {
+            let (c0, rest) = quad.split_at_mut(n);
+            let (c1, rest) = rest.split_at_mut(n);
+            let (c2, c3) = rest.split_at_mut(n);
+            let (a0, a1, a2, a3) = (
+                &a[i * k..(i + 1) * k],
+                &a[(i + 1) * k..(i + 2) * k],
+                &a[(i + 2) * k..(i + 3) * k],
+                &a[(i + 3) * k..(i + 4) * k],
+            );
+            for kk in 0..k {
+                let dik = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                if !(dik[0] < f32::INFINITY
+                    || dik[1] < f32::INFINITY
+                    || dik[2] < f32::INFINITY
+                    || dik[3] < f32::INFINITY)
+                {
+                    continue;
+                }
+                let row_b = &b[kk * n..(kk + 1) * n];
+                crate::apsp::floyd_warshall::relax_rows4(c0, c1, c2, c3, dik, row_b);
             }
-            let row_b = &b[kk * n..(kk + 1) * n];
-            crate::apsp::floyd_warshall::relax_row(row_c, aik, row_b);
+            i += 4;
+        } else {
+            for row_c in quad.chunks_mut(n) {
+                let row_a = &a[i * k..(i + 1) * k];
+                for (kk, &aik) in row_a.iter().enumerate() {
+                    if !(aik < f32::INFINITY) {
+                        continue;
+                    }
+                    let row_b = &b[kk * n..(kk + 1) * n];
+                    crate::apsp::floyd_warshall::relax_row(row_c, aik, row_b);
+                }
+                i += 1;
+            }
         }
     }
 }
@@ -42,19 +85,31 @@ pub fn minplus_into_parallel(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: u
     let workers = threads::num_threads();
     let rows_per = m.div_ceil(workers * 4).max(8);
     threads::par_chunks_mut(c, rows_per * n, |chunk_idx, rows| {
-        let i0 = chunk_idx * rows_per;
-        for (di, row_c) in rows.chunks_mut(n).enumerate() {
-            let i = i0 + di;
-            let row_a = &a[i * k..(i + 1) * k];
-            for (kk, &aik) in row_a.iter().enumerate() {
-                if !(aik < f32::INFINITY) {
-                    continue;
-                }
-                let row_b = &b[kk * n..(kk + 1) * n];
-                crate::apsp::floyd_warshall::relax_row(row_c, aik, row_b);
-            }
-        }
+        minplus_rows(rows, a, b, chunk_idx * rows_per, k, n);
     });
+}
+
+/// Scalar-oracle `minplus_into`: same contract, but pinned to the
+/// auto-vectorized scalar relax microkernel (never the explicit-SIMD
+/// path) and the plain one-row-at-a-time loop. This is the reference
+/// the blocked/SIMD kernels are property-tested against.
+pub fn minplus_into_scalar(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A dims");
+    assert_eq!(b.len(), k * n, "B dims");
+    assert_eq!(c.len(), m * n, "C dims");
+    if n == 0 {
+        return;
+    }
+    for (i, row_c) in c.chunks_mut(n).enumerate() {
+        let row_a = &a[i * k..(i + 1) * k];
+        for (kk, &aik) in row_a.iter().enumerate() {
+            if !(aik < f32::INFINITY) {
+                continue;
+            }
+            let row_b = &b[kk * n..(kk + 1) * n];
+            crate::apsp::floyd_warshall::relax_row_scalar(row_c, aik, row_b);
+        }
+    }
 }
 
 /// Fresh min-plus product `A (+) B` (C initialized to +inf).
@@ -133,6 +188,9 @@ mod tests {
             let mut c2 = vec![INF; m * n];
             minplus_into_parallel(&mut c2, &a, &b, m, k, n);
             assert_eq!(c2, expect);
+            let mut c3 = vec![INF; m * n];
+            minplus_into_scalar(&mut c3, &a, &b, m, k, n);
+            assert_eq!(c3, expect);
         }
     }
 

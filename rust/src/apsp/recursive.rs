@@ -22,14 +22,18 @@ use super::taskgraph;
 use super::trace::Trace;
 use crate::graph::csr::CsrGraph;
 use crate::graph::dense::DistMatrix;
+use crate::util::arena;
 use crate::util::threads;
 use crate::INF;
+use std::sync::Arc;
 
 /// Solution of one level's graph.
 #[derive(Debug, Clone)]
 pub enum LevelSolution {
-    /// Full dense APSP matrix (terminal dense solve).
-    Direct(DistMatrix),
+    /// Full dense APSP matrix (terminal dense solve). Refcounted so the
+    /// batch scheduler can serve one materialization to every store hit
+    /// of the same fingerprint without cloning `n*n` floats per hit.
+    Direct(Arc<DistMatrix>),
     /// Partitioned solution: exact per-component matrices (post
     /// injection) plus the exact boundary-boundary matrix dB.
     Partitioned {
@@ -291,14 +295,14 @@ impl<'a, 'p> Walk<'a, 'p> {
     fn solve_terminal(&mut self, level: usize) -> LevelSolution {
         let n = self.plan.final_n;
         if n == 0 {
-            return LevelSolution::Direct(DistMatrix::new_inf(0));
+            return LevelSolution::Direct(Arc::new(DistMatrix::new_inf(0)));
         }
         let mut d = self.fill_terminal_dense(level);
         // the terminal boundary graph can exceed one tile (random
         // topologies); compose blocked FW from tile-sized calls,
         // like the PCM die does
         super::backend::fw_any(self.backend, &mut d);
-        LevelSolution::Direct(d)
+        LevelSolution::Direct(Arc::new(d))
     }
 
     /// Dense blocks for all components of `level`.
@@ -395,7 +399,7 @@ pub(crate) fn fill_block_from_graph(
     for (idx, &v) in verts.iter().enumerate() {
         pos.insert(v, idx as u32);
     }
-    let mut d = DistMatrix::new_diag0(n);
+    let mut d = DistMatrix::new_diag0_pooled(n);
     for (i, &v) in verts.iter().enumerate() {
         for (u, w) in g.neighbors(v as usize) {
             if comp_of[u] == ci {
@@ -427,7 +431,7 @@ pub(crate) fn fill_block_from_boundary<'m>(
     for (idx, &v) in verts.iter().enumerate() {
         pos.insert(v, idx as u32);
     }
-    let mut d = DistMatrix::new_diag0(n);
+    let mut d = DistMatrix::new_diag0_pooled(n);
     // cross edges within this component
     for (i, &v) in verts.iter().enumerate() {
         for (u, w) in cross.neighbors(v as usize) {
@@ -487,7 +491,7 @@ pub fn materialize(
     backend: &dyn TileBackend,
 ) -> DistMatrix {
     match sol {
-        LevelSolution::Direct(d) => d.clone(),
+        LevelSolution::Direct(d) => d.as_ref().clone(),
         LevelSolution::Partitioned { comp_dist, db, .. } => {
             materialize_partitioned(plan, level, |ci| &comp_dist[ci], db, backend)
         }
@@ -505,7 +509,7 @@ pub(crate) fn materialize_partitioned<'m>(
 ) -> DistMatrix {
     let lvl = &plan.levels[level];
     let n = lvl.n;
-    let mut out = DistMatrix::new_inf(n);
+    let mut out = DistMatrix::new_inf_pooled(n);
     // intra entries
     for (ci, c) in lvl.cs.components.iter().enumerate() {
         let dc = comp_dist(ci);
@@ -529,9 +533,11 @@ pub(crate) fn materialize_partitioned<'m>(
         }
         let n1 = comp1.n();
         let gs1 = lvl.group_start[c1];
-        // A = D_c1[:, 0..b1] (m x b1)
+        // A = D_c1[:, 0..b1] (m x b1) — all merge temporaries below are
+        // arena-leased and recycled, so a steady-state materialization
+        // loop performs no heap allocation
         let d1 = comp_dist(c1);
-        let mut a = vec![INF; n1 * b1];
+        let mut a = arena::lease_filled(n1 * b1, INF);
         for i in 0..n1 {
             a[i * b1..(i + 1) * b1].copy_from_slice(&d1.row(i)[..b1]);
         }
@@ -547,7 +553,7 @@ pub(crate) fn materialize_partitioned<'m>(
             let n2 = comp2.n();
             let gs2 = lvl.group_start[c2];
             // DB block (b1 x b2)
-            let mut dbb = vec![INF; b1 * b2];
+            let mut dbb = arena::lease_filled(b1 * b2, INF);
             for i in 0..b1 {
                 for j in 0..b2 {
                     dbb[i * b2 + j] = db.get(gs1 + i, gs2 + j);
@@ -555,14 +561,14 @@ pub(crate) fn materialize_partitioned<'m>(
             }
             // B = D_c2[0..b2, :] (b2 x n2) — boundary rows
             let d2 = comp_dist(c2);
-            let mut bmat = vec![INF; b2 * n2];
+            let mut bmat = arena::lease_filled(b2 * n2, INF);
             for j in 0..b2 {
                 bmat[j * n2..(j + 1) * n2].copy_from_slice(d2.row(j));
             }
             // two-stage merge
-            let mut stage1 = vec![INF; n1 * b2];
+            let mut stage1 = arena::lease_filled(n1 * b2, INF);
             backend.minplus_into(&mut stage1, &a, &dbb, n1, b1, b2);
-            let mut strip = vec![INF; n1 * n2];
+            let mut strip = arena::lease_filled(n1 * n2, INF);
             backend.minplus_into(&mut strip, &stage1, &bmat, n1, b2, n2);
             // scatter into out
             for (i, &u) in comp1.verts.iter().enumerate() {
@@ -574,7 +580,11 @@ pub(crate) fn materialize_partitioned<'m>(
                     }
                 }
             }
+            for buf in [dbb, bmat, stage1, strip] {
+                arena::recycle(buf);
+            }
         }
+        arena::recycle(a);
     }
     out
 }

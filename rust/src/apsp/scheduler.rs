@@ -31,8 +31,10 @@ use super::trace::Trace;
 use crate::apsp::floyd_warshall;
 use crate::graph::csr::CsrGraph;
 use crate::graph::dense::DistMatrix;
+use crate::util::arena;
 use crate::util::threads;
 use std::cell::UnsafeCell;
+use std::sync::Arc;
 
 /// One exclusively-owned matrix buffer. Ownership transfers along task
 /// edges; the graph guarantees a single writer at a time.
@@ -110,18 +112,26 @@ impl Slots {
     /// level 0, `db[0]`, and — for direct solves — the terminal) has
     /// not run yet.
     unsafe fn release_intermediate(&self) {
+        // released buffers go back to the tile arena (joining this
+        // worker's pool), so the next admitted graph's Loads lease them
+        // instead of hitting the allocator
+        let mut drop_slot = |s: &Slot| {
+            if let Some(m) = (*s.0.get()).take() {
+                arena::recycle(m.into_vec());
+            }
+        };
         for lvl in self.d.iter().skip(1) {
             for s in lvl {
-                (*s.0.get()).take();
+                drop_slot(s);
             }
         }
         for s in self.db.iter().skip(1) {
-            (*s.0.get()).take();
+            drop_slot(s);
         }
         if !self.db.is_empty() {
             // partitioned solve: the solution keeps db[0], not the
             // terminal (depth-0 direct solves keep the terminal)
-            (*self.terminal.0.get()).take();
+            drop_slot(&self.terminal);
         }
     }
 }
@@ -147,6 +157,7 @@ pub fn execute<'p>(
     opts: SolveOptions,
 ) -> ApspSolution<'p> {
     check_memory_guard(plan, g, &opts);
+    size_arena_for(plan_tile_census(plan));
     let mut slots = Slots::new(plan);
     let (local_serial, rerun_serial) = kernel_choices(plan, backend);
 
@@ -199,6 +210,7 @@ pub fn execute_batch<'p>(
         graphs.len(),
         opts.memory_limit_bytes
     );
+    size_arena_for(graphs.iter().map(|&(_, p)| plan_tile_census(p)).sum());
     let mut slots: Vec<Slots> = graphs.iter().map(|&(_, plan)| Slots::new(plan)).collect();
     let choices: Vec<(Vec<bool>, Vec<bool>)> = graphs
         .iter()
@@ -295,6 +307,12 @@ pub fn execute_admission_stored<'p>(
         "admission graph count mismatch"
     );
     let batch = &adm.batch;
+    size_arena_for(
+        adm.submission_of
+            .iter()
+            .map(|&si| plan_tile_census(subs[si].1))
+            .sum(),
+    );
     let mut slots: Vec<Slots> = adm
         .submission_of
         .iter()
@@ -370,8 +388,10 @@ pub fn execute_admission_stored<'p>(
 
     let mut out: Vec<Option<ApspSolution<'p>>> = subs.iter().map(|_| None).collect();
     // full matrices materialized on demand for run-local hit serving,
-    // computed once per producer graph and shared by all of its hits
-    let mut full_of: Vec<Option<DistMatrix>> = (0..batch.n_graphs()).map(|_| None).collect();
+    // computed once per producer graph; `Direct` holds an `Arc`, so all
+    // hits of one fingerprint share the single materialization instead
+    // of each cloning an n*n matrix
+    let mut full_of: Vec<Option<Arc<DistMatrix>>> = (0..batch.n_graphs()).map(|_| None).collect();
     // ascending gi: a hit's run-local producer always has a smaller
     // admitted index (the admission build saw it first), so its
     // solution is already in `out` when the hit is served
@@ -387,11 +407,11 @@ pub fn execute_admission_stored<'p>(
                             let src_sol = out[adm.submission_of[src]]
                                 .as_ref()
                                 .expect("store hit's producer must precede it");
-                            full_of[src] = Some(src_sol.materialize_full(backend));
+                            full_of[src] = Some(Arc::new(src_sol.materialize_full(backend)));
                         }
-                        full_of[src].as_ref().unwrap().clone()
+                        Arc::clone(full_of[src].as_ref().unwrap())
                     }
-                    (None, Some(cm)) => cm.decompress(),
+                    (None, Some(cm)) => Arc::new(cm.decompress()),
                     (None, None) => {
                         unreachable!("admission never declares an unservable hit")
                     }
@@ -435,6 +455,7 @@ pub fn execute_sharded<'p>(
     opts: SolveOptions,
 ) -> ApspSolution<'p> {
     check_memory_guard(plan, g, &opts);
+    size_arena_for(plan_tile_census(plan));
     let mut slots = Slots::new(plan);
     let (local_serial, rerun_serial) = kernel_choices(plan, backend);
 
@@ -457,6 +478,39 @@ pub fn execute_sharded<'p>(
     // the reported trace is the solo lowering's — sharding changes the
     // schedule and adds transfers, not the algorithmic work
     assemble(g, plan, shard.solo.to_trace(), &mut slots)
+}
+
+/// Tile-buffer census of one plan's DAG run, in `f32` elements: every
+/// matrix slot that can be live at once — the component blocks of every
+/// level, each level's dB (the materialization of the level below), and
+/// the terminal block. The executor sizes the tile arena's idle-cache
+/// cap from this so a whole run's working set can round-trip through
+/// the pool, and the kernel property suite bounds the pool's high-water
+/// mark with it.
+pub fn plan_tile_census(plan: &ApspPlan) -> usize {
+    let depth = plan.depth();
+    let mut elems = plan.final_n * plan.final_n; // terminal block
+    for (l, lvl) in plan.levels.iter().enumerate() {
+        for c in &lvl.cs.components {
+            elems += c.n() * c.n();
+        }
+        // db[l] is written by CrossMerge(l+1): the full matrix of level
+        // l+1, or a copy of the terminal when l+1 is the deepest level
+        elems += if l + 1 < depth {
+            plan.levels[l + 1].n * plan.levels[l + 1].n
+        } else {
+            plan.final_n * plan.final_n
+        };
+    }
+    elems
+}
+
+/// Raise the calling thread's arena cache cap to hold a run's census
+/// (with 2x slack for merge temporaries). Matters mostly for the
+/// `RAPID_THREADS=1` / serial paths where the calling thread's pool is
+/// the only pool; worker threads keep the default cap.
+fn size_arena_for(census_elems: usize) {
+    arena::set_thread_cache_cap(arena::DEFAULT_CACHE_CAP_BYTES.max(8 * census_elems));
 }
 
 /// Mirror the barrier walk's per-batch kernel choice (serial rowwise FW
@@ -493,12 +547,12 @@ fn assemble<'p>(
     slots: &mut Slots,
 ) -> ApspSolution<'p> {
     let top = if plan.depth() == 0 {
-        LevelSolution::Direct(
+        LevelSolution::Direct(Arc::new(
             slots
                 .terminal
                 .take()
                 .unwrap_or_else(|| DistMatrix::new_inf(0)),
-        )
+        ))
     } else {
         let comp_dist: Vec<DistMatrix> = slots.d[0]
             .iter_mut()

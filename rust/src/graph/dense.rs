@@ -34,6 +34,25 @@ impl DistMatrix {
         Self { n, data }
     }
 
+    /// [`DistMatrix::new_inf`] backed by an arena-leased buffer. The
+    /// matrix is a normal owned value; callers on a hot path can return
+    /// the backing store with `arena::recycle(m.into_vec())` when done.
+    pub fn new_inf_pooled(n: usize) -> Self {
+        Self {
+            n,
+            data: crate::util::arena::lease_filled(n * n, INF),
+        }
+    }
+
+    /// [`DistMatrix::new_diag0`] backed by an arena-leased buffer.
+    pub fn new_diag0_pooled(n: usize) -> Self {
+        let mut m = Self::new_inf_pooled(n);
+        for i in 0..n {
+            m.set(i, i, 0.0);
+        }
+        m
+    }
+
     #[inline]
     pub fn n(&self) -> usize {
         self.n

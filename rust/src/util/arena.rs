@@ -1,0 +1,308 @@
+//! Tile-buffer arena: a per-thread pool of `Vec<f32>` backing stores for
+//! tile matrices, pivot-row snapshots, and min-plus panels.
+//!
+//! The host executor used to allocate a fresh `vec![f32; n*n]` (or
+//! `vec![f32; n]`) for every tile task, every pivot-row snapshot, and
+//! every blocked-FW panel extraction. In steady state those buffers are
+//! all the same handful of sizes — the plan's tile census fixes them —
+//! so the allocator traffic is pure overhead on the exact loops the
+//! paper moves into PIM arrays. This module recycles the backing stores:
+//! a lease pops a buffer from a size-classed free list (allocating only
+//! on a cold miss), a recycle pushes it back.
+//!
+//! Design constraints:
+//! * **Thread-local, lock-free.** Workers in `util::threads` executors
+//!   are scoped OS threads; each keeps its own pool, so leases never
+//!   contend. Buffers may be recycled on a different thread than they
+//!   were leased on (slot matrices cross the DAG); that is fine — the
+//!   buffer just joins the recycling thread's pool.
+//! * **Numerics-neutral.** A leased buffer is always `resize`d and
+//!   `fill`ed before use; pooling changes *where* the bytes live, never
+//!   what they hold. All bit-identity oracles are unaffected.
+//! * **Bounded.** Each pool caps its cached bytes (`set_cache_cap`);
+//!   recycles beyond the cap drop the buffer instead of hoarding it.
+//!   `scheduler::plan_tile_census` sizes the cap from the plan.
+//!
+//! [`TileArena`] is the explicit, directly-testable pool;
+//! [`lease_filled`] / [`recycle`] / [`scratch_filled`] are the
+//! thread-local front the kernels and the scheduler use.
+
+use std::cell::RefCell;
+
+/// Default per-thread cache cap: generous enough for every workload in
+/// the bench suite (a 1024-tile matrix is 4 MiB; a census rarely holds
+/// more than a few dozen live tiles per worker).
+pub const DEFAULT_CACHE_CAP_BYTES: usize = 256 << 20;
+
+/// Smallest size class; tiny leases all share one bucket.
+const MIN_CLASS: usize = 64;
+
+/// Snapshot of a pool's counters, for tests and the `--host-perf` bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArenaStats {
+    /// Buffers currently leased out (live).
+    pub live: usize,
+    /// Maximum simultaneous live buffers ever observed.
+    pub high_water: usize,
+    /// Leases served by a fresh heap allocation (cold misses).
+    pub allocs: u64,
+    /// Total leases served.
+    pub leases: u64,
+    /// Buffers returned to the pool.
+    pub recycles: u64,
+    /// Bytes currently cached in free lists.
+    pub cached_bytes: usize,
+}
+
+/// An explicit buffer pool with size-classed free lists.
+///
+/// Size classes are next-power-of-two capacities (min [`MIN_CLASS`]), so
+/// a buffer leased for one tile size can serve any other request in the
+/// same class — the census sizes repeat, so hit rates are high.
+pub struct TileArena {
+    /// `(class_capacity, free list)` pairs, sorted by capacity.
+    classes: Vec<(usize, Vec<Vec<f32>>)>,
+    stats: ArenaStats,
+    cache_cap_bytes: usize,
+}
+
+impl Default for TileArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TileArena {
+    pub fn new() -> Self {
+        TileArena {
+            classes: Vec::new(),
+            stats: ArenaStats::default(),
+            cache_cap_bytes: DEFAULT_CACHE_CAP_BYTES,
+        }
+    }
+
+    /// Pool with an explicit cache cap (bytes of *idle* buffers kept).
+    pub fn with_cache_cap(bytes: usize) -> Self {
+        let mut a = Self::new();
+        a.cache_cap_bytes = bytes;
+        a
+    }
+
+    fn class_of(len: usize) -> usize {
+        len.max(MIN_CLASS).next_power_of_two()
+    }
+
+    fn free_list(&mut self, class: usize) -> &mut Vec<Vec<f32>> {
+        match self.classes.binary_search_by_key(&class, |&(c, _)| c) {
+            Ok(i) => &mut self.classes[i].1,
+            Err(i) => {
+                self.classes.insert(i, (class, Vec::new()));
+                &mut self.classes[i].1
+            }
+        }
+    }
+
+    /// Lease a buffer of exactly `len` elements, every element set to
+    /// `fill`. Served from the free list when a buffer of the right
+    /// class is cached; otherwise a single fresh allocation.
+    pub fn lease_filled(&mut self, len: usize, fill: f32) -> Vec<f32> {
+        self.stats.leases += 1;
+        self.stats.live += 1;
+        self.stats.high_water = self.stats.high_water.max(self.stats.live);
+        if len == 0 {
+            return Vec::new();
+        }
+        let class = Self::class_of(len);
+        let reused = self.free_list(class).pop();
+        match reused {
+            Some(mut buf) => {
+                self.stats.cached_bytes -= buf.capacity() * 4;
+                buf.clear();
+                buf.resize(len, fill);
+                buf
+            }
+            None => {
+                self.stats.allocs += 1;
+                let mut buf = Vec::with_capacity(class);
+                buf.resize(len, fill);
+                buf
+            }
+        }
+    }
+
+    /// Return a buffer to the pool. Dropped (not cached) when the cache
+    /// cap is reached or the buffer was not arena-shaped (zero capacity).
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        self.stats.recycles += 1;
+        self.stats.live = self.stats.live.saturating_sub(1);
+        let cap = buf.capacity();
+        if cap == 0 {
+            return;
+        }
+        let bytes = cap * 4;
+        if self.stats.cached_bytes + bytes > self.cache_cap_bytes {
+            return; // drop: pool is full
+        }
+        let class = Self::class_of(cap);
+        // only cache buffers whose capacity is exactly a class size, so
+        // a cached buffer always satisfies `resize(len)` without
+        // reallocating for any len in its class
+        if class != cap.max(MIN_CLASS) {
+            return;
+        }
+        self.stats.cached_bytes += bytes;
+        self.free_list(class).push(buf);
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    pub fn set_cache_cap(&mut self, bytes: usize) {
+        self.cache_cap_bytes = bytes;
+    }
+
+    /// Drop every cached buffer (stats other than `cached_bytes` are
+    /// preserved — high-water marks survive a trim).
+    pub fn trim(&mut self) {
+        self.classes.clear();
+        self.stats.cached_bytes = 0;
+    }
+}
+
+thread_local! {
+    static POOL: RefCell<TileArena> = RefCell::new(TileArena::new());
+}
+
+/// Lease a `len`-element buffer filled with `fill` from this thread's
+/// pool. Pair with [`recycle`] when the buffer's lifetime outlives a
+/// scope (e.g. slot matrices); prefer [`scratch_filled`] for
+/// scope-local scratch.
+pub fn lease_filled(len: usize, fill: f32) -> Vec<f32> {
+    POOL.with(|p| p.borrow_mut().lease_filled(len, fill))
+}
+
+/// Return a buffer to this thread's pool.
+pub fn recycle(buf: Vec<f32>) {
+    POOL.with(|p| p.borrow_mut().recycle(buf))
+}
+
+/// Counters for this thread's pool.
+pub fn thread_stats() -> ArenaStats {
+    POOL.with(|p| p.borrow().stats())
+}
+
+/// Set this thread's idle-cache cap (bytes).
+pub fn set_thread_cache_cap(bytes: usize) {
+    POOL.with(|p| p.borrow_mut().set_cache_cap(bytes))
+}
+
+/// Drop this thread's cached buffers.
+pub fn trim_thread_pool() {
+    POOL.with(|p| p.borrow_mut().trim())
+}
+
+/// Scope-guarded scratch lease: derefs to `[f32]`, recycles on drop
+/// (including unwinds — a panicking tile task cannot leak its panels).
+pub struct Scratch(Option<Vec<f32>>);
+
+impl Scratch {
+    /// Steal the backing store, skipping the drop-recycle (for buffers
+    /// that get promoted into a longer-lived structure).
+    pub fn into_vec(mut self) -> Vec<f32> {
+        self.0.take().unwrap_or_default()
+    }
+}
+
+impl std::ops::Deref for Scratch {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.0.as_deref().unwrap_or(&[])
+    }
+}
+
+impl std::ops::DerefMut for Scratch {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.0.as_deref_mut().unwrap_or(&mut [])
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        if let Some(buf) = self.0.take() {
+            recycle(buf);
+        }
+    }
+}
+
+/// Lease scope-local scratch of `len` elements, filled with `fill`.
+pub fn scratch_filled(len: usize, fill: f32) -> Scratch {
+    Scratch(Some(lease_filled(len, fill)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_within_class() {
+        let mut a = TileArena::new();
+        let b1 = a.lease_filled(100, 0.0);
+        let p1 = b1.as_ptr() as usize;
+        a.recycle(b1);
+        let b2 = a.lease_filled(120, 1.0); // same 128-class
+        assert_eq!(b2.as_ptr() as usize, p1, "buffer should be reused");
+        assert_eq!(b2.len(), 120);
+        assert!(b2.iter().all(|&x| x == 1.0));
+        let s = a.stats();
+        assert_eq!(s.allocs, 1, "second lease must not allocate");
+        assert_eq!(s.leases, 2);
+    }
+
+    #[test]
+    fn high_water_tracks_concurrent_leases() {
+        let mut a = TileArena::new();
+        let bufs: Vec<_> = (0..5).map(|_| a.lease_filled(64, 0.0)).collect();
+        assert_eq!(a.stats().live, 5);
+        assert_eq!(a.stats().high_water, 5);
+        for b in bufs {
+            a.recycle(b);
+        }
+        assert_eq!(a.stats().live, 0);
+        assert_eq!(a.stats().high_water, 5);
+    }
+
+    #[test]
+    fn cache_cap_drops_excess() {
+        // cap fits one 128-class buffer (512 B), not two
+        let mut a = TileArena::with_cache_cap(600);
+        let b1 = a.lease_filled(100, 0.0);
+        let b2 = a.lease_filled(100, 0.0);
+        a.recycle(b1);
+        a.recycle(b2);
+        assert_eq!(a.stats().cached_bytes, 128 * 4);
+    }
+
+    #[test]
+    fn zero_len_lease_is_inert() {
+        let mut a = TileArena::new();
+        let b = a.lease_filled(0, 0.0);
+        assert!(b.is_empty());
+        a.recycle(b);
+        assert_eq!(a.stats().cached_bytes, 0);
+    }
+
+    #[test]
+    fn scratch_recycles_on_drop() {
+        trim_thread_pool();
+        let before = thread_stats();
+        {
+            let mut s = scratch_filled(200, 7.0);
+            assert_eq!(s.len(), 200);
+            s[0] = 1.0;
+        }
+        let after = thread_stats();
+        assert_eq!(after.recycles, before.recycles + 1);
+        assert_eq!(after.live, before.live);
+    }
+}

@@ -1,6 +1,7 @@
 //! Small self-contained utilities that substitute for crates unavailable
 //! in the offline build image (see DESIGN.md "Environment substitutions").
 
+pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -79,6 +79,23 @@ impl<T> SendPtr<T> {
     }
 }
 
+/// Max tasks a worker drains from a ready queue per lock acquisition
+/// (see [`batch_extra`]).
+const DEQUEUE_BATCH: usize = 8;
+
+/// How many tasks a worker takes *beyond* the first on one lock
+/// acquisition. Batching only kicks in when the ready queue holds a
+/// surplus relative to the worker count (`ready_len` is the queue length
+/// after the first pop) — when work is scarce every worker still gets
+/// exactly one task, so fan-out, injection wake-ups, and bounded-wait
+/// behavior are identical to the unbatched executor; when work is
+/// plentiful a worker pays one mutex round-trip for up to
+/// [`DEQUEUE_BATCH`] tasks instead of one per task.
+#[inline]
+fn batch_extra(ready_len: usize, workers: usize) -> usize {
+    (ready_len / workers.max(1)).min(DEQUEUE_BATCH - 1)
+}
+
 /// Shared DAG precompute for [`par_dag`] / [`par_dag_grouped`]:
 /// in-degrees and successor adjacency, plus the up-front cycle check (a
 /// cheap Kahn sweep) so a cycle panics instead of deadlocking a ready
@@ -158,42 +175,67 @@ pub fn par_dag<F: Fn(usize) + Sync>(deps: &[Vec<u32>], f: F) {
         panicked: false,
     });
     let cv = std::sync::Condvar::new();
+    fn complete(g: &mut DagState, succs: &[Vec<u32>], task: usize) {
+        g.remaining -= 1;
+        for &sx in &succs[task] {
+            let sx = sx as usize;
+            g.indeg[sx] -= 1;
+            if g.indeg[sx] == 0 {
+                g.ready.push(sx);
+            }
+        }
+    }
     let succs = &succs;
     let state = &state;
     let cv = &cv;
     let f = &f;
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(move || loop {
-                let task = {
+            s.spawn(move || {
+                let mut batch: Vec<usize> = Vec::with_capacity(DEQUEUE_BATCH);
+                let mut done: Vec<usize> = Vec::with_capacity(DEQUEUE_BATCH);
+                loop {
+                    // run the current batch, recording completions locally
+                    for bi in 0..batch.len() {
+                        let task = batch[bi];
+                        let res =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
+                        done.push(task);
+                        if let Err(p) = res {
+                            let mut g = state.lock().unwrap();
+                            g.panicked = true;
+                            for &t in &done {
+                                complete(&mut g, succs, t);
+                            }
+                            drop(g);
+                            cv.notify_all();
+                            std::panic::resume_unwind(p);
+                        }
+                    }
+                    batch.clear();
+                    // one lock acquisition: flush the batch's completions,
+                    // then grab the next batch (or park / exit)
                     let mut g = state.lock().unwrap();
+                    if !done.is_empty() {
+                        for &t in &done {
+                            complete(&mut g, succs, t);
+                        }
+                        done.clear();
+                        cv.notify_all();
+                    }
                     loop {
                         if g.remaining == 0 || g.panicked {
                             return;
                         }
                         if let Some(t) = g.ready.pop() {
-                            break t;
+                            batch.push(t);
+                            for _ in 0..batch_extra(g.ready.len(), workers) {
+                                batch.push(g.ready.pop().unwrap());
+                            }
+                            break;
                         }
                         g = cv.wait(g).unwrap();
                     }
-                };
-                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
-                let mut g = state.lock().unwrap();
-                if res.is_err() {
-                    g.panicked = true;
-                }
-                g.remaining -= 1;
-                for &sx in &succs[task] {
-                    let sx = sx as usize;
-                    g.indeg[sx] -= 1;
-                    if g.indeg[sx] == 0 {
-                        g.ready.push(sx);
-                    }
-                }
-                drop(g);
-                cv.notify_all();
-                if let Err(p) = res {
-                    std::panic::resume_unwind(p);
                 }
             });
         }
@@ -249,43 +291,68 @@ pub fn par_dag_grouped<F: Fn(usize) + Sync>(
     // never more workers than tasks, but at least one per group —
     // a workerless group's tasks would never run
     let workers = num_threads().min(n).max(n_groups);
-    let succs = &succs;
+    let complete = |g: &mut GroupState, task: usize| {
+        g.remaining -= 1;
+        for &sx in &succs[task] {
+            let sx = sx as usize;
+            g.indeg[sx] -= 1;
+            if g.indeg[sx] == 0 {
+                g.ready[group_of[sx] as usize].push(sx);
+            }
+        }
+    };
+    let complete = &complete;
     let state = &state;
     let cv = &cv;
     let f = &f;
     std::thread::scope(|s| {
         for w in 0..workers {
             let my_group = w % n_groups;
-            s.spawn(move || loop {
-                let task = {
+            s.spawn(move || {
+                let mut batch: Vec<usize> = Vec::with_capacity(DEQUEUE_BATCH);
+                let mut done: Vec<usize> = Vec::with_capacity(DEQUEUE_BATCH);
+                loop {
+                    for bi in 0..batch.len() {
+                        let task = batch[bi];
+                        let res =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
+                        done.push(task);
+                        if let Err(p) = res {
+                            let mut g = state.lock().unwrap();
+                            g.panicked = true;
+                            for &t in &done {
+                                complete(&mut g, t);
+                            }
+                            drop(g);
+                            cv.notify_all();
+                            std::panic::resume_unwind(p);
+                        }
+                    }
+                    batch.clear();
                     let mut g = state.lock().unwrap();
+                    if !done.is_empty() {
+                        for &t in &done {
+                            complete(&mut g, t);
+                        }
+                        done.clear();
+                        cv.notify_all();
+                    }
                     loop {
                         if g.remaining == 0 || g.panicked {
                             return;
                         }
                         if let Some(t) = g.ready[my_group].pop() {
-                            break t;
+                            batch.push(t);
+                            // batch against *this group's* surplus and
+                            // worker share, not the global queue
+                            let group_workers = workers.div_ceil(n_groups);
+                            for _ in 0..batch_extra(g.ready[my_group].len(), group_workers) {
+                                batch.push(g.ready[my_group].pop().unwrap());
+                            }
+                            break;
                         }
                         g = cv.wait(g).unwrap();
                     }
-                };
-                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
-                let mut g = state.lock().unwrap();
-                if res.is_err() {
-                    g.panicked = true;
-                }
-                g.remaining -= 1;
-                for &sx in &succs[task] {
-                    let sx = sx as usize;
-                    g.indeg[sx] -= 1;
-                    if g.indeg[sx] == 0 {
-                        g.ready[group_of[sx] as usize].push(sx);
-                    }
-                }
-                drop(g);
-                cv.notify_all();
-                if let Err(p) = res {
-                    std::panic::resume_unwind(p);
                 }
             });
         }
@@ -395,43 +462,72 @@ pub fn dag_pool_scope<R, F: Fn(usize) + Sync>(
         panicked: false,
     });
     let cv = std::sync::Condvar::new();
+    fn complete(g: &mut InjectState, task: usize) {
+        g.finished[task] = true;
+        g.n_done += 1;
+        let succs = std::mem::take(&mut g.succs[task]);
+        for &sx in &succs {
+            let sx = sx as usize;
+            g.deps_left[sx] -= 1;
+            if g.deps_left[sx] == 0 {
+                g.ready.push(sx);
+            }
+        }
+    }
     let state = &state;
     let cv = &cv;
     let f = &f;
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(move || loop {
-                let task = {
+            s.spawn(move || {
+                let mut batch: Vec<usize> = Vec::with_capacity(DEQUEUE_BATCH);
+                let mut done: Vec<usize> = Vec::with_capacity(DEQUEUE_BATCH);
+                loop {
+                    for bi in 0..batch.len() {
+                        let task = batch[bi];
+                        let res =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
+                        done.push(task);
+                        if let Err(p) = res {
+                            let mut g = state.lock().unwrap();
+                            g.panicked = true;
+                            for &t in &done {
+                                complete(&mut g, t);
+                            }
+                            drop(g);
+                            cv.notify_all();
+                            std::panic::resume_unwind(p);
+                        }
+                    }
+                    batch.clear();
+                    // one lock acquisition: flush completions (waking
+                    // `DagPool::wait` watchers and parked peers), then
+                    // grab the next batch. Injection stays correct: a
+                    // worker only holds tasks that were already ready,
+                    // and every flush re-notifies, so spliced-in tasks
+                    // whose deps completed inside a batch become ready
+                    // at flush time exactly as they did per-task.
                     let mut g = state.lock().unwrap();
+                    if !done.is_empty() {
+                        for &t in &done {
+                            complete(&mut g, t);
+                        }
+                        done.clear();
+                        cv.notify_all();
+                    }
                     loop {
                         if g.panicked || (g.closed && g.n_done == g.finished.len()) {
                             return;
                         }
                         if let Some(t) = g.ready.pop() {
-                            break t;
+                            batch.push(t);
+                            for _ in 0..batch_extra(g.ready.len(), workers) {
+                                batch.push(g.ready.pop().unwrap());
+                            }
+                            break;
                         }
                         g = cv.wait(g).unwrap();
                     }
-                };
-                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)));
-                let mut g = state.lock().unwrap();
-                if res.is_err() {
-                    g.panicked = true;
-                }
-                g.finished[task] = true;
-                g.n_done += 1;
-                let succs = std::mem::take(&mut g.succs[task]);
-                for &sx in &succs {
-                    let sx = sx as usize;
-                    g.deps_left[sx] -= 1;
-                    if g.deps_left[sx] == 0 {
-                        g.ready.push(sx);
-                    }
-                }
-                drop(g);
-                cv.notify_all();
-                if let Err(p) = res {
-                    std::panic::resume_unwind(p);
                 }
             });
         }
@@ -696,6 +792,55 @@ mod tests {
             );
         });
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn par_dag_wide_queue_batches_every_task_once() {
+        // 2000 mutually independent tasks: the ready queue starts with a
+        // large surplus, so workers exercise the multi-task dequeue path
+        let n = 2000;
+        let deps: Vec<Vec<u32>> = (0..n).map(|_| Vec::new()).collect();
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_dag(&deps, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn dag_pool_wide_wave_then_dependent_wave() {
+        // a wide wave (batched dequeues) followed by tasks depending on
+        // batch-executed ancestors: completions flushed in batches must
+        // still release dependents exactly once
+        let n = 600usize;
+        let hits: Vec<AtomicU64> = (0..2 * n).map(|_| AtomicU64::new(0)).collect();
+        dag_pool_scope(
+            4,
+            |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            },
+            |pool| {
+                let wide: Vec<Vec<u32>> = (0..n).map(|_| Vec::new()).collect();
+                let r = pool.inject(&wide);
+                assert_eq!(r, 0..n);
+                let dependent: Vec<Vec<u32>> = (0..n).map(|i| vec![i as u32]).collect();
+                pool.inject(&dependent);
+                pool.wait(|done| done == 2 * n);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn batch_extra_scales_with_surplus() {
+        assert_eq!(batch_extra(0, 8), 0, "scarce work: one task per worker");
+        assert_eq!(batch_extra(7, 8), 0);
+        assert_eq!(batch_extra(16, 8), 2);
+        assert_eq!(
+            batch_extra(10_000, 8),
+            DEQUEUE_BATCH - 1,
+            "surplus capped at DEQUEUE_BATCH"
+        );
     }
 
     #[test]

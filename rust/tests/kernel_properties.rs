@@ -1,0 +1,419 @@
+//! Property suite for the host hot-path microkernels and the tile
+//! arena (PR "host hot-path overhaul").
+//!
+//! The contract under test: every restructured kernel — the SIMD-
+//! dispatching relax microkernel, the fused 4-row variant, the blocked
+//! min-plus, the cache-blocked FW compositions — is **bit-identical**
+//! to the always-available scalar oracle, across random sizes, strides,
+//! INF patterns, and non-divisible block edges. Seeded via `util::prop`
+//! (replay with `RAPID_PROP_SEED`).
+//!
+//! Inputs deliberately avoid NaN and -0.0: weights are non-negative and
+//! unreachable entries are +INF, exactly like the production matrices,
+//! which is the precondition for `vminps`/`f32::min` bit-equality.
+
+use rapid_graph::apsp::backend::{
+    fw_blocked, NativeBackend, ScalarBackend, SerialBackend, SimdBackend, TileBackend,
+};
+use rapid_graph::apsp::floyd_warshall::{
+    fw_inplace, fw_panel, fw_panel_scratch, fw_parallel, fw_rowwise, fw_rowwise_scratch,
+    relax_row, relax_row_scalar, relax_rows4,
+};
+use rapid_graph::apsp::minplus::{minplus_into, minplus_into_parallel, minplus_into_scalar};
+use rapid_graph::apsp::plan::{build_plan, PlanOptions};
+use rapid_graph::apsp::scheduler::plan_tile_census;
+use rapid_graph::graph::dense::DistMatrix;
+use rapid_graph::graph::generators::{self, Weights};
+use rapid_graph::util::arena::TileArena;
+use rapid_graph::util::prop::assert_prop;
+use rapid_graph::util::rng::Rng;
+
+const INF: f32 = f32::INFINITY;
+
+fn rand_row(rng: &mut Rng, n: usize, inf_frac: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if rng.gen_bool(inf_frac) {
+                INF
+            } else {
+                rng.gen_f32_range(0.0, 10.0)
+            }
+        })
+        .collect()
+}
+
+/// Exact (bitwise) equality of two f32 slices — `==` would conflate
+/// 0.0 and -0.0 and reject NaN; bit comparison pins the real contract.
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn relax_dispatch_bit_identical_to_scalar() {
+    // random lengths straddle the 8-lane SIMD boundary (0..=40 covers
+    // empty, sub-vector, exact multiples, and ragged tails)
+    assert_prop(
+        120,
+        |r| {
+            let n = r.gen_range(41);
+            let mut rr = r.fork();
+            let row_i = rand_row(&mut rr, n, 0.25);
+            let row_k = rand_row(&mut rr, n, 0.25);
+            let dik = rr.gen_f32_range(0.0, 8.0); // relax_row wants finite dik
+            (row_i, row_k, dik)
+        },
+        |(row_i, row_k, dik)| {
+            let mut fast = row_i.clone();
+            relax_row(&mut fast, *dik, row_k);
+            let mut oracle = row_i.clone();
+            relax_row_scalar(&mut oracle, *dik, row_k);
+            if bits_eq(&fast, &oracle) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "dispatched relax diverged from scalar (n={})",
+                    row_i.len()
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn rows4_bit_identical_to_sequential() {
+    // fused 4-row kernel vs four sequential relaxes, with INF lanes
+    // exercising the "INF candidate never wins a min" neutrality
+    assert_prop(
+        80,
+        |r| {
+            let n = r.gen_range(33);
+            let mut rr = r.fork();
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| rand_row(&mut rr, n, 0.2)).collect();
+            let rk = rand_row(&mut rr, n, 0.2);
+            let dik: [f32; 4] = std::array::from_fn(|_| {
+                if rr.gen_bool(0.25) {
+                    INF
+                } else {
+                    rr.gen_f32_range(0.0, 6.0)
+                }
+            });
+            (rows, rk, dik)
+        },
+        |(rows, rk, dik)| {
+            let mut fused = rows.clone();
+            let (a, rest) = fused.split_at_mut(1);
+            let (b, rest2) = rest.split_at_mut(1);
+            let (c, d) = rest2.split_at_mut(1);
+            relax_rows4(&mut a[0], &mut b[0], &mut c[0], &mut d[0], *dik, rk);
+            let mut seq = rows.clone();
+            for (row, &dk) in seq.iter_mut().zip(dik) {
+                if dk < INF {
+                    relax_row_scalar(row, dk, rk);
+                }
+            }
+            for (f, s) in fused.iter().zip(&seq) {
+                if !bits_eq(f, s) {
+                    return Err(format!("fused 4-row relax diverged (n={})", rk.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fw_variants_bit_identical_to_oracle() {
+    // every FW entry point (owned and caller-scratch) against the naive
+    // triple loop, on random connected graphs of odd sizes
+    assert_prop(
+        12,
+        |r| {
+            let n = 2 + r.gen_range(70);
+            let m = n + r.gen_range(3 * n);
+            let seed = r.gen_range(1 << 30) as u64;
+            generators::random_connected(n, m, Weights::Uniform(0.5, 4.0), seed).to_dense()
+        },
+        |base| {
+            let mut oracle = base.clone();
+            fw_inplace(&mut oracle);
+            let n = base.n();
+            let variants: Vec<(&str, DistMatrix)> = vec![
+                ("rowwise", {
+                    let mut d = base.clone();
+                    fw_rowwise(&mut d);
+                    d
+                }),
+                ("rowwise_scratch", {
+                    let mut d = base.clone();
+                    let mut row_k = vec![0f32; n];
+                    fw_rowwise_scratch(&mut d, &mut row_k);
+                    d
+                }),
+                ("parallel", {
+                    let mut d = base.clone();
+                    fw_parallel(&mut d);
+                    d
+                }),
+                ("panel", {
+                    let mut d = base.clone();
+                    fw_panel(&mut d);
+                    d
+                }),
+                ("panel_scratch", {
+                    let mut d = base.clone();
+                    let (mut pr, mut pc) = (vec![0f32; n], vec![0f32; n]);
+                    fw_panel_scratch(&mut d, &mut pr, &mut pc);
+                    d
+                }),
+            ];
+            for (name, got) in &variants {
+                if oracle.max_diff(got) != 0.0 {
+                    return Err(format!("fw_{name} != fw_inplace (n={n})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn minplus_blocked_bit_identical_to_scalar() {
+    // blocked 4-row microkernel and the parallel splitter vs the scalar
+    // oracle and a naive reference, across ragged (m, k, n) incl. the
+    // quad remainder rows and empty inner dims
+    assert_prop(
+        60,
+        |r| {
+            let (m, k, n) = (
+                1 + r.gen_range(18),
+                1 + r.gen_range(18),
+                1 + r.gen_range(18),
+            );
+            let mut rr = r.fork();
+            let a = rand_row(&mut rr, m * k, 0.25);
+            let b = rand_row(&mut rr, k * n, 0.25);
+            let c0 = rand_row(&mut rr, m * n, 0.5);
+            (a, b, c0, (m, k, n))
+        },
+        |(a, b, c0, (m, k, n))| {
+            let (m, k, n) = (*m, *k, *n);
+            let mut naive = c0.clone();
+            for i in 0..m {
+                for kk in 0..k {
+                    let aik = a[i * k + kk];
+                    if aik >= INF {
+                        continue;
+                    }
+                    for j in 0..n {
+                        let cand = aik + b[kk * n + j];
+                        if cand < naive[i * n + j] {
+                            naive[i * n + j] = cand;
+                        }
+                    }
+                }
+            }
+            let mut scalar = c0.clone();
+            minplus_into_scalar(&mut scalar, a, b, m, k, n);
+            let mut blocked = c0.clone();
+            minplus_into(&mut blocked, a, b, m, k, n);
+            let mut par = c0.clone();
+            minplus_into_parallel(&mut par, a, b, m, k, n);
+            if !bits_eq(&scalar, &naive) {
+                return Err(format!("scalar oracle != naive ({m}x{k}x{n})"));
+            }
+            if !bits_eq(&blocked, &scalar) {
+                return Err(format!("blocked minplus != scalar ({m}x{k}x{n})"));
+            }
+            if !bits_eq(&par, &scalar) {
+                return Err(format!("parallel minplus != scalar ({m}x{k}x{n})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fw_blocked_backends_agree_on_ragged_edges() {
+    // non-divisible block edges: the scalar-pinned and SIMD-dispatching
+    // backends must compose fw_blocked **bit-identically** (same op
+    // order, bit-equal primitives); the blocked result itself is only
+    // tolerance-close to the direct solve (Katz–Kider reassociates)
+    assert_prop(
+        8,
+        |r| {
+            let n = 20 + r.gen_range(110);
+            let block = 8 + r.gen_range(40);
+            let m = 2 * n + r.gen_range(2 * n);
+            let seed = r.gen_range(1 << 30) as u64;
+            let d = generators::random_connected(n, m, Weights::Uniform(0.5, 4.0), seed).to_dense();
+            (d, block)
+        },
+        |(base, block)| {
+            let (n, block) = (base.n(), *block);
+            let mut via_scalar = base.clone();
+            fw_blocked(&ScalarBackend, &mut via_scalar, block);
+            let mut via_simd = base.clone();
+            fw_blocked(&SimdBackend, &mut via_simd, block);
+            if via_scalar.max_diff(&via_simd) != 0.0 {
+                return Err(format!(
+                    "fw_blocked scalar vs simd diverged (n={n} block={block})"
+                ));
+            }
+            let mut direct = base.clone();
+            fw_inplace(&mut direct);
+            let diff = direct.max_diff(&via_scalar);
+            if diff < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!(
+                    "fw_blocked off by {diff} vs direct (n={n} block={block})"
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn all_backends_agree_bitwise() {
+    let g = generators::random_connected(96, 300, Weights::Uniform(0.5, 4.0), 77);
+    let base = g.to_dense();
+    let mut oracle = base.clone();
+    ScalarBackend.fw(&mut oracle);
+    for be in [
+        &SerialBackend as &dyn TileBackend,
+        &SimdBackend,
+        &NativeBackend,
+    ] {
+        let mut d = base.clone();
+        be.fw(&mut d);
+        assert_eq!(oracle.max_diff(&d), 0.0, "fw backend {}", be.name());
+    }
+    let mut rng = Rng::new(78);
+    let (m, k, n) = (41usize, 23usize, 37usize);
+    let a = rand_row(&mut rng, m * k, 0.3);
+    let b = rand_row(&mut rng, k * n, 0.0);
+    let mut c_oracle = vec![INF; m * n];
+    ScalarBackend.minplus_into(&mut c_oracle, &a, &b, m, k, n);
+    for be in [
+        &SerialBackend as &dyn TileBackend,
+        &SimdBackend,
+        &NativeBackend,
+    ] {
+        let mut c = vec![INF; m * n];
+        be.minplus_into(&mut c, &a, &b, m, k, n);
+        assert!(bits_eq(&c, &c_oracle), "minplus backend {}", be.name());
+    }
+}
+
+// ---- tile arena invariants ----
+
+#[test]
+fn arena_never_serves_one_buffer_to_two_live_leases() {
+    assert_prop(
+        20,
+        |r| {
+            let sizes: Vec<usize> = (0..(2 + r.gen_range(30)))
+                .map(|_| 1 + r.gen_range(500))
+                .collect();
+            sizes
+        },
+        |sizes| {
+            let mut arena = TileArena::new();
+            // interleave: lease half, recycle some, lease the rest —
+            // every simultaneously-live buffer must be distinct storage
+            let mut live: Vec<Vec<f32>> = Vec::new();
+            for (i, &len) in sizes.iter().enumerate() {
+                live.push(arena.lease_filled(len, 0.0));
+                if i % 3 == 2 {
+                    let buf = live.remove(0);
+                    arena.recycle(buf);
+                }
+                let mut ptrs: Vec<usize> =
+                    live.iter().map(|b| b.as_ptr() as usize).collect();
+                ptrs.sort_unstable();
+                ptrs.dedup();
+                if ptrs.len() != live.len() {
+                    return Err("two live leases share a backing store".into());
+                }
+            }
+            let stats = arena.stats();
+            if stats.live != live.len() {
+                return Err(format!(
+                    "live accounting off: {} tracked vs {} held",
+                    stats.live,
+                    live.len()
+                ));
+            }
+            for buf in live.drain(..) {
+                arena.recycle(buf);
+            }
+            if arena.stats().live != 0 {
+                return Err("live count nonzero after recycling everything".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn arena_high_water_bounded_by_plan_census() {
+    // replay a DAG run's slot lifecycle against a private pool: lease
+    // one buffer per census entry (the worst case — every slot live at
+    // once), and check (a) the census accounting matches the plan, and
+    // (b) a second run is served entirely from the pool (alloc plateau)
+    let g = generators::ogbn_proxy(400, 10.0, Weights::Uniform(1.0, 3.0), 41);
+    let plan = build_plan(
+        &g,
+        PlanOptions {
+            tile_limit: 48,
+            max_depth: usize::MAX,
+            seed: 41,
+        },
+    );
+    let census_elems = plan_tile_census(&plan);
+
+    // enumerate the slot sizes exactly as plan_tile_census counts them
+    let depth = plan.depth();
+    let mut sizes: Vec<usize> = vec![plan.final_n * plan.final_n];
+    for (l, lvl) in plan.levels.iter().enumerate() {
+        for c in &lvl.cs.components {
+            sizes.push(c.n() * c.n());
+        }
+        sizes.push(if l + 1 < depth {
+            plan.levels[l + 1].n * plan.levels[l + 1].n
+        } else {
+            plan.final_n * plan.final_n
+        });
+    }
+    assert_eq!(
+        sizes.iter().sum::<usize>(),
+        census_elems,
+        "census enumeration drifted from plan_tile_census"
+    );
+
+    let mut arena = TileArena::new();
+    let run = |arena: &mut TileArena| {
+        let live: Vec<Vec<f32>> = sizes.iter().map(|&s| arena.lease_filled(s, 0.0)).collect();
+        assert!(
+            arena.stats().high_water <= sizes.len(),
+            "high water {} exceeds census slot count {}",
+            arena.stats().high_water,
+            sizes.len()
+        );
+        for buf in live {
+            arena.recycle(buf);
+        }
+    };
+    run(&mut arena);
+    let allocs_after_first = arena.stats().allocs;
+    run(&mut arena);
+    assert_eq!(
+        arena.stats().allocs,
+        allocs_after_first,
+        "second run should be allocation-free (full pool reuse)"
+    );
+    assert_eq!(arena.stats().live, 0);
+}
