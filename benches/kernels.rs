@@ -5,7 +5,10 @@
 //! the simulator's modeled makespan — and the admission benchmark
 //! (async admission vs drain-and-rebatch on staggered arrivals), which
 //! `--admission-only --json BENCH_admission.json` reduces to the CI
-//! perf-snapshot artifact.
+//! perf-snapshot artifact. The delta benchmark (`--delta-only --json
+//! BENCH_delta.json`) sweeps edge-delta batch sizes through the
+//! incremental repair engine and records repair makespan vs the full
+//! re-solve baseline.
 //!
 //! This quantifies the L3 hot path (the functional backend) and the
 //! PJRT dispatch overhead — see EXPERIMENTS.md §Perf.
@@ -15,6 +18,7 @@
 use rapid_graph::apsp::admission::{AdmissionConfig, AdmissionGraph};
 use rapid_graph::apsp::backend::{NativeBackend, TileBackend};
 use rapid_graph::apsp::batch::BatchGraph;
+use rapid_graph::apsp::delta::{self, DeltaClass, EdgeDelta};
 use rapid_graph::apsp::plan::{build_plan, ApspPlan, PlanOptions};
 use rapid_graph::apsp::store::MemoryStore;
 use rapid_graph::apsp::recursive::{solve, SolveOptions};
@@ -404,6 +408,129 @@ fn bench_admission(json_out: Option<&str>) {
     }
 }
 
+/// Delta-engine benchmark: repair latency vs delta size on a
+/// figure-style NWS workload. The base graph is solved once with
+/// retained repair state; each sweep point samples a fraction of the
+/// undirected edges, reweights them slightly downward (improve class,
+/// so the repair engine can *prove* unchanged boundary blocks and skip
+/// their rerun), executes the repair functionally to obtain the actual
+/// post-skip closure, and prices that repair sub-DAG against the full
+/// re-solve lowering. Repair makespan must grow with the dirty-tile
+/// count — not with n³ — which is the whole point of the engine. With
+/// `--json PATH` the sweep lands in the CI perf-snapshot artifact
+/// `BENCH_delta.json`.
+fn bench_delta(json_out: Option<&str>) {
+    use rapid_graph::util::json;
+    let seed = 0xDE17A_u64;
+    let g = generators::generate(Topology::Nws, 4_096, 12.0, Weights::Uniform(1.0, 5.0), seed);
+    let plan = build_plan(
+        &g,
+        PlanOptions {
+            tile_limit: 256,
+            max_depth: usize::MAX,
+            seed,
+        },
+    );
+    let hw = HwParams::default();
+    let be = NativeBackend;
+    let full_tg = taskgraph::lower(&plan);
+    let total_tiles = plan.levels.first().map(|l| l.n_components()).unwrap_or(1);
+    let (_, state) = scheduler::solve_dag_retained(&g, &plan, &be, SolveOptions::default());
+    let resolve_s = engine::simulate_dag(&full_tg, &hw).seconds;
+    println!(
+        "delta workload: n={} m={} tiles={} depth={} re-solve makespan {}\n",
+        g.n(),
+        g.m(),
+        total_tiles,
+        plan.depth(),
+        fmt_time(resolve_s),
+    );
+
+    // undirected edge list (u < v) to sample delta batches from
+    let edges: Vec<(u32, u32, f32)> = g.edges().filter(|&(u, v, _)| u < v).collect();
+    let mut rng = Rng::new(seed);
+    let mut t = Table::new(
+        "incremental repair vs full re-solve (modeled makespan)",
+        &["delta", "edges", "dirty tiles", "skipped", "repair", "delta_speedup"],
+    );
+    let mut sweep: Vec<rapid_graph::util::json::Json> = Vec::new();
+    let mut speedup_1pct = 0.0f64;
+    for &frac in &[0.001f64, 0.005, 0.01, 0.05] {
+        let k = ((edges.len() as f64 * frac).ceil() as usize).max(1);
+        // sample k distinct edges: partial Fisher-Yates over indices
+        let mut idx: Vec<usize> = (0..edges.len()).collect();
+        for i in 0..k {
+            let j = i + rng.gen_range(idx.len() - i);
+            idx.swap(i, j);
+        }
+        let batch: Vec<EdgeDelta> = idx[..k]
+            .iter()
+            .map(|&e| {
+                let (u, v, w) = edges[e];
+                EdgeDelta::Reweight { u, v, w: w * 0.99 }
+            })
+            .collect();
+        delta::validate_deltas(&g, &batch).expect("sampled deltas are valid");
+        let class = delta::classify_deltas(&g, &batch);
+        let g2 = delta::apply_deltas(&g, &batch);
+        let plan2 = delta::repair_plan(&plan, &g2).expect("reweights never change structure");
+        let spec = delta::dirty_spec(&plan2, &batch);
+        let (_, actual) = scheduler::execute_delta(
+            &g2,
+            &plan2,
+            &spec,
+            &state,
+            class == DeltaClass::Improve,
+            &be,
+            SolveOptions::default(),
+        );
+        let repair_tg = taskgraph::lower_repair(&plan2, &actual);
+        let (repair_rep, resolve_rep) = engine::simulate_delta(&repair_tg, &full_tg, &hw);
+        let dirty = actual.dirty_tiles().max(1);
+        let skipped = spec.rerun.iter().filter(|r| **r).count()
+            - actual.rerun.iter().filter(|r| **r).count();
+        let speedup = resolve_rep.seconds / repair_rep.seconds;
+        if frac == 0.01 {
+            speedup_1pct = speedup;
+        }
+        t.row(&[
+            format!("{:.1}%", 100.0 * frac),
+            k.to_string(),
+            format!("{dirty}/{total_tiles}"),
+            skipped.to_string(),
+            fmt_time(repair_rep.seconds),
+            fmt_ratio(speedup),
+        ]);
+        sweep.push(json::obj(vec![
+            ("delta_frac", json::num(frac)),
+            ("n_deltas", json::num(k as f64)),
+            ("dirty_tiles", json::num(dirty as f64)),
+            ("skipped_tiles", json::num(skipped as f64)),
+            ("repair_makespan_s", json::num(repair_rep.seconds)),
+            ("delta_speedup", json::num(speedup)),
+        ]));
+    }
+    t.print();
+    println!(
+        "delta_speedup at 1% of edges: {}\n",
+        fmt_ratio(speedup_1pct)
+    );
+
+    if let Some(path) = json_out {
+        let doc = json::obj(vec![
+            ("workload", json::s("delta_sweep_nws4096")),
+            ("graph_n", json::num(g.n() as f64)),
+            ("graph_m", json::num(g.m() as f64)),
+            ("total_tiles", json::num(total_tiles as f64)),
+            ("resolve_makespan_s", json::num(resolve_s)),
+            ("delta_speedup_1pct", json::num(speedup_1pct)),
+            ("sweep", json::arr(sweep)),
+        ]);
+        std::fs::write(path, doc.render() + "\n").expect("write delta bench json");
+        println!("wrote {path}\n");
+    }
+}
+
 /// Host hot-path throughput snapshot: the microkernel rates and the
 /// scheduler dispatch overhead that PR's host-wall-clock work targets.
 /// All of these are machine-dependent, so CI records them for trend
@@ -671,10 +798,16 @@ fn main() {
         bench_host_perf(json_out);
         return;
     }
+    if args.flag("delta-only") {
+        // the CI perf-snapshot job: the incremental-repair sweep
+        bench_delta(json_out);
+        return;
+    }
     bench_schedulers();
     bench_batching();
     bench_sharding();
     bench_admission(json_out);
+    bench_delta(None);
     bench_host_perf(None);
 
     let runtime = PjrtRuntime::load_default().ok();

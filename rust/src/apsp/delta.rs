@@ -1,0 +1,624 @@
+//! Edge-delta engine: incremental APSP on dynamic graphs.
+//!
+//! A batch of [`EdgeDelta`]s (insert / delete / reweight) is mapped onto
+//! the existing tile plan instead of forcing a cubic re-solve:
+//!
+//! 1. **Plan repair** ([`repair_plan`]): the partition, boundary sets,
+//!    and group layout of the old plan are *reused* — only the per-level
+//!    cross-edge graphs and edge counts are rebuilt against the mutated
+//!    graph. This succeeds exactly when no previously-internal vertex
+//!    gains a cross edge; otherwise the structure changed and the caller
+//!    falls back to a full re-plan + re-solve (the `replan` path).
+//! 2. **Dirty closure** ([`dirty_spec`]): a delta inside a zero-boundary
+//!    component dirties only that tile. Any delta touching a boundary
+//!    component or crossing components invalidates the boundary
+//!    recursion — levels >= 1, the terminal solve, and every merge are
+//!    downstream of a boundary edge in the recursion's dependency
+//!    order, so they re-solve as a unit while clean zero-boundary tiles
+//!    are served from the retained solution untouched.
+//! 3. **Repair lowering** ([`super::taskgraph::lower_repair`]): the
+//!    closure lowers to a sub-DAG that the scheduler splices into a live
+//!    pool ([`super::scheduler::execute_delta`]), running the *same*
+//!    kernels a fresh solve would — repaired tiles are bit-identical to
+//!    a full solve on the same plan by construction.
+//!
+//! Improving batches (inserts and weight decreases, [`DeltaClass`])
+//! additionally let the executor skip the inject + rerun of any
+//! boundary tile whose dB diagonal block is bit-unchanged — the cheap
+//! min-plus repair path that propagates improvements outward from the
+//! dirty tiles only as far as they actually reach. Deletes and weight
+//! increases force every boundary tile through inject + rerun (the
+//! conservative re-solve of the dirty closure).
+
+use super::plan::{ApspPlan, PlanLevel};
+use super::recursive::{vert_locations, ApspSolution, LevelSolution};
+use super::taskgraph::RepairSpec;
+use super::trace::Trace;
+use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One edge mutation. Graphs are undirected: every delta applies to
+/// both directions of the edge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EdgeDelta {
+    /// Add a new edge (must not already exist).
+    Insert { u: u32, v: u32, w: f32 },
+    /// Remove an existing edge.
+    Delete { u: u32, v: u32 },
+    /// Change the weight of an existing edge.
+    Reweight { u: u32, v: u32, w: f32 },
+}
+
+impl EdgeDelta {
+    pub fn endpoints(&self) -> (u32, u32) {
+        match *self {
+            EdgeDelta::Insert { u, v, .. }
+            | EdgeDelta::Delete { u, v }
+            | EdgeDelta::Reweight { u, v, .. } => (u, v),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            EdgeDelta::Insert { .. } => "insert",
+            EdgeDelta::Delete { .. } => "delete",
+            EdgeDelta::Reweight { .. } => "reweight",
+        }
+    }
+}
+
+/// How a validated batch interacts with shortest paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaClass {
+    /// Only inserts and weight decreases: distances can only improve,
+    /// so unchanged dB blocks prove their tiles need no rerun.
+    Improve,
+    /// Contains a delete or a weight increase: distances may grow, so
+    /// every boundary tile re-solves against the refreshed dB.
+    Resolve,
+}
+
+impl DeltaClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeltaClass::Improve => "improve",
+            DeltaClass::Resolve => "resolve",
+        }
+    }
+}
+
+/// Parse a delta script: one delta per line (`insert u v w`,
+/// `delete u v`, `reweight u v w`), `#` comments, blank lines separate
+/// batches. Returns the non-empty batches in order.
+pub fn parse_script(text: &str) -> Result<Vec<Vec<EdgeDelta>>> {
+    let mut batches: Vec<Vec<EdgeDelta>> = Vec::new();
+    let mut cur: Vec<EdgeDelta> = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            if !cur.is_empty() {
+                batches.push(std::mem::take(&mut cur));
+            }
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let op = it.next().unwrap_or("");
+        let mut field = |name: &str| -> Result<&str> {
+            it.next()
+                .ok_or_else(|| crate::err!("line {}: {op} missing {name}", ln + 1))
+        };
+        let parse_u32 = |s: &str, name: &str| -> Result<u32> {
+            s.parse()
+                .map_err(|_| crate::err!("line {}: bad {name} {s:?}", ln + 1))
+        };
+        let parse_w = |s: &str| -> Result<f32> {
+            s.parse()
+                .map_err(|_| crate::err!("line {}: bad weight {s:?}", ln + 1))
+        };
+        let delta = match op {
+            "insert" | "reweight" => {
+                let u = parse_u32(field("u")?, "u")?;
+                let v = parse_u32(field("v")?, "v")?;
+                let w = parse_w(field("w")?)?;
+                if op == "insert" {
+                    EdgeDelta::Insert { u, v, w }
+                } else {
+                    EdgeDelta::Reweight { u, v, w }
+                }
+            }
+            "delete" => {
+                let u = parse_u32(field("u")?, "u")?;
+                let v = parse_u32(field("v")?, "v")?;
+                EdgeDelta::Delete { u, v }
+            }
+            other => bail!("line {}: unknown delta op {other:?}", ln + 1),
+        };
+        ensure!(
+            it.next().is_none(),
+            "line {}: trailing tokens after {op}",
+            ln + 1
+        );
+        cur.push(delta);
+    }
+    if !cur.is_empty() {
+        batches.push(cur);
+    }
+    ensure!(!batches.is_empty(), "delta script contains no deltas");
+    Ok(batches)
+}
+
+/// Validate a batch against the graph it will be applied to: endpoints
+/// in range and distinct, weights finite and non-negative, deletes and
+/// reweights name an existing edge, inserts a missing one. Clean
+/// errors, no panics — the executor runs this before touching any
+/// state.
+pub fn validate_deltas(g: &CsrGraph, deltas: &[EdgeDelta]) -> Result<()> {
+    ensure!(!deltas.is_empty(), "empty delta batch");
+    for (i, d) in deltas.iter().enumerate() {
+        let (u, v) = d.endpoints();
+        let kind = d.kind();
+        ensure!(
+            (u as usize) < g.n() && (v as usize) < g.n(),
+            "delta {i} ({kind} {u} {v}): endpoint out of range (graph has {} vertices)",
+            g.n()
+        );
+        ensure!(u != v, "delta {i} ({kind} {u} {v}): self-loop");
+        match *d {
+            EdgeDelta::Insert { w, .. } | EdgeDelta::Reweight { w, .. } => {
+                ensure!(
+                    w.is_finite() && w >= 0.0,
+                    "delta {i} ({kind} {u} {v}): weight {w} must be finite and non-negative"
+                );
+            }
+            EdgeDelta::Delete { .. } => {}
+        }
+        let exists = g.edge_weight(u as usize, v as usize).is_some();
+        match d {
+            EdgeDelta::Insert { .. } => ensure!(
+                !exists,
+                "delta {i} (insert {u} {v}): edge already exists — use reweight"
+            ),
+            EdgeDelta::Delete { .. } | EdgeDelta::Reweight { .. } => ensure!(
+                exists,
+                "delta {i} ({kind} {u} {v}): edge does not exist"
+            ),
+        }
+    }
+    Ok(())
+}
+
+/// Classify a validated batch (see [`DeltaClass`]). Reweights compare
+/// against the current weight; equal weights count as improving (a
+/// no-op cannot grow a distance).
+pub fn classify_deltas(g: &CsrGraph, deltas: &[EdgeDelta]) -> DeltaClass {
+    for d in deltas {
+        match *d {
+            EdgeDelta::Insert { .. } => {}
+            EdgeDelta::Delete { .. } => return DeltaClass::Resolve,
+            EdgeDelta::Reweight { u, v, w } => {
+                let old = g
+                    .edge_weight(u as usize, v as usize)
+                    .expect("validated reweight targets an existing edge");
+                if w > old {
+                    return DeltaClass::Resolve;
+                }
+            }
+        }
+    }
+    DeltaClass::Improve
+}
+
+/// Apply a validated batch, returning the mutated graph in canonical
+/// CSR form (sorted adjacency, symmetric) so its fingerprint is stable.
+pub fn apply_deltas(g: &CsrGraph, deltas: &[EdgeDelta]) -> CsrGraph {
+    let mut edges: HashMap<(u32, u32), f32> = g.edges().map(|(u, v, w)| ((u, v), w)).collect();
+    for d in deltas {
+        match *d {
+            EdgeDelta::Insert { u, v, w } | EdgeDelta::Reweight { u, v, w } => {
+                edges.insert((u, v), w);
+                edges.insert((v, u), w);
+            }
+            EdgeDelta::Delete { u, v } => {
+                edges.remove(&(u, v));
+                edges.remove(&(v, u));
+            }
+        }
+    }
+    let list: Vec<(u32, u32, f32)> = edges.into_iter().map(|((u, v), w)| (u, v, w)).collect();
+    CsrGraph::from_edges(g.n(), &list)
+}
+
+/// Reuse `old`'s partition structure against the mutated graph: every
+/// level keeps its component set, boundary flags, and group layout, and
+/// only the cross-edge graphs / edge counts are rebuilt from `g_new`.
+///
+/// Returns `None` when the deltas changed the *structure* — some new
+/// cross-component edge has an endpoint that was internal under the old
+/// plan (`boundary_id == u32::MAX`), so the boundary sets no longer
+/// cover the cut and the caller must re-plan from scratch. The reverse
+/// direction is safe: a vertex whose last cross edge was deleted stays
+/// flagged boundary (a conservative superset never breaks correctness,
+/// it only keeps a slightly larger boundary graph).
+pub fn repair_plan(old: &ApspPlan, g_new: &CsrGraph) -> Option<ApspPlan> {
+    if old.depth() == 0 {
+        return Some(ApspPlan {
+            levels: Vec::new(),
+            final_n: g_new.n(),
+            final_nnz: g_new.m() as u64,
+            tile_limit: old.tile_limit,
+        });
+    }
+    let mut levels: Vec<PlanLevel> = Vec::with_capacity(old.depth());
+    let mut cur: Option<CsrGraph> = None; // level l's input graph (None = g_new)
+    for lvl in &old.levels {
+        let g = cur.as_ref().unwrap_or(g_new);
+        if g.n() != lvl.n {
+            return None; // vertex count changed (defensive; deltas can't)
+        }
+        let cs = &lvl.cs;
+        let mut cross_edges: Vec<(u32, u32, f32)> = Vec::new();
+        let mut comp_nnz = vec![0u64; cs.components.len()];
+        for (u, v, w) in g.edges() {
+            let cu = cs.comp_of[u as usize];
+            let cv = cs.comp_of[v as usize];
+            if cu != cv {
+                let bu = cs.boundary_id[u as usize];
+                let bv = cs.boundary_id[v as usize];
+                if bu == u32::MAX || bv == u32::MAX {
+                    return None; // an internal vertex gained a cross edge
+                }
+                cross_edges.push((bu, bv, w));
+            } else {
+                comp_nnz[cu as usize] += 1;
+            }
+        }
+        let next_cross = CsrGraph::from_edges(lvl.n_boundary(), &cross_edges);
+        cur = Some(next_cross.clone());
+        levels.push(PlanLevel {
+            n: lvl.n,
+            cs: cs.clone(),
+            next_cross,
+            group_start: lvl.group_start.clone(),
+            comp_nnz,
+        });
+    }
+    let terminal = cur.expect("depth >= 1");
+    Some(ApspPlan {
+        final_n: old.final_n,
+        final_nnz: terminal.m() as u64,
+        levels,
+        tile_limit: old.tile_limit,
+    })
+}
+
+/// Compute the conservative dirty closure of a batch against the plan's
+/// level-0 tiling: tiles containing an intra-component delta reload +
+/// re-solve locally; any delta crossing components or touching a
+/// boundary tile invalidates the boundary recursion, making every
+/// boundary tile an inject/rerun candidate (the executor may still skip
+/// ones whose dB block comes back bit-unchanged).
+pub fn dirty_spec(plan: &ApspPlan, deltas: &[EdgeDelta]) -> RepairSpec {
+    if plan.depth() == 0 {
+        return RepairSpec {
+            dirty: Vec::new(),
+            rerun: Vec::new(),
+            boundary_dirty: true,
+        };
+    }
+    let lvl0 = &plan.levels[0];
+    let k0 = lvl0.n_components();
+    let mut dirty = vec![false; k0];
+    let mut boundary_dirty = false;
+    for d in deltas {
+        let (u, v) = d.endpoints();
+        let cu = lvl0.cs.comp_of[u as usize];
+        let cv = lvl0.cs.comp_of[v as usize];
+        if cu != cv {
+            boundary_dirty = true;
+        } else {
+            dirty[cu as usize] = true;
+            if lvl0.cs.components[cu as usize].n_boundary > 0 {
+                boundary_dirty = true;
+            }
+        }
+    }
+    let rerun: Vec<bool> = if boundary_dirty {
+        lvl0.cs.components.iter().map(|c| c.n_boundary > 0).collect()
+    } else {
+        vec![false; k0]
+    };
+    RepairSpec {
+        dirty,
+        rerun,
+        boundary_dirty,
+    }
+}
+
+/// The retained numeric state of a solved graph, shaped for repair:
+/// level-0 blocks are refcounted so a repair can hand clean tiles to
+/// the next generation without copying a float.
+#[derive(Clone)]
+pub struct DeltaState {
+    /// Post-injection level-0 component matrices (the solution tiles).
+    pub(crate) comp_dist: Vec<Arc<DistMatrix>>,
+    /// Pre-injection level-0 matrices (snapshotted at inject time):
+    /// the inputs a repair re-injects the refreshed dB into. Shares the
+    /// `comp_dist` allocation for tiles that were never injected.
+    pub(crate) pre_inj: Vec<Arc<DistMatrix>>,
+    /// The level-0 dB (empty matrix when the plan has no boundary).
+    pub(crate) db: Arc<DistMatrix>,
+    /// Terminal matrix of a depth-0 (single-tile) plan.
+    pub(crate) direct: Option<Arc<DistMatrix>>,
+}
+
+impl DeltaState {
+    /// View the retained state as an [`ApspSolution`] for querying,
+    /// validation, and store write-back. Clones the tile matrices (the
+    /// solution type owns plain matrices); used on validation and
+    /// reporting paths, never inside the repair hot loop.
+    pub fn as_solution<'p>(
+        &self,
+        plan: &'p ApspPlan,
+        g: &CsrGraph,
+        trace: Trace,
+    ) -> ApspSolution<'p> {
+        let top = if let Some(direct) = &self.direct {
+            LevelSolution::Direct(Arc::clone(direct))
+        } else {
+            LevelSolution::Partitioned {
+                level: 0,
+                comp_dist: self.comp_dist.iter().map(|m| m.as_ref().clone()).collect(),
+                db: self.db.as_ref().clone(),
+            }
+        };
+        ApspSolution {
+            plan,
+            trace,
+            top: Some(top),
+            vert_loc: vert_locations(plan, g),
+        }
+    }
+
+    /// Bit-compare against another state (repair vs fresh solve on the
+    /// same plan). Returns the max per-tile difference — `0.0` means
+    /// bit-identical everywhere (INF == INF counts as equal).
+    pub fn max_diff(&self, other: &DeltaState) -> f32 {
+        let mut worst = 0f32;
+        match (&self.direct, &other.direct) {
+            (Some(a), Some(b)) => return a.max_diff(b),
+            (None, None) => {}
+            _ => return f32::INFINITY,
+        }
+        if self.comp_dist.len() != other.comp_dist.len() {
+            return f32::INFINITY;
+        }
+        for (a, b) in self.comp_dist.iter().zip(&other.comp_dist) {
+            worst = worst.max(a.max_diff(b));
+        }
+        worst.max(self.db.max_diff(&other.db))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::plan::{build_plan, PlanOptions};
+    use crate::graph::generators::{self, Weights};
+
+    fn setup(n: usize, tile: usize, seed: u64) -> (CsrGraph, ApspPlan) {
+        let g = generators::newman_watts_strogatz(n, 4, 0.1, Weights::Uniform(1.0, 5.0), seed);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: tile,
+                max_depth: usize::MAX,
+                seed,
+            },
+        );
+        (g, plan)
+    }
+
+    #[test]
+    fn parse_script_batches_and_comments() {
+        let text = "# warmup\ninsert 1 2 3.5\nreweight 4 5 1.0 # inline\n\ndelete 6 7\n";
+        let batches = parse_script(text).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].len(), 2);
+        assert_eq!(batches[1], vec![EdgeDelta::Delete { u: 6, v: 7 }]);
+    }
+
+    #[test]
+    fn parse_script_rejects_garbage() {
+        assert!(parse_script("").is_err());
+        assert!(parse_script("frobnicate 1 2").is_err());
+        assert!(parse_script("insert 1 2").is_err()); // missing weight
+        assert!(parse_script("insert 1 2 nan?").is_err());
+        assert!(parse_script("delete 1 2 3").is_err()); // trailing token
+    }
+
+    #[test]
+    fn validate_rejects_bad_deltas() {
+        let (g, _) = setup(100, 32, 1);
+        let (u, v, _) = g.edges().next().unwrap();
+        // out of range
+        assert!(validate_deltas(&g, &[EdgeDelta::Insert { u: 0, v: 1000, w: 1.0 }]).is_err());
+        // self loop
+        assert!(validate_deltas(&g, &[EdgeDelta::Insert { u: 3, v: 3, w: 1.0 }]).is_err());
+        // NaN / negative / infinite weights
+        for w in [f32::NAN, -1.0, f32::INFINITY] {
+            assert!(validate_deltas(&g, &[EdgeDelta::Reweight { u, v, w }]).is_err());
+        }
+        // insert of an existing edge, delete/reweight of a missing one
+        assert!(validate_deltas(&g, &[EdgeDelta::Insert { u, v, w: 1.0 }]).is_err());
+        let (mu, mv) = missing_edge(&g);
+        assert!(validate_deltas(&g, &[EdgeDelta::Delete { u: mu, v: mv }]).is_err());
+        assert!(validate_deltas(&g, &[EdgeDelta::Reweight { u: mu, v: mv, w: 1.0 }]).is_err());
+        assert!(validate_deltas(&g, &[]).is_err());
+        // and a well-formed batch passes
+        assert!(validate_deltas(&g, &[EdgeDelta::Reweight { u, v, w: 2.0 }]).is_ok());
+    }
+
+    fn missing_edge(g: &CsrGraph) -> (u32, u32) {
+        for u in 0..g.n() {
+            for v in (u + 1)..g.n() {
+                if g.edge_weight(u, v).is_none() {
+                    return (u as u32, v as u32);
+                }
+            }
+        }
+        panic!("graph is complete");
+    }
+
+    #[test]
+    fn apply_is_symmetric_and_canonical() {
+        let (g, _) = setup(80, 32, 2);
+        let (mu, mv) = missing_edge(&g);
+        let g2 = apply_deltas(&g, &[EdgeDelta::Insert { u: mu, v: mv, w: 2.5 }]);
+        assert_eq!(g2.edge_weight(mu as usize, mv as usize), Some(2.5));
+        assert_eq!(g2.edge_weight(mv as usize, mu as usize), Some(2.5));
+        assert_eq!(g2.m(), g.m() + 2);
+        let g3 = apply_deltas(&g2, &[EdgeDelta::Delete { u: mu, v: mv }]);
+        assert_eq!(g3.m(), g.m());
+        // applying the identity (rebuild from the same edges) is stable
+        let same = apply_deltas(
+            &g3,
+            &[EdgeDelta::Reweight {
+                u: g.edges().next().unwrap().0,
+                v: g.edges().next().unwrap().1,
+                w: g.edges().next().unwrap().2,
+            }],
+        );
+        assert_eq!(
+            crate::apsp::store::fingerprint(&same),
+            crate::apsp::store::fingerprint(&g3)
+        );
+    }
+
+    #[test]
+    fn classify_improve_vs_resolve() {
+        let (g, _) = setup(80, 32, 3);
+        let (u, v, w) = g.edges().next().unwrap();
+        let (mu, mv) = missing_edge(&g);
+        assert_eq!(
+            classify_deltas(&g, &[EdgeDelta::Insert { u: mu, v: mv, w: 1.0 }]),
+            DeltaClass::Improve
+        );
+        assert_eq!(
+            classify_deltas(&g, &[EdgeDelta::Reweight { u, v, w: w * 0.5 }]),
+            DeltaClass::Improve
+        );
+        assert_eq!(
+            classify_deltas(&g, &[EdgeDelta::Reweight { u, v, w: w * 2.0 }]),
+            DeltaClass::Resolve
+        );
+        assert_eq!(
+            classify_deltas(&g, &[EdgeDelta::Delete { u, v }]),
+            DeltaClass::Resolve
+        );
+    }
+
+    #[test]
+    fn repair_plan_matches_fresh_plan_on_reweight() {
+        // a reweight keeps the topology, so the fresh plan (partitioned
+        // on unit weights) is structurally identical and the repaired
+        // plan must match it level by level
+        let (g, plan) = setup(400, 48, 4);
+        let (u, v, w) = g.edges().next().unwrap();
+        let g2 = apply_deltas(&g, &[EdgeDelta::Reweight { u, v, w: w + 1.0 }]);
+        let repaired = repair_plan(&plan, &g2).expect("reweight never changes structure");
+        let fresh = build_plan(
+            &g2,
+            PlanOptions {
+                tile_limit: 48,
+                max_depth: usize::MAX,
+                seed: 4,
+            },
+        );
+        assert_eq!(repaired.depth(), fresh.depth());
+        assert_eq!(repaired.final_n, fresh.final_n);
+        assert_eq!(repaired.final_nnz, fresh.final_nnz);
+        for (a, b) in repaired.levels.iter().zip(&fresh.levels) {
+            assert_eq!(a.comp_nnz, b.comp_nnz);
+            assert_eq!(a.group_start, b.group_start);
+            assert_eq!(a.next_cross.rowptr, b.next_cross.rowptr);
+            assert_eq!(a.next_cross.col, b.next_cross.col);
+            assert_eq!(a.next_cross.val, b.next_cross.val);
+        }
+    }
+
+    #[test]
+    fn repair_plan_detects_structural_change() {
+        let (g, plan) = setup(400, 48, 5);
+        let lvl0 = &plan.levels[0];
+        // find an internal vertex and a vertex in another component
+        let (iu, other) = 'found: {
+            for (ci, c) in lvl0.cs.components.iter().enumerate() {
+                if let Some(&internal) = c.internal().first() {
+                    for (cj, c2) in lvl0.cs.components.iter().enumerate() {
+                        if ci != cj && c2.n() > 0 {
+                            break 'found (internal, c2.verts[0]);
+                        }
+                    }
+                }
+            }
+            panic!("no internal vertex found");
+        };
+        let g2 = apply_deltas(&g, &[EdgeDelta::Insert { u: iu, v: other, w: 1.0 }]);
+        assert!(
+            repair_plan(&plan, &g2).is_none(),
+            "internal vertex gained a cross edge: structure changed"
+        );
+    }
+
+    #[test]
+    fn dirty_spec_closure_rules() {
+        let (g, plan) = setup(400, 48, 6);
+        let lvl0 = &plan.levels[0];
+        // cross-component delta: boundary dirty, no locally-dirty tile
+        let (cu, cv, _) = g
+            .edges()
+            .find(|&(u, v, _)| lvl0.cs.comp_of[u as usize] != lvl0.cs.comp_of[v as usize])
+            .expect("nws plans have cross edges");
+        let spec = dirty_spec(&plan, &[EdgeDelta::Delete { u: cu, v: cv }]);
+        assert!(spec.boundary_dirty);
+        assert!(spec.dirty.iter().all(|d| !d));
+        for (ci, c) in lvl0.cs.components.iter().enumerate() {
+            assert_eq!(spec.rerun[ci], c.n_boundary > 0);
+        }
+        // intra-component delta in a boundary tile: that tile dirty +
+        // boundary recursion dirty
+        if let Some((iu, iv, _)) = g.edges().find(|&(u, v, _)| {
+            let cu = lvl0.cs.comp_of[u as usize];
+            cu == lvl0.cs.comp_of[v as usize] && lvl0.cs.components[cu as usize].n_boundary > 0
+        }) {
+            let spec = dirty_spec(&plan, &[EdgeDelta::Delete { u: iu, v: iv }]);
+            assert!(spec.boundary_dirty);
+            let ci = lvl0.cs.comp_of[iu as usize] as usize;
+            assert!(spec.dirty[ci]);
+            assert_eq!(spec.dirty.iter().filter(|d| **d).count(), 1);
+        }
+    }
+
+    #[test]
+    fn dirty_spec_is_monotone() {
+        // a superset batch never dirties fewer tiles
+        let (g, plan) = setup(400, 48, 7);
+        let edges: Vec<(u32, u32, f32)> = g.edges().filter(|(u, v, _)| u < v).collect();
+        let mut prev = 0usize;
+        for take in [1usize, 4, 16, 64] {
+            let batch: Vec<EdgeDelta> = edges
+                .iter()
+                .take(take)
+                .map(|&(u, v, w)| EdgeDelta::Reweight { u, v, w: w * 0.9 })
+                .collect();
+            let spec = dirty_spec(&plan, &batch);
+            let tiles = spec.dirty_tiles();
+            assert!(tiles >= prev, "superset batch dirtied fewer tiles");
+            prev = tiles;
+        }
+    }
+}

@@ -13,6 +13,9 @@
 //!   the simulator).
 //! * [`scheduler`] — dependency-aware work-stealing host executor over
 //!   the task graph (bit-identical to the barrier walk).
+//! * [`delta`] — edge-delta engine: incremental APSP that maps
+//!   insert/delete/reweight batches onto the tile plan and re-solves
+//!   only the dirty tile closure.
 //! * [`batch`] — multi-graph batch engine: union of independent task
 //!   graphs into one shared-resource schedule.
 //! * [`admission`] — async admission pipeline: admit arrival-stamped
@@ -31,6 +34,7 @@
 pub mod admission;
 pub mod backend;
 pub mod batch;
+pub mod delta;
 pub mod dijkstra;
 pub mod floyd_warshall;
 pub mod minplus;

@@ -19,6 +19,7 @@
 use super::admission::{AdmissionGraph, StoreOutcome};
 use super::backend::{fw_any, TileBackend};
 use super::batch::BatchGraph;
+use super::delta::DeltaState;
 use super::plan::ApspPlan;
 use super::shard::ShardGraph;
 use super::recursive::{
@@ -26,7 +27,7 @@ use super::recursive::{
     fill_block_from_graph, materialize_partitioned, projected_bytes, vert_locations,
     ApspSolution, LevelSolution, SolveOptions,
 };
-use super::taskgraph::{lower, TaskGraph, TaskKind};
+use super::taskgraph::{lower, lower_repair, RepairSpec, TaskGraph, TaskKind};
 use super::trace::Trace;
 use crate::apsp::floyd_warshall;
 use crate::graph::csr::CsrGraph;
@@ -478,6 +479,334 @@ pub fn execute_sharded<'p>(
     // the reported trace is the solo lowering's — sharding changes the
     // schedule and adds transfers, not the algorithmic work
     assemble(g, plan, shard.solo.to_trace(), &mut slots)
+}
+
+/// Per-component snapshot slots used by the retained-solve paths.
+///
+/// SAFETY: each slot has exactly one writer — the component's Inject
+/// task, which owns the component's matrix at that point — and no
+/// reader until the worker pool has drained.
+struct SnapSlots(Vec<Slot>);
+
+unsafe impl Sync for SnapSlots {}
+
+impl SnapSlots {
+    fn new(k: usize) -> Self {
+        SnapSlots((0..k).map(|_| Slot::new()).collect())
+    }
+}
+
+/// [`solve_dag`] that additionally retains the numeric state a later
+/// delta repair needs ([`DeltaState`]): refcounted level-0 blocks, the
+/// level-0 dB, and — snapshotted at Inject time, the only moment it
+/// exists — each boundary component's *pre-injection* matrix, which is
+/// exactly the input a repair re-injects a refreshed dB into.
+///
+/// The solution (viewed via [`DeltaState::as_solution`]) is
+/// bit-identical to [`solve_dag`]: the snapshot is a clone taken by the
+/// Inject task before it relaxes the block in place, so no kernel sees
+/// different inputs.
+pub fn solve_dag_retained(
+    g: &CsrGraph,
+    plan: &ApspPlan,
+    backend: &dyn TileBackend,
+    opts: SolveOptions,
+) -> (Trace, DeltaState) {
+    check_memory_guard(plan, g, &opts);
+    size_arena_for(plan_tile_census(plan));
+    let tg = lower(plan);
+    let mut slots = Slots::new(plan);
+    let (local_serial, rerun_serial) = kernel_choices(plan, backend);
+    let k0 = if plan.depth() == 0 {
+        0
+    } else {
+        plan.levels[0].n_components()
+    };
+    let mut pre_snap = SnapSlots::new(k0);
+
+    {
+        let slots = &slots;
+        let pre_snap = &pre_snap;
+        let deps = tg.dep_lists();
+        threads::par_dag(&deps, |ti| {
+            let kind = &tg.nodes[ti].kind;
+            if let TaskKind::Inject { level: 0, comp } = *kind {
+                // SAFETY (read): the Inject task owns this block (its
+                // LocalFw chain is done, no other writer is live); the
+                // snapshot is taken before the in-place relax below.
+                let pre = unsafe { slots.d[0][comp as usize].get() }.clone();
+                // SAFETY (write): sole writer of this snapshot slot.
+                unsafe { pre_snap.0[comp as usize].put(pre) };
+            }
+            run_task(kind, g, plan, backend, slots, &local_serial, &rerun_serial)
+        });
+    }
+
+    (tg.to_trace(), retain_state(plan, &mut slots, &mut pre_snap))
+}
+
+/// Assemble a [`DeltaState`] out of a finished retained run's slots.
+fn retain_state(plan: &ApspPlan, slots: &mut Slots, pre_snap: &mut SnapSlots) -> DeltaState {
+    if plan.depth() == 0 {
+        let direct = Arc::new(
+            slots
+                .terminal
+                .take()
+                .unwrap_or_else(|| DistMatrix::new_inf(0)),
+        );
+        return DeltaState {
+            comp_dist: Vec::new(),
+            pre_inj: Vec::new(),
+            db: Arc::new(DistMatrix::new_inf(0)),
+            direct: Some(direct),
+        };
+    }
+    let comp_dist: Vec<Arc<DistMatrix>> = slots.d[0]
+        .iter_mut()
+        .map(|s| Arc::new(s.take().expect("level-0 component never filled")))
+        .collect();
+    // components that were never injected (zero boundary) share the
+    // post-solve allocation: pre- and post-injection states coincide
+    let pre_inj: Vec<Arc<DistMatrix>> = pre_snap
+        .0
+        .iter_mut()
+        .zip(&comp_dist)
+        .map(|(s, post)| match s.take() {
+            Some(pre) => Arc::new(pre),
+            None => Arc::clone(post),
+        })
+        .collect();
+    let db = Arc::new(
+        slots.db[0]
+            .take()
+            .unwrap_or_else(|| DistMatrix::new_inf(0)),
+    );
+    DeltaState {
+        comp_dist,
+        pre_inj,
+        db,
+        direct: None,
+    }
+}
+
+/// `true` iff the `b x b` diagonal block at `gs` is bit-equal between
+/// the two dB matrices (INF == INF; the solver produces no NaNs).
+fn db_block_unchanged(old: &DistMatrix, new: &DistMatrix, gs: usize, b: usize) -> bool {
+    if old.n() != new.n() {
+        return false;
+    }
+    for i in 0..b {
+        let or = &old.row(gs + i)[gs..gs + b];
+        let nr = &new.row(gs + i)[gs..gs + b];
+        if or
+            .iter()
+            .zip(nr)
+            .any(|(a, z)| a.to_bits() != z.to_bits())
+        {
+            return false;
+        }
+    }
+    true
+}
+
+/// Execute a repair sub-DAG ([`lower_repair`]) against the retained
+/// state of the pre-delta solve: dirty tiles are reloaded from `g_new`
+/// and re-solved, the boundary recursion (when dirty) re-runs with
+/// clean tiles' *pre-injection* blocks served from `state` by `Arc`
+/// without copying, and every untouched tile flows into the returned
+/// state as a refcounted handle of the old one.
+///
+/// On the improve path (`allow_skip`, inserts + weight decreases) a
+/// clean boundary tile whose refreshed dB diagonal block comes back
+/// bit-unchanged skips its Inject + RerunFw entirely — determinism
+/// guarantees the rerun would reproduce the retained block bit-for-bit
+/// (same kernel, same pre-injection input, same dB block). Deletes and
+/// weight increases must not skip: an unchanged diagonal block does not
+/// prove unchanged *off*-diagonal paths through other tiles, so the
+/// conservative closure re-solves every boundary tile.
+///
+/// Every tile the repair does compute runs the *same* kernel with the
+/// same inputs in the same rounding order as a fresh [`solve_dag`] on
+/// `(g_new, plan)` — kernel choices come from the full plan, not the
+/// repair subset — so the returned state is bit-identical to a fresh
+/// full solve (asserted in tests and on the CLI path).
+///
+/// Returns the repaired state plus the *actual* repair spec: `spec`
+/// with the skipped tiles' rerun flags cleared, which re-lowers into
+/// the sub-DAG the simulator attributes.
+pub fn execute_delta(
+    g_new: &CsrGraph,
+    plan: &ApspPlan,
+    spec: &RepairSpec,
+    state: &DeltaState,
+    allow_skip: bool,
+    backend: &dyn TileBackend,
+    opts: SolveOptions,
+) -> (DeltaState, RepairSpec) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    check_memory_guard(plan, g_new, &opts);
+    size_arena_for(plan_tile_census(plan));
+    let tg = lower_repair(plan, spec);
+    let mut slots = Slots::new(plan);
+    let (local_serial, rerun_serial) = kernel_choices(plan, backend);
+    let k0 = if plan.depth() == 0 {
+        0
+    } else {
+        plan.levels[0].n_components()
+    };
+    let mut pre_snap = SnapSlots::new(k0);
+    let skipped: Vec<AtomicBool> = (0..k0).map(|_| AtomicBool::new(false)).collect();
+
+    {
+        let slots = &slots;
+        let pre_snap = &pre_snap;
+        let skipped = &skipped;
+        // serve a level-0 block to a boundary fill: dirty tiles from
+        // the repair slots, clean tiles from the retained state
+        // (pre-injection — exactly what a fresh solve's fill would see)
+        let deps = tg.dep_lists();
+        threads::par_dag(&deps, |ti| {
+            let kind = &tg.nodes[ti].kind;
+            match *kind {
+                TaskKind::Load { level: 1, comp } => {
+                    let lvl = &plan.levels[1];
+                    let c = &lvl.cs.components[comp as usize];
+                    let prev = &plan.levels[0];
+                    // SAFETY (read): dirty tiles' LocalFw precedes
+                    // BoundaryBuild(0), which precedes this Load; their
+                    // next writer, Inject(0), is behind CrossMerge(1).
+                    let block = fill_block_from_boundary(
+                        &prev.next_cross,
+                        prev,
+                        |gi| {
+                            if spec.dirty[gi] {
+                                unsafe { slots.d[0][gi].get() }
+                            } else {
+                                state.pre_inj[gi].as_ref()
+                            }
+                        },
+                        &c.verts,
+                        &lvl.cs.comp_of,
+                        comp,
+                    );
+                    // SAFETY (write): first writer of this slot.
+                    unsafe { slots.d[1][comp as usize].put(block) };
+                }
+                TaskKind::FinalLoad if plan.depth() == 1 => {
+                    let n = plan.final_n;
+                    let all: Vec<u32> = (0..n as u32).collect();
+                    let prev = &plan.levels[0];
+                    let comp_of = vec![0u32; n];
+                    // SAFETY (read/write): as the Load arm above.
+                    let block = fill_block_from_boundary(
+                        &prev.next_cross,
+                        prev,
+                        |gi| {
+                            if spec.dirty[gi] {
+                                unsafe { slots.d[0][gi].get() }
+                            } else {
+                                state.pre_inj[gi].as_ref()
+                            }
+                        },
+                        &all,
+                        &comp_of,
+                        0,
+                    );
+                    unsafe { slots.terminal.put(block) };
+                }
+                TaskKind::Inject { level: 0, comp } => {
+                    let ci = comp as usize;
+                    let lvl = &plan.levels[0];
+                    let b = lvl.cs.components[ci].n_boundary;
+                    let gs = lvl.group_start[ci];
+                    // SAFETY (read): db[0] was written by this task's
+                    // CrossMerge dependency.
+                    let db_new = unsafe { slots.db[0].get() };
+                    if spec.dirty[ci] {
+                        // freshly re-solved tile: snapshot its
+                        // pre-injection state for the next repair
+                        // generation, then inject as usual.
+                        // SAFETY: as in `solve_dag_retained`.
+                        let pre = unsafe { slots.d[0][ci].get() }.clone();
+                        unsafe { pre_snap.0[ci].put(pre) };
+                    } else {
+                        if allow_skip && db_block_unchanged(state.db.as_ref(), db_new, gs, b) {
+                            skipped[ci].store(true, Ordering::Release);
+                            return;
+                        }
+                        // clean tile with a changed dB block: stage a
+                        // copy of the retained pre-injection matrix and
+                        // let the normal inject + rerun run on it.
+                        // SAFETY (write): this Inject is the slot's
+                        // first toucher in the repair DAG.
+                        unsafe { slots.d[0][ci].put(state.pre_inj[ci].as_ref().clone()) };
+                    }
+                    run_task(kind, g_new, plan, backend, slots, &local_serial, &rerun_serial);
+                }
+                TaskKind::RerunFw { level: 0, comp } => {
+                    if skipped[comp as usize].load(Ordering::Acquire) {
+                        return;
+                    }
+                    run_task(kind, g_new, plan, backend, slots, &local_serial, &rerun_serial);
+                }
+                _ => run_task(kind, g_new, plan, backend, slots, &local_serial, &rerun_serial),
+            }
+        });
+    }
+
+    let mut comp_dist: Vec<Arc<DistMatrix>> = Vec::with_capacity(k0);
+    let mut pre_inj: Vec<Arc<DistMatrix>> = Vec::with_capacity(k0);
+    let mut rerun_actual = spec.rerun.clone();
+    for ci in 0..k0 {
+        if skipped[ci].load(Ordering::Acquire) {
+            rerun_actual[ci] = false;
+        }
+        // a slot is filled exactly for the tiles the repair touched;
+        // everything else is served from the old state by refcount
+        let post = match slots.d[0][ci].take() {
+            Some(m) => Arc::new(m),
+            None => Arc::clone(&state.comp_dist[ci]),
+        };
+        let pre = match pre_snap.0[ci].take() {
+            Some(m) => Arc::new(m), // dirty boundary tile: fresh snapshot
+            None if spec.dirty[ci] => Arc::clone(&post), // dirty, never injected
+            None => Arc::clone(&state.pre_inj[ci]),      // clean: unchanged
+        };
+        comp_dist.push(post);
+        pre_inj.push(pre);
+    }
+    let db = if spec.boundary_dirty && !slots.db.is_empty() {
+        Arc::new(
+            slots.db[0]
+                .take()
+                .unwrap_or_else(|| DistMatrix::new_inf(0)),
+        )
+    } else {
+        Arc::clone(&state.db)
+    };
+    let direct = if plan.depth() == 0 {
+        Some(Arc::new(
+            slots
+                .terminal
+                .take()
+                .unwrap_or_else(|| DistMatrix::new_inf(0)),
+        ))
+    } else {
+        None
+    };
+    (
+        DeltaState {
+            comp_dist,
+            pre_inj,
+            db,
+            direct,
+        },
+        RepairSpec {
+            dirty: spec.dirty.clone(),
+            rerun: rerun_actual,
+            boundary_dirty: spec.boundary_dirty,
+        },
+    )
 }
 
 /// Tile-buffer census of one plan's DAG run, in `f32` elements: every
@@ -1103,6 +1432,128 @@ mod tests {
                 memory_limit_bytes: limit,
             },
         );
+    }
+
+    fn check_repair(
+        g: &CsrGraph,
+        plan: &ApspPlan,
+        state: &crate::apsp::delta::DeltaState,
+        batch: &[crate::apsp::delta::EdgeDelta],
+        be: &dyn TileBackend,
+    ) {
+        use crate::apsp::delta::{self, DeltaClass};
+        delta::validate_deltas(g, batch).unwrap();
+        let allow_skip = delta::classify_deltas(g, batch) == DeltaClass::Improve;
+        let g2 = delta::apply_deltas(g, batch);
+        let plan2 = delta::repair_plan(plan, &g2).expect("no structural change");
+        let spec = delta::dirty_spec(&plan2, batch);
+        let (repaired, actual) =
+            execute_delta(&g2, &plan2, &spec, state, allow_skip, be, SolveOptions::default());
+        let (_, fresh) = solve_dag_retained(&g2, &plan2, be, SolveOptions::default());
+        assert_eq!(
+            repaired.max_diff(&fresh),
+            0.0,
+            "repair must be bit-identical to a fresh solve on the repaired plan"
+        );
+        assert!(actual.dirty_tiles() <= spec.dirty_tiles());
+    }
+
+    #[test]
+    fn retained_solve_matches_dag_solve() {
+        let g = generators::newman_watts_strogatz(300, 4, 0.12, Weights::Uniform(1.0, 5.0), 71);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 48,
+                max_depth: usize::MAX,
+                seed: 71,
+            },
+        );
+        let be = NativeBackend;
+        let dag = solve_dag(&g, &plan, &be, SolveOptions::default());
+        let (trace, state) = solve_dag_retained(&g, &plan, &be, SolveOptions::default());
+        assert_eq!(dag.trace, trace, "retained solve must lower identically");
+        let sol = state.as_solution(&plan, &g, trace);
+        assert_eq!(
+            dag.materialize_full(&be).max_diff(&sol.materialize_full(&be)),
+            0.0,
+            "retained solution must be bit-identical to solve_dag"
+        );
+    }
+
+    #[test]
+    fn delta_repair_bit_identical_to_fresh_solve() {
+        use crate::apsp::delta::EdgeDelta;
+        let g = generators::newman_watts_strogatz(400, 4, 0.12, Weights::Uniform(1.0, 5.0), 72);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 48,
+                max_depth: usize::MAX,
+                seed: 72,
+            },
+        );
+        let be = NativeBackend;
+        let (_, state) = solve_dag_retained(&g, &plan, &be, SolveOptions::default());
+        let edges: Vec<(u32, u32, f32)> = g.edges().filter(|&(u, v, _)| u < v).take(6).collect();
+        // improve path: weight decreases (skip eligible)
+        let improve: Vec<EdgeDelta> = edges
+            .iter()
+            .map(|&(u, v, w)| EdgeDelta::Reweight { u, v, w: w * 0.5 })
+            .collect();
+        check_repair(&g, &plan, &state, &improve, &be);
+        // resolve path: a delete forces the conservative closure
+        let resolve = vec![EdgeDelta::Delete {
+            u: edges[0].0,
+            v: edges[0].1,
+        }];
+        check_repair(&g, &plan, &state, &resolve, &be);
+        // mixed batch: insert + increase + delete
+        let (mu, mv) = 'found: {
+            for u in 0..g.n() as u32 {
+                for v in (u + 1)..g.n() as u32 {
+                    if g.edge_weight(u as usize, v as usize).is_none() {
+                        break 'found (u, v);
+                    }
+                }
+            }
+            panic!("graph is complete");
+        };
+        let mixed = vec![
+            EdgeDelta::Insert { u: mu, v: mv, w: 1.5 },
+            EdgeDelta::Reweight {
+                u: edges[1].0,
+                v: edges[1].1,
+                w: edges[1].2 * 3.0,
+            },
+            EdgeDelta::Delete {
+                u: edges[2].0,
+                v: edges[2].1,
+            },
+        ];
+        check_repair(&g, &plan, &state, &mixed, &be);
+    }
+
+    #[test]
+    fn delta_repair_on_direct_solve() {
+        use crate::apsp::delta::{self, EdgeDelta};
+        let g = generators::complete(24, Weights::Uniform(1.0, 2.0), 73);
+        let plan = build_plan(
+            &g,
+            PlanOptions {
+                tile_limit: 128,
+                max_depth: usize::MAX,
+                seed: 73,
+            },
+        );
+        assert_eq!(plan.depth(), 0);
+        let be = NativeBackend;
+        let (_, state) = solve_dag_retained(&g, &plan, &be, SolveOptions::default());
+        let (u, v, w) = g.edges().next().unwrap();
+        check_repair(&g, &plan, &state, &[EdgeDelta::Reweight { u, v, w: w * 0.5 }], &be);
+        let g2 = delta::apply_deltas(&g, &[EdgeDelta::Delete { u, v }]);
+        assert!(delta::repair_plan(&plan, &g2).is_some(), "depth-0 plans always repair");
+        assert!(state.direct.is_some());
     }
 
     #[test]

@@ -158,6 +158,12 @@ pub trait ResultStore {
     /// when the store is disabled (zero capacity), and a clean error
     /// when the entry alone exceeds the byte budget (nothing evicted).
     fn put(&mut self, key: u64, entry: StoreEntry) -> Result<bool>;
+    /// Explicitly invalidate a fingerprint, freeing its byte budget
+    /// immediately (the delta path calls this on the pre-delta
+    /// fingerprint: the entry is provably stale, so waiting for LRU to
+    /// chance-evict it would squat budget a live result could use).
+    /// Returns whether an entry was removed.
+    fn remove(&mut self, key: u64) -> bool;
     /// Whether a fingerprint is present (no LRU refresh).
     fn contains(&self, key: u64) -> bool;
     /// Stored entry count.
@@ -254,6 +260,16 @@ impl ResultStore for MemoryStore {
         }
         self.entries.push((key, entry));
         Ok(true)
+    }
+
+    fn remove(&mut self, key: u64) -> bool {
+        match self.entries.iter().position(|(k, _)| *k == key) {
+            Some(i) => {
+                self.entries.remove(i);
+                true
+            }
+            None => false,
+        }
     }
 
     fn contains(&self, key: u64) -> bool {
@@ -357,6 +373,24 @@ mod tests {
         s.put(3, entry(40, 3.0)).unwrap(); // evicts key 1 (cheapest)
         assert!(!s.contains(1));
         assert_eq!(s.bytes_used(), 80);
+    }
+
+    #[test]
+    fn remove_frees_byte_budget_immediately() {
+        // the delta-path bug this guards: putting the post-delta
+        // fingerprint without removing the stale one left both entries
+        // squatting the byte budget until LRU chance-evicted the old one
+        let mut s = MemoryStore::new(10, 100);
+        s.put(1, entry(60, 9.0)).unwrap();
+        assert!(s.remove(1), "present entry must report removal");
+        assert!(!s.remove(1), "second removal is a no-op");
+        assert_eq!(s.bytes_used(), 0);
+        // the freed budget is immediately usable: both the new
+        // fingerprint and an unrelated entry now fit without eviction
+        s.put(2, entry(60, 9.0)).unwrap();
+        s.put(3, entry(40, 1.0)).unwrap();
+        assert!(s.contains(2) && s.contains(3));
+        assert_eq!(s.bytes_used(), 100);
     }
 
     #[test]

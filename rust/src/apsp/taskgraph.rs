@@ -304,6 +304,640 @@ fn cross_merge_ops(lvl: &PlanLevel) -> Vec<Op> {
     ]
 }
 
+/// The cross-merge ops restricted to ordered component pairs that touch
+/// at least one *changed* component — the modeled cost of refreshing
+/// only the cross-block query products a delta repair invalidated.
+/// With every component changed this reduces exactly to
+/// [`cross_merge_ops`] (property-tested below).
+fn cross_merge_ops_subset(lvl: &PlanLevel, changed: &[bool]) -> Vec<Op> {
+    let comps = &lvl.cs.components;
+    let k = comps.len();
+    debug_assert_eq!(changed.len(), k);
+    if k < 2 {
+        return Vec::new();
+    }
+    let nvec: Vec<u64> = comps.iter().map(|c| c.n() as u64).collect();
+    let bvec: Vec<u64> = comps.iter().map(|c| c.n_boundary as u64).collect();
+    let ntot: u64 = nvec.iter().sum();
+    let btot: u64 = bvec.iter().sum();
+    let s_nb: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * b).sum();
+    let s_nn: u64 = nvec.iter().map(|n| n * n).sum();
+    // sums over the *unchanged* component set U; every pair with both
+    // ends in U is skipped, so each Σ_{c1≠c2} f(c1)·g(c2) term shrinks
+    // by (Σ_U f)(Σ_U g) − Σ_U f·g
+    let (mut ku, mut u_n, mut u_b, mut u_nb, mut u_nn) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    let (mut u_nbb, mut u_nnb) = (0u64, 0u64);
+    for ci in 0..k {
+        if changed[ci] {
+            continue;
+        }
+        let (n, b) = (nvec[ci], bvec[ci]);
+        ku += 1;
+        u_n += n;
+        u_b += b;
+        u_nb += n * b;
+        u_nn += n * n;
+        u_nbb += n * b * b;
+        u_nnb += n * n * b;
+    }
+    let pairs = (k * (k - 1)) as u64 - ku * ku.saturating_sub(1);
+    if pairs == 0 {
+        return Vec::new();
+    }
+    let stage1_full: u64 = nvec
+        .iter()
+        .zip(&bvec)
+        .map(|(n, b)| n * b * (btot - b))
+        .sum();
+    let stage2_full: u64 = nvec.iter().zip(&bvec).map(|(n, b)| n * (s_nb - b * n)).sum();
+    let stage1 = stage1_full - (u_nb * u_b - u_nbb);
+    let stage2 = stage2_full - (u_n * u_nb - u_nnb);
+    let out_elems = (ntot * ntot - s_nn) - (u_n * u_n - u_nn);
+    let s1rows_full: u64 = nvec
+        .iter()
+        .map(|n| n * btot)
+        .sum::<u64>()
+        .saturating_sub(s_nb);
+    let rows = (s1rows_full - (u_n * u_b - u_nb)) + out_elems;
+    // only the dB slices some changed pair reads leave the die
+    let fetch_bytes = (btot * btot - u_b * u_b) * 4;
+    vec![
+        Op::FetchBoundary { bytes: fetch_bytes },
+        Op::MpMergeAgg {
+            pairs,
+            stage1_madds: stage1,
+            stage2_madds: stage2,
+            out_elems,
+            rows,
+        },
+    ]
+}
+
+/// Which tiles a delta repair must recompute, expressed against the
+/// (repaired) plan's level-0 components. Built by [`super::delta`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepairSpec {
+    /// Components whose *local* solve is stale — their block is
+    /// reloaded from the graph and re-FW'd (an intra-component delta
+    /// lands here).
+    pub dirty: Vec<bool>,
+    /// Components whose *post-injection* result must be rebuilt
+    /// (Inject + RerunFw against the refreshed dB). Meaningful only
+    /// when `boundary_dirty`; the conservative closure marks every
+    /// boundary component, the post-execution spec only those whose dB
+    /// diagonal block actually changed.
+    pub rerun: Vec<bool>,
+    /// Whether the boundary recursion (levels ≥ 1, the terminal solve,
+    /// and every merge) is stale. False only when every delta is
+    /// confined to zero-boundary components.
+    pub boundary_dirty: bool,
+}
+
+impl RepairSpec {
+    /// Number of stale level-0 tiles (the report's dirty-tile count):
+    /// locally-dirty tiles plus rerun tiles, counted once each.
+    pub fn dirty_tiles(&self) -> usize {
+        self.dirty
+            .iter()
+            .zip(&self.rerun)
+            .filter(|(d, r)| **d || (self.boundary_dirty && **r))
+            .count()
+    }
+}
+
+/// Lower a delta-repair sub-DAG: the subset of [`lower`]'s emission
+/// that recomputes exactly the dirty closure in `spec`, leaving every
+/// clean tile to be served from the retained solution. With an
+/// everything-dirty spec the emitted trace is bit-identical to the full
+/// lowering (tested below) — the repair path runs the *same* kernels in
+/// the same order, just skipping work whose inputs didn't change.
+pub fn lower_repair(plan: &ApspPlan, spec: &RepairSpec) -> TaskGraph {
+    let depth = plan.depth();
+    let mut tg = TaskGraph::default();
+
+    if depth == 0 {
+        // single-tile plan: the repair is a terminal re-solve
+        let n = plan.final_n as u64;
+        let step = tg.begin_step(0, Phase::Load);
+        let fl = tg.add(
+            TaskKind::FinalLoad,
+            step,
+            vec![Op::LoadComponent {
+                n,
+                nnz: plan.final_nnz,
+            }],
+            Vec::new(),
+        );
+        let step = tg.begin_step(0, Phase::FinalSolve);
+        let fs = tg.add(
+            TaskKind::FinalSolve,
+            step,
+            vec![Op::TileFw { n, rerun: false }],
+            vec![fl],
+        );
+        let step = tg.begin_step(0, Phase::Store);
+        tg.add(
+            TaskKind::Store { level: 0 },
+            step,
+            vec![Op::StoreCsr {
+                dense_elems: n * n,
+                csr_bytes: csr_bytes_estimate(n * n),
+            }],
+            vec![fs],
+        );
+        debug_assert!(tg.validate().is_ok(), "{:?}", tg.validate());
+        return tg;
+    }
+
+    let lvl0 = &plan.levels[0];
+    let k0 = lvl0.n_components();
+    debug_assert_eq!(spec.dirty.len(), k0);
+    debug_assert_eq!(spec.rerun.len(), k0);
+
+    // ---- level 0 descent: reload + re-solve only the dirty tiles
+    let step = tg.begin_step(0, Phase::Load);
+    let mut loads: Vec<Option<TaskId>> = vec![None; k0];
+    for (ci, c) in lvl0.cs.components.iter().enumerate() {
+        if !spec.dirty[ci] {
+            continue;
+        }
+        let ops = if c.n() > 0 {
+            vec![Op::LoadComponent {
+                n: c.n() as u64,
+                nnz: lvl0.comp_nnz[ci],
+            }]
+        } else {
+            Vec::new()
+        };
+        loads[ci] = Some(tg.add(
+            TaskKind::Load {
+                level: 0,
+                comp: ci as u32,
+            },
+            step,
+            ops,
+            Vec::new(),
+        ));
+    }
+    let step = tg.begin_step(0, Phase::LocalFw);
+    let mut pre0: Vec<Option<TaskId>> = loads.clone();
+    for (ci, c) in lvl0.cs.components.iter().enumerate() {
+        if spec.dirty[ci] && c.n() > 1 {
+            pre0[ci] = Some(tg.add(
+                TaskKind::LocalFw {
+                    level: 0,
+                    comp: ci as u32,
+                },
+                step,
+                vec![Op::TileFw {
+                    n: c.n() as u64,
+                    rerun: false,
+                }],
+                vec![loads[ci].expect("dirty component was loaded")],
+            ));
+        }
+    }
+
+    if !spec.boundary_dirty {
+        // internal-only repair: every dirty tile is zero-boundary, so
+        // its local FW is final — dB and all other tiles are retained
+        debug_assert!(lvl0
+            .cs
+            .components
+            .iter()
+            .enumerate()
+            .all(|(ci, c)| !spec.dirty[ci] || c.n_boundary == 0));
+        let step = tg.begin_step(0, Phase::Store);
+        let dense: u64 = lvl0
+            .cs
+            .components
+            .iter()
+            .enumerate()
+            .filter(|(ci, _)| spec.dirty[*ci])
+            .map(|(_, c)| (c.n() * c.n()) as u64)
+            .sum();
+        let deps: Vec<TaskId> = pre0.iter().flatten().copied().collect();
+        tg.add(
+            TaskKind::Store { level: 0 },
+            step,
+            vec![Op::StoreCsr {
+                dense_elems: dense,
+                csr_bytes: csr_bytes_estimate(dense),
+            }],
+            deps,
+        );
+        debug_assert!(tg.validate().is_ok(), "{:?}", tg.validate());
+        return tg;
+    }
+
+    // ---- boundary build 0: regather only the dirty boundary blocks
+    // (clean blocks are already resident); the cross-edge stream is
+    // re-read in full because any weight may have changed
+    let nb0 = lvl0.n_boundary();
+    debug_assert!(nb0 > 0, "boundary_dirty on a boundary-free plan");
+    let step = tg.begin_step(0, Phase::BoundaryBuild);
+    let gather: u64 = lvl0
+        .cs
+        .components
+        .iter()
+        .enumerate()
+        .filter(|(ci, _)| spec.dirty[*ci])
+        .map(|(_, c)| (c.n_boundary * c.n_boundary) as u64)
+        .sum();
+    let bb_deps: Vec<TaskId> = lvl0
+        .cs
+        .components
+        .iter()
+        .enumerate()
+        .filter(|(ci, c)| c.n_boundary > 0 && spec.dirty[*ci])
+        .filter_map(|(ci, _)| pre0[ci])
+        .collect();
+    let mut bb_prev = tg.add(
+        TaskKind::BoundaryBuild { level: 0 },
+        step,
+        vec![Op::BuildBoundary {
+            nb: nb0 as u64,
+            cross_nnz: lvl0.next_cross.m() as u64,
+            gather_elems: gather,
+        }],
+        bb_deps,
+    );
+
+    // ---- levels ≥ 1 descend + terminal + unwind in full, exactly as
+    // [`lower`]: the boundary recursion is monolithic — any stale dB
+    // entry invalidates the whole reduced problem
+    let mut pre_writer: Vec<Vec<TaskId>> = vec![Vec::new()];
+    let mut bb_id: Vec<Option<TaskId>> = vec![None; depth];
+    bb_id[0] = Some(bb_prev);
+    for (l, lvl) in plan.levels.iter().enumerate().skip(1) {
+        let lu = l as u32;
+        let step = tg.begin_step(lu, Phase::Load);
+        let mut lds = Vec::with_capacity(lvl.n_components());
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            let ops = if c.n() > 0 {
+                vec![Op::LoadComponent {
+                    n: c.n() as u64,
+                    nnz: lvl.comp_nnz[ci],
+                }]
+            } else {
+                Vec::new()
+            };
+            lds.push(tg.add(
+                TaskKind::Load {
+                    level: lu,
+                    comp: ci as u32,
+                },
+                step,
+                ops,
+                vec![bb_prev],
+            ));
+        }
+        let step = tg.begin_step(lu, Phase::LocalFw);
+        let mut pw = Vec::with_capacity(lvl.n_components());
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            if c.n() > 1 {
+                pw.push(tg.add(
+                    TaskKind::LocalFw {
+                        level: lu,
+                        comp: ci as u32,
+                    },
+                    step,
+                    vec![Op::TileFw {
+                        n: c.n() as u64,
+                        rerun: false,
+                    }],
+                    vec![lds[ci]],
+                ));
+            } else {
+                pw.push(lds[ci]);
+            }
+        }
+        pre_writer.push(pw);
+
+        let nb = lvl.n_boundary();
+        if nb == 0 {
+            break;
+        }
+        let step = tg.begin_step(lu, Phase::BoundaryBuild);
+        let gather: u64 = lvl
+            .cs
+            .components
+            .iter()
+            .map(|c| (c.n_boundary * c.n_boundary) as u64)
+            .sum();
+        let deps: Vec<TaskId> = lvl
+            .cs
+            .components
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.n_boundary > 0)
+            .map(|(ci, _)| pre_writer[l][ci])
+            .collect();
+        bb_prev = tg.add(
+            TaskKind::BoundaryBuild { level: lu },
+            step,
+            vec![Op::BuildBoundary {
+                nb: nb as u64,
+                cross_nnz: lvl.next_cross.m() as u64,
+                gather_elems: gather,
+            }],
+            deps,
+        );
+        bb_id[l] = Some(bb_prev);
+    }
+
+    let reached_terminal = plan.levels[depth - 1].n_boundary() > 0;
+    let mut final_solve: Option<TaskId> = None;
+    if reached_terminal && plan.final_n > 0 {
+        let du = depth as u32;
+        let step = tg.begin_step(du, Phase::Load);
+        let fl = tg.add(
+            TaskKind::FinalLoad,
+            step,
+            vec![Op::LoadComponent {
+                n: plan.final_n as u64,
+                nnz: plan.final_nnz,
+            }],
+            vec![bb_id[depth - 1].expect("reached terminal")],
+        );
+        let step = tg.begin_step(du, Phase::FinalSolve);
+        final_solve = Some(tg.add(
+            TaskKind::FinalSolve,
+            step,
+            vec![Op::TileFw {
+                n: plan.final_n as u64,
+                rerun: false,
+            }],
+            vec![fl],
+        ));
+    }
+
+    let mut final_writer: Vec<Vec<TaskId>> = vec![Vec::new(); depth];
+    let mut db_of: Vec<Option<TaskId>> = vec![None; depth];
+    for l in (1..depth).rev() {
+        let lvl = &plan.levels[l];
+        let lu = l as u32;
+        let nb = lvl.n_boundary();
+        if nb == 0 {
+            final_writer[l] = pre_writer[l].clone();
+            continue;
+        }
+        let sub = l + 1;
+        let cm = if sub == depth {
+            let step = tg.begin_step(sub as u32, Phase::CrossMerge);
+            tg.add(
+                TaskKind::CrossMerge { level: sub as u32 },
+                step,
+                Vec::new(),
+                final_solve.into_iter().collect(),
+            )
+        } else {
+            let step = tg.begin_step(sub as u32, Phase::CrossMerge);
+            let mut deps = final_writer[sub].clone();
+            deps.extend(db_of[sub]);
+            tg.add(
+                TaskKind::CrossMerge { level: sub as u32 },
+                step,
+                cross_merge_ops(&plan.levels[sub]),
+                deps,
+            )
+        };
+        db_of[l] = Some(cm);
+
+        let step = tg.begin_step(lu, Phase::Inject);
+        let mut inject_id: Vec<Option<TaskId>> = vec![None; lvl.n_components()];
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            if c.n_boundary == 0 {
+                continue;
+            }
+            inject_id[ci] = Some(tg.add(
+                TaskKind::Inject {
+                    level: lu,
+                    comp: ci as u32,
+                },
+                step,
+                vec![Op::Inject {
+                    n: c.n() as u64,
+                    nb: c.n_boundary as u64,
+                }],
+                vec![cm, pre_writer[l][ci]],
+            ));
+        }
+        let step = tg.begin_step(lu, Phase::RerunFw);
+        let mut fw = pre_writer[l].clone();
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            if let Some(inj) = inject_id[ci] {
+                fw[ci] = inj;
+                if c.n() > 1 {
+                    fw[ci] = tg.add(
+                        TaskKind::RerunFw {
+                            level: lu,
+                            comp: ci as u32,
+                        },
+                        step,
+                        vec![Op::TileFw {
+                            n: c.n() as u64,
+                            rerun: true,
+                        }],
+                        vec![inj],
+                    );
+                }
+            }
+        }
+        final_writer[l] = fw;
+
+        let nb64 = nb as u64;
+        let step = tg.begin_step(lu, Phase::Sync);
+        let sync_deps: Vec<TaskId> = lvl
+            .cs
+            .components
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.n_boundary > 0)
+            .map(|(ci, _)| final_writer[l][ci])
+            .collect();
+        let sync = tg.add(
+            TaskKind::Sync { level: lu },
+            step,
+            vec![Op::SyncBoundary {
+                bytes: nb64 * nb64 * 4,
+            }],
+            sync_deps,
+        );
+        let step = tg.begin_step(lu, Phase::Store);
+        let dense: u64 = lvl
+            .cs
+            .components
+            .iter()
+            .map(|c| (c.n() * c.n()) as u64)
+            .sum();
+        let mut store_deps = vec![sync];
+        for (ci, c) in lvl.cs.components.iter().enumerate() {
+            if c.n_boundary == 0 {
+                store_deps.push(final_writer[l][ci]);
+            }
+        }
+        tg.add(
+            TaskKind::Store { level: lu },
+            step,
+            vec![
+                Op::StoreCsr {
+                    dense_elems: dense,
+                    csr_bytes: csr_bytes_estimate(dense),
+                },
+                Op::StoreDense {
+                    bytes: nb64 * nb64 * 4,
+                },
+            ],
+            store_deps,
+        );
+    }
+
+    // ---- level-0 unwind: refresh dB, then inject + rerun only the
+    // components in the rerun set (clean tiles keep their retained
+    // post-injection matrices)
+    let sub = 1;
+    let cm = if sub == depth {
+        let step = tg.begin_step(sub as u32, Phase::CrossMerge);
+        tg.add(
+            TaskKind::CrossMerge { level: sub as u32 },
+            step,
+            Vec::new(),
+            final_solve.into_iter().collect(),
+        )
+    } else {
+        let step = tg.begin_step(sub as u32, Phase::CrossMerge);
+        let mut deps = final_writer[sub].clone();
+        deps.extend(db_of[sub]);
+        tg.add(
+            TaskKind::CrossMerge { level: sub as u32 },
+            step,
+            cross_merge_ops(&plan.levels[sub]),
+            deps,
+        )
+    };
+
+    let step = tg.begin_step(0, Phase::Inject);
+    let mut inject_id: Vec<Option<TaskId>> = vec![None; k0];
+    for (ci, c) in lvl0.cs.components.iter().enumerate() {
+        if c.n_boundary == 0 || !spec.rerun[ci] {
+            continue;
+        }
+        let mut deps = vec![cm];
+        deps.extend(pre0[ci]);
+        inject_id[ci] = Some(tg.add(
+            TaskKind::Inject {
+                level: 0,
+                comp: ci as u32,
+            },
+            step,
+            vec![Op::Inject {
+                n: c.n() as u64,
+                nb: c.n_boundary as u64,
+            }],
+            deps,
+        ));
+    }
+    let step = tg.begin_step(0, Phase::RerunFw);
+    let mut fw0: Vec<Option<TaskId>> = pre0.clone();
+    for (ci, c) in lvl0.cs.components.iter().enumerate() {
+        if let Some(inj) = inject_id[ci] {
+            fw0[ci] = Some(inj);
+            if c.n() > 1 {
+                fw0[ci] = Some(tg.add(
+                    TaskKind::RerunFw {
+                        level: 0,
+                        comp: ci as u32,
+                    },
+                    step,
+                    vec![Op::TileFw {
+                        n: c.n() as u64,
+                        rerun: true,
+                    }],
+                    vec![inj],
+                ));
+            }
+        }
+    }
+
+    // sync/store only the rows the repair rewrote
+    let nb64 = nb0 as u64;
+    let sync_rows: u64 = lvl0
+        .cs
+        .components
+        .iter()
+        .enumerate()
+        .filter(|(ci, _)| spec.rerun[*ci])
+        .map(|(_, c)| c.n_boundary as u64)
+        .sum();
+    let step = tg.begin_step(0, Phase::Sync);
+    let sync_deps: Vec<TaskId> = lvl0
+        .cs
+        .components
+        .iter()
+        .enumerate()
+        .filter(|(ci, c)| c.n_boundary > 0 && spec.rerun[*ci])
+        .filter_map(|(ci, _)| fw0[ci])
+        .collect();
+    let sync = tg.add(
+        TaskKind::Sync { level: 0 },
+        step,
+        vec![Op::SyncBoundary {
+            bytes: sync_rows * nb64 * 4,
+        }],
+        sync_deps,
+    );
+    let step = tg.begin_step(0, Phase::Store);
+    let dense: u64 = lvl0
+        .cs
+        .components
+        .iter()
+        .enumerate()
+        .filter(|(ci, _)| spec.dirty[*ci] || spec.rerun[*ci])
+        .map(|(_, c)| (c.n() * c.n()) as u64)
+        .sum();
+    let mut store_deps = vec![sync];
+    for (ci, c) in lvl0.cs.components.iter().enumerate() {
+        if c.n_boundary == 0 && spec.dirty[ci] {
+            store_deps.extend(fw0[ci]);
+        }
+    }
+    tg.add(
+        TaskKind::Store { level: 0 },
+        step,
+        vec![
+            Op::StoreCsr {
+                dense_elems: dense,
+                csr_bytes: csr_bytes_estimate(dense),
+            },
+            Op::StoreDense {
+                bytes: sync_rows * nb64 * 4,
+            },
+        ],
+        store_deps,
+    );
+
+    // ---- top: cross merges over pairs touching a changed component
+    let changed: Vec<bool> = spec
+        .dirty
+        .iter()
+        .zip(&spec.rerun)
+        .map(|(d, r)| *d || *r)
+        .collect();
+    let step = tg.begin_step(0, Phase::CrossMerge);
+    let mut deps: Vec<TaskId> = fw0.iter().flatten().copied().collect();
+    deps.push(cm);
+    tg.add(
+        TaskKind::CrossMerge { level: 0 },
+        step,
+        cross_merge_ops_subset(lvl0, &changed),
+        deps,
+    );
+
+    debug_assert!(tg.validate().is_ok(), "{:?}", tg.validate());
+    tg
+}
+
 /// Lower a recursion plan to the tile-task DAG. Pure plan walk — no
 /// graph data, no numerics; both execution modes share the result.
 pub fn lower(plan: &ApspPlan) -> TaskGraph {
@@ -887,6 +1521,129 @@ mod tests {
                 "unexpected dep kind {:?}",
                 dn.kind
             );
+        }
+    }
+
+    #[test]
+    fn repair_with_everything_dirty_matches_full_lowering() {
+        // the all-dirty repair must emit bit-for-bit the ops of the
+        // full lowering: same kernels, same order — the repair path is
+        // a strict subset, never a different algorithm
+        for (topo, n, tile, seed) in [
+            (Topology::Nws, 500usize, 48usize, 1u64),
+            (Topology::Er, 350, 32, 2),
+            (Topology::OgbnProxy, 800, 96, 3),
+            (Topology::Nws, 60, 128, 5), // direct solve (depth 0)
+        ] {
+            let plan = plan_for(n, tile, seed, topo);
+            let k0 = if plan.depth() == 0 {
+                0
+            } else {
+                plan.levels[0].n_components()
+            };
+            let spec = RepairSpec {
+                dirty: vec![true; k0],
+                rerun: vec![true; k0],
+                boundary_dirty: plan.depth() > 0,
+            };
+            let tg = lower_repair(&plan, &spec);
+            tg.validate().unwrap();
+            if plan.depth() == 0 {
+                // depth-0 repair is a terminal re-solve; compare madds
+                assert_eq!(
+                    tg.to_trace().total_madds(),
+                    lower(&plan).to_trace().total_madds()
+                );
+            } else {
+                assert_eq!(
+                    tg.to_trace(),
+                    lower(&plan).to_trace(),
+                    "{} n={n} tile={tile}",
+                    topo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn subset_cross_merge_matches_full_when_all_changed() {
+        let plan = plan_for(900, 48, 7, Topology::Nws);
+        let lvl = &plan.levels[0];
+        let all = vec![true; lvl.n_components()];
+        assert_eq!(cross_merge_ops_subset(lvl, &all), cross_merge_ops(lvl));
+        // no changed components → no merge work
+        let none = vec![false; lvl.n_components()];
+        assert_eq!(cross_merge_ops_subset(lvl, &none), Vec::new());
+    }
+
+    #[test]
+    fn subset_cross_merge_is_monotone_in_changed_set() {
+        let plan = plan_for(900, 48, 7, Topology::Nws);
+        let lvl = &plan.levels[0];
+        let k = lvl.n_components();
+        assert!(k >= 2);
+        let mut changed = vec![false; k];
+        let mut prev_madds = 0u64;
+        for ci in 0..k {
+            changed[ci] = true;
+            let madds: u64 = cross_merge_ops_subset(lvl, &changed)
+                .iter()
+                .map(|op| op.madds())
+                .sum();
+            assert!(
+                madds >= prev_madds,
+                "cross-merge madds shrank as changed set grew"
+            );
+            prev_madds = madds;
+        }
+    }
+
+    #[test]
+    fn repair_scales_with_dirty_tile_count() {
+        let plan = plan_for(900, 48, 7, Topology::Nws);
+        assert!(plan.depth() >= 1);
+        let k0 = plan.levels[0].n_components();
+        let full = lower(&plan).to_trace().total_madds();
+        // one dirty boundary tile, conservative rerun of all boundary
+        // components: still strictly less merge work than a full solve
+        let mut dirty = vec![false; k0];
+        dirty[0] = true;
+        let rerun: Vec<bool> = plan.levels[0]
+            .cs
+            .components
+            .iter()
+            .map(|c| c.n_boundary > 0)
+            .collect();
+        let one = lower_repair(
+            &plan,
+            &RepairSpec {
+                dirty,
+                rerun,
+                boundary_dirty: true,
+            },
+        );
+        one.validate().unwrap();
+        let one_madds = one.to_trace().total_madds();
+        assert!(one_madds < full, "repair of one tile must cost under full");
+        // internal-only repair of one zero-boundary tile, if any
+        if let Some(ci) = plan.levels[0]
+            .cs
+            .components
+            .iter()
+            .position(|c| c.n_boundary == 0 && c.n() > 1)
+        {
+            let mut dirty = vec![false; k0];
+            dirty[ci] = true;
+            let internal = lower_repair(
+                &plan,
+                &RepairSpec {
+                    dirty,
+                    rerun: vec![false; k0],
+                    boundary_dirty: false,
+                },
+            );
+            internal.validate().unwrap();
+            assert!(internal.to_trace().total_madds() < one_madds);
         }
     }
 

@@ -143,6 +143,18 @@ pub struct SystemConfig {
     /// Result store: persist compressed (finite-entry) payloads instead
     /// of dense f32 matrices (`run.store.compression`).
     pub store_compression: bool,
+    /// Delta engine: bit-validate every repaired state against a fresh
+    /// full solve of the mutated graph (`run.delta.validate`). On by
+    /// default in functional mode — the repair path's contract is
+    /// bit-identity, so validation is an equality check, not a
+    /// tolerance band. Estimate mode has no numerics to compare.
+    pub delta_validate: bool,
+    /// Delta engine: allow the improve-path skip — a clean boundary
+    /// tile whose refreshed dB block is bit-unchanged skips its
+    /// inject + rerun (`run.delta.skip`). Disabling forces the
+    /// conservative closure on every batch (a debugging knob; results
+    /// are bit-identical either way).
+    pub delta_skip: bool,
 }
 
 impl Default for SystemConfig {
@@ -168,6 +180,8 @@ impl Default for SystemConfig {
             store_capacity: 8,
             store_bytes: 1 << 32,
             store_compression: true,
+            delta_validate: true,
+            delta_skip: true,
         }
     }
 }
@@ -219,6 +233,9 @@ impl SystemConfig {
         self.store_capacity = cf.get_usize("run.store.capacity", self.store_capacity);
         self.store_bytes = cf.get_usize("run.store.bytes", self.store_bytes as usize) as u64;
         self.store_compression = cf.get_bool("run.store.compression", self.store_compression);
+        // [run.delta] block
+        self.delta_validate = cf.get_bool("run.delta.validate", self.delta_validate);
+        self.delta_skip = cf.get_bool("run.delta.skip", self.delta_skip);
         // hardware overrides
         let hw = &mut self.hw;
         hw.tiles_per_die = cf.get_usize("hardware.tiles_per_die", hw.tiles_per_die);
@@ -273,6 +290,12 @@ impl SystemConfig {
             self.store_enabled = true;
             self.store_capacity = args.get_usize("store-capacity", self.store_capacity);
         }
+        if args.flag("delta-no-validate") {
+            self.delta_validate = false;
+        }
+        if args.flag("delta-no-skip") {
+            self.delta_skip = false;
+        }
     }
 
     pub fn plan_options(&self) -> crate::apsp::plan::PlanOptions {
@@ -325,6 +348,9 @@ pub enum CliMode {
     /// `--admit`: submit N graphs to the async admission pipeline on a
     /// modeled arrival schedule.
     Admission,
+    /// `--deltas FILE`: solve once, then replay the file's edge-delta
+    /// batches through the incremental repair engine.
+    Delta,
 }
 
 /// Resolve the `apsp` execution mode from the CLI flags.
@@ -335,6 +361,7 @@ pub enum CliMode {
 pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
     let admit = args.flag("admit") || args.get("admit").is_some();
     let batch_flag = args.flag("batch") || args.get("batch").is_some();
+    let delta = args.get("deltas").is_some();
     let batch = batch_flag || (args.get("graphs").is_some() && !admit);
     let sharded = args.get("stacks").is_some();
     let mut picked: Vec<&str> = Vec::new();
@@ -347,6 +374,9 @@ pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
     if admit {
         picked.push("--admit");
     }
+    if delta {
+        picked.push("--deltas");
+    }
     crate::ensure!(
         picked.len() <= 1,
         "{} select different execution modes; pick one",
@@ -356,14 +386,19 @@ pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
         CliMode::Batch
     } else if admit {
         CliMode::Admission
+    } else if delta {
+        CliMode::Delta
     } else if sharded || config_stacks != 1 {
         CliMode::Sharded
     } else {
         CliMode::Solo
     };
     crate::ensure!(
-        args.get("store-capacity").is_none() || mode == CliMode::Admission,
-        "--store-capacity applies to the admission pipeline only; combine it with --admit"
+        args.get("store-capacity").is_none()
+            || mode == CliMode::Admission
+            || mode == CliMode::Delta,
+        "--store-capacity applies to the admission pipeline or the delta engine; \
+         combine it with --admit or --deltas"
     );
     Ok(mode)
 }
@@ -485,6 +520,32 @@ mod tests {
         // tests/failure_injection.rs)
         let err = resolve_cli_mode(&parse(&["--store-capacity", "4"]), 1).unwrap_err();
         assert!(format!("{err}").contains("--admit"), "{err}");
+    }
+
+    #[test]
+    fn delta_block_parses_and_cli_selects_mode() {
+        let c = SystemConfig::default();
+        assert!(c.delta_validate && c.delta_skip);
+        let cf = ConfigFile::parse("[run.delta]\nvalidate = false\nskip = false").unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        assert!(!c.delta_validate && !c.delta_skip);
+        let parse = |v: &[&str]| crate::util::cli::Args::parse(v.iter().map(|s| s.to_string()));
+        c = SystemConfig::default();
+        c.apply_args(&parse(&["--delta-no-validate", "--delta-no-skip"]));
+        assert!(!c.delta_validate && !c.delta_skip);
+        // --deltas selects the delta execution shape
+        assert_eq!(
+            resolve_cli_mode(&parse(&["--deltas", "d.txt"]), 1).unwrap(),
+            CliMode::Delta
+        );
+        // ... and conflicts with the other mode selectors
+        let err = resolve_cli_mode(&parse(&["--deltas", "d.txt", "--admit"]), 1).unwrap_err();
+        assert!(format!("{err}").contains("pick one"), "{err}");
+        // the store flag composes with the delta engine (write-back)
+        assert_eq!(
+            resolve_cli_mode(&parse(&["--deltas", "d.txt", "--store-capacity", "4"]), 1).unwrap(),
+            CliMode::Delta
+        );
     }
 
     #[test]

@@ -11,17 +11,19 @@ use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig};
 use crate::apsp::admission::{AdmissionConfig, AdmissionGraph, StoreOutcome, Verdict};
 use crate::apsp::backend::{NativeBackend, TileBackend};
 use crate::apsp::batch::BatchGraph;
+use crate::apsp::delta::{self, DeltaClass, DeltaState};
 use crate::apsp::plan::{build_plan, ApspPlan};
 use crate::apsp::recursive::{self, solve, ApspSolution, SolveOptions};
 use crate::apsp::shard::{plan_tiles, ShardGraph};
-use crate::apsp::store::MemoryStore;
+use crate::apsp::store::{fingerprint, MemoryStore, ResultStore, StoreEntry};
+use crate::apsp::taskgraph::{csr_bytes_estimate, TaskGraph};
 use crate::apsp::validate::{validate_sampled, Validation};
 use crate::apsp::{scheduler, taskgraph};
 use crate::graph::csr::CsrGraph;
 use crate::runtime::{PjrtBackend, PjrtRuntime};
 use crate::sim::engine::{
-    simulate, simulate_admission, simulate_batch, simulate_dag, simulate_drain_rebatch,
-    simulate_sharded, GraphSimStat, SimReport,
+    simulate, simulate_admission, simulate_batch, simulate_dag, simulate_delta,
+    simulate_drain_rebatch, simulate_sharded, GraphSimStat, SimReport,
 };
 use crate::util::error::Result;
 use crate::{ensure, err};
@@ -464,6 +466,234 @@ impl Executor {
         })
     }
 
+    /// Replay a script of edge-delta batches through the **incremental
+    /// repair engine**. The base graph is solved once with retained
+    /// repair state ([`scheduler::solve_dag_retained`] keeps the
+    /// pre-injection blocks a plain solve discards), then each batch
+    /// is validated, classified (improve vs resolve), applied, and
+    /// repaired by re-solving only its dirty tile closure
+    /// ([`scheduler::execute_delta`]) — clean tiles are served from
+    /// the retained `Arc`s without copying. A structural change the
+    /// plan repair cannot absorb ([`delta::repair_plan`] returns
+    /// `None`) falls back to a full replan + re-solve and is reported
+    /// as such. Each repaired result is bit-validated against a fresh
+    /// full solve (`run.delta.validate`), and the simulator prices the
+    /// repair sub-DAG against the full re-solve lowering
+    /// (`delta_speedup = resolve makespan / repair makespan`). With
+    /// the result store on, each batch invalidates the pre-delta
+    /// fingerprint ([`ResultStore::remove`]) and writes back the
+    /// repaired graph's entry; entries for other graphs survive.
+    pub fn run_delta(&self, g: &CsrGraph, script: &str) -> Result<DeltaRunResult> {
+        ensure!(
+            g.n() > 0,
+            "the delta engine needs a solved base graph — the base graph is \
+             empty (0 vertices), so there is no solution to repair"
+        );
+        let batches = delta::parse_script(script)?;
+
+        let solve_opts = SolveOptions {
+            memory_limit_bytes: self.config.memory_limit_bytes,
+        };
+        let native = NativeBackend;
+        let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
+        let backend = self.select_backend(&native, &pjrt_adapter)?;
+
+        // initial full solve. Delta repair is inherently
+        // dependency-driven, so the DAG schedule is used regardless of
+        // the `scheduler` knob (as in sharded runs).
+        let mut cur_g = g.clone();
+        let mut plan = self.plan(&cur_g);
+        let tg0 = taskgraph::lower(&plan);
+        let t0 = std::time::Instant::now();
+        let mut state: Option<DeltaState> = None;
+        let mut validation = None;
+        if let Some(be) = backend {
+            let (trace, st) = scheduler::solve_dag_retained(&cur_g, &plan, be, solve_opts);
+            if self.config.validate_sources > 0 {
+                let sol = st.as_solution(&plan, &cur_g, trace);
+                validation = Some(validate_sampled(
+                    &cur_g,
+                    &sol,
+                    self.config.validate_sources,
+                    self.config.validate_cols,
+                    self.config.validate_tolerance,
+                    self.config.seed ^ 0xFEED,
+                ));
+            }
+            state = Some(st);
+        }
+        let host_solve_seconds = if state.is_some() {
+            t0.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+        let sim0 = simulate_dag(&tg0, &self.config.hw);
+        let initial = self.make_result(&cur_g, &plan, sim0, validation, host_solve_seconds);
+
+        let mut store = self
+            .config
+            .store_enabled
+            .then(|| MemoryStore::new(self.config.store_capacity, self.config.store_bytes));
+        if let Some(s) = store.as_mut() {
+            // persist the base solve so the first delta has an entry
+            // to invalidate
+            self.put_store_entry(s, &cur_g, &tg0);
+        }
+
+        let mut rows = Vec::with_capacity(batches.len());
+        for batch in &batches {
+            delta::validate_deltas(&cur_g, batch)?;
+            let class = delta::classify_deltas(&cur_g, batch);
+            let allow_skip = self.config.delta_skip && class == DeltaClass::Improve;
+            let g_new = delta::apply_deltas(&cur_g, batch);
+            let old_fp = fingerprint(&cur_g);
+
+            let (path, new_plan) = match delta::repair_plan(&plan, &g_new) {
+                Some(p) => ("repair", p),
+                // a cross edge appeared between vertices the
+                // partitioner never assigned boundary slots — the tile
+                // plan itself is stale, so the honest repair is a full
+                // replan + re-solve
+                None => ("replan", self.plan(&g_new)),
+            };
+            let total_tiles = new_plan
+                .levels
+                .first()
+                .map(|l| l.cs.components.len())
+                .unwrap_or(1);
+            let full_tg = taskgraph::lower(&new_plan);
+
+            let (
+                new_state,
+                repair_sim,
+                resolve_sim,
+                dirty_tiles,
+                skipped_tiles,
+                host_repair_seconds,
+                max_diff,
+            );
+            if path == "repair" {
+                let spec = delta::dirty_spec(&new_plan, batch);
+                match (backend, state.as_ref()) {
+                    (Some(be), Some(st)) => {
+                        let t1 = std::time::Instant::now();
+                        let (ns, actual) = scheduler::execute_delta(
+                            &g_new, &new_plan, &spec, st, allow_skip, be, solve_opts,
+                        );
+                        host_repair_seconds = t1.elapsed().as_secs_f64();
+                        dirty_tiles = actual.dirty_tiles().max(1);
+                        skipped_tiles = spec.rerun.iter().filter(|r| **r).count()
+                            - actual.rerun.iter().filter(|r| **r).count();
+                        let repair_tg = taskgraph::lower_repair(&new_plan, &actual);
+                        let (rs, fs) = simulate_delta(&repair_tg, &full_tg, &self.config.hw);
+                        repair_sim = rs;
+                        resolve_sim = fs;
+                        max_diff = if self.config.delta_validate {
+                            let (_, fresh) =
+                                scheduler::solve_dag_retained(&g_new, &new_plan, be, solve_opts);
+                            let d = ns.max_diff(&fresh);
+                            ensure!(
+                                d == 0.0,
+                                "delta repair diverged from a fresh full solve \
+                                 (max |Δ| = {d:e}); this is a repair-engine bug"
+                            );
+                            Some(d)
+                        } else {
+                            None
+                        };
+                        new_state = Some(ns);
+                    }
+                    _ => {
+                        // estimate mode: no host numerics — price the
+                        // conservative (pre-execution) repair closure
+                        let repair_tg = taskgraph::lower_repair(&new_plan, &spec);
+                        let (rs, fs) = simulate_delta(&repair_tg, &full_tg, &self.config.hw);
+                        repair_sim = rs;
+                        resolve_sim = fs;
+                        dirty_tiles = spec.dirty_tiles().max(1);
+                        skipped_tiles = 0;
+                        host_repair_seconds = 0.0;
+                        max_diff = None;
+                        new_state = None;
+                    }
+                }
+            } else {
+                dirty_tiles = total_tiles;
+                skipped_tiles = 0;
+                max_diff = None;
+                let t1 = std::time::Instant::now();
+                new_state = backend
+                    .map(|be| scheduler::solve_dag_retained(&g_new, &new_plan, be, solve_opts).1);
+                host_repair_seconds = if new_state.is_some() {
+                    t1.elapsed().as_secs_f64()
+                } else {
+                    0.0
+                };
+                // the fallback *is* the full solve — repair cost and
+                // re-solve baseline coincide (delta_speedup = 1)
+                let s = simulate_dag(&full_tg, &self.config.hw);
+                repair_sim = s.clone();
+                resolve_sim = s;
+            }
+
+            let (store_invalidated, store_written) = match store.as_mut() {
+                Some(s) => {
+                    // the pre-delta entry answers a graph that no
+                    // longer exists — drop it before its bytes crowd
+                    // out the write-back
+                    let inv = s.remove(old_fp);
+                    (inv, self.put_store_entry(s, &g_new, &full_tg))
+                }
+                None => (false, false),
+            };
+
+            rows.push(DeltaBatchResult {
+                n_deltas: batch.len(),
+                class: class.name(),
+                path,
+                dirty_tiles,
+                total_tiles,
+                skipped_tiles,
+                repair_sim,
+                resolve_sim,
+                host_repair_seconds,
+                max_diff,
+                store_invalidated,
+                store_written,
+                graph_m: g_new.m(),
+            });
+
+            cur_g = g_new;
+            plan = new_plan;
+            state = new_state;
+        }
+
+        let store_len = store.as_ref().map(|s| s.len()).unwrap_or(0);
+        Ok(DeltaRunResult {
+            initial,
+            batches: rows,
+            store_enabled: self.config.store_enabled,
+            store_len,
+        })
+    }
+
+    /// Write a solved graph's entry into the result store under its
+    /// fingerprint (same costing as the admission write-back path:
+    /// modeled result bytes, the solve's madds as the re-solve cost).
+    fn put_store_entry(&self, store: &mut MemoryStore, g: &CsrGraph, tg: &TaskGraph) -> bool {
+        let n = g.n() as u64;
+        let bytes = if self.config.store_compression {
+            csr_bytes_estimate(n * n)
+        } else {
+            n * n * 4
+        };
+        let cost = tg.to_trace().total_madds() as f64;
+        matches!(
+            store.put(fingerprint(g), StoreEntry::new(bytes, cost, None)),
+            Ok(true)
+        )
+    }
+
     /// Assemble one graph's [`RunResult`] (shared by `run_with_plan`
     /// and `run_batch` so solo and batch rows can't drift).
     fn make_result(
@@ -690,6 +920,77 @@ impl AdmissionRunResult {
             .filter(|r| r.verdict.admitted())
             .map(|r| r.latency)
             .collect()
+    }
+}
+
+/// One delta batch's outcome in an [`Executor::run_delta`] replay.
+pub struct DeltaBatchResult {
+    /// Edge deltas in the batch.
+    pub n_deltas: usize,
+    /// `"improve"` (cheap min-plus repair path) or `"resolve"`.
+    pub class: &'static str,
+    /// `"repair"` when the tile plan absorbed the batch, `"replan"`
+    /// when a structural change forced a full replan + re-solve.
+    pub path: &'static str,
+    /// Level-0 tiles the repair actually re-solved (≥ 1; after
+    /// improve-path skips).
+    pub dirty_tiles: usize,
+    /// Level-0 tiles in the plan.
+    pub total_tiles: usize,
+    /// Boundary tiles the improve path proved unchanged and skipped.
+    pub skipped_tiles: usize,
+    /// Modeled cost of the repair sub-DAG.
+    pub repair_sim: SimReport,
+    /// Modeled cost of re-solving the post-delta graph from scratch.
+    pub resolve_sim: SimReport,
+    /// Host wall time of the functional repair (0 in estimate mode).
+    pub host_repair_seconds: f64,
+    /// Bit-difference vs a fresh full solve (`Some(0.0)` when
+    /// validation ran and passed; `None` when `run.delta.validate` is
+    /// off or in estimate mode).
+    pub max_diff: Option<f32>,
+    /// The pre-delta fingerprint was found and evicted from the store.
+    pub store_invalidated: bool,
+    /// The repaired graph's entry was written back to the store.
+    pub store_written: bool,
+    /// Edges in the post-delta graph.
+    pub graph_m: usize,
+}
+
+impl DeltaBatchResult {
+    /// What incremental repair bought over re-solving from scratch:
+    /// resolve makespan / repair makespan.
+    pub fn delta_speedup(&self) -> f64 {
+        if self.repair_sim.seconds == 0.0 {
+            1.0
+        } else {
+            self.resolve_sim.seconds / self.repair_sim.seconds
+        }
+    }
+}
+
+/// Everything one delta replay produces.
+pub struct DeltaRunResult {
+    /// The base graph's full solve (identical shape to a plain
+    /// [`Executor::run`] report).
+    pub initial: RunResult,
+    /// Per-batch outcomes, in script order.
+    pub batches: Vec<DeltaBatchResult>,
+    /// Whether the result store participated in the replay.
+    pub store_enabled: bool,
+    /// Entries alive in the store after the replay (stale pre-delta
+    /// entries are invalidated in place, so this stays bounded).
+    pub store_len: usize,
+}
+
+impl DeltaRunResult {
+    pub fn n_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Total deltas applied across the script.
+    pub fn n_deltas(&self) -> usize {
+        self.batches.iter().map(|b| b.n_deltas).sum()
     }
 }
 
@@ -1040,5 +1341,122 @@ mod tests {
         assert!(alg2.depth >= 1 && alg1.depth == 1);
         // Alg 1's terminal FW is a giant dense solve
         assert!(alg1.final_n >= alg2.final_n);
+    }
+
+    #[test]
+    fn run_delta_end_to_end_repairs_and_validates() {
+        let g = graph(900, 51);
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 96;
+        cfg.store_enabled = true;
+        cfg.store_capacity = 4;
+        let ex = Executor::new(cfg).unwrap();
+        // batch 1 improves (halved weight, cheap repair path with
+        // skips); batch 2 resolves (delete re-solves the closure)
+        let (u, v, w) = g.edges().next().unwrap();
+        let (u2, v2, _) = g.edges().nth(5).unwrap();
+        let script = format!(
+            "# improve\nreweight {u} {v} {}\n\n# resolve\ndelete {u2} {v2}\n",
+            w * 0.5
+        );
+        let r = ex.run_delta(&g, &script).unwrap();
+        assert!(r.initial.validation.as_ref().unwrap().ok(1e-3));
+        assert!(r.initial.host_solve_seconds > 0.0);
+        assert_eq!(r.n_batches(), 2);
+        assert_eq!(r.n_deltas(), 2);
+        assert_eq!(r.batches[0].class, "improve");
+        assert_eq!(r.batches[1].class, "resolve");
+        for (i, b) in r.batches.iter().enumerate() {
+            // neither batch changes the cut structure
+            assert_eq!(b.path, "repair", "batch {i}");
+            // bit-identical to a fresh full solve of the new graph
+            assert_eq!(b.max_diff, Some(0.0), "batch {i}");
+            assert!(b.dirty_tiles >= 1 && b.dirty_tiles <= b.total_tiles);
+            assert!(b.host_repair_seconds > 0.0);
+            // the repair sub-DAG must beat re-solving from scratch
+            assert!(
+                b.delta_speedup() > 1.0,
+                "batch {i}: speedup {}",
+                b.delta_speedup()
+            );
+            // stale entry invalidated, repaired entry written back
+            assert!(b.store_invalidated && b.store_written, "batch {i}");
+        }
+        // the store holds exactly the lineage head — no stale
+        // pre-delta entries accumulate
+        assert!(r.store_enabled);
+        assert_eq!(r.store_len, 1);
+    }
+
+    #[test]
+    fn run_delta_estimate_mode_models_without_numerics() {
+        let g = graph(1_200, 52);
+        let (u, v, w) = g.edges().next().unwrap();
+        let script = format!("reweight {u} {v} {}\n", w * 0.5);
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        cfg.tile_limit = 96;
+        let r = Executor::new(cfg).unwrap().run_delta(&g, &script).unwrap();
+        assert!(r.initial.validation.is_none());
+        assert_eq!(r.initial.host_solve_seconds, 0.0);
+        let b = &r.batches[0];
+        assert!(b.max_diff.is_none());
+        assert_eq!(b.host_repair_seconds, 0.0);
+        assert!(b.repair_sim.seconds > 0.0);
+        assert!(b.resolve_sim.seconds >= b.repair_sim.seconds);
+        assert!(b.delta_speedup() >= 1.0);
+        assert!(!r.store_enabled);
+        assert_eq!(r.store_len, 0);
+    }
+
+    #[test]
+    fn run_delta_structural_change_falls_back_to_replan() {
+        let g = graph(800, 53);
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 96;
+        let ex = Executor::new(cfg).unwrap();
+        // connect an internal vertex to another component: the old
+        // boundary sets no longer cover the cut
+        let plan = ex.plan(&g);
+        let lvl0 = &plan.levels[0];
+        let (iu, other) = 'found: {
+            for (ci, c) in lvl0.cs.components.iter().enumerate() {
+                if let Some(&internal) = c.internal().first() {
+                    for (cj, c2) in lvl0.cs.components.iter().enumerate() {
+                        if ci != cj && c2.n() > 0 {
+                            break 'found (internal, c2.verts[0]);
+                        }
+                    }
+                }
+            }
+            panic!("no internal vertex found");
+        };
+        let script = format!("insert {iu} {other} 1.5\n");
+        let r = ex.run_delta(&g, &script).unwrap();
+        let b = &r.batches[0];
+        assert_eq!(b.path, "replan");
+        assert_eq!(b.dirty_tiles, b.total_tiles);
+        // the fallback is the full solve: repair cost = baseline cost
+        assert!((b.delta_speedup() - 1.0).abs() < 1e-12);
+        assert!(b.host_repair_seconds > 0.0);
+        assert_eq!(b.graph_m, g.m() + 2);
+    }
+
+    #[test]
+    fn run_delta_rejects_bad_input_cleanly() {
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        let ex = Executor::new(cfg).unwrap();
+        // empty base graph: nothing to repair
+        let empty = CsrGraph::from_edges(0, &[]);
+        let err = ex.run_delta(&empty, "insert 0 1 1.0\n").unwrap_err();
+        assert!(format!("{err}").contains("base graph"), "{err}");
+        // a validator rejection surfaces as a clean error, not a panic
+        let g = graph(200, 54);
+        let err = ex.run_delta(&g, "insert 0 100000 1.0\n").unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+        // so does a malformed script
+        let err = ex.run_delta(&g, "frobnicate 1 2\n").unwrap_err();
+        assert!(format!("{err}").contains("frobnicate"), "{err}");
     }
 }

@@ -1,6 +1,8 @@
 //! Human-readable run reports: the coordinator's metrics output.
 
-use super::executor::{AdmissionRunResult, BatchRunResult, RunResult, ShardRunResult};
+use super::executor::{
+    AdmissionRunResult, BatchRunResult, DeltaRunResult, RunResult, ShardRunResult,
+};
 use crate::apsp::admission::Verdict;
 use crate::apsp::trace::Phase;
 use crate::util::bench::percentile;
@@ -311,6 +313,93 @@ pub fn render_sharded(r: &ShardRunResult) -> String {
     out
 }
 
+/// Render the report for one delta replay: the base solve summary, a
+/// per-batch table (class, repair path, dirty-tile closure, repair
+/// latency vs the full re-solve baseline), and the aggregate
+/// `delta_speedup` line the CI smoke greps for.
+pub fn render_delta(d: &DeltaRunResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "RAPID-Graph delta replay: base n={} m={} mode={} backend={}, {} batch(es) / {} delta(s)\n",
+        fmt_count(d.initial.graph_n),
+        fmt_count(d.initial.graph_m),
+        d.initial.mode.name(),
+        d.initial.backend_name,
+        d.n_batches(),
+        d.n_deltas(),
+    ));
+    out.push_str(&format!(
+        "base solve: modeled {} ({} tiles at L0, depth {})\n",
+        fmt_time(d.initial.sim.seconds),
+        d.initial.components_l0,
+        d.initial.depth,
+    ));
+    if let Some(v) = &d.initial.validation {
+        out.push_str(&format!(
+            "base validation: {} samples, max err {:.2e} -> {}\n",
+            v.checked,
+            v.max_abs_err,
+            if v.ok(d.initial.validate_tolerance) {
+                "EXACT"
+            } else {
+                "FAILED"
+            },
+        ));
+    }
+    let mut t = Table::new(
+        "delta repairs (per batch)",
+        &[
+            "batch", "deltas", "class", "path", "dirty", "skipped", "repair", "re-solve",
+            "speedup", "bit-valid",
+        ],
+    );
+    for (i, b) in d.batches.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            b.n_deltas.to_string(),
+            b.class.to_string(),
+            b.path.to_string(),
+            format!("{}/{}", b.dirty_tiles, b.total_tiles),
+            b.skipped_tiles.to_string(),
+            fmt_time(b.repair_sim.seconds),
+            fmt_time(b.resolve_sim.seconds),
+            fmt_ratio(b.delta_speedup()),
+            match b.max_diff {
+                Some(dmax) if dmax == 0.0 => "EXACT".to_string(),
+                Some(dmax) => format!("FAILED ({dmax:.2e})"),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    out.push_str(&t.render());
+    let speedups: Vec<f64> = d.batches.iter().map(|b| b.delta_speedup()).collect();
+    if !speedups.is_empty() {
+        out.push_str(&format!(
+            "delta_speedup (re-solve / repair): p50 {} max {}\n",
+            fmt_ratio(percentile(&speedups, 0.5)),
+            fmt_ratio(percentile(&speedups, 1.0)),
+        ));
+    }
+    if d.store_enabled {
+        let inv = d.batches.iter().filter(|b| b.store_invalidated).count();
+        let wrote = d.batches.iter().filter(|b| b.store_written).count();
+        out.push_str(&format!(
+            "result store: {inv} stale entr(ies) invalidated, {wrote} repaired result(s) \
+             written back, {} live at exit\n",
+            d.store_len,
+        ));
+    }
+    let host: f64 = d.batches.iter().map(|b| b.host_repair_seconds).sum();
+    if host > 0.0 {
+        out.push_str(&format!(
+            "host numerics: base {} + repairs {}\n",
+            fmt_time(d.initial.host_solve_seconds),
+            fmt_time(host),
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use crate::coordinator::config::SystemConfig;
@@ -395,6 +484,28 @@ mod tests {
         assert!(text.contains("miss"), "{text}");
         assert!(text.contains("cache_speedup"), "{text}");
         assert!(text.contains("result store: 1 hit(s) / 2 admitted"), "{text}");
+    }
+
+    #[test]
+    fn delta_report_contains_key_sections() {
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        cfg.store_enabled = true;
+        let ex = Executor::new(cfg).unwrap();
+        let g = generators::generate(Topology::Nws, 500, 8.0, Weights::Uniform(1.0, 4.0), 9);
+        let (u, v, w) = g.edges().next().unwrap();
+        let script = format!("reweight {u} {v} {}\n\ndelete {u} {v}\n", w * 0.5);
+        let d = ex.run_delta(&g, &script).unwrap();
+        let text = super::render_delta(&d);
+        assert!(text.contains("RAPID-Graph delta replay"), "{text}");
+        assert!(text.contains("delta repairs (per batch)"), "{text}");
+        assert!(text.contains("improve"), "{text}");
+        assert!(text.contains("resolve"), "{text}");
+        // the CI smoke greps this literal metric name
+        assert!(text.contains("delta_speedup"), "{text}");
+        assert!(text.contains("EXACT"), "{text}");
+        assert!(text.contains("result store"), "{text}");
+        assert!(!text.contains("FAILED"), "{text}");
     }
 
     #[test]

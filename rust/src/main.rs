@@ -10,7 +10,10 @@
 //!              stacks and print the scale-out table;
 //!              with --admit, submit N graphs to the async admission
 //!              pipeline on a modeled arrival schedule and print the
-//!              per-graph latency table vs the drain baseline
+//!              per-graph latency table vs the drain baseline;
+//!              with --deltas FILE, solve once and replay the file's
+//!              edge-delta batches through the incremental repair
+//!              engine (re-solving only dirty tiles)
 //!   figure     regenerate a paper figure/table (7, 8, 9a, 9b, 9c, table3)
 //!   validate   exhaustive Dijkstra validation on a small graph
 //!
@@ -21,6 +24,7 @@
 //!   rapid-graph apsp --batch --graphs a.bin,b.bin,c.bin
 //!   rapid-graph apsp --stacks 4 --topo ogbn --nodes 50000 --mode estimate
 //!   rapid-graph apsp --admit 6 --admit-interval 1e-4 --admit-queue 2 --mode estimate
+//!   rapid-graph apsp --deltas updates.txt --topo nws --nodes 20000
 //!   rapid-graph figure --id 7
 //!   rapid-graph generate --topo ogbn --nodes 100000 --out g.bin
 
@@ -62,6 +66,7 @@ fn dispatch(args: &Args) -> Result<()> {
                         ("apsp --batch", "[--batch-size N] [--graphs F1,F2,.. | --topo T --nodes N] merge N graphs into one shared-resource schedule"),
                         ("apsp --stacks", "S [--graph FILE | --topo T --nodes N] shard one graph across S modeled PIM stacks"),
                         ("apsp --admit", "[N] [--arrivals T1,T2,.. | --admit-interval DT] [--admit-queue Q] [--store-capacity C] admit N graphs into a live schedule; the result store serves duplicate submissions from modeled FeNAND"),
+                        ("apsp --deltas", "FILE [--graph FILE | --topo T --nodes N] [--delta-no-validate] [--delta-no-skip] solve once, then replay FILE's edge-delta batches (insert/delete/reweight) through the incremental repair engine"),
                         ("figure", "--id 7|8|9a|9b|9c|table3 [--full]"),
                         ("validate", "--nodes N [--topo T] [--tile T]"),
                     ]
@@ -146,6 +151,10 @@ fn cmd_apsp(args: &Args) -> Result<()> {
         CliMode::Admission => {
             cfg.num_stacks = 1;
             cmd_admit(args, cfg)
+        }
+        CliMode::Delta => {
+            cfg.num_stacks = 1;
+            cmd_delta(args, cfg)
         }
         CliMode::Sharded => cmd_sharded(args, cfg),
         CliMode::Solo => {
@@ -244,6 +253,36 @@ fn cmd_admit(args: &Args, cfg: SystemConfig) -> Result<()> {
                 }
             }
         }
+    }
+    Ok(())
+}
+
+/// `apsp --deltas FILE`: solve the base graph once, then replay FILE's
+/// edge-delta batches (blank-line-separated groups of `insert u v w` /
+/// `delete u v` / `reweight u v w` lines) through the incremental
+/// repair engine — each batch re-solves only its dirty tile closure
+/// and is bit-validated against a fresh full solve unless
+/// `--delta-no-validate`. The report prints per-batch dirty-tile
+/// counts, repair latency, and `delta_speedup` vs re-solving from
+/// scratch.
+fn cmd_delta(args: &Args, cfg: SystemConfig) -> Result<()> {
+    let path = args.get("deltas").context("--deltas FILE required")?;
+    let script = std::fs::read_to_string(path)
+        .with_context(|| format!("read delta script {path}"))?;
+    let g = graph_from_args(args)?;
+    let ex = Executor::new(cfg)?;
+    let d = ex.run_delta(&g, &script)?;
+    print!("{}", report::render_delta(&d));
+    if let Some(v) = &d.initial.validation {
+        if !v.ok(d.initial.validate_tolerance) {
+            bail!("validation FAILED");
+        }
+    }
+    if d.batches
+        .iter()
+        .any(|b| matches!(b.max_diff, Some(diff) if diff != 0.0))
+    {
+        bail!("validation FAILED");
     }
     Ok(())
 }

@@ -612,6 +612,21 @@ pub fn simulate_dag(tg: &TaskGraph, p: &HwParams) -> SimReport {
     simulate_dag_attributed(tg, &owner, 1, &owner, 1, &[], usize::MAX, p).0
 }
 
+/// Attribute one delta repair: simulate the repair sub-DAG
+/// ([`crate::apsp::taskgraph::lower_repair`]) and the full re-solve
+/// lowering of the same plan on identical hardware, returning
+/// `(repair, full)` — `full.seconds / repair.seconds` is the
+/// `delta_speedup` the report and bench print. Both runs use the same
+/// list scheduler, so the ratio isolates the dirty-closure savings from
+/// any scheduling artifact.
+pub fn simulate_delta(
+    repair_tg: &TaskGraph,
+    full_tg: &TaskGraph,
+    p: &HwParams,
+) -> (SimReport, SimReport) {
+    (simulate_dag(repair_tg, p), simulate_dag(full_tg, p))
+}
+
 /// The list scheduler proper, with per-owner attribution (`owner[node]`
 /// in `0..n_owners`; a solo run is a one-owner batch) and per-stack
 /// resource placement (`stack[node]` in `0..n_stacks`: each stack has

@@ -1,0 +1,255 @@
+//! Property tests for the incremental delta engine (`apsp::delta` +
+//! `scheduler::execute_delta`): random delta scripts replayed through
+//! the repair path and checked bit-identical against fresh full solves
+//! (and against the Dijkstra oracle at 1e-4, the blocked-FW
+//! tolerance), dirty-closure monotonicity under batch growth, and
+//! store fingerprint sensitivity to every delta kind.
+//!
+//! All properties run on the seeded harness (`util::prop`); set
+//! `RAPID_PROP_SEED` to explore fresh inputs, failures report a replay
+//! seed.
+
+use rapid_graph::apsp::backend::NativeBackend;
+use rapid_graph::apsp::delta::{
+    apply_deltas, classify_deltas, dirty_spec, repair_plan, validate_deltas, DeltaClass, EdgeDelta,
+};
+use rapid_graph::apsp::plan::{build_plan, ApspPlan, PlanOptions};
+use rapid_graph::apsp::recursive::SolveOptions;
+use rapid_graph::apsp::scheduler;
+use rapid_graph::apsp::store::fingerprint;
+use rapid_graph::apsp::validate::validate_sampled;
+use rapid_graph::graph::csr::CsrGraph;
+use rapid_graph::graph::generators::{self, Topology, Weights};
+use rapid_graph::util::prop::assert_prop;
+use rapid_graph::util::rng::Rng;
+
+fn random_graph(r: &mut Rng) -> (CsrGraph, ApspPlan) {
+    let n = 150 + r.gen_range(250);
+    let topo = match r.gen_range(3) {
+        0 => Topology::Nws,
+        1 => Topology::Er,
+        _ => Topology::Grid,
+    };
+    let degree = 4.0 + r.gen_f64() * 6.0;
+    let seed = r.next_u64();
+    let g = generators::generate(topo, n, degree, Weights::Uniform(0.5, 8.0), seed);
+    let plan = build_plan(
+        &g,
+        PlanOptions {
+            tile_limit: 48,
+            max_depth: usize::MAX,
+            seed,
+        },
+    );
+    (g, plan)
+}
+
+/// A random non-structural batch: reweights (up and down) and deletes
+/// of `k` distinct existing edges. Never inserts, so the tile plan is
+/// always repairable and every batch takes the repair path.
+fn random_repair_batch(g: &CsrGraph, r: &mut Rng, k: usize) -> Vec<EdgeDelta> {
+    let edges: Vec<(u32, u32, f32)> = g.edges().filter(|&(u, v, _)| u < v).collect();
+    let k = k.min(edges.len());
+    let mut idx: Vec<usize> = (0..edges.len()).collect();
+    for i in 0..k {
+        let j = i + r.gen_range(idx.len() - i);
+        idx.swap(i, j);
+    }
+    idx[..k]
+        .iter()
+        .map(|&e| {
+            let (u, v, w) = edges[e];
+            match r.gen_range(4) {
+                0 => EdgeDelta::Delete { u, v },
+                1 => EdgeDelta::Reweight { u, v, w: w * 2.0 },
+                _ => EdgeDelta::Reweight { u, v, w: w * 0.5 },
+            }
+        })
+        .collect()
+}
+
+/// An edge absent from `g` (graphs here are far from complete).
+fn missing_edge(g: &CsrGraph, r: &mut Rng) -> (u32, u32) {
+    loop {
+        let u = r.gen_range(g.n()) as u32;
+        let v = r.gen_range(g.n()) as u32;
+        if u != v && g.edge_weight(u as usize, v as usize).is_none() {
+            return (u, v);
+        }
+    }
+}
+
+// -----------------------------------------------------------------
+// Replay: repair path bit-identical to fresh full solves
+// -----------------------------------------------------------------
+
+#[test]
+fn random_scripts_repair_bit_identical_to_fresh_solves() {
+    let be = NativeBackend;
+    assert_prop(
+        10,
+        |r| {
+            let (g, plan) = random_graph(r);
+            let n_batches = 1 + r.gen_range(3);
+            let seed = r.next_u64();
+            (g, plan, n_batches, seed)
+        },
+        |(g, plan, n_batches, seed)| {
+            let mut r = Rng::new(*seed);
+            let opts = SolveOptions::default();
+            let mut cur_g = g.clone();
+            let mut plan = plan.clone();
+            let (_, mut state) = scheduler::solve_dag_retained(&cur_g, &plan, &be, opts);
+            for bi in 0..*n_batches {
+                let batch = random_repair_batch(&cur_g, &mut r, 1 + r.gen_range(5));
+                validate_deltas(&cur_g, &batch)
+                    .map_err(|e| format!("batch {bi} failed validation: {e}"))?;
+                let class = classify_deltas(&cur_g, &batch);
+                let g2 = apply_deltas(&cur_g, &batch);
+                let plan2 = repair_plan(&plan, &g2)
+                    .ok_or_else(|| format!("batch {bi}: non-structural batch lost the plan"))?;
+                let spec = dirty_spec(&plan2, &batch);
+                let (repaired, actual) = scheduler::execute_delta(
+                    &g2,
+                    &plan2,
+                    &spec,
+                    &state,
+                    class == DeltaClass::Improve,
+                    &be,
+                    opts,
+                );
+                // the post-execution closure never exceeds the planned one
+                if actual.dirty_tiles() > spec.dirty_tiles() {
+                    return Err(format!(
+                        "batch {bi}: executed closure {} > planned {}",
+                        actual.dirty_tiles(),
+                        spec.dirty_tiles()
+                    ));
+                }
+                // bit-identity against a fresh retained solve of g2
+                let (trace, fresh) = scheduler::solve_dag_retained(&g2, &plan2, &be, opts);
+                let diff = repaired.max_diff(&fresh);
+                if diff != 0.0 {
+                    return Err(format!(
+                        "batch {bi} ({}, {} deltas): repair diverged from fresh solve by {diff:e}",
+                        class.name(),
+                        batch.len()
+                    ));
+                }
+                // and semantic correctness against the Dijkstra oracle
+                // (1e-4: the blocked-FW accumulation tolerance)
+                let sol = repaired.as_solution(&plan2, &g2, trace);
+                let v = validate_sampled(&g2, &sol, 4, 48, 1e-4, *seed ^ bi as u64);
+                if !v.ok(1e-4) {
+                    return Err(format!(
+                        "batch {bi}: repaired solution fails Dijkstra check: \
+                         max err {:.2e}, {} mismatches",
+                        v.max_abs_err, v.mismatches
+                    ));
+                }
+                cur_g = g2;
+                plan = plan2;
+                state = repaired;
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// Dirty closure: monotone under batch growth
+// -----------------------------------------------------------------
+
+#[test]
+fn dirty_closure_is_monotone_in_the_batch() {
+    assert_prop(
+        25,
+        |r| {
+            let (g, plan) = random_graph(r);
+            let mut batch = random_repair_batch(&g, r, 12);
+            // inserts participate in the closure even though they may
+            // force a replan — dirty_spec is plan-geometry only
+            let (u, v) = missing_edge(&g, r);
+            batch.push(EdgeDelta::Insert { u, v, w: 1.0 });
+            (plan, batch)
+        },
+        |(plan, batch)| {
+            if plan.depth() == 0 {
+                return Ok(()); // single-tile plans have a trivial closure
+            }
+            let mut prev = dirty_spec(plan, &batch[..1]);
+            for i in 2..=batch.len() {
+                let cur = dirty_spec(plan, &batch[..i]);
+                // a superset batch never dirties fewer tiles...
+                if cur.dirty_tiles() < prev.dirty_tiles() {
+                    return Err(format!(
+                        "prefix {i}: {} dirty tiles < prefix {}'s {}",
+                        cur.dirty_tiles(),
+                        i - 1,
+                        prev.dirty_tiles()
+                    ));
+                }
+                // ...and never cleans a flag the smaller batch set
+                if prev.boundary_dirty && !cur.boundary_dirty {
+                    return Err(format!("prefix {i} cleared boundary_dirty"));
+                }
+                for (ci, (p, c)) in prev.dirty.iter().zip(&cur.dirty).enumerate() {
+                    if *p && !c {
+                        return Err(format!("prefix {i} cleared dirty[{ci}]"));
+                    }
+                }
+                for (ci, (p, c)) in prev.rerun.iter().zip(&cur.rerun).enumerate() {
+                    if *p && !c {
+                        return Err(format!("prefix {i} cleared rerun[{ci}]"));
+                    }
+                }
+                prev = cur;
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// Store fingerprint: sensitive to every delta kind
+// -----------------------------------------------------------------
+
+#[test]
+fn fingerprint_changes_under_every_delta_kind() {
+    assert_prop(
+        25,
+        |r| {
+            let (g, _) = random_graph(r);
+            let seed = r.next_u64();
+            (g, seed)
+        },
+        |(g, seed)| {
+            let mut r = Rng::new(*seed);
+            let base = fingerprint(g);
+            let edges: Vec<(u32, u32, f32)> = g.edges().filter(|&(u, v, _)| u < v).collect();
+            let (u, v, w) = edges[r.gen_range(edges.len())];
+            let (mu, mv) = missing_edge(g, &mut r);
+
+            let ins = apply_deltas(g, &[EdgeDelta::Insert { u: mu, v: mv, w: 2.5 }]);
+            if fingerprint(&ins) == base {
+                return Err(format!("insert {mu}-{mv} left the fingerprint unchanged"));
+            }
+            let del = apply_deltas(g, &[EdgeDelta::Delete { u, v }]);
+            if fingerprint(&del) == base {
+                return Err(format!("delete {u}-{v} left the fingerprint unchanged"));
+            }
+            let rew = apply_deltas(g, &[EdgeDelta::Reweight { u, v, w: w + 1.0 }]);
+            if fingerprint(&rew) == base {
+                return Err(format!("reweight {u}-{v} left the fingerprint unchanged"));
+            }
+            // a no-op reweight is the identity: same canonical CSR,
+            // same fingerprint (delta invalidation must not churn the
+            // store on no-ops)
+            let same = apply_deltas(g, &[EdgeDelta::Reweight { u, v, w }]);
+            if fingerprint(&same) != base {
+                return Err("identity reweight changed the fingerprint".into());
+            }
+            Ok(())
+        },
+    );
+}

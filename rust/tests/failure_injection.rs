@@ -220,12 +220,19 @@ fn apsp_mode_flags_mutually_exclusive() {
         vec!["--admit", "6", "--stacks", "2"],
         vec!["--graphs", "a.bin,b.bin", "--stacks", "2"],
         vec!["--batch", "3", "--admit", "2", "--stacks", "2"],
+        vec!["--deltas", "d.txt", "--batch"],
+        vec!["--deltas", "d.txt", "--stacks", "2"],
+        vec!["--deltas", "d.txt", "--admit", "2"],
     ] {
         let err = resolve_cli_mode(&parse(&combo), 1).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("pick one"), "{combo:?} must conflict: {msg}");
         assert!(msg.contains("--"), "{combo:?}: message should name the flags: {msg}");
     }
+    assert_eq!(
+        resolve_cli_mode(&parse(&["--deltas", "d.txt"]), 1).unwrap(),
+        CliMode::Delta
+    );
     assert_eq!(resolve_cli_mode(&parse(&["--batch"]), 1).unwrap(), CliMode::Batch);
     assert_eq!(
         resolve_cli_mode(&parse(&["--stacks", "4"]), 1).unwrap(),
@@ -421,6 +428,101 @@ fn store_capacity_flag_conflicts_with_non_admission_modes() {
         resolve_cli_mode(&parse(&["--admit", "--store-capacity", "4"]), 1).unwrap(),
         CliMode::Admission
     );
+}
+
+#[test]
+fn delta_validation_rejects_malformed_deltas_cleanly() {
+    // every malformed delta kind must be a clean util::error that names
+    // the offending delta and the rule it broke — never a panic inside
+    // the repair engine
+    use rapid_graph::apsp::delta::{validate_deltas, EdgeDelta};
+    let g = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+    let cases: Vec<(EdgeDelta, &str)> = vec![
+        (EdgeDelta::Insert { u: 0, v: 9, w: 1.0 }, "out of range"),
+        (EdgeDelta::Delete { u: 7, v: 1 }, "out of range"),
+        (EdgeDelta::Insert { u: 2, v: 2, w: 1.0 }, "self-loop"),
+        (
+            EdgeDelta::Reweight { u: 0, v: 1, w: f32::NAN },
+            "finite and non-negative",
+        ),
+        (
+            EdgeDelta::Reweight { u: 0, v: 1, w: -2.0 },
+            "finite and non-negative",
+        ),
+        (
+            EdgeDelta::Insert { u: 0, v: 1, w: f32::INFINITY },
+            "finite and non-negative",
+        ),
+        (EdgeDelta::Insert { u: 0, v: 1, w: 1.0 }, "already exists"),
+        (EdgeDelta::Delete { u: 0, v: 3 }, "does not exist"),
+        (EdgeDelta::Reweight { u: 0, v: 3, w: 1.0 }, "does not exist"),
+    ];
+    for (d, needle) in cases {
+        let err = validate_deltas(&g, &[d]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains(needle), "{d:?} must fail with {needle:?}: {msg}");
+    }
+    let err = validate_deltas(&g, &[]).unwrap_err();
+    assert!(format!("{err}").contains("empty"), "{err}");
+}
+
+#[test]
+fn delta_script_parse_failures_are_clean_errors() {
+    use rapid_graph::apsp::delta::parse_script;
+    let err = parse_script("").unwrap_err();
+    assert!(format!("{err}").contains("no deltas"), "{err}");
+    let err = parse_script("# comments only\n\n# more\n").unwrap_err();
+    assert!(format!("{err}").contains("no deltas"), "{err}");
+    let err = parse_script("frobnicate 1 2\n").unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("frobnicate"), "error must name the op: {msg}");
+    assert!(msg.contains("line 1"), "error must name the line: {msg}");
+    let err = parse_script("insert 0 1 2.0 extra\n").unwrap_err();
+    assert!(format!("{err}").contains("trailing"), "{err}");
+}
+
+#[test]
+fn delta_replay_against_unsolved_graph_rejected_cleanly() {
+    // a 0-vertex base graph has no solution to repair — the delta
+    // engine must refuse it up front with a named error, not panic in
+    // the planner
+    let mut cfg = SystemConfig::default();
+    cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
+    let ex = Executor::new(cfg).unwrap();
+    let empty = CsrGraph::from_edges(0, &[]);
+    let err = match ex.run_delta(&empty, "insert 0 1 1.0\n") {
+        Ok(_) => panic!("deltas against an empty base graph must not run"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err}").contains("base graph"),
+        "error must name the problem: {err}"
+    );
+}
+
+#[test]
+fn delta_replay_surfaces_validation_errors_with_batch_context() {
+    // run_delta must reject a script whose first batch is fine but
+    // whose second batch references a vertex outside the graph
+    let mut cfg = SystemConfig::default();
+    cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
+    cfg.tile_limit = 64;
+    let ex = Executor::new(cfg).unwrap();
+    let g = rapid_graph::graph::generators::newman_watts_strogatz(
+        120,
+        4,
+        0.1,
+        rapid_graph::graph::generators::Weights::Uniform(1.0, 4.0),
+        7,
+    );
+    let (u, v, w) = g.edges().next().unwrap();
+    let script = format!("reweight {u} {v} {}\n\ninsert 5 999 1.0\n", w * 0.5);
+    let err = match ex.run_delta(&g, &script) {
+        Ok(_) => panic!("out-of-range endpoint must not replay"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("out of range"), "error must name the rule: {msg}");
 }
 
 #[test]
