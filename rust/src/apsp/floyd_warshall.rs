@@ -26,6 +26,12 @@
 //! load of the pivot-row panel feeds four accumulator rows — rows are
 //! independent within a pivot, so the tiling cannot change results.
 //!
+//! [`relax_row_succ`] is the successor-threaded sibling used by the
+//! query layer (`apsp::query`): the same row update, but where the
+//! candidate strictly improves the distance it also records the first
+//! hop of the `i -> k` path into a packed u32 next-hop row, so path
+//! reconstruction falls out of the solve for free.
+//!
 //! Pivot-row / panel scratch comes from [`crate::util::arena`]; the
 //! `_scratch` variants take caller-provided buffers for callers that
 //! hold their own (the blocked backend, the property suite).
@@ -202,6 +208,54 @@ pub fn relax_rows4(
     }
 }
 
+/// Successor-threaded FW row update: where `dik + row_k[j]` is
+/// *strictly* smaller than `row_i[j]`, write the improved distance and
+/// record `sik` (the first hop of the `i -> k` path) into `succ_i[j]`.
+/// The next-hop recurrence is `succ[i][j] := succ[i][k]` whenever the
+/// pivot improves `d[i][j]`, so one scalar `sik` broadcast per row is
+/// all the successor state the kernel needs — no successor pivot-row
+/// snapshot. Ties never update (an equal-length path is already
+/// recorded), and strict `<` is what keeps the scalar and AVX2 paths
+/// bit-identical: both select on exactly the `cand < cur` mask, with no
+/// `min` tie-order subtleties. `dik` must be finite.
+#[inline]
+pub fn relax_row_succ(row_i: &mut [f32], dik: f32, row_k: &[f32], succ_i: &mut [u32], sik: u32) {
+    let m = row_i.len().min(row_k.len()).min(succ_i.len());
+    let (ri, rk, si) = (&mut row_i[..m], &row_k[..m], &mut succ_i[..m]);
+    #[cfg(test)]
+    RELAX_FAST_PATH_ENTRIES.fetch_add(1, Ordering::Relaxed);
+    #[cfg(target_arch = "x86_64")]
+    if simd::enabled() {
+        // SAFETY: AVX2 support verified by the cached runtime probe.
+        unsafe { simd::relax_row_succ_avx2(ri, dik, rk, si, sik) };
+        return;
+    }
+    relax_row_succ_scalar(ri, dik, rk, si, sik);
+}
+
+/// Scalar successor-threaded relax — the feature-parity oracle for
+/// [`relax_row_succ`]. Written as an explicit compare-and-select (not
+/// `f32::min`) so the update condition is the same strict `<` the SIMD
+/// blend mask uses.
+#[inline]
+pub fn relax_row_succ_scalar(
+    row_i: &mut [f32],
+    dik: f32,
+    row_k: &[f32],
+    succ_i: &mut [u32],
+    sik: u32,
+) {
+    let m = row_i.len().min(row_k.len()).min(succ_i.len());
+    let (ri, rk, si) = (&mut row_i[..m], &row_k[..m], &mut succ_i[..m]);
+    for j in 0..m {
+        let cand = dik + rk[j];
+        if cand < ri[j] {
+            ri[j] = cand;
+            si[j] = sik;
+        }
+    }
+}
+
 /// Name of the relax microkernel variant in use (for bench reports).
 pub fn relax_kernel_name() -> &'static str {
     #[cfg(target_arch = "x86_64")]
@@ -255,6 +309,48 @@ mod simd {
         while j < n {
             let x = *rip.add(j);
             *rip.add(j) = x.min(dik + *rkp.add(j));
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available (see [`enabled`]).
+    ///
+    /// The distance lanes blend on the strict `cand < cur` mask
+    /// (`_CMP_LT_OQ`) rather than `vminps`, so the update condition is
+    /// the literal scalar-oracle branch; the same mask, cast to integer
+    /// lanes, blends the broadcast successor id into the u32 row.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relax_row_succ_avx2(
+        ri: &mut [f32],
+        dik: f32,
+        rk: &[f32],
+        si: &mut [u32],
+        sik: u32,
+    ) {
+        let n = ri.len().min(rk.len()).min(si.len());
+        let rip = ri.as_mut_ptr();
+        let rkp = rk.as_ptr();
+        let sip = si.as_mut_ptr();
+        let va = _mm256_set1_ps(dik);
+        let vs = _mm256_set1_epi32(sik as i32);
+        let mut j = 0;
+        while j + 8 <= n {
+            let cand = _mm256_add_ps(va, _mm256_loadu_ps(rkp.add(j)));
+            let cur = _mm256_loadu_ps(rip.add(j));
+            let mask = _mm256_cmp_ps::<_CMP_LT_OQ>(cand, cur);
+            _mm256_storeu_ps(rip.add(j), _mm256_blendv_ps(cur, cand, mask));
+            let cur_s = _mm256_loadu_si256(sip.add(j) as *const __m256i);
+            let new_s = _mm256_blendv_epi8(cur_s, vs, _mm256_castps_si256(mask));
+            _mm256_storeu_si256(sip.add(j) as *mut __m256i, new_s);
+            j += 8;
+        }
+        while j < n {
+            let cand = dik + *rkp.add(j);
+            if cand < *rip.add(j) {
+                *rip.add(j) = cand;
+                *sip.add(j) = sik;
+            }
             j += 1;
         }
     }
@@ -607,5 +703,56 @@ mod tests {
                 assert_eq!(f, s);
             }
         }
+    }
+
+    #[test]
+    fn relax_succ_dispatch_matches_scalar_oracle() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        for case in 0..40 {
+            let n = 1 + rng.gen_range(50);
+            let mk = |rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+                (0..n)
+                    .map(|_| {
+                        if rng.gen_bool(0.2) {
+                            INF
+                        } else {
+                            rng.gen_f32_range(0.0, 9.0)
+                        }
+                    })
+                    .collect()
+            };
+            let row = mk(&mut rng);
+            let rk = mk(&mut rng);
+            let succ: Vec<u32> = (0..n).map(|_| rng.gen_range(n + 1) as u32).collect();
+            let dik = rng.gen_f32_range(0.0, 5.0);
+            let sik = rng.gen_range(n) as u32;
+
+            let (mut r_a, mut s_a) = (row.clone(), succ.clone());
+            relax_row_succ(&mut r_a, dik, &rk, &mut s_a, sik);
+            let (mut r_b, mut s_b) = (row.clone(), succ.clone());
+            relax_row_succ_scalar(&mut r_b, dik, &rk, &mut s_b, sik);
+            assert_eq!(r_a, r_b, "case {case}: dist rows diverged");
+            assert_eq!(s_a, s_b, "case {case}: succ rows diverged");
+
+            // cross-check the branch semantics against relax_row: the
+            // distances must equal the plain (min-based) kernel's
+            let mut r_c = row.clone();
+            relax_row(&mut r_c, dik, &rk);
+            assert_eq!(r_a, r_c, "case {case}: succ kernel changed distances");
+        }
+    }
+
+    #[test]
+    fn relax_succ_ties_never_update() {
+        // cand == cur exactly: strict < must leave both dist and succ
+        // untouched on every code path
+        let mut row = vec![5.0f32, 3.0, 7.0, 1.0, 5.0, 3.0, 7.0, 1.0, 2.5];
+        let rk: Vec<f32> = row.iter().map(|x| x - 2.0).collect();
+        let succ0: Vec<u32> = (0..row.len() as u32).collect();
+        let mut succ = succ0.clone();
+        let before = row.clone();
+        relax_row_succ(&mut row, 2.0, &rk, &mut succ, 99);
+        assert_eq!(row, before);
+        assert_eq!(succ, succ0);
     }
 }

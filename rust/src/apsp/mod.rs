@@ -24,6 +24,12 @@
 //! * [`shard`] — sharded multi-stack execution: one over-large graph
 //!   partitioned across modeled PIM stacks with explicit inter-stack
 //!   boundary/dB transfers.
+//! * [`query`] — packed next-hop maps ([`query::NextHopMatrix`]) and
+//!   the query-script front-end: O(1) `dist(u,v)`, O(path-len)
+//!   `path(u,v)` with no Dijkstra fallback.
+//! * [`serve`] — serve-side read path: lock-free snapshot publication
+//!   ([`serve::SnapshotCell`]) and the batched source-major query
+//!   executor ([`serve::BatchExec`]).
 //! * [`store`] — content-addressed result store: fingerprinted,
 //!   compressed APSP results persisted to modeled FeNAND so duplicate
 //!   submissions are served instead of re-solved.
@@ -40,7 +46,9 @@ pub mod floyd_warshall;
 pub mod minplus;
 pub mod partitioned;
 pub mod plan;
+pub mod query;
 pub mod recursive;
+pub mod serve;
 pub mod scheduler;
 pub mod shard;
 pub mod store;

@@ -1,0 +1,537 @@
+//! Query front-end over solved APSP results: packed next-hop maps for
+//! O(path-len) reconstruction, plus the query-script grammar the serve
+//! mode executes.
+//!
+//! # Next-hop encoding
+//!
+//! [`NextHopMatrix`] stores `succ[u][v]` — the first hop on a shortest
+//! `u -> v` path — as packed successor ids (bit_gossip's packed
+//! next-node maps are the idiom: near-constant-time `next_node`,
+//! `path_to` as repeated lookup). Ids are u32 with a u16 small-graph
+//! specialization (`n <= 65535` leaves `u16::MAX` free as the "no
+//! path" sentinel), halving the resident bytes for the graphs that fit.
+//!
+//! The map is computed *alongside* the FW solve by
+//! [`solve_next_hops`]: the row sweep drives the successor-threaded
+//! relax microkernel ([`super::floyd_warshall::relax_row_succ`]), whose
+//! recurrence is `succ[i][j] := succ[i][k]` exactly where the pivot
+//! strictly improves `d[i][j]`. One scalar `succ[i][k]` broadcast per
+//! row is the only successor state the kernel reads, so the sweep keeps
+//! the same pivot-row-snapshot shape as `fw_rowwise`.
+//! [`solve_next_hops_oracle`] is the feature-parity scalar build; the
+//! two are bit-identical (pinned by `tests/query_properties.rs`).
+//!
+//! `dist(u,v)` is one load; `path(u,v)` is one lookup per hop — no
+//! Dijkstra fallback anywhere on the read path.
+//!
+//! # Query scripts
+//!
+//! One query per line, `#` comments, blank lines separate batches (the
+//! serve loop applies one delta batch between query batches):
+//!
+//! ```text
+//! dist 0 17            # point lookup
+//! path 3 9 @gold       # reconstruct the full hop list (tenant "gold")
+//! knear 4 8            # the 8 nearest other nodes by distance
+//! reach 2              # how many nodes are reachable from 2
+//! ```
+//!
+//! A trailing `@name` token assigns the query to a tenant stream
+//! (default tenant otherwise); [`validate_queries`] rejects
+//! out-of-range endpoints and degenerate k-nearest parameters with
+//! clean `util::error`s before the serve loop touches any state.
+
+use super::floyd_warshall;
+use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
+use crate::util::arena;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// Successor id meaning "no next hop" (unreachable pair).
+pub const NO_HOP: u32 = u32::MAX;
+
+/// Packed successor ids: u16 when every id plus the sentinel fits,
+/// u32 otherwise. The unpacked accessor always speaks u32.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum SuccStore {
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+/// Packed next-hop matrix: `succ[u][v]` is the first hop on a shortest
+/// `u -> v` path (`v` itself for a direct edge, `u` on the diagonal),
+/// or the sentinel for unreachable pairs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NextHopMatrix {
+    n: usize,
+    store: SuccStore,
+}
+
+impl NextHopMatrix {
+    /// Pack a row-major u32 successor buffer (`NO_HOP` sentinel),
+    /// choosing the u16 specialization when the graph is small enough.
+    pub fn from_raw(n: usize, raw: Vec<u32>) -> Self {
+        assert_eq!(raw.len(), n * n);
+        let store = if n <= u16::MAX as usize {
+            // ids are < n <= 65535, so u16::MAX is free as the sentinel
+            SuccStore::U16(
+                raw.iter()
+                    .map(|&s| if s == NO_HOP { u16::MAX } else { s as u16 })
+                    .collect(),
+            )
+        } else {
+            SuccStore::U32(raw)
+        };
+        Self { n, store }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// First hop on a shortest `u -> v` path, `None` if unreachable.
+    #[inline]
+    pub fn next_hop(&self, u: usize, v: usize) -> Option<u32> {
+        debug_assert!(u < self.n && v < self.n);
+        match &self.store {
+            SuccStore::U16(s) => match s[u * self.n + v] {
+                u16::MAX => None,
+                hop => Some(hop as u32),
+            },
+            SuccStore::U32(s) => match s[u * self.n + v] {
+                NO_HOP => None,
+                hop => Some(hop),
+            },
+        }
+    }
+
+    /// Reconstruct the full hop list `[u, ..., v]` into `out`
+    /// (cleared first). Returns `false` for unreachable pairs. One
+    /// next-hop lookup per hop — O(path-len), no allocation beyond
+    /// `out`'s capacity.
+    pub fn path_into(&self, u: usize, v: usize, out: &mut Vec<u32>) -> bool {
+        out.clear();
+        let mut cur = u;
+        out.push(u as u32);
+        // hop budget: a consistent successor map over non-negative
+        // weights can't revisit a node, so > n hops means corruption
+        for _ in 0..self.n {
+            if cur == v {
+                return true;
+            }
+            match self.next_hop(cur, v) {
+                None => {
+                    out.clear();
+                    return false;
+                }
+                Some(hop) => {
+                    out.push(hop);
+                    cur = hop as usize;
+                }
+            }
+        }
+        cur == v
+    }
+
+    /// [`NextHopMatrix::path_into`] returning an owned hop list.
+    pub fn path(&self, u: usize, v: usize) -> Option<Vec<u32>> {
+        let mut out = Vec::new();
+        if self.path_into(u, v, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Resident bytes of the packed store.
+    pub fn bytes(&self) -> usize {
+        match &self.store {
+            SuccStore::U16(s) => s.len() * 2,
+            SuccStore::U32(s) => s.len() * 4,
+        }
+    }
+
+    /// Bit width of the packed ids (16 for the small-graph
+    /// specialization, 32 otherwise) — for reports.
+    pub fn width_bits(&self) -> usize {
+        match &self.store {
+            SuccStore::U16(_) => 16,
+            SuccStore::U32(_) => 32,
+        }
+    }
+}
+
+/// Dense FW solve that threads successor updates through the
+/// dispatched (SIMD-capable) relax microkernel. Returns the distance
+/// matrix and the packed next-hop map together — the pair a serve
+/// snapshot publishes.
+pub fn solve_next_hops(g: &CsrGraph) -> (DistMatrix, NextHopMatrix) {
+    solve_next_hops_impl(g, false)
+}
+
+/// Feature-parity scalar oracle for [`solve_next_hops`]: the same
+/// sweep driving only `relax_row_succ_scalar`. Bit-identical output
+/// (strict-`<` update on both paths) — the property suite pins it.
+pub fn solve_next_hops_oracle(g: &CsrGraph) -> (DistMatrix, NextHopMatrix) {
+    solve_next_hops_impl(g, true)
+}
+
+fn solve_next_hops_impl(g: &CsrGraph, force_scalar: bool) -> (DistMatrix, NextHopMatrix) {
+    let n = g.n();
+    let mut dist = g.to_dense();
+    let mut succ = vec![NO_HOP; n * n];
+    // base cases: the first hop of a direct edge is the edge itself,
+    // and the diagonal points at itself (path reconstruction stops on
+    // arrival anyway, but a self-hop keeps `succ[i][k]` well-defined
+    // for the k == i pivot reads)
+    for u in 0..n {
+        succ[u * n + u] = u as u32;
+        let row = dist.row(u);
+        for (v, s) in succ[u * n..(u + 1) * n].iter_mut().enumerate() {
+            if v != u && row[v].is_finite() {
+                *s = v as u32;
+            }
+        }
+    }
+    let mut row_k = arena::scratch_filled(n, 0.0);
+    for k in 0..n {
+        row_k[..n].copy_from_slice(dist.row(k));
+        let data = dist.as_mut_slice();
+        for i in 0..n {
+            let dik = data[i * n + k];
+            if !(dik < f32::INFINITY) {
+                continue;
+            }
+            let sik = succ[i * n + k];
+            let row_i = &mut data[i * n..(i + 1) * n];
+            let succ_i = &mut succ[i * n..(i + 1) * n];
+            if force_scalar {
+                floyd_warshall::relax_row_succ_scalar(row_i, dik, &row_k[..n], succ_i, sik);
+            } else {
+                floyd_warshall::relax_row_succ(row_i, dik, &row_k[..n], succ_i, sik);
+            }
+        }
+    }
+    drop(row_k);
+    (dist, NextHopMatrix::from_raw(n, succ))
+}
+
+/// One read request against a solved graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Query {
+    /// Point lookup: `dist(u, v)`.
+    Dist { u: u32, v: u32 },
+    /// Full path reconstruction `u -> v` over the next-hop map.
+    Path { u: u32, v: u32 },
+    /// The `k` nearest other nodes from `u`, by (distance, id).
+    KNearest { u: u32, k: u32 },
+    /// How many other nodes are reachable from `u`.
+    Reach { u: u32 },
+}
+
+impl Query {
+    /// Source node — the batching key (source-major row reuse).
+    pub fn source(&self) -> u32 {
+        match *self {
+            Query::Dist { u, .. }
+            | Query::Path { u, .. }
+            | Query::KNearest { u, .. }
+            | Query::Reach { u } => u,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Query::Dist { .. } => "dist",
+            Query::Path { .. } => "path",
+            Query::KNearest { .. } => "knear",
+            Query::Reach { .. } => "reach",
+        }
+    }
+}
+
+/// A query tagged with its tenant stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueryReq {
+    /// Index into [`QueryScript::tenants`].
+    pub tenant: u16,
+    pub query: Query,
+}
+
+/// A parsed query script: interned tenant names plus the query batches
+/// in script order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueryScript {
+    pub tenants: Vec<String>,
+    pub batches: Vec<Vec<QueryReq>>,
+}
+
+impl QueryScript {
+    pub fn total_queries(&self) -> usize {
+        self.batches.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// Parse a query script (grammar in the module docs): `dist u v`,
+/// `path u v`, `knear u k`, `reach u`, optional trailing `@tenant`,
+/// `#` comments, blank lines separate batches.
+pub fn parse_query_script(text: &str) -> Result<QueryScript> {
+    let mut tenants: Vec<String> = vec!["default".to_string()];
+    let mut batches: Vec<Vec<QueryReq>> = Vec::new();
+    let mut cur: Vec<QueryReq> = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            if !cur.is_empty() {
+                batches.push(std::mem::take(&mut cur));
+            }
+            continue;
+        }
+        let mut toks: Vec<&str> = line.split_whitespace().collect();
+        let tenant = match toks.last() {
+            Some(last) if last.starts_with('@') => {
+                let name = &last[1..];
+                ensure!(!name.is_empty(), "line {}: empty tenant name", ln + 1);
+                toks.pop();
+                match tenants.iter().position(|t| t == name) {
+                    Some(i) => i as u16,
+                    None => {
+                        ensure!(
+                            tenants.len() < u16::MAX as usize,
+                            "line {}: too many tenants",
+                            ln + 1
+                        );
+                        tenants.push(name.to_string());
+                        (tenants.len() - 1) as u16
+                    }
+                }
+            }
+            _ => 0,
+        };
+        let op = *toks.first().unwrap_or(&"");
+        let parse_u32 = |s: Option<&&str>, name: &str| -> Result<u32> {
+            let s = s.ok_or_else(|| crate::err!("line {}: {op} missing {name}", ln + 1))?;
+            s.parse()
+                .map_err(|_| crate::err!("line {}: bad {name} {s:?}", ln + 1))
+        };
+        let query = match op {
+            "dist" | "path" => {
+                let u = parse_u32(toks.get(1), "u")?;
+                let v = parse_u32(toks.get(2), "v")?;
+                if op == "dist" {
+                    Query::Dist { u, v }
+                } else {
+                    Query::Path { u, v }
+                }
+            }
+            "knear" => Query::KNearest {
+                u: parse_u32(toks.get(1), "u")?,
+                k: parse_u32(toks.get(2), "k")?,
+            },
+            "reach" => Query::Reach {
+                u: parse_u32(toks.get(1), "u")?,
+            },
+            other => bail!("line {}: unknown query op {other:?}", ln + 1),
+        };
+        let expected = match query {
+            Query::Dist { .. } | Query::Path { .. } | Query::KNearest { .. } => 3,
+            Query::Reach { .. } => 2,
+        };
+        ensure!(
+            toks.len() == expected,
+            "line {}: trailing tokens after {op}",
+            ln + 1
+        );
+        cur.push(QueryReq { tenant, query });
+    }
+    if !cur.is_empty() {
+        batches.push(cur);
+    }
+    ensure!(!batches.is_empty(), "query script contains no queries");
+    Ok(QueryScript { tenants, batches })
+}
+
+/// Validate a parsed script against the graph it will be served from:
+/// endpoints in range, `1 <= k < n` for k-nearest. Clean errors before
+/// the serve loop touches any state.
+pub fn validate_queries(n: usize, script: &QueryScript) -> Result<()> {
+    ensure!(n > 0, "cannot serve queries: base graph is empty");
+    for (b, batch) in script.batches.iter().enumerate() {
+        ensure!(!batch.is_empty(), "query batch {b} is empty");
+        for (i, req) in batch.iter().enumerate() {
+            let q = &req.query;
+            let kind = q.kind();
+            let check = |node: u32| -> Result<()> {
+                ensure!(
+                    (node as usize) < n,
+                    "query {i} in batch {b} ({kind}): node {node} out of range \
+                     (graph has {n} vertices)"
+                );
+                Ok(())
+            };
+            match *q {
+                Query::Dist { u, v } | Query::Path { u, v } => {
+                    check(u)?;
+                    check(v)?;
+                }
+                Query::KNearest { u, k } => {
+                    check(u)?;
+                    ensure!(
+                        k >= 1,
+                        "query {i} in batch {b} (knear): k = 0 is degenerate (no neighbors asked)"
+                    );
+                    ensure!(
+                        (k as usize) < n,
+                        "query {i} in batch {b} (knear): k = {k} but the graph has only {} \
+                         other nodes",
+                        n - 1
+                    );
+                }
+                Query::Reach { u } => check(u)?,
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, Weights};
+    use crate::INF;
+
+    #[test]
+    fn next_hops_on_line_graph() {
+        // 0 -1- 1 -2- 2 -4- 3 (undirected)
+        let g = CsrGraph::from_undirected_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 4.0)],
+        );
+        let (dist, next) = solve_next_hops(&g);
+        assert_eq!(dist.get(0, 3), 7.0);
+        assert_eq!(next.next_hop(0, 3), Some(1));
+        assert_eq!(next.next_hop(1, 3), Some(2));
+        assert_eq!(next.path(0, 3), Some(vec![0, 1, 2, 3]));
+        assert_eq!(next.path(3, 0), Some(vec![3, 2, 1, 0]));
+        assert_eq!(next.path(2, 2), Some(vec![2]));
+    }
+
+    #[test]
+    fn shortcut_beats_direct_edge() {
+        // direct 0->2 weight 5, via 1 = 3: the next hop must be 1
+        let g = CsrGraph::from_edges(3, &[(0, 2, 5.0), (0, 1, 1.0), (1, 2, 2.0)]);
+        let (dist, next) = solve_next_hops(&g);
+        assert_eq!(dist.get(0, 2), 3.0);
+        assert_eq!(next.next_hop(0, 2), Some(1));
+    }
+
+    #[test]
+    fn unreachable_has_no_hop() {
+        let g = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        let (dist, next) = solve_next_hops(&g);
+        assert_eq!(dist.get(0, 2), INF);
+        assert_eq!(next.next_hop(0, 2), None);
+        assert_eq!(next.path(0, 2), None);
+        let mut buf = vec![99];
+        assert!(!next.path_into(0, 3, &mut buf));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn paths_are_real_and_weights_match_dist() {
+        for seed in 0..3 {
+            let g = generators::random_connected(60, 140, Weights::Uniform(0.5, 4.0), seed);
+            let (dist, next) = solve_next_hops(&g);
+            let fw = {
+                let mut d = g.to_dense();
+                super::floyd_warshall::fw_rowwise(&mut d);
+                d
+            };
+            // distances agree with the plain kernel up to f32 path
+            // association (strict-< vs min tie handling can pick a
+            // different but equal-cost association)
+            assert!(dist.max_diff(&fw) < 1e-4, "seed {seed}");
+            for u in (0..g.n()).step_by(7) {
+                for v in (0..g.n()).step_by(5) {
+                    let p = next.path(u, v).expect("connected graph");
+                    assert_eq!(p[0], u as u32);
+                    assert_eq!(*p.last().unwrap(), v as u32);
+                    let mut w = 0f32;
+                    for hop in p.windows(2) {
+                        let ew = g
+                            .edge_weight(hop[0] as usize, hop[1] as usize)
+                            .expect("path hop must be a real edge");
+                        w += ew;
+                    }
+                    assert!(
+                        (w - dist.get(u, v)).abs() < 1e-4,
+                        "seed {seed}: path weight {w} vs dist {}",
+                        dist.get(u, v)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_graph_uses_u16_store() {
+        let g = CsrGraph::from_undirected_edges(3, &[(0, 1, 1.0)]);
+        let (_, next) = solve_next_hops(&g);
+        assert_eq!(next.width_bits(), 16);
+        assert_eq!(next.bytes(), 9 * 2);
+    }
+
+    #[test]
+    fn parse_script_batches_and_tenants() {
+        let s = parse_query_script(
+            "# header\n\
+             dist 0 1\n\
+             path 2 3 @gold\n\
+             \n\
+             knear 1 4 @gold\n\
+             reach 0 @bronze\n",
+        )
+        .unwrap();
+        assert_eq!(s.tenants, vec!["default", "gold", "bronze"]);
+        assert_eq!(s.batches.len(), 2);
+        assert_eq!(s.batches[0].len(), 2);
+        assert_eq!(s.batches[0][1].tenant, 1);
+        assert_eq!(s.batches[1][0].query, Query::KNearest { u: 1, k: 4 });
+        assert_eq!(s.total_queries(), 4);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        for (script, needle) in [
+            ("warp 0 1\n", "unknown query op"),
+            ("dist 0\n", "missing v"),
+            ("dist 0 x\n", "bad v"),
+            ("path 1 2 3\n", "trailing tokens"),
+            ("knear 1 2 @\n", "empty tenant"),
+            ("# only comments\n\n", "no queries"),
+        ] {
+            let e = parse_query_script(script).unwrap_err().to_string();
+            assert!(e.contains(needle), "script {script:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_queries() {
+        let script = |line: &str| parse_query_script(line).unwrap();
+        for (line, needle) in [
+            ("dist 0 99\n", "out of range"),
+            ("knear 0 0\n", "k = 0"),
+            ("knear 0 10\n", "other nodes"),
+        ] {
+            let e = validate_queries(10, &script(line)).unwrap_err().to_string();
+            assert!(e.contains(needle), "line {line:?}: {e}");
+        }
+        assert!(validate_queries(10, &script("dist 0 9\nknear 3 9\n")).is_ok());
+        let e = validate_queries(0, &script("dist 0 1\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("base graph is empty"), "{e}");
+    }
+}

@@ -1,0 +1,510 @@
+//! Serve-side read path: immutable query snapshots published through a
+//! lock-free cell, and the batched query executor that drains request
+//! streams against them.
+//!
+//! # Snapshot lifecycle
+//!
+//! A solved result is frozen into one [`QuerySnapshot`] — distance
+//! matrix + packed next-hop map + a build-time checksum — held by a
+//! single `Arc`. Readers obtain it through [`SnapshotCell::load`],
+//! writers publish a replacement with [`SnapshotCell::swap`] when a
+//! delta repair lands. Because the snapshot is one immutable allocation
+//! behind one pointer, a torn read (distances from one epoch, next
+//! hops from another) is structurally impossible: a reader holds
+//! either the whole old snapshot or the whole new one.
+//!
+//! # Why readers never block
+//!
+//! [`SnapshotCell`] is a fixed-slot hazard-pointer scheme, std-only:
+//!
+//! * a reader publishes the pointer it intends to use in one of
+//!   [`READER_SLOTS`] hazard slots (a CAS on a null slot), re-validates
+//!   the cell still points there, takes its own strong count, and
+//!   releases the slot — no lock anywhere on the path;
+//! * the writer swaps the current pointer, pushes the old one onto a
+//!   writer-side graveyard, and reclaims exactly those retirees no
+//!   hazard slot protects.
+//!
+//! The only reader retry is a swap racing the validate load (or all
+//! slots momentarily claimed); both are counted in
+//! [`SnapshotCell::stalls`] — the serve bench snapshots that counter as
+//! `snapshot_swap_stalls`. Readers never take the graveyard mutex and
+//! never wait on the writer, so a mid-repair reader simply keeps the
+//! consistent pre-repair snapshot (its `Arc` pins it until dropped).
+//!
+//! # Batching policy
+//!
+//! [`BatchExec`] drains a request batch source-major: requests are
+//! ordered by source row, the sources' rows are copied panel-at-a-time
+//! (panel width configurable, arena-leased scratch) and every query on
+//! a panel is answered from the hot copy — point lookups and
+//! reachability scans touch only the panel, path reconstruction walks
+//! the packed next-hop map one lookup per hop, k-nearest selects from
+//! the resident row. Answers come back in request order.
+
+use super::query::{NextHopMatrix, Query, QueryReq};
+use crate::graph::dense::DistMatrix;
+use crate::util::arena;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Fixed hazard-slot count: the maximum number of readers that can be
+/// mid-claim at the same instant (not the maximum reader threads —
+/// slots are held for a few loads each).
+pub const READER_SLOTS: usize = 64;
+
+/// One immutable published view of a solved graph: everything a reader
+/// needs, behind a single `Arc`.
+#[derive(Debug)]
+pub struct QuerySnapshot {
+    /// Publication epoch (0 = initial solve, +1 per delta repair).
+    pub epoch: u64,
+    pub dist: DistMatrix,
+    pub next: NextHopMatrix,
+    /// Build-time checksum over epoch + sampled payload bits; readers
+    /// re-derive it to prove a snapshot was never observed torn.
+    check: u64,
+}
+
+impl QuerySnapshot {
+    pub fn new(epoch: u64, dist: DistMatrix, next: NextHopMatrix) -> Self {
+        let check = Self::fingerprint(epoch, &dist, &next);
+        Self {
+            epoch,
+            dist,
+            next,
+            check,
+        }
+    }
+
+    /// FNV-1a over the epoch and a bounded sample of distance bits and
+    /// next-hop ids — cheap enough for readers to re-derive per load.
+    fn fingerprint(epoch: u64, dist: &DistMatrix, next: &NextHopMatrix) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        mix(epoch);
+        let n = dist.n();
+        mix(n as u64);
+        let cells = dist.as_slice();
+        let stride = (cells.len() / 256).max(1);
+        for idx in (0..cells.len()).step_by(stride) {
+            mix(cells[idx].to_bits() as u64);
+            let (u, v) = (idx / n.max(1), idx % n.max(1));
+            mix(next.next_hop(u, v).map_or(u64::MAX, |hop| hop as u64));
+        }
+        h
+    }
+
+    /// Re-derive the checksum: `true` iff the snapshot's fields are the
+    /// ones it was built with (the torn-read probe).
+    pub fn verify(&self) -> bool {
+        Self::fingerprint(self.epoch, &self.dist, &self.next) == self.check
+    }
+
+    /// Resident bytes of the published payload.
+    pub fn bytes(&self) -> usize {
+        self.dist.dense_bytes() + self.next.bytes()
+    }
+}
+
+/// Lock-free publication cell for `Arc` snapshots (hazard-pointer
+/// reclamation; see the module docs for the protocol and its safety
+/// argument).
+pub struct SnapshotCell<T: Send + Sync> {
+    current: AtomicPtr<T>,
+    slots: Vec<AtomicPtr<T>>,
+    /// Writer-side graveyard: retired pointers awaiting quiescence.
+    retired: Mutex<Vec<*const T>>,
+    swaps: AtomicU64,
+    stalls: AtomicU64,
+}
+
+// SAFETY: every raw pointer in `current`, `slots`, and `retired` came
+// from `Arc::into_raw` on an `Arc<T>`; they are reconstituted or
+// dereferenced only under the hazard protocol (readers re-validate
+// after publishing a hazard, the writer reclaims only unhazarded
+// retirees), so moving/sharing the cell across threads demands exactly
+// what `Arc<T>: Send + Sync` demands: `T: Send + Sync`.
+unsafe impl<T: Send + Sync> Send for SnapshotCell<T> {}
+unsafe impl<T: Send + Sync> Sync for SnapshotCell<T> {}
+
+impl<T: Send + Sync> SnapshotCell<T> {
+    pub fn new(initial: Arc<T>) -> Self {
+        Self {
+            current: AtomicPtr::new(Arc::into_raw(initial) as *mut T),
+            slots: (0..READER_SLOTS)
+                .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+                .collect(),
+            retired: Mutex::new(Vec::new()),
+            swaps: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+        }
+    }
+
+    /// Lock-free read: returns the current snapshot with its own strong
+    /// count. Retries (never blocks) when a swap races the hazard
+    /// publish; every retry increments [`SnapshotCell::stalls`].
+    pub fn load(&self) -> Arc<T> {
+        loop {
+            let p = self.current.load(Ordering::SeqCst);
+            let mut claimed = None;
+            for slot in &self.slots {
+                if slot
+                    .compare_exchange(
+                        std::ptr::null_mut(),
+                        p,
+                        Ordering::SeqCst,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    claimed = Some(slot);
+                    break;
+                }
+            }
+            let Some(slot) = claimed else {
+                // all slots mid-claim by other readers; not a writer wait
+                self.stalls.fetch_add(1, Ordering::Relaxed);
+                std::hint::spin_loop();
+                continue;
+            };
+            if self.current.load(Ordering::SeqCst) == p {
+                // SAFETY: `p` came from `Arc::into_raw`, and the
+                // published hazard keeps the writer from reclaiming it
+                // until the slot clears — we take our own strong count
+                // first, so the returned Arc is self-sufficient.
+                unsafe {
+                    Arc::increment_strong_count(p);
+                    slot.store(std::ptr::null_mut(), Ordering::SeqCst);
+                    return Arc::from_raw(p);
+                }
+            }
+            // a swap landed between the read and the hazard publish
+            slot.store(std::ptr::null_mut(), Ordering::SeqCst);
+            self.stalls.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Publish `next` and retire the previous snapshot; reclaims every
+    /// retiree no reader hazard protects. Writer-only mutex — readers
+    /// never touch it.
+    pub fn swap(&self, next: Arc<T>) {
+        let fresh = Arc::into_raw(next) as *mut T;
+        let old = self.current.swap(fresh, Ordering::SeqCst);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        let mut retired = self.retired.lock().unwrap();
+        retired.push(old as *const T);
+        retired.retain(|&p| {
+            let hazarded = self
+                .slots
+                .iter()
+                .any(|s| s.load(Ordering::SeqCst) as *const T == p);
+            if !hazarded {
+                // SAFETY: `p` holds the cell's own strong count from
+                // its publication; no hazard slot names it, and any
+                // reader that validated `p` already took its own count
+                // before clearing its slot.
+                unsafe { drop(Arc::from_raw(p)) };
+            }
+            hazarded
+        });
+    }
+
+    /// Number of swaps published.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Reader retries (hazard re-validation misses + brief slot
+    /// exhaustion) — the serve report's `snapshot_swap_stalls`.
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+}
+
+impl<T: Send + Sync> Drop for SnapshotCell<T> {
+    fn drop(&mut self) {
+        // &mut self: no readers can exist, every pointer is ours
+        let cur = self.current.load(Ordering::SeqCst);
+        // SAFETY: exclusive access; `cur` and all retirees each hold
+        // exactly one outstanding strong count from publication.
+        unsafe {
+            drop(Arc::from_raw(cur as *const T));
+            for p in self.retired.get_mut().unwrap().drain(..) {
+                drop(Arc::from_raw(p));
+            }
+        }
+    }
+}
+
+/// One answered request (same order as the submitted batch).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Answer {
+    /// `dist(u, v)` (`INF` = unreachable).
+    Dist(f32),
+    /// Hop list `[u, ..., v]` and its distance; empty hops + `INF`
+    /// weight for unreachable pairs.
+    Path { hops: Vec<u32>, weight: f32 },
+    /// `(distance, node)` pairs, ascending, ties by node id.
+    KNearest(Vec<(f32, u32)>),
+    /// Count of reachable other nodes.
+    Reach(u32),
+}
+
+/// Batched source-major query executor. Holds its reusable ordering /
+/// hop / candidate buffers so a long-running serve loop reaches an
+/// allocation-free steady state (the row panels come from the arena).
+pub struct BatchExec {
+    panel_rows: usize,
+    order: Vec<u32>,
+    hops: Vec<u32>,
+    cand: Vec<(f32, u32)>,
+}
+
+impl BatchExec {
+    /// `panel_rows`: how many consecutive matrix rows one leased panel
+    /// holds (the serve config's `panel_rows`; panels are aligned to
+    /// multiples of it).
+    pub fn new(panel_rows: usize) -> Self {
+        Self {
+            panel_rows: panel_rows.max(1),
+            order: Vec::new(),
+            hops: Vec::new(),
+            cand: Vec::new(),
+        }
+    }
+
+    /// Answer every request in `reqs` against one snapshot. Requests
+    /// are drained source-major over aligned row panels; answers are
+    /// returned in request order.
+    pub fn run(&mut self, snap: &QuerySnapshot, reqs: &[QueryReq]) -> Vec<Answer> {
+        let n = snap.dist.n();
+        let pr = self.panel_rows;
+        self.order.clear();
+        self.order.extend(0..reqs.len() as u32);
+        self.order
+            .sort_by_key(|&i| reqs[i as usize].query.source());
+        let mut answers: Vec<Answer> = reqs.iter().map(|_| Answer::Dist(f32::INFINITY)).collect();
+        let mut panel = arena::scratch_filled(pr * n, 0.0);
+        let mut at = 0usize;
+        while at < self.order.len() {
+            let p0 = (reqs[self.order[at] as usize].query.source() as usize / pr) * pr;
+            let rows = pr.min(n - p0);
+            for r in 0..rows {
+                panel[r * n..r * n + n].copy_from_slice(snap.dist.row(p0 + r));
+            }
+            while at < self.order.len() {
+                let ridx = self.order[at] as usize;
+                let q = reqs[ridx].query;
+                let u = q.source() as usize;
+                if u >= p0 + rows {
+                    break;
+                }
+                let row = &panel[(u - p0) * n..(u - p0) * n + n];
+                answers[ridx] = Self::answer_one(q, u, row, &snap.next, &mut self.hops, &mut self.cand);
+                at += 1;
+            }
+        }
+        answers
+    }
+
+    fn answer_one(
+        q: Query,
+        u: usize,
+        row: &[f32],
+        next: &NextHopMatrix,
+        hops: &mut Vec<u32>,
+        cand: &mut Vec<(f32, u32)>,
+    ) -> Answer {
+        match q {
+            Query::Dist { v, .. } => Answer::Dist(row[v as usize]),
+            Query::Path { v, .. } => {
+                if next.path_into(u, v as usize, hops) {
+                    Answer::Path {
+                        hops: hops.clone(),
+                        weight: row[v as usize],
+                    }
+                } else {
+                    Answer::Path {
+                        hops: Vec::new(),
+                        weight: f32::INFINITY,
+                    }
+                }
+            }
+            Query::KNearest { k, .. } => {
+                cand.clear();
+                for (j, &d) in row.iter().enumerate() {
+                    if j != u && d.is_finite() {
+                        cand.push((d, j as u32));
+                    }
+                }
+                // partial selection: O(n) split at k, then sort only
+                // the head — the full sort would dominate the drain
+                let cmp = |a: &(f32, u32), b: &(f32, u32)| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1));
+                let k = (k as usize).min(cand.len());
+                if k > 0 && k < cand.len() {
+                    cand.select_nth_unstable_by(k - 1, cmp);
+                }
+                cand.truncate(k);
+                cand.sort_unstable_by(cmp);
+                Answer::KNearest(cand.clone())
+            }
+            Query::Reach { .. } => Answer::Reach(
+                row.iter()
+                    .enumerate()
+                    .filter(|&(j, d)| j != u && d.is_finite())
+                    .count() as u32,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::query::{self, solve_next_hops};
+    use crate::graph::csr::CsrGraph;
+    use crate::graph::generators::{self, Weights};
+    use std::sync::atomic::AtomicBool;
+
+    fn snapshot_of(g: &CsrGraph, epoch: u64) -> QuerySnapshot {
+        let (dist, next) = solve_next_hops(g);
+        QuerySnapshot::new(epoch, dist, next)
+    }
+
+    #[test]
+    fn snapshot_checksum_roundtrip() {
+        let g = generators::random_connected(40, 90, Weights::Uniform(0.5, 3.0), 1);
+        let snap = snapshot_of(&g, 7);
+        assert!(snap.verify());
+        assert_eq!(snap.epoch, 7);
+        assert!(snap.bytes() > 0);
+    }
+
+    #[test]
+    fn cell_load_swap_reclaims() {
+        let g = generators::random_connected(30, 60, Weights::Uniform(0.5, 3.0), 2);
+        let cell = SnapshotCell::new(Arc::new(snapshot_of(&g, 0)));
+        let a = cell.load();
+        assert_eq!(a.epoch, 0);
+        cell.swap(Arc::new(snapshot_of(&g, 1)));
+        // the pinned pre-swap snapshot stays fully valid
+        assert!(a.verify());
+        let b = cell.load();
+        assert_eq!(b.epoch, 1);
+        assert_eq!(cell.swaps(), 1);
+        drop(a);
+        // a second swap reclaims the unpinned epoch-1 retiree later
+        cell.swap(Arc::new(snapshot_of(&g, 2)));
+        assert_eq!(cell.load().epoch, 2);
+    }
+
+    #[test]
+    fn concurrent_readers_never_torn_never_blocked() {
+        let g = generators::random_connected(50, 110, Weights::Uniform(0.5, 3.0), 3);
+        let snaps: Vec<Arc<QuerySnapshot>> =
+            (0..4).map(|e| Arc::new(snapshot_of(&g, e))).collect();
+        let cell = SnapshotCell::new(snaps[0].clone());
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let mut readers = Vec::new();
+            for _ in 0..4 {
+                readers.push(s.spawn(|| {
+                    let mut loads = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let snap = cell.load();
+                        // single-Arc snapshot: fields can never be torn
+                        assert!(snap.verify(), "torn snapshot observed");
+                        assert!(snap.epoch < 4);
+                        loads += 1;
+                    }
+                    loads
+                }));
+            }
+            for round in 0..200u64 {
+                cell.swap(snaps[(1 + round as usize % 3).min(3)].clone());
+            }
+            stop.store(true, Ordering::Relaxed);
+            for r in readers {
+                assert!(r.join().unwrap() > 0, "reader made no progress");
+            }
+        });
+        assert_eq!(cell.swaps(), 200);
+    }
+
+    #[test]
+    fn batch_answers_match_naive_queries() {
+        let g = generators::random_connected(70, 160, Weights::Uniform(0.5, 4.0), 4);
+        let n = g.n();
+        let snap = snapshot_of(&g, 0);
+        let mut rng = crate::util::rng::Rng::new(99);
+        let mut reqs = Vec::new();
+        for _ in 0..200 {
+            let u = rng.gen_range(n) as u32;
+            let v = rng.gen_range(n) as u32;
+            let q = match rng.gen_range(4) {
+                0 => Query::Dist { u, v },
+                1 => Query::Path { u, v },
+                2 => Query::KNearest {
+                    u,
+                    k: 1 + rng.gen_range(8) as u32,
+                },
+                _ => Query::Reach { u },
+            };
+            reqs.push(QueryReq { tenant: 0, query: q });
+        }
+        let mut exec = BatchExec::new(8);
+        let answers = exec.run(&snap, &reqs);
+        assert_eq!(answers.len(), reqs.len());
+        for (req, ans) in reqs.iter().zip(&answers) {
+            match (req.query, ans) {
+                (Query::Dist { u, v }, Answer::Dist(d)) => {
+                    assert_eq!(*d, snap.dist.get(u as usize, v as usize));
+                }
+                (Query::Path { u, v }, Answer::Path { hops, weight }) => {
+                    match snap.next.path(u as usize, v as usize) {
+                        Some(p) => {
+                            assert_eq!(hops, &p);
+                            assert_eq!(*weight, snap.dist.get(u as usize, v as usize));
+                        }
+                        None => {
+                            assert!(hops.is_empty());
+                            assert!(weight.is_infinite());
+                        }
+                    }
+                }
+                (Query::KNearest { u, k }, Answer::KNearest(nn)) => {
+                    assert_eq!(nn.len(), (k as usize).min(n - 1));
+                    for w in nn.windows(2) {
+                        assert!(w[0].0 <= w[1].0);
+                    }
+                    for &(d, v) in nn {
+                        assert_eq!(d, snap.dist.get(u as usize, v as usize));
+                    }
+                }
+                (Query::Reach { u }, Answer::Reach(c)) => {
+                    let want = (0..n)
+                        .filter(|&j| j != u as usize && snap.dist.get(u as usize, j).is_finite())
+                        .count();
+                    assert_eq!(*c as usize, want);
+                }
+                (q, a) => panic!("answer kind mismatch: {q:?} -> {a:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn validate_then_serve_full_pipeline() {
+        let g = generators::random_connected(25, 50, Weights::Uniform(1.0, 2.0), 5);
+        let script = query::parse_query_script("dist 0 5\npath 1 9 @gold\nknear 2 3\nreach 0\n")
+            .unwrap();
+        query::validate_queries(g.n(), &script).unwrap();
+        let snap = snapshot_of(&g, 0);
+        let mut exec = BatchExec::new(4);
+        let answers = exec.run(&snap, &script.batches[0]);
+        assert_eq!(answers.len(), 4);
+    }
+}

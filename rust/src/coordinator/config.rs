@@ -155,6 +155,21 @@ pub struct SystemConfig {
     /// conservative closure on every batch (a debugging knob; results
     /// are bit-identical either way).
     pub delta_skip: bool,
+    /// Serve loop: consecutive matrix rows per leased row panel in the
+    /// batched query executor (`run.serve.panel_rows` /
+    /// `--serve-panel`).
+    pub serve_panel_rows: usize,
+    /// Serve loop: per-query latency SLO in milliseconds, reported as
+    /// per-tenant attainment (`run.serve.slo_ms` / `--serve-slo`).
+    pub serve_slo_ms: f64,
+    /// Serve loop: concurrent reader threads hammering the snapshot
+    /// cell while delta repairs swap it (`run.serve.readers` /
+    /// `--serve-readers`). 0 skips the concurrent-read probe.
+    pub serve_readers: usize,
+    /// Serve loop: check every reconstructed path against the distance
+    /// matrix and run the per-query Dijkstra throughput baseline
+    /// (`run.serve.validate`; `--serve-no-validate` disables).
+    pub serve_validate: bool,
 }
 
 impl Default for SystemConfig {
@@ -182,6 +197,10 @@ impl Default for SystemConfig {
             store_compression: true,
             delta_validate: true,
             delta_skip: true,
+            serve_panel_rows: 8,
+            serve_slo_ms: 1.0,
+            serve_readers: 4,
+            serve_validate: true,
         }
     }
 }
@@ -236,6 +255,11 @@ impl SystemConfig {
         // [run.delta] block
         self.delta_validate = cf.get_bool("run.delta.validate", self.delta_validate);
         self.delta_skip = cf.get_bool("run.delta.skip", self.delta_skip);
+        // [run.serve] block
+        self.serve_panel_rows = cf.get_usize("run.serve.panel_rows", self.serve_panel_rows);
+        self.serve_slo_ms = cf.get_f64("run.serve.slo_ms", self.serve_slo_ms);
+        self.serve_readers = cf.get_usize("run.serve.readers", self.serve_readers);
+        self.serve_validate = cf.get_bool("run.serve.validate", self.serve_validate);
         // hardware overrides
         let hw = &mut self.hw;
         hw.tiles_per_die = cf.get_usize("hardware.tiles_per_die", hw.tiles_per_die);
@@ -296,6 +320,12 @@ impl SystemConfig {
         if args.flag("delta-no-skip") {
             self.delta_skip = false;
         }
+        self.serve_panel_rows = args.get_usize("serve-panel", self.serve_panel_rows);
+        self.serve_slo_ms = args.get_f64("serve-slo", self.serve_slo_ms);
+        self.serve_readers = args.get_usize("serve-readers", self.serve_readers);
+        if args.flag("serve-no-validate") {
+            self.serve_validate = false;
+        }
     }
 
     pub fn plan_options(&self) -> crate::apsp::plan::PlanOptions {
@@ -351,6 +381,12 @@ pub enum CliMode {
     /// `--deltas FILE`: solve once, then replay the file's edge-delta
     /// batches through the incremental repair engine.
     Delta,
+    /// `--serve` / `--queries FILE`: solve once with next-hop
+    /// threading, publish the snapshot, and drain query batches through
+    /// the batched executor. Composes with `--deltas FILE`: the delta
+    /// script becomes the live mutation feed interleaved between query
+    /// batches (snapshot-swapped, readers never block).
+    Serve,
 }
 
 /// Resolve the `apsp` execution mode from the CLI flags.
@@ -361,7 +397,11 @@ pub enum CliMode {
 pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
     let admit = args.flag("admit") || args.get("admit").is_some();
     let batch_flag = args.flag("batch") || args.get("batch").is_some();
-    let delta = args.get("deltas").is_some();
+    let serve_flag = args.flag("serve") || args.get("serve").is_some();
+    let serve = serve_flag || args.get("queries").is_some();
+    // --deltas composes with --serve (the serve loop's mutation feed);
+    // alone it selects the delta replay shape
+    let delta = args.get("deltas").is_some() && !serve;
     let batch = batch_flag || (args.get("graphs").is_some() && !admit);
     let sharded = args.get("stacks").is_some();
     let mut picked: Vec<&str> = Vec::new();
@@ -377,6 +417,9 @@ pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
     if delta {
         picked.push("--deltas");
     }
+    if serve {
+        picked.push(if serve_flag { "--serve" } else { "--queries" });
+    }
     crate::ensure!(
         picked.len() <= 1,
         "{} select different execution modes; pick one",
@@ -388,6 +431,8 @@ pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
         CliMode::Admission
     } else if delta {
         CliMode::Delta
+    } else if serve {
+        CliMode::Serve
     } else if sharded || config_stacks != 1 {
         CliMode::Sharded
     } else {
@@ -546,6 +591,44 @@ mod tests {
             resolve_cli_mode(&parse(&["--deltas", "d.txt", "--store-capacity", "4"]), 1).unwrap(),
             CliMode::Delta
         );
+    }
+
+    #[test]
+    fn serve_block_parses_and_cli_selects_mode() {
+        let c = SystemConfig::default();
+        assert_eq!(c.serve_panel_rows, 8);
+        assert!((c.serve_slo_ms - 1.0).abs() < 1e-12);
+        assert_eq!(c.serve_readers, 4);
+        assert!(c.serve_validate);
+        let cf = ConfigFile::parse(
+            "[run.serve]\npanel_rows = 16\nslo_ms = 0.5\nreaders = 2\nvalidate = false",
+        )
+        .unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        assert_eq!(c.serve_panel_rows, 16);
+        assert!((c.serve_slo_ms - 0.5).abs() < 1e-12);
+        assert_eq!(c.serve_readers, 2);
+        assert!(!c.serve_validate);
+        let parse = |v: &[&str]| crate::util::cli::Args::parse(v.iter().map(|s| s.to_string()));
+        c.apply_args(&parse(&["--serve-panel", "4", "--serve-slo", "2.0", "--serve-readers", "8"]));
+        assert_eq!(c.serve_panel_rows, 4);
+        assert!((c.serve_slo_ms - 2.0).abs() < 1e-12);
+        assert_eq!(c.serve_readers, 8);
+        // --serve / --queries select the serve execution shape ...
+        assert_eq!(resolve_cli_mode(&parse(&["--serve"]), 1).unwrap(), CliMode::Serve);
+        assert_eq!(
+            resolve_cli_mode(&parse(&["--queries", "q.txt"]), 1).unwrap(),
+            CliMode::Serve
+        );
+        // ... compose with --deltas (the serve loop's mutation feed) ...
+        assert_eq!(
+            resolve_cli_mode(&parse(&["--serve", "--deltas", "d.txt"]), 1).unwrap(),
+            CliMode::Serve
+        );
+        // ... and conflict with the other mode selectors (full combos
+        // in tests/failure_injection.rs)
+        let err = resolve_cli_mode(&parse(&["--serve", "--admit"]), 1).unwrap_err();
+        assert!(format!("{err}").contains("pick one"), "{err}");
     }
 
     #[test]

@@ -5,15 +5,20 @@
 //! shared-resource schedule; one `Executor::run_sharded` call is one
 //! over-large graph split across `run.num_stacks` modeled PIM stacks;
 //! one `Executor::run_admission` call is one arrival-stamped serving
-//! workload admitted into a live schedule without draining it.
+//! workload admitted into a live schedule without draining it; one
+//! `Executor::run_serve` call is one query-script drain through the
+//! batched serve loop against lock-free published snapshots.
 
 use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig};
 use crate::apsp::admission::{AdmissionConfig, AdmissionGraph, StoreOutcome, Verdict};
 use crate::apsp::backend::{NativeBackend, TileBackend};
 use crate::apsp::batch::BatchGraph;
 use crate::apsp::delta::{self, DeltaClass, DeltaState};
+use crate::apsp::dijkstra;
 use crate::apsp::plan::{build_plan, ApspPlan};
+use crate::apsp::query::{self, Query};
 use crate::apsp::recursive::{self, solve, ApspSolution, SolveOptions};
+use crate::apsp::serve::{Answer, BatchExec, QuerySnapshot, SnapshotCell};
 use crate::apsp::shard::{plan_tiles, ShardGraph};
 use crate::apsp::store::{fingerprint, MemoryStore, ResultStore, StoreEntry};
 use crate::apsp::taskgraph::{csr_bytes_estimate, TaskGraph};
@@ -27,6 +32,12 @@ use crate::sim::engine::{
 };
 use crate::util::error::Result;
 use crate::{ensure, err};
+use std::sync::Arc;
+
+/// Measured drains per query batch in the serve loop: enough samples
+/// that the latency percentiles see more than one drain per batch
+/// shape, small enough that CLI smoke runs stay fast.
+const SERVE_REPS: usize = 5;
 
 /// Everything one run produces.
 pub struct RunResult {
@@ -677,6 +688,258 @@ impl Executor {
         })
     }
 
+    /// Drain a query script through the **batched serve loop**. The
+    /// base graph is solved once with next-hop threading
+    /// ([`query::solve_next_hops`]), published as an immutable
+    /// [`QuerySnapshot`] in a lock-free [`SnapshotCell`], and every
+    /// query batch is answered source-major by one [`BatchExec`] (a
+    /// query's served latency is its batch's drain time). With a delta
+    /// script, one delta batch is applied between consecutive query
+    /// batches: the mutated graph is re-solved and epoch-swapped into
+    /// the cell while `run.serve.readers` threads hammer `load()`,
+    /// proving readers never block (loads keep landing) and never see a
+    /// torn snapshot (every load re-derives the build-time checksum).
+    /// With `run.serve.validate` on, every reconstructed path is walked
+    /// edge-by-edge against the current graph, and per-query Dijkstra
+    /// is timed on the same sources as the throughput baseline.
+    pub fn run_serve(
+        &self,
+        g: &CsrGraph,
+        query_script: &str,
+        delta_script: Option<&str>,
+    ) -> Result<ServeRunResult> {
+        ensure!(
+            g.n() > 0,
+            "cannot serve queries: the base graph is empty (0 vertices), \
+             so there is no solution to query"
+        );
+        ensure!(
+            self.config.mode == Mode::Functional,
+            "the serve loop answers real queries, which needs functional \
+             numerics; run.mode = estimate has none"
+        );
+        let script = query::parse_query_script(query_script)?;
+        query::validate_queries(g.n(), &script)?;
+        let delta_batches = match delta_script {
+            Some(s) => delta::parse_script(s)?,
+            None => Vec::new(),
+        };
+        // memory guard: a swap briefly holds two snapshots co-resident
+        let n = g.n() as u64;
+        let hop_bytes = if g.n() <= u16::MAX as usize { 2 } else { 4 };
+        let per_snapshot = n * n * (4 + hop_bytes);
+        ensure!(
+            2 * per_snapshot <= self.config.memory_limit_bytes,
+            "serving {} vertices needs ~{} bytes for two co-resident \
+             snapshots (dist + next-hop), over the {} byte memory limit",
+            n,
+            2 * per_snapshot,
+            self.config.memory_limit_bytes
+        );
+
+        let t0 = std::time::Instant::now();
+        let (dist, next) = query::solve_next_hops(g);
+        let host_solve_seconds = t0.elapsed().as_secs_f64();
+        let next_hop_bits = next.width_bits();
+        let cell = SnapshotCell::new(Arc::new(QuerySnapshot::new(0, dist, next)));
+        let snapshot_bytes = cell.load().bytes();
+
+        let mut exec = BatchExec::new(self.config.serve_panel_rows);
+        let mut cur_g = g.clone();
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut tenant_lat: Vec<Vec<f64>> = vec![Vec::new(); script.tenants.len()];
+        let mut total_queries = 0usize;
+        let mut serve_seconds = 0.0f64;
+        let mut paths_checked = 0usize;
+        let mut sample_path: Option<(u32, u32, Vec<u32>, f32)> = None;
+        let mut dijkstra_sources: Vec<usize> = Vec::new();
+        let mut reader_loads = 0u64;
+        let mut torn_reads = 0u64;
+        let mut epoch = 0u64;
+        let mut delta_iter = delta_batches.iter();
+
+        for batch in &script.batches {
+            let snap = cell.load();
+            let mut answers = Vec::new();
+            // a few measured drains per batch so the percentiles see
+            // more than one sample per batch shape
+            for _ in 0..SERVE_REPS {
+                let t = std::time::Instant::now();
+                answers = exec.run(&snap, batch);
+                let drain = t.elapsed().as_secs_f64();
+                serve_seconds += drain;
+                total_queries += batch.len();
+                for req in batch {
+                    latencies.push(drain);
+                    tenant_lat[req.tenant as usize].push(drain);
+                }
+            }
+            for (req, ans) in batch.iter().zip(&answers) {
+                if let (Query::Path { u, v }, Answer::Path { hops, weight }) = (req.query, ans) {
+                    if self.config.serve_validate {
+                        self.check_path(&cur_g, &snap, u, v, hops, *weight)?;
+                        paths_checked += 1;
+                        dijkstra_sources.push(u as usize);
+                    }
+                    if sample_path.is_none() && !hops.is_empty() {
+                        sample_path = Some((u, v, hops.clone(), *weight));
+                    }
+                }
+            }
+            drop(snap);
+            // interleave the next delta batch: re-solve + epoch-swap
+            // while reader threads hammer the cell
+            if let Some(db) = delta_iter.next() {
+                delta::validate_deltas(&cur_g, db)?;
+                let g2 = delta::apply_deltas(&cur_g, db);
+                epoch += 1;
+                let (loads, torn) = self.swap_under_readers(&cell, &g2, epoch);
+                reader_loads += loads;
+                torn_reads += torn;
+                cur_g = g2;
+            }
+        }
+
+        // per-query Dijkstra on the same sources the path queries hit:
+        // the throughput baseline the packed next-hop map replaces
+        let dijkstra_seconds_per_query = if self.config.serve_validate
+            && !dijkstra_sources.is_empty()
+        {
+            dijkstra_sources.truncate(32);
+            let t = std::time::Instant::now();
+            for &src in &dijkstra_sources {
+                std::hint::black_box(dijkstra::sssp(&cur_g, src));
+            }
+            Some(t.elapsed().as_secs_f64() / dijkstra_sources.len() as f64)
+        } else {
+            None
+        };
+
+        let tenants = script
+            .tenants
+            .iter()
+            .zip(tenant_lat)
+            .map(|(name, lat)| {
+                let slo = self.config.serve_slo_ms * 1e-3;
+                let (attained, p50, p99) = if lat.is_empty() {
+                    (1.0, 0.0, 0.0)
+                } else {
+                    (
+                        lat.iter().filter(|&&l| l <= slo).count() as f64 / lat.len() as f64,
+                        crate::util::bench::percentile(&lat, 0.50),
+                        crate::util::bench::percentile(&lat, 0.99),
+                    )
+                };
+                TenantServeStat {
+                    name: name.clone(),
+                    queries: lat.len(),
+                    p50,
+                    p99,
+                    slo_attained: attained,
+                }
+            })
+            .collect();
+
+        Ok(ServeRunResult {
+            graph_n: g.n(),
+            graph_m: g.m(),
+            host_solve_seconds,
+            epochs: epoch + 1,
+            query_batches: script.batches.len(),
+            total_queries,
+            serve_seconds,
+            latencies,
+            tenants,
+            swap_stalls: cell.stalls(),
+            reader_loads,
+            torn_reads,
+            paths_checked,
+            dijkstra_seconds_per_query,
+            next_hop_bits,
+            snapshot_bytes,
+            sample_path,
+        })
+    }
+
+    /// Walk a reconstructed path edge-by-edge against the live graph:
+    /// endpoints must match, every hop must be a real edge, and the
+    /// edge-weight sum must agree with the answered weight (which
+    /// [`BatchExec`] reads straight from the snapshot's dist row).
+    fn check_path(
+        &self,
+        g: &CsrGraph,
+        snap: &QuerySnapshot,
+        u: u32,
+        v: u32,
+        hops: &[u32],
+        weight: f32,
+    ) -> Result<()> {
+        if hops.is_empty() {
+            ensure!(
+                !snap.dist.get(u as usize, v as usize).is_finite(),
+                "path {u} -> {v} answered unreachable but dist is finite"
+            );
+            return Ok(());
+        }
+        ensure!(
+            hops.first() == Some(&u) && hops.last() == Some(&v),
+            "reconstructed path {u} -> {v} has wrong endpoints {:?}",
+            (hops.first(), hops.last())
+        );
+        let mut sum = 0.0f32;
+        for pair in hops.windows(2) {
+            let w = g
+                .edge_weight(pair[0] as usize, pair[1] as usize)
+                .ok_or_else(|| {
+                    err!(
+                        "reconstructed path {u} -> {v} uses a non-edge {} -> {}",
+                        pair[0],
+                        pair[1]
+                    )
+                })?;
+            sum += w;
+        }
+        ensure!(
+            (sum - weight).abs() <= 1e-3 * weight.abs().max(1.0),
+            "reconstructed path {u} -> {v} sums to {sum} but dist says {weight}"
+        );
+        Ok(())
+    }
+
+    /// Re-solve the mutated graph and epoch-swap it into the cell while
+    /// `run.serve.readers` threads hammer `load()`. Returns (loads,
+    /// torn observations) — loads landing throughout the swap is the
+    /// never-blocks evidence, and every load re-derives the snapshot
+    /// checksum so a torn read cannot go unnoticed.
+    fn swap_under_readers(
+        &self,
+        cell: &SnapshotCell<QuerySnapshot>,
+        g2: &CsrGraph,
+        epoch: u64,
+    ) -> (u64, u64) {
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        let stop = AtomicBool::new(false);
+        let loads = AtomicU64::new(0);
+        let torn = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..self.config.serve_readers {
+                s.spawn(|| {
+                    while !stop.load(Ordering::Relaxed) {
+                        let snap = cell.load();
+                        if !snap.verify() {
+                            torn.fetch_add(1, Ordering::Relaxed);
+                        }
+                        loads.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            let (dist, next) = query::solve_next_hops(g2);
+            cell.swap(Arc::new(QuerySnapshot::new(epoch, dist, next)));
+            stop.store(true, Ordering::Relaxed);
+        });
+        (loads.into_inner(), torn.into_inner())
+    }
+
     /// Write a solved graph's entry into the result store under its
     /// fingerprint (same costing as the admission write-back path:
     /// modeled result bytes, the solve's madds as the re-solve cost).
@@ -991,6 +1254,93 @@ impl DeltaRunResult {
     /// Total deltas applied across the script.
     pub fn n_deltas(&self) -> usize {
         self.batches.iter().map(|b| b.n_deltas).sum()
+    }
+}
+
+/// One tenant's slice of a serve run.
+pub struct TenantServeStat {
+    pub name: String,
+    /// Measured query executions attributed to this tenant.
+    pub queries: usize,
+    /// Latency percentiles in seconds (a query's latency is its
+    /// batch's drain time).
+    pub p50: f64,
+    pub p99: f64,
+    /// Fraction of queries answered within `run.serve.slo_ms`.
+    pub slo_attained: f64,
+}
+
+/// Everything one serve run produces.
+pub struct ServeRunResult {
+    pub graph_n: usize,
+    pub graph_m: usize,
+    /// Wall time of the initial next-hop-threaded solve.
+    pub host_solve_seconds: f64,
+    /// Snapshots published (1 + delta batches applied).
+    pub epochs: u64,
+    pub query_batches: usize,
+    /// Measured query executions (batch drains × batch sizes).
+    pub total_queries: usize,
+    /// Total wall time inside batch drains.
+    pub serve_seconds: f64,
+    /// Per-query latency samples in seconds.
+    pub latencies: Vec<f64>,
+    /// Per-tenant stats, in script interning order ("default" first).
+    pub tenants: Vec<TenantServeStat>,
+    /// Reader retries observed by the snapshot cell across the run.
+    pub swap_stalls: u64,
+    /// Loads landed by the hammer threads during delta swaps.
+    pub reader_loads: u64,
+    /// Checksum mismatches observed by those loads (must be 0).
+    pub torn_reads: u64,
+    /// Reconstructed paths walked edge-by-edge against the live graph.
+    pub paths_checked: usize,
+    /// Per-query wall time of the Dijkstra baseline on the same
+    /// sources (None with validation off or no path queries).
+    pub dijkstra_seconds_per_query: Option<f64>,
+    /// Packed successor width the graph size selected (16 or 32).
+    pub next_hop_bits: usize,
+    /// Resident bytes of one published snapshot.
+    pub snapshot_bytes: usize,
+    /// First reconstructed non-empty path: (u, v, hops, weight).
+    pub sample_path: Option<(u32, u32, Vec<u32>, f32)>,
+}
+
+impl ServeRunResult {
+    /// Measured queries per second across all batch drains.
+    pub fn qps(&self) -> f64 {
+        if self.serve_seconds == 0.0 {
+            0.0
+        } else {
+            self.total_queries as f64 / self.serve_seconds
+        }
+    }
+
+    /// Mean batched cost of one query in seconds.
+    pub fn per_query_seconds(&self) -> f64 {
+        if self.total_queries == 0 {
+            0.0
+        } else {
+            self.serve_seconds / self.total_queries as f64
+        }
+    }
+
+    /// Latency percentile (`p` in [0, 1]) over every per-query sample,
+    /// in seconds.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            crate::util::bench::percentile(&self.latencies, p)
+        }
+    }
+
+    /// Batched-path throughput over the per-query Dijkstra baseline
+    /// (the ISSUE's ≥10× acceptance metric).
+    pub fn path_speedup_vs_dijkstra(&self) -> Option<f64> {
+        let dij = self.dijkstra_seconds_per_query?;
+        let per_q = self.per_query_seconds();
+        (per_q > 0.0).then(|| dij / per_q)
     }
 }
 
@@ -1440,6 +1790,72 @@ mod tests {
         assert!((b.delta_speedup() - 1.0).abs() < 1e-12);
         assert!(b.host_repair_seconds > 0.0);
         assert_eq!(b.graph_m, g.m() + 2);
+    }
+
+    #[test]
+    fn run_serve_end_to_end_with_interleaved_deltas() {
+        let g = graph(300, 61);
+        let mut cfg = SystemConfig::default();
+        cfg.serve_readers = 2;
+        let ex = Executor::new(cfg).unwrap();
+        let (u, v, w) = g.edges().next().unwrap();
+        let queries = "dist 0 7\npath 3 250 @gold\nknear 5 4\nreach 9\n\n\
+                       path 12 200\ndist 1 2 @gold\n";
+        let deltas = format!("reweight {u} {v} {}\n", w * 0.5);
+        let r = ex.run_serve(&g, queries, Some(&deltas)).unwrap();
+        assert_eq!(r.graph_n, 300);
+        assert!(r.host_solve_seconds > 0.0);
+        assert_eq!(r.query_batches, 2);
+        // one delta batch applied between the two query batches
+        assert_eq!(r.epochs, 2);
+        assert_eq!(r.total_queries, 6 * SERVE_REPS);
+        assert!(r.qps() > 0.0);
+        assert!(r.latency_percentile(0.99) >= r.latency_percentile(0.50));
+        // readers kept landing loads during the swap, none torn
+        assert!(r.reader_loads > 0);
+        assert_eq!(r.torn_reads, 0);
+        // both path queries walked edge-by-edge against the live graph
+        assert_eq!(r.paths_checked, 2);
+        let (pu, _, hops, weight) = r.sample_path.as_ref().expect("a reconstructed path");
+        assert_eq!(hops.first(), Some(pu));
+        assert!(weight.is_finite());
+        // the packed map beats per-query Dijkstra comfortably
+        assert!(r.path_speedup_vs_dijkstra().unwrap() > 10.0);
+        // tenants: "default" interned first, then @gold
+        assert_eq!(r.tenants.len(), 2);
+        assert_eq!(r.tenants[0].name, "default");
+        assert_eq!(r.tenants[1].name, "gold");
+        assert_eq!(r.tenants[1].queries, 2 * SERVE_REPS);
+        assert!((0.0..=1.0).contains(&r.tenants[1].slo_attained));
+        assert_eq!(r.next_hop_bits, 16);
+        assert!(r.snapshot_bytes > 0);
+    }
+
+    #[test]
+    fn run_serve_rejects_bad_input_cleanly() {
+        let cfg = SystemConfig::default();
+        let ex = Executor::new(cfg).unwrap();
+        // empty base graph: nothing to query
+        let empty = CsrGraph::from_edges(0, &[]);
+        let err = ex.run_serve(&empty, "dist 0 1\n", None).unwrap_err();
+        assert!(format!("{err}").contains("base graph is empty"), "{err}");
+        let g = graph(200, 62);
+        // query validation surfaces as a clean error, not a panic
+        let err = ex.run_serve(&g, "dist 0 100000\n", None).unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+        let err = ex.run_serve(&g, "# only comments\n", None).unwrap_err();
+        assert!(format!("{err}").contains("no queries"), "{err}");
+        // estimate mode has no numerics to serve
+        let mut cfg = SystemConfig::default();
+        cfg.mode = Mode::Estimate;
+        let err = Executor::new(cfg)
+            .unwrap()
+            .run_serve(&g, "dist 0 1\n", None)
+            .unwrap_err();
+        assert!(format!("{err}").contains("functional"), "{err}");
+        // a malformed delta feed is rejected before any serving
+        let err = ex.run_serve(&g, "dist 0 1\n", Some("frobnicate 1 2\n")).unwrap_err();
+        assert!(format!("{err}").contains("frobnicate"), "{err}");
     }
 
     #[test]

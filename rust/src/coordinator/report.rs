@@ -1,7 +1,7 @@
 //! Human-readable run reports: the coordinator's metrics output.
 
 use super::executor::{
-    AdmissionRunResult, BatchRunResult, DeltaRunResult, RunResult, ShardRunResult,
+    AdmissionRunResult, BatchRunResult, DeltaRunResult, RunResult, ServeRunResult, ShardRunResult,
 };
 use crate::apsp::admission::Verdict;
 use crate::apsp::trace::Phase;
@@ -400,6 +400,83 @@ pub fn render_delta(d: &DeltaRunResult) -> String {
     out
 }
 
+/// Render the report for one serve run: the published snapshot's
+/// shape, the throughput/latency summary (the CI smoke greps the
+/// literal `QPS` and `serve_qps` names), a per-tenant SLO table, the
+/// concurrent-swap evidence, and a sample reconstructed path.
+pub fn render_serve(s: &ServeRunResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "RAPID-Graph serve loop: n={} m={}, {} query batch(es) / {} measured quer(ies), \
+         {} epoch(s)\n",
+        fmt_count(s.graph_n),
+        fmt_count(s.graph_m),
+        s.query_batches,
+        fmt_count(s.total_queries),
+        s.epochs,
+    ));
+    out.push_str(&format!(
+        "snapshot: dist + {}-bit next-hop map, {} B resident; initial solve {}\n",
+        s.next_hop_bits,
+        fmt_count(s.snapshot_bytes),
+        fmt_time(s.host_solve_seconds),
+    ));
+    out.push_str(&format!(
+        "throughput: serve_qps={:.3e} QPS ({} per query); latency p50 {} p90 {} p99 {}\n",
+        s.qps(),
+        fmt_time(s.per_query_seconds()),
+        fmt_time(s.latency_percentile(0.50)),
+        fmt_time(s.latency_percentile(0.90)),
+        fmt_time(s.latency_percentile(0.99)),
+    ));
+    let mut t = Table::new(
+        "serve latency (per tenant)",
+        &["tenant", "queries", "p50", "p99", "SLO attained"],
+    );
+    for ten in &s.tenants {
+        t.row(&[
+            ten.name.clone(),
+            ten.queries.to_string(),
+            fmt_time(ten.p50),
+            fmt_time(ten.p99),
+            format!("{:.1}%", 100.0 * ten.slo_attained),
+        ]);
+    }
+    out.push_str(&t.render());
+    if s.epochs > 1 {
+        out.push_str(&format!(
+            "concurrent repair: {} swap(s), {} reader loads landed mid-swap, \
+             snapshot_swap_stalls={}, torn_reads={} -> {}\n",
+            s.epochs - 1,
+            fmt_count(s.reader_loads as usize),
+            s.swap_stalls,
+            s.torn_reads,
+            if s.torn_reads == 0 { "EXACT" } else { "FAILED" },
+        ));
+    }
+    if let Some(speedup) = s.path_speedup_vs_dijkstra() {
+        out.push_str(&format!(
+            "paths: {} reconstructed + edge-walked -> {}; batched vs per-query Dijkstra \
+             ({} per query) -> path_speedup {}\n",
+            s.paths_checked,
+            if s.paths_checked > 0 { "EXACT" } else { "-" },
+            fmt_time(s.dijkstra_seconds_per_query.unwrap_or(0.0)),
+            fmt_ratio(speedup),
+        ));
+    }
+    if let Some((u, v, hops, weight)) = &s.sample_path {
+        let shown: Vec<String> = hops.iter().take(12).map(|h| h.to_string()).collect();
+        let ellipsis = if hops.len() > 12 { " -> ..." } else { "" };
+        out.push_str(&format!(
+            "sample path {u} -> {v} ({} hops, weight {weight:.4}): {}{}\n",
+            hops.len() - 1,
+            shown.join(" -> "),
+            ellipsis,
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use crate::coordinator::config::SystemConfig;
@@ -505,6 +582,32 @@ mod tests {
         assert!(text.contains("delta_speedup"), "{text}");
         assert!(text.contains("EXACT"), "{text}");
         assert!(text.contains("result store"), "{text}");
+        assert!(!text.contains("FAILED"), "{text}");
+    }
+
+    #[test]
+    fn serve_report_contains_key_sections() {
+        let mut cfg = SystemConfig::default();
+        cfg.serve_readers = 2;
+        let ex = Executor::new(cfg).unwrap();
+        let g = generators::generate(Topology::Nws, 300, 8.0, Weights::Uniform(1.0, 4.0), 11);
+        let (u, v, w) = g.edges().next().unwrap();
+        let queries = "dist 0 9\npath 2 200 @gold\nknear 4 3\n\nreach 7\npath 8 150\n";
+        let deltas = format!("reweight {u} {v} {}\n", w * 0.5);
+        let s = ex.run_serve(&g, queries, Some(&deltas)).unwrap();
+        let text = super::render_serve(&s);
+        assert!(text.contains("RAPID-Graph serve loop"), "{text}");
+        // the CI smoke greps these literal metric names
+        assert!(text.contains("QPS"), "{text}");
+        assert!(text.contains("serve_qps"), "{text}");
+        assert!(text.contains("snapshot_swap_stalls"), "{text}");
+        assert!(text.contains("torn_reads=0"), "{text}");
+        assert!(text.contains("path_speedup"), "{text}");
+        assert!(text.contains("serve latency (per tenant)"), "{text}");
+        assert!(text.contains("gold"), "{text}");
+        assert!(text.contains("sample path"), "{text}");
+        assert!(text.contains(" -> "), "{text}");
+        assert!(text.contains("EXACT"), "{text}");
         assert!(!text.contains("FAILED"), "{text}");
     }
 

@@ -13,7 +13,11 @@
 //!              per-graph latency table vs the drain baseline;
 //!              with --deltas FILE, solve once and replay the file's
 //!              edge-delta batches through the incremental repair
-//!              engine (re-solving only dirty tiles)
+//!              engine (re-solving only dirty tiles);
+//!              with --serve / --queries FILE, solve once with
+//!              next-hop threading and drain query batches through the
+//!              lock-free batched serve loop (add --deltas FILE for a
+//!              live mutation feed between query batches)
 //!   figure     regenerate a paper figure/table (7, 8, 9a, 9b, 9c, table3)
 //!   validate   exhaustive Dijkstra validation on a small graph
 //!
@@ -25,6 +29,7 @@
 //!   rapid-graph apsp --stacks 4 --topo ogbn --nodes 50000 --mode estimate
 //!   rapid-graph apsp --admit 6 --admit-interval 1e-4 --admit-queue 2 --mode estimate
 //!   rapid-graph apsp --deltas updates.txt --topo nws --nodes 20000
+//!   rapid-graph apsp --queries queries.txt --deltas updates.txt --topo nws --nodes 2000
 //!   rapid-graph figure --id 7
 //!   rapid-graph generate --topo ogbn --nodes 100000 --out g.bin
 
@@ -67,6 +72,7 @@ fn dispatch(args: &Args) -> Result<()> {
                         ("apsp --stacks", "S [--graph FILE | --topo T --nodes N] shard one graph across S modeled PIM stacks"),
                         ("apsp --admit", "[N] [--arrivals T1,T2,.. | --admit-interval DT] [--admit-queue Q] [--store-capacity C] admit N graphs into a live schedule; the result store serves duplicate submissions from modeled FeNAND"),
                         ("apsp --deltas", "FILE [--graph FILE | --topo T --nodes N] [--delta-no-validate] [--delta-no-skip] solve once, then replay FILE's edge-delta batches (insert/delete/reweight) through the incremental repair engine"),
+                        ("apsp --serve", "--queries FILE [--deltas FILE] [--serve-panel R] [--serve-slo MS] [--serve-readers T] [--serve-no-validate] solve once with next-hop threading, then drain FILE's query batches (dist/path/knear/reach, @tenant tags) through the lock-free batched serve loop; --deltas interleaves live repairs between query batches"),
                         ("figure", "--id 7|8|9a|9b|9c|table3 [--full]"),
                         ("validate", "--nodes N [--topo T] [--tile T]"),
                     ]
@@ -155,6 +161,10 @@ fn cmd_apsp(args: &Args) -> Result<()> {
         CliMode::Delta => {
             cfg.num_stacks = 1;
             cmd_delta(args, cfg)
+        }
+        CliMode::Serve => {
+            cfg.num_stacks = 1;
+            cmd_serve(args, cfg)
         }
         CliMode::Sharded => cmd_sharded(args, cfg),
         CliMode::Solo => {
@@ -282,6 +292,37 @@ fn cmd_delta(args: &Args, cfg: SystemConfig) -> Result<()> {
         .iter()
         .any(|b| matches!(b.max_diff, Some(diff) if diff != 0.0))
     {
+        bail!("validation FAILED");
+    }
+    Ok(())
+}
+
+/// `apsp --serve`: solve the base graph once with next-hop threading,
+/// publish the snapshot in the lock-free cell, and drain `--queries
+/// FILE`'s batches (blank-line-separated groups of `dist u v` /
+/// `path u v` / `knear u k` / `reach u` lines, optional `@tenant`
+/// tags) through the batched source-major executor. With `--deltas
+/// FILE`, one delta batch is applied between consecutive query batches
+/// — re-solved and epoch-swapped while reader threads hammer the cell,
+/// proving readers never block and never see a torn snapshot. The
+/// report prints QPS, latency percentiles, per-tenant SLO attainment,
+/// and a sample reconstructed path.
+fn cmd_serve(args: &Args, cfg: SystemConfig) -> Result<()> {
+    let qpath = args.get("queries").context("--queries FILE required")?;
+    let queries = std::fs::read_to_string(qpath)
+        .with_context(|| format!("read query script {qpath}"))?;
+    let deltas = match args.get("deltas") {
+        Some(path) => Some(
+            std::fs::read_to_string(path)
+                .with_context(|| format!("read delta script {path}"))?,
+        ),
+        None => None,
+    };
+    let g = graph_from_args(args)?;
+    let ex = Executor::new(cfg)?;
+    let s = ex.run_serve(&g, &queries, deltas.as_deref())?;
+    print!("{}", report::render_serve(&s));
+    if s.torn_reads > 0 {
         bail!("validation FAILED");
     }
     Ok(())

@@ -223,6 +223,11 @@ fn apsp_mode_flags_mutually_exclusive() {
         vec!["--deltas", "d.txt", "--batch"],
         vec!["--deltas", "d.txt", "--stacks", "2"],
         vec!["--deltas", "d.txt", "--admit", "2"],
+        vec!["--serve", "--batch"],
+        vec!["--serve", "--stacks", "2"],
+        vec!["--serve", "--admit"],
+        vec!["--queries", "q.txt", "--batch"],
+        vec!["--queries", "q.txt", "--admit", "2"],
     ] {
         let err = resolve_cli_mode(&parse(&combo), 1).unwrap_err();
         let msg = format!("{err}");
@@ -232,6 +237,16 @@ fn apsp_mode_flags_mutually_exclusive() {
     assert_eq!(
         resolve_cli_mode(&parse(&["--deltas", "d.txt"]), 1).unwrap(),
         CliMode::Delta
+    );
+    assert_eq!(
+        resolve_cli_mode(&parse(&["--serve", "--queries", "q.txt"]), 1).unwrap(),
+        CliMode::Serve
+    );
+    // the delta feed composes with serve: it is the mutation stream
+    // between query batches, not a competing mode
+    assert_eq!(
+        resolve_cli_mode(&parse(&["--serve", "--deltas", "d.txt"]), 1).unwrap(),
+        CliMode::Serve
     );
     assert_eq!(resolve_cli_mode(&parse(&["--batch"]), 1).unwrap(), CliMode::Batch);
     assert_eq!(
@@ -523,6 +538,84 @@ fn delta_replay_surfaces_validation_errors_with_batch_context() {
     };
     let msg = format!("{err:#}");
     assert!(msg.contains("out of range"), "error must name the rule: {msg}");
+}
+
+#[test]
+fn query_script_parse_failures_are_clean_errors() {
+    // every malformed query script must be a clean util::error naming
+    // the line and the rule it broke — never a panic in the serve loop
+    use rapid_graph::apsp::query::parse_query_script;
+    let err = parse_query_script("").unwrap_err();
+    assert!(format!("{err}").contains("no queries"), "{err}");
+    let err = parse_query_script("# comments only\n\n# more\n").unwrap_err();
+    assert!(format!("{err}").contains("no queries"), "{err}");
+    let err = parse_query_script("frobnicate 1 2\n").unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("frobnicate"), "error must name the op: {msg}");
+    assert!(msg.contains("line 1"), "error must name the line: {msg}");
+    let err = parse_query_script("dist 0\n").unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("missing"), "error must name the gap: {msg}");
+    let err = parse_query_script("dist 0 notanode\n").unwrap_err();
+    assert!(format!("{err}").contains("notanode"), "{err}");
+    let err = parse_query_script("path 0 1 2 3\n").unwrap_err();
+    assert!(format!("{err}").contains("trailing"), "{err}");
+    let err = parse_query_script("dist 0 1 @\n").unwrap_err();
+    assert!(format!("{err}").contains("tenant"), "{err}");
+    // the error points at the real line, past comments and batch breaks
+    let err = parse_query_script("dist 0 1\n\n# batch two\nreach\n").unwrap_err();
+    assert!(format!("{err}").contains("line 4"), "{err}");
+}
+
+#[test]
+fn query_validation_rejects_out_of_range_and_degenerate_k() {
+    use rapid_graph::apsp::query::{parse_query_script, validate_queries};
+    let script = parse_query_script("dist 0 99\n").unwrap();
+    let err = validate_queries(10, &script).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("out of range"), "{msg}");
+    assert!(msg.contains("99"), "error must name the node: {msg}");
+    let script = parse_query_script("knear 0 0\n").unwrap();
+    let err = validate_queries(10, &script).unwrap_err();
+    assert!(format!("{err}").contains("degenerate"), "{err}");
+    let script = parse_query_script("knear 0 10\n").unwrap();
+    let err = validate_queries(10, &script).unwrap_err();
+    assert!(format!("{err}").contains("other nodes"), "{err}");
+    let script = parse_query_script("dist 0 1\n").unwrap();
+    let err = validate_queries(0, &script).unwrap_err();
+    assert!(format!("{err}").contains("base graph is empty"), "{err}");
+}
+
+#[test]
+fn serve_rejects_empty_graph_and_estimate_mode_cleanly() {
+    // the serve loop needs functional numerics and a non-empty base
+    // graph; both misuses must be clean errors before any state exists
+    let mut cfg = SystemConfig::default();
+    cfg.tile_limit = 64;
+    let ex = Executor::new(cfg).unwrap();
+    let empty = CsrGraph::from_edges(0, &[]);
+    let err = match ex.run_serve(&empty, "dist 0 1\n", None) {
+        Ok(_) => panic!("serving an empty graph must not run"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err}").contains("base graph is empty"),
+        "error must name the problem: {err}"
+    );
+
+    let mut cfg = SystemConfig::default();
+    cfg.mode = rapid_graph::coordinator::config::Mode::Estimate;
+    cfg.tile_limit = 64;
+    let ex = Executor::new(cfg).unwrap();
+    let g = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+    let err = match ex.run_serve(&g, "dist 0 3\n", None) {
+        Ok(_) => panic!("estimate mode has no numerics to serve from"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err}").contains("functional"),
+        "error must name the mode requirement: {err}"
+    );
 }
 
 #[test]

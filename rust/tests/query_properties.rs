@@ -1,0 +1,350 @@
+//! Property tests for the query serving layer (`apsp::query` +
+//! `apsp::serve`): every reconstructed path is a real path in the
+//! graph whose weight bit-matches `dist(u,v)` (on dyadic weights, so
+//! f32 sums are exact and association-independent), the next-hop solve
+//! is bit-identical between the scalar oracle and the SIMD-dispatched
+//! variant, snapshot reads during a replayed delta script never
+//! observe a torn state, and k-nearest agrees with a Dijkstra oracle.
+//!
+//! All properties run on the seeded harness (`util::prop`); set
+//! `RAPID_PROP_SEED` to explore fresh inputs, failures report a replay
+//! seed.
+
+use rapid_graph::apsp::delta::{apply_deltas, EdgeDelta};
+use rapid_graph::apsp::dijkstra;
+use rapid_graph::apsp::query::{self, Query, QueryReq};
+use rapid_graph::apsp::serve::{Answer, BatchExec, QuerySnapshot, SnapshotCell};
+use rapid_graph::graph::csr::CsrGraph;
+use rapid_graph::graph::generators::{self, Topology, Weights};
+use rapid_graph::util::prop::assert_prop;
+use rapid_graph::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A random graph whose weights are multiples of 0.25 in [0.25, 8]:
+/// every shortest-path sum is exactly representable in f32, so the
+/// fold order cannot perturb a single bit — "path weight bit-matches
+/// dist" is a real equality, not a tolerance band.
+fn dyadic_graph(r: &mut Rng) -> CsrGraph {
+    let n = 60 + r.gen_range(140);
+    let topo = match r.gen_range(3) {
+        0 => Topology::Nws,
+        1 => Topology::Er,
+        _ => Topology::Grid,
+    };
+    let degree = 4.0 + r.gen_f64() * 6.0;
+    let g = generators::generate(topo, n, degree, Weights::Uniform(0.5, 8.0), r.next_u64());
+    let edges: Vec<(u32, u32, f32)> = g
+        .edges()
+        .filter(|&(u, v, _)| u < v)
+        .map(|(u, v, w)| (u, v, ((w * 4.0).round() / 4.0).max(0.25)))
+        .collect();
+    CsrGraph::from_undirected_edges(g.n(), &edges)
+}
+
+// -----------------------------------------------------------------
+// Path reconstruction: real edges, exact weights
+// -----------------------------------------------------------------
+
+#[test]
+fn reconstructed_paths_are_real_and_bit_match_dist() {
+    assert_prop(
+        12,
+        |r| (dyadic_graph(r), r.next_u64()),
+        |(g, seed)| {
+            let mut r = Rng::new(*seed);
+            let n = g.n();
+            let (dist, next) = query::solve_next_hops(g);
+            for _ in 0..64 {
+                let (u, v) = (r.gen_range(n), r.gen_range(n));
+                let d = dist.get(u, v);
+                match next.path(u, v) {
+                    None => {
+                        if d.is_finite() {
+                            return Err(format!(
+                                "({u},{v}): no path reconstructed but dist = {d}"
+                            ));
+                        }
+                    }
+                    Some(hops) => {
+                        if hops.first() != Some(&(u as u32))
+                            || hops.last() != Some(&(v as u32))
+                        {
+                            return Err(format!("({u},{v}): endpoints {hops:?}"));
+                        }
+                        if hops.len() > n {
+                            return Err(format!("({u},{v}): {} hops > n", hops.len()));
+                        }
+                        let mut sum = 0.0f32;
+                        for pair in hops.windows(2) {
+                            sum += g
+                                .edge_weight(pair[0] as usize, pair[1] as usize)
+                                .ok_or_else(|| {
+                                    format!("({u},{v}): non-edge {} -> {}", pair[0], pair[1])
+                                })?;
+                        }
+                        // dyadic weights: an exact bit match, not a band
+                        if sum.to_bits() != d.to_bits() {
+                            return Err(format!(
+                                "({u},{v}): path sums to {sum} but dist = {d} \
+                                 (bits {:#x} vs {:#x})",
+                                sum.to_bits(),
+                                d.to_bits()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// Dispatch parity: scalar oracle vs SIMD-threaded solve
+// -----------------------------------------------------------------
+
+#[test]
+fn next_hop_solve_bit_identical_scalar_vs_dispatched() {
+    assert_prop(
+        12,
+        |r| dyadic_graph(r),
+        |g| {
+            let n = g.n();
+            let (dist_fast, next_fast) = query::solve_next_hops(g);
+            let (dist_ref, next_ref) = query::solve_next_hops_oracle(g);
+            for (i, (a, b)) in dist_fast
+                .as_slice()
+                .iter()
+                .zip(dist_ref.as_slice())
+                .enumerate()
+            {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "dist[{}][{}]: dispatched {a} != scalar {b}",
+                        i / n,
+                        i % n
+                    ));
+                }
+            }
+            for u in 0..n {
+                for v in 0..n {
+                    if next_fast.next_hop(u, v) != next_ref.next_hop(u, v) {
+                        return Err(format!(
+                            "succ[{u}][{v}]: dispatched {:?} != scalar {:?}",
+                            next_fast.next_hop(u, v),
+                            next_ref.next_hop(u, v)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// k-nearest vs the Dijkstra oracle
+// -----------------------------------------------------------------
+
+#[test]
+fn knearest_agrees_with_dijkstra_oracle() {
+    assert_prop(
+        10,
+        |r| (dyadic_graph(r), r.next_u64()),
+        |(g, seed)| {
+            let mut r = Rng::new(*seed);
+            let n = g.n();
+            let (dist, next) = query::solve_next_hops(g);
+            let snap = QuerySnapshot::new(0, dist, next);
+            let mut exec = BatchExec::new(8);
+            let reqs: Vec<QueryReq> = (0..16)
+                .map(|_| QueryReq {
+                    tenant: 0,
+                    query: Query::KNearest {
+                        u: r.gen_range(n) as u32,
+                        k: 1 + r.gen_range(10) as u32,
+                    },
+                })
+                .collect();
+            let answers = exec.run(&snap, &reqs);
+            for (req, ans) in reqs.iter().zip(&answers) {
+                let (u, k) = match req.query {
+                    Query::KNearest { u, k } => (u as usize, k as usize),
+                    _ => unreachable!(),
+                };
+                let nn = match ans {
+                    Answer::KNearest(nn) => nn,
+                    other => return Err(format!("knear answered {other:?}")),
+                };
+                // oracle: sort Dijkstra's SSSP row the same way
+                let sssp = dijkstra::sssp(g, u);
+                let mut oracle: Vec<(f32, u32)> = sssp
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, d)| j != u && d.is_finite())
+                    .map(|(j, &d)| (d, j as u32))
+                    .collect();
+                oracle.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                oracle.truncate(k);
+                if nn.len() != oracle.len() {
+                    return Err(format!(
+                        "knear({u},{k}): {} answers, oracle has {}",
+                        nn.len(),
+                        oracle.len()
+                    ));
+                }
+                for (i, (got, want)) in nn.iter().zip(&oracle).enumerate() {
+                    // dyadic weights: FW and Dijkstra agree bit-exactly
+                    if got.1 != want.1 || got.0.to_bits() != want.0.to_bits() {
+                        return Err(format!(
+                            "knear({u},{k})[{i}]: got {got:?}, oracle {want:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// Snapshot consistency under a replayed delta script
+// -----------------------------------------------------------------
+
+/// `k` distinct existing edges reweighted (both directions of change),
+/// mirroring the delta engine's non-structural batches.
+fn random_reweights(g: &CsrGraph, r: &mut Rng, k: usize) -> Vec<EdgeDelta> {
+    let edges: Vec<(u32, u32, f32)> = g.edges().filter(|&(u, v, _)| u < v).collect();
+    let k = k.min(edges.len());
+    let mut idx: Vec<usize> = (0..edges.len()).collect();
+    for i in 0..k {
+        let j = i + r.gen_range(idx.len() - i);
+        idx.swap(i, j);
+    }
+    idx[..k]
+        .iter()
+        .map(|&e| {
+            let (u, v, w) = edges[e];
+            let scale = if r.gen_range(2) == 0 { 0.5 } else { 2.0 };
+            EdgeDelta::Reweight { u, v, w: w * scale }
+        })
+        .collect()
+}
+
+#[test]
+fn snapshot_reads_never_torn_during_delta_replay() {
+    assert_prop(
+        6,
+        |r| (dyadic_graph(r), r.next_u64()),
+        |(g, seed)| {
+            let mut r = Rng::new(*seed);
+            let (dist, next) = query::solve_next_hops(g);
+            let cell = SnapshotCell::new(Arc::new(QuerySnapshot::new(0, dist, next)));
+            let stop = AtomicBool::new(false);
+            let torn = AtomicU64::new(0);
+            let loads = AtomicU64::new(0);
+            let n_batches = 2 + r.gen_range(3) as u64;
+            std::thread::scope(|s| {
+                for _ in 0..3 {
+                    s.spawn(|| {
+                        let mut last_epoch = 0u64;
+                        while !stop.load(Ordering::Relaxed) {
+                            let snap = cell.load();
+                            if !snap.verify() || snap.epoch < last_epoch {
+                                torn.fetch_add(1, Ordering::Relaxed);
+                            }
+                            last_epoch = snap.epoch;
+                            loads.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+                let mut cur = g.clone();
+                for epoch in 1..=n_batches {
+                    let batch = random_reweights(&cur, &mut r, 1 + r.gen_range(6));
+                    cur = apply_deltas(&cur, &batch);
+                    let (d2, n2) = query::solve_next_hops(&cur);
+                    cell.swap(Arc::new(QuerySnapshot::new(epoch, d2, n2)));
+                }
+                stop.store(true, Ordering::Relaxed);
+            });
+            if torn.load(Ordering::Relaxed) != 0 {
+                return Err(format!(
+                    "{} torn/regressed reads observed across {} swaps",
+                    torn.load(Ordering::Relaxed),
+                    n_batches
+                ));
+            }
+            if loads.load(Ordering::Relaxed) == 0 {
+                return Err("readers made no progress during the replay".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// -----------------------------------------------------------------
+// Batched answers match direct snapshot reads on mixed workloads
+// -----------------------------------------------------------------
+
+#[test]
+fn batched_answers_match_direct_reads_on_random_workloads() {
+    assert_prop(
+        8,
+        |r| (dyadic_graph(r), r.next_u64(), 1 + r.gen_range(16)),
+        |(g, seed, panel_rows)| {
+            let mut r = Rng::new(*seed);
+            let n = g.n();
+            let (dist, next) = query::solve_next_hops(g);
+            let snap = QuerySnapshot::new(0, dist, next);
+            let mut exec = BatchExec::new(*panel_rows);
+            let reqs: Vec<QueryReq> = (0..100)
+                .map(|_| {
+                    let u = r.gen_range(n) as u32;
+                    let v = r.gen_range(n) as u32;
+                    let query = match r.gen_range(4) {
+                        0 => Query::Dist { u, v },
+                        1 => Query::Path { u, v },
+                        2 => Query::KNearest {
+                            u,
+                            k: 1 + r.gen_range(6) as u32,
+                        },
+                        _ => Query::Reach { u },
+                    };
+                    QueryReq { tenant: 0, query }
+                })
+                .collect();
+            let answers = exec.run(&snap, &reqs);
+            for (i, (req, ans)) in reqs.iter().zip(&answers).enumerate() {
+                let ok = match (req.query, ans) {
+                    (Query::Dist { u, v }, Answer::Dist(d)) => {
+                        d.to_bits() == snap.dist.get(u as usize, v as usize).to_bits()
+                    }
+                    (Query::Path { u, v }, Answer::Path { hops, .. }) => {
+                        match snap.next.path(u as usize, v as usize) {
+                            Some(p) => hops == &p,
+                            None => hops.is_empty(),
+                        }
+                    }
+                    (Query::Reach { u }, Answer::Reach(c)) => {
+                        let want = (0..n)
+                            .filter(|&j| {
+                                j != u as usize && snap.dist.get(u as usize, j).is_finite()
+                            })
+                            .count();
+                        *c as usize == want
+                    }
+                    (Query::KNearest { .. }, Answer::KNearest(_)) => true, // oracle above
+                    _ => false,
+                };
+                if !ok {
+                    return Err(format!(
+                        "request {i} ({:?}) answered {ans:?} inconsistently",
+                        req.query
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
