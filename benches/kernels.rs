@@ -12,7 +12,13 @@
 //! BENCH_serve.json`) drains mixed query batches against a published
 //! next-hop snapshot and records QPS, drain-latency percentiles,
 //! snapshot-swap stalls under concurrent delta repair, and batched
-//! path reconstruction vs per-query Dijkstra.
+//! path reconstruction vs per-query Dijkstra. The semiring benchmark
+//! (`--semiring-only --json BENCH_semiring.json`) times the generic
+//! row-wise FW pass for each shipped semiring and asserts bit-identity
+//! against a naive ⊕/⊗ scalar oracle. Every JSON artifact is assembled
+//! through the shared `util::bench::BenchDoc` builder (schema name,
+//! floors/ceilings, drift bands), so the emitters cannot drift apart
+//! on shape.
 //!
 //! This quantifies the L3 hot path (the functional backend) and the
 //! PJRT dispatch overhead — see EXPERIMENTS.md §Perf.
@@ -33,7 +39,7 @@ use rapid_graph::graph::csr::CsrGraph;
 use rapid_graph::graph::generators::{self, Topology, Weights};
 use rapid_graph::runtime::PjrtRuntime;
 use rapid_graph::sim::{engine, HwParams};
-use rapid_graph::util::bench::{bench, BenchOpts};
+use rapid_graph::util::bench::{bench, BenchDoc, BenchOpts};
 use rapid_graph::util::rng::Rng;
 use rapid_graph::util::table::{fmt_ratio, fmt_time, Table};
 use rapid_graph::util::threads;
@@ -389,25 +395,23 @@ fn bench_admission(json_out: Option<&str>) {
         // host wall-clock keys ride along for trend inspection; CI never
         // drift-gates them (machine-dependent)
         let host = measure_host_perf(BenchOpts::quick());
-        let mut fields = vec![
-            ("workload", json::s("admission_staggered_6")),
-            ("graphs", json::num(batch.n_graphs() as f64)),
-            ("queue_depth", json::num(queue_depth as f64)),
-            ("admission_makespan_s", json::num(rep.seconds)),
-            ("drain_makespan_s", json::num(drain)),
-            ("speedup_vs_drain", json::num(drain / rep.seconds)),
-            ("latency_p50_s", json::num(pct(0.5))),
-            ("latency_p90_s", json::num(pct(0.9))),
-            ("latency_max_s", json::num(pct(1.0))),
-            ("store_hits", json::num(store_hits as f64)),
-            ("store_makespan_s", json::num(store_makespan)),
-            ("store_no_cache_makespan_s", json::num(store_plain)),
-            ("cache_speedup", json::num(cache_speedup)),
-            ("per_graph", json::arr(per_graph)),
-        ];
-        fields.extend(host.json_fields());
-        let doc = json::obj(fields);
-        std::fs::write(path, doc.render() + "\n").expect("write bench json");
+        BenchDoc::new("admission_staggered_6")
+            .count("graphs", batch.n_graphs())
+            .count("queue_depth", queue_depth)
+            .num("admission_makespan_s", rep.seconds)
+            .num("drain_makespan_s", drain)
+            .num("speedup_vs_drain", drain / rep.seconds)
+            .num("latency_p50_s", pct(0.5))
+            .num("latency_p90_s", pct(0.9))
+            .num("latency_max_s", pct(1.0))
+            .count("store_hits", store_hits)
+            .num("store_makespan_s", store_makespan)
+            .num("store_no_cache_makespan_s", store_plain)
+            .num("cache_speedup", cache_speedup)
+            .field("per_graph", json::arr(per_graph))
+            .extend_fields(host.json_fields())
+            .write(path)
+            .expect("write bench json");
         println!("wrote {path}\n");
     }
 }
@@ -521,16 +525,15 @@ fn bench_delta(json_out: Option<&str>) {
     );
 
     if let Some(path) = json_out {
-        let doc = json::obj(vec![
-            ("workload", json::s("delta_sweep_nws4096")),
-            ("graph_n", json::num(g.n() as f64)),
-            ("graph_m", json::num(g.m() as f64)),
-            ("total_tiles", json::num(total_tiles as f64)),
-            ("resolve_makespan_s", json::num(resolve_s)),
-            ("delta_speedup_1pct", json::num(speedup_1pct)),
-            ("sweep", json::arr(sweep)),
-        ]);
-        std::fs::write(path, doc.render() + "\n").expect("write delta bench json");
+        BenchDoc::new("delta_sweep_nws4096")
+            .count("graph_n", g.n())
+            .count("graph_m", g.m())
+            .count("total_tiles", total_tiles)
+            .num("resolve_makespan_s", resolve_s)
+            .num("delta_speedup_1pct", speedup_1pct)
+            .field("sweep", json::arr(sweep))
+            .write(path)
+            .expect("write delta bench json");
         println!("wrote {path}\n");
     }
 }
@@ -551,7 +554,6 @@ fn bench_serve(json_out: Option<&str>) {
     use rapid_graph::apsp::query::{self, Query, QueryReq};
     use rapid_graph::apsp::serve::{BatchExec, QuerySnapshot, SnapshotCell};
     use rapid_graph::util::bench::percentile;
-    use rapid_graph::util::json;
     use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
     use std::sync::Arc;
 
@@ -701,26 +703,25 @@ fn bench_serve(json_out: Option<&str>) {
     println!();
 
     if let Some(path) = json_out {
-        let doc = json::obj(vec![
-            ("workload", json::s("serve_nws1024")),
-            ("graph_n", json::num(g.n() as f64)),
-            ("graph_m", json::num(g.m() as f64)),
-            ("next_hop_bits", json::num(next_hop_bits as f64)),
-            ("snapshot_bytes", json::num(snapshot_bytes as f64)),
-            ("host_next_hop_solve_s", json::num(solve_s)),
-            ("qps", json::num(qps)),
-            ("latency_p50_s", json::num(p50)),
-            ("latency_p90_s", json::num(p90)),
-            ("latency_p99_s", json::num(p99)),
-            ("path_per_query_s", json::num(path_per_query_s)),
-            ("dijkstra_per_query_s", json::num(dijkstra_per_query_s)),
-            ("path_speedup_vs_dijkstra", json::num(path_speedup)),
-            ("snapshot_swaps", json::num(SWAPS as f64)),
-            ("snapshot_swap_stalls", json::num(swap_stalls as f64)),
-            ("reader_loads", json::num(reader_loads as f64)),
-            ("torn_reads", json::num(torn_reads as f64)),
-        ]);
-        std::fs::write(path, doc.render() + "\n").expect("write serve bench json");
+        BenchDoc::new("serve_nws1024")
+            .count("graph_n", g.n())
+            .count("graph_m", g.m())
+            .count("next_hop_bits", next_hop_bits)
+            .count("snapshot_bytes", snapshot_bytes)
+            .num("host_next_hop_solve_s", solve_s)
+            .num("qps", qps)
+            .num("latency_p50_s", p50)
+            .num("latency_p90_s", p90)
+            .num("latency_p99_s", p99)
+            .num("path_per_query_s", path_per_query_s)
+            .num("dijkstra_per_query_s", dijkstra_per_query_s)
+            .num("path_speedup_vs_dijkstra", path_speedup)
+            .count("snapshot_swaps", SWAPS as usize)
+            .count("snapshot_swap_stalls", swap_stalls as usize)
+            .count("reader_loads", reader_loads as usize)
+            .count("torn_reads", torn_reads as usize)
+            .write(path)
+            .expect("write serve bench json");
         println!("wrote {path}\n");
     }
 }
@@ -892,7 +893,6 @@ fn assert_alloc_free_steady_state() -> u64 {
 /// `--features count_alloc` the allocation-free steady state is asserted
 /// and recorded.
 fn bench_host_perf(json_out: Option<&str>) {
-    use rapid_graph::util::json;
     let hp = measure_host_perf(BenchOpts::default());
     let mut t = Table::new(
         "host hot-path kernels (n=256, per call)",
@@ -938,13 +938,11 @@ fn bench_host_perf(json_out: Option<&str>) {
     }
 
     if let Some(path) = json_out {
-        let mut fields = hp.json_fields();
+        let mut doc = BenchDoc::new("host_perf_n256").extend_fields(hp.json_fields());
         if let Some(k) = steady_allocs {
-            fields.push(("steady_state_allocs", json::num(k as f64)));
+            doc = doc.count("steady_state_allocs", k as usize);
         }
-        let mut doc = vec![("workload", json::s("host_perf_n256"))];
-        doc.extend(fields);
-        std::fs::write(path, json::obj(doc).render() + "\n").expect("write host-perf json");
+        doc.write(path).expect("write host-perf json");
         println!("wrote {path}\n");
     }
 }
@@ -979,6 +977,88 @@ fn store_metrics(hw: &HwParams) -> (usize, f64, f64) {
     (hits, rep.seconds, plain_rep.seconds)
 }
 
+/// Per-semiring kernel snapshot: the generic row-wise FW pass timed at
+/// n=256 for each shipped semiring, with a deterministic bit-identity
+/// check against a naive ⊕/⊗ triple loop on the same workload matrix
+/// (the `*_oracle_max_diff` keys must be exactly zero). MaxPlus runs on
+/// the DAG orientation of the workload graph — `(max, +)` closure
+/// diverges on cycles. With `--json PATH` the numbers land in
+/// `BENCH_semiring.json` through the shared `BenchDoc` builder: the
+/// oracle-diff ceilings are hard gates (deterministic on any machine),
+/// the Gmadd/s floors are loose sanity bounds — wall-clock rates stay
+/// trend-inspection only.
+fn bench_semirings(json_out: Option<&str>) {
+    use rapid_graph::apsp::semiring::{SemiringId, ALL_SEMIRINGS};
+
+    let n = 256usize;
+    let g = generators::newman_watts_strogatz(n, 5, 0.1, Weights::Uniform(1.0, 5.0), 0x5E81);
+    let dag = g.dag_oriented();
+    let opts = BenchOpts::quick();
+
+    let mut t = Table::new(
+        "semiring FW kernels (generic row-wise pass, n=256)",
+        &["semiring", "wall time", "Gmadd/s", "oracle max_diff"],
+    );
+    let mut doc = BenchDoc::new("semiring_fw_n256").count("n", n);
+    for sr in ALL_SEMIRINGS {
+        let base = if sr == SemiringId::MaxPlus {
+            dag.to_dense_sr(sr)
+        } else {
+            g.to_dense_sr(sr)
+        };
+        let mut d = base.clone();
+        let m = bench(opts, || {
+            d.as_mut_slice().copy_from_slice(base.as_slice());
+            floyd_warshall::fw_rowwise_dyn(&mut d, sr);
+            std::hint::black_box(d.get(0, 1));
+        });
+        // untimed scalar oracle: the naive in-place ⊕/⊗ triple loop
+        let mut oracle = base.clone();
+        for k in 0..n {
+            for i in 0..n {
+                let dik = oracle.get(i, k);
+                if sr.is_absorbing(dik) {
+                    continue;
+                }
+                for j in 0..n {
+                    let via = sr.extend(dik, oracle.get(k, j));
+                    oracle.set(i, j, sr.combine(oracle.get(i, j), via));
+                }
+            }
+        }
+        d.as_mut_slice().copy_from_slice(base.as_slice());
+        floyd_warshall::fw_rowwise_dyn(&mut d, sr);
+        let diff = d.max_diff(&oracle);
+        assert_eq!(
+            diff,
+            0.0,
+            "generic {} kernel diverged from the scalar oracle",
+            sr.name()
+        );
+        let gmadds = (n as f64).powi(3) / m.mean_secs() / 1e9;
+        t.row(&[
+            sr.name().into(),
+            fmt_time(m.mean_secs()),
+            format!("{gmadds:.2}"),
+            format!("{diff}"),
+        ]);
+        let tag = sr.name().replace('-', "_");
+        let key_rate = format!("{tag}_fw_gmadds_per_s");
+        let key_diff = format!("{tag}_oracle_max_diff");
+        doc = doc
+            .num(&key_rate, gmadds)
+            .num(&key_diff, diff as f64)
+            .ceiling(&format!("{key_diff}_max"), 0.0)
+            .floor(&format!("{key_rate}_min"), 0.01);
+    }
+    t.print();
+
+    if let Some(path) = json_out {
+        doc.write(path).expect("write semiring bench json");
+        println!("wrote {path}\n");
+    }
+}
+
 fn main() {
     let args = rapid_graph::util::cli::Args::from_env();
     let json_out = args.get("json");
@@ -1002,6 +1082,11 @@ fn main() {
         bench_serve(json_out);
         return;
     }
+    if args.flag("semiring-only") {
+        // the CI perf-snapshot job: per-semiring kernel identity + rates
+        bench_semirings(json_out);
+        return;
+    }
     bench_schedulers();
     bench_batching();
     bench_sharding();
@@ -1009,6 +1094,7 @@ fn main() {
     bench_delta(None);
     bench_serve(None);
     bench_host_perf(None);
+    bench_semirings(None);
 
     let runtime = PjrtRuntime::load_default().ok();
     if runtime.is_none() {

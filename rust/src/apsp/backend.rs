@@ -8,21 +8,30 @@
 //! algorithm code runs against either engine and tests can assert they
 //! agree bit-for-bit on semiring results.
 
+use crate::apsp::semiring::SemiringId;
 use crate::apsp::{floyd_warshall, minplus};
 use crate::graph::dense::DistMatrix;
 use crate::util::arena;
-use crate::INF;
 
 /// A tile-granular compute engine.
 pub trait TileBackend: Sync {
-    /// In-place Floyd–Warshall over a dense block (<= tile-size + eps;
-    /// backends may pad internally).
+    /// In-place Floyd–Warshall (⊕/⊗ closure) over a dense block
+    /// (<= tile-size + eps; backends may pad internally).
     fn fw(&self, d: &mut DistMatrix);
 
-    /// `C = min(C, A (+) B)` over rectangular row-major buffers.
+    /// `C = C ⊕ (A ⊗ B)` over rectangular row-major buffers (for the
+    /// default `(min, +)` semiring: `C = min(C, A (+) B)`).
     fn minplus_into(&self, c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize);
 
     fn name(&self) -> &'static str;
+
+    /// The semiring this backend's `fw`/`minplus_into` evaluate. The
+    /// element-agnostic layers (scheduler, recursive walk, blocked
+    /// composition) read identities and merges from here, so a
+    /// semiring-parameterized backend retunes them all at once.
+    fn semiring(&self) -> SemiringId {
+        SemiringId::MinPlus
+    }
 
     /// Largest block `fw`/`minplus_into` accept directly (`None` =
     /// unlimited). Larger FW solves are composed by
@@ -36,10 +45,15 @@ pub trait TileBackend: Sync {
 /// Blocked Floyd–Warshall composed from tile-granular `fw` +
 /// `minplus_into` calls (Katz–Kider scheme): for each diagonal block k —
 /// (1) FW the diagonal block, (2) relax row/column panels against it,
-/// (3) min-plus-update the remainder. Exact for any backend whose two
-/// primitives are exact.
+/// (3) ⊗-update the remainder. Exact for any backend whose two
+/// primitives are exact. Generic over the backend's semiring: the
+/// panel scratch resets to the ⊕-identity and panel merges go through
+/// ⊕ (for `(min, +)` both are bit-identical to the old INF-fill +
+/// `if o < *p` form).
 pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
     let n = d.n();
+    let sr = be.semiring();
+    let zero = sr.zero();
     if n <= block {
         return be.fw(d);
     }
@@ -89,12 +103,10 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
             let js = dim(j);
             let mut panel = get(d, k, j);
             let out = &mut scratch[..ks * js];
-            out.fill(INF);
+            out.fill(zero);
             be.minplus_into(out, &diag, &panel, ks, ks, js);
             for (p, &o) in panel.iter_mut().zip(out.iter()) {
-                if o < *p {
-                    *p = o;
-                }
+                *p = sr.combine(*p, o);
             }
             put(d, k, j, &panel);
             let stale = std::mem::replace(&mut row_panels[j], panel);
@@ -110,12 +122,10 @@ pub fn fw_blocked(be: &dyn TileBackend, d: &mut DistMatrix, block: usize) {
             let is = dim(i);
             let mut panel = get(d, i, k);
             let out = &mut scratch[..is * ks];
-            out.fill(INF);
+            out.fill(zero);
             be.minplus_into(out, &panel, &diag, is, ks, ks);
             for (p, &o) in panel.iter_mut().zip(out.iter()) {
-                if o < *p {
-                    *p = o;
-                }
+                *p = sr.combine(*p, o);
             }
             put(d, i, k, &panel);
             arena::recycle(panel);
@@ -235,6 +245,108 @@ impl TileBackend for SimdBackend {
     }
 }
 
+/// Execution flavor of a [`DpBackend`] — mirrors the four unit
+/// backends above.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Multithreaded kernels (the [`NativeBackend`] flavor).
+    Native,
+    /// Serial register-tiled kernels ([`SerialBackend`]).
+    Serial,
+    /// Scalar-oracle kernels ([`ScalarBackend`]).
+    Scalar,
+    /// Explicit-SIMD-dispatching serial kernels ([`SimdBackend`]).
+    Simd,
+}
+
+/// Semiring-parameterized tile backend: the engine the executor hands
+/// to the scheduler once a `--workload` is chosen. For
+/// `SemiringId::MinPlus` every dispatch lands on the exact concrete
+/// kernel the matching unit backend uses (same `name()`, same code),
+/// so the MinPlus instantiation is bit-identical to the pre-refactor
+/// path; other semirings route to the generic `_sr` kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct DpBackend {
+    pub kind: BackendKind,
+    pub sr: SemiringId,
+}
+
+impl DpBackend {
+    pub fn new(kind: BackendKind, sr: SemiringId) -> Self {
+        Self { kind, sr }
+    }
+
+    pub fn native(sr: SemiringId) -> Self {
+        Self::new(BackendKind::Native, sr)
+    }
+
+    pub fn serial(sr: SemiringId) -> Self {
+        Self::new(BackendKind::Serial, sr)
+    }
+
+    pub fn scalar(sr: SemiringId) -> Self {
+        Self::new(BackendKind::Scalar, sr)
+    }
+
+    pub fn simd(sr: SemiringId) -> Self {
+        Self::new(BackendKind::Simd, sr)
+    }
+}
+
+impl TileBackend for DpBackend {
+    fn fw(&self, d: &mut DistMatrix) {
+        match (self.sr, self.kind) {
+            (SemiringId::MinPlus, BackendKind::Native) => floyd_warshall::fw_parallel(d),
+            (SemiringId::MinPlus, BackendKind::Serial | BackendKind::Simd) => {
+                floyd_warshall::fw_rowwise(d)
+            }
+            (SemiringId::MinPlus, BackendKind::Scalar) => floyd_warshall::fw_inplace(d),
+            (sr, kind) => crate::dispatch_semiring!(sr, S => match kind {
+                BackendKind::Native => floyd_warshall::fw_parallel_sr::<S>(d),
+                BackendKind::Serial | BackendKind::Simd => floyd_warshall::fw_rowwise_sr::<S>(d),
+                BackendKind::Scalar => floyd_warshall::fw_inplace_sr::<S>(d),
+            }),
+        }
+    }
+
+    fn minplus_into(&self, c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        match (self.sr, self.kind) {
+            (SemiringId::MinPlus, BackendKind::Native) => {
+                minplus::minplus_into_parallel(c, a, b, m, k, n)
+            }
+            (SemiringId::MinPlus, BackendKind::Serial | BackendKind::Simd) => {
+                minplus::minplus_into(c, a, b, m, k, n)
+            }
+            (SemiringId::MinPlus, BackendKind::Scalar) => {
+                minplus::minplus_into_scalar(c, a, b, m, k, n)
+            }
+            (sr, kind) => crate::dispatch_semiring!(sr, S => match kind {
+                BackendKind::Native => minplus::product_into_parallel::<S>(c, a, b, m, k, n),
+                BackendKind::Serial | BackendKind::Simd => {
+                    minplus::product_into::<S>(c, a, b, m, k, n)
+                }
+                BackendKind::Scalar => minplus::product_into_scalar::<S>(c, a, b, m, k, n),
+            }),
+        }
+    }
+
+    /// Same names as the unit backends — the scheduler's
+    /// serial-batch-kernel heuristic keys on `"native"`, and reports
+    /// stay stable across the redesign.
+    fn name(&self) -> &'static str {
+        match self.kind {
+            BackendKind::Native => "native",
+            BackendKind::Serial => "serial",
+            BackendKind::Scalar => "scalar",
+            BackendKind::Simd => "simd",
+        }
+    }
+
+    fn semiring(&self) -> SemiringId {
+        self.sr
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +412,43 @@ mod tests {
         let mut direct = g.to_dense();
         SerialBackend.fw(&mut direct);
         assert!(via_limited.max_diff(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn dp_backend_minplus_matches_unit_backends() {
+        let g = generators::random_connected(90, 200, Weights::Uniform(0.5, 4.0), 3);
+        let base = g.to_dense();
+        let pairs: [(&dyn TileBackend, DpBackend); 4] = [
+            (&NativeBackend, DpBackend::native(SemiringId::MinPlus)),
+            (&SerialBackend, DpBackend::serial(SemiringId::MinPlus)),
+            (&ScalarBackend, DpBackend::scalar(SemiringId::MinPlus)),
+            (&SimdBackend, DpBackend::simd(SemiringId::MinPlus)),
+        ];
+        for (unit, dp) in pairs {
+            assert_eq!(unit.name(), dp.name());
+            let mut a = base.clone();
+            unit.fw(&mut a);
+            let mut b = base.clone();
+            dp.fw(&mut b);
+            let bits = a.as_slice().iter().zip(b.as_slice());
+            assert!(bits.clone().all(|(x, y)| x.to_bits() == y.to_bits()), "{}", dp.name());
+        }
+    }
+
+    #[test]
+    fn fw_blocked_matches_direct_every_semiring() {
+        use crate::apsp::semiring::ALL_SEMIRINGS;
+        for sr in ALL_SEMIRINGS {
+            let g = generators::random_connected(97, 250, Weights::Uniform(0.5, 4.0), 9);
+            let g = if sr == SemiringId::MaxPlus { g.dag_oriented() } else { g };
+            let be = DpBackend::serial(sr);
+            let mut direct = g.to_dense_sr(sr);
+            be.fw(&mut direct);
+            let mut blocked = g.to_dense_sr(sr);
+            fw_blocked(&be, &mut blocked, 32);
+            let diff = direct.max_diff(&blocked);
+            assert!(diff < 1e-4, "{}: blocked diff {diff}", sr.name());
+        }
     }
 
     #[test]

@@ -380,6 +380,8 @@ impl DeltaState {
             trace,
             top: Some(top),
             vert_loc: vert_locations(plan, g),
+            // the delta engine repairs shortest paths only
+            sr: crate::apsp::semiring::SemiringId::MinPlus,
         }
     }
 

@@ -36,6 +36,7 @@
 //! `_scratch` variants take caller-provided buffers for callers that
 //! hold their own (the blocked backend, the property suite).
 
+use crate::apsp::semiring::{Semiring, SemiringId};
 use crate::graph::dense::DistMatrix;
 use crate::util::{arena, threads};
 
@@ -506,6 +507,164 @@ pub fn fw_panel_scratch(d: &mut DistMatrix, panel_row: &mut [f32], panel_col: &m
     }
 }
 
+// ---------------------------------------------------------------------
+// Semiring-generic kernels. These mirror the concrete `(min, +)`
+// functions above line for line, with the pinned `< INF` guards and
+// min/add bodies routed through the `Semiring` hooks. `MinPlus`'s hooks
+// delegate back to the concrete AVX2-dispatching microkernels, so the
+// `_sr::<MinPlus>` instantiations are bit-identical to the concrete
+// entry points (pinned in `tests/kernel_properties.rs`); the concrete
+// functions stay untouched so the `--host-perf` hot paths and the
+// next-hop successor kernels are exactly the pre-refactor code.
+// ---------------------------------------------------------------------
+
+/// Semiring-generic [`fw_inplace`]: reference triple loop over ⊕/⊗.
+pub fn fw_inplace_sr<S: Semiring<Elem = f32>>(d: &mut DistMatrix) {
+    let n = d.n();
+    for k in 0..n {
+        for i in 0..n {
+            let dik = d.get(i, k);
+            if S::is_absorbing(dik) {
+                continue;
+            }
+            for j in 0..n {
+                let cand = S::extend(dik, d.get(k, j));
+                d.set(i, j, S::combine(d.get(i, j), cand));
+            }
+        }
+    }
+}
+
+/// Semiring-generic [`fw_rowwise`].
+pub fn fw_rowwise_sr<S: Semiring<Elem = f32>>(d: &mut DistMatrix) {
+    let mut row_k = arena::scratch_filled(d.n(), 0.0);
+    fw_rowwise_scratch_sr::<S>(d, &mut row_k);
+}
+
+/// Semiring-generic [`fw_rowwise_scratch`].
+pub fn fw_rowwise_scratch_sr<S: Semiring<Elem = f32>>(d: &mut DistMatrix, row_k: &mut [f32]) {
+    let n = d.n();
+    let row_k = &mut row_k[..n];
+    for k in 0..n {
+        row_k.copy_from_slice(d.row(k));
+        relax_rows_against_sr::<S>(d.as_mut_slice(), n, k, row_k);
+    }
+}
+
+/// Semiring-generic [`relax_rows_against`]: same 4-row register tiling,
+/// with the all-lanes-live fast path gated on `is_absorbing`.
+fn relax_rows_against_sr<S: Semiring<Elem = f32>>(
+    data: &mut [f32],
+    n: usize,
+    k: usize,
+    row_k: &[f32],
+) {
+    debug_assert_eq!(data.len() % n, 0);
+    for quad in data.chunks_mut(4 * n) {
+        if quad.len() == 4 * n {
+            let (r0, rest) = quad.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            let (d0, d1, d2, d3) = (r0[k], r1[k], r2[k], r3[k]);
+            if !S::is_absorbing(d0)
+                && !S::is_absorbing(d1)
+                && !S::is_absorbing(d2)
+                && !S::is_absorbing(d3)
+            {
+                S::relax_rows4(r0, r1, r2, r3, [d0, d1, d2, d3], row_k);
+                continue;
+            }
+            for (r, dk) in [(r0, d0), (r1, d1), (r2, d2), (r3, d3)] {
+                if !S::is_absorbing(dk) {
+                    S::relax_row(r, dk, row_k);
+                }
+            }
+        } else {
+            for r in quad.chunks_mut(n) {
+                let dk = r[k];
+                if !S::is_absorbing(dk) {
+                    S::relax_row(r, dk, row_k);
+                }
+            }
+        }
+    }
+}
+
+/// Semiring-generic scalar relax — the always-available per-semiring
+/// oracle, pinned to the portable ⊕/⊗ loop (never an instance's SIMD
+/// hook). The per-semiring analogue of [`relax_row_scalar`].
+#[inline]
+pub fn relax_row_scalar_sr<S: Semiring<Elem = f32>>(row_i: &mut [f32], dik: f32, row_k: &[f32]) {
+    let m = row_i.len().min(row_k.len());
+    for (x, &b) in row_i[..m].iter_mut().zip(&row_k[..m]) {
+        *x = S::combine(*x, S::extend(dik, b));
+    }
+}
+
+/// Semiring-generic [`fw_parallel`]: identical barrier structure, the
+/// row sweep routed through the generic microkernels.
+pub fn fw_parallel_sr<S: Semiring<Elem = f32>>(d: &mut DistMatrix) {
+    let n = d.n();
+    let workers = threads::num_threads().min(n / 128).max(1);
+    if n < 384 || workers == 1 {
+        return fw_rowwise_sr::<S>(d);
+    }
+    let data_ptr = d.as_mut_slice().as_mut_ptr() as usize;
+    let mut row_k = arena::scratch_filled(n, 0.0);
+    let row_k_ptr = row_k.as_mut_ptr() as usize;
+    let barrier = std::sync::Barrier::new(workers);
+    let rows_per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let barrier = &barrier;
+            s.spawn(move || {
+                let lo = w * rows_per;
+                let hi = ((w + 1) * rows_per).min(n);
+                // SAFETY: identical discipline to `fw_parallel` — workers
+                // write disjoint row ranges; the shared pivot-row buffer
+                // is written only by worker 0 between two barriers.
+                let data = data_ptr as *mut f32;
+                let row_k = row_k_ptr as *mut f32;
+                for k in 0..n {
+                    barrier.wait();
+                    if w == 0 {
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(data.add(k * n), row_k, n);
+                        }
+                    }
+                    barrier.wait();
+                    let row_k_slice =
+                        unsafe { std::slice::from_raw_parts(row_k as *const f32, n) };
+                    if lo < hi {
+                        let rows = unsafe {
+                            std::slice::from_raw_parts_mut(data.add(lo * n), (hi - lo) * n)
+                        };
+                        relax_rows_against_sr::<S>(rows, n, k, row_k_slice);
+                    }
+                }
+            });
+        }
+    });
+    drop(row_k);
+}
+
+/// Runtime-dispatched serial FW over any shipped semiring (the batch
+/// scheduler's serial path uses this when the backend is non-MinPlus).
+pub fn fw_rowwise_dyn(d: &mut DistMatrix, sr: SemiringId) {
+    match sr {
+        SemiringId::MinPlus => fw_rowwise(d),
+        _ => crate::dispatch_semiring!(sr, S => fw_rowwise_sr::<S>(d)),
+    }
+}
+
+/// Runtime-dispatched parallel FW over any shipped semiring.
+pub fn fw_parallel_dyn(d: &mut DistMatrix, sr: SemiringId) {
+    match sr {
+        SemiringId::MinPlus => fw_parallel(d),
+        _ => crate::dispatch_semiring!(sr, S => fw_parallel_sr::<S>(d)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -739,6 +898,43 @@ mod tests {
             let mut r_c = row.clone();
             relax_row(&mut r_c, dik, &rk);
             assert_eq!(r_a, r_c, "case {case}: succ kernel changed distances");
+        }
+    }
+
+    fn bits_eq(a: &DistMatrix, b: &DistMatrix) -> bool {
+        let (x, y) = (a.as_slice(), b.as_slice());
+        x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+    }
+
+    #[test]
+    fn generic_minplus_is_bit_identical_to_concrete() {
+        use crate::apsp::semiring::MinPlus;
+        for seed in 0..3 {
+            let g = generators::random_connected(70, 160, Weights::Uniform(0.5, 4.0), seed);
+            let d = g.to_dense();
+            let mut a = d.clone();
+            fw_rowwise(&mut a);
+            let mut b = d.clone();
+            fw_rowwise_sr::<MinPlus>(&mut b);
+            assert!(bits_eq(&a, &b), "seed {seed}: rowwise diverged");
+            let mut c = d.clone();
+            fw_inplace_sr::<MinPlus>(&mut c);
+            let mut r = d.clone();
+            fw_inplace(&mut r);
+            assert!(bits_eq(&r, &c), "seed {seed}: inplace diverged");
+        }
+    }
+
+    #[test]
+    fn generic_parallel_matches_generic_rowwise() {
+        use crate::apsp::semiring::ALL_SEMIRINGS;
+        for sr in ALL_SEMIRINGS {
+            let g = generators::newman_watts_strogatz(400, 5, 0.1, Weights::Uniform(1.0, 9.0), 5);
+            let mut a = g.to_dense_sr(sr);
+            let mut b = a.clone();
+            fw_rowwise_dyn(&mut a, sr);
+            fw_parallel_dyn(&mut b, sr);
+            assert!(bits_eq(&a, &b), "{:?} parallel diverged from rowwise", sr);
         }
     }
 

@@ -6,6 +6,7 @@
 //! dims, because the cross-component merges operate on `|C| x |B|` strips
 //! rather than square tiles.
 
+use crate::apsp::semiring::{Semiring, SemiringId};
 use crate::util::threads;
 
 /// `C = min(C, A (+) B)` where `A` is `m x k`, `B` is `k x n`, `C` is
@@ -133,6 +134,156 @@ pub fn two_stage_merge(
 ) -> Vec<f32> {
     let stage1 = minplus(a, db, m, b1, b2);
     minplus(&stage1, b, m, b2, n)
+}
+
+// ---------------------------------------------------------------------
+// Semiring-generic ⊗-products. `minplus_into*` above are the concrete
+// `(min, +)` instantiations and stay untouched (they are the
+// `--host-perf` gated hot path); the `product_*` functions below are
+// the same kernels over any `Semiring`, and `product_into::<MinPlus>`
+// is bit-identical to `minplus_into` because MinPlus's relax hooks
+// delegate to the same concrete microkernels.
+// ---------------------------------------------------------------------
+
+/// Semiring-generic [`minplus_into`]: `C = C ⊕ (A ⊗ B)` where `A` is
+/// `m x k`, `B` is `k x n`, `C` is `m x n`, all row-major.
+/// Accumulating (keeps existing C entries).
+pub fn product_into<S: Semiring<Elem = f32>>(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "A dims");
+    assert_eq!(b.len(), k * n, "B dims");
+    assert_eq!(c.len(), m * n, "C dims");
+    product_rows::<S>(c, a, b, 0, k, n);
+}
+
+/// Generic microkernel body shared by the serial and parallel entry
+/// points — the per-semiring analogue of `minplus_rows`.
+fn product_rows<S: Semiring<Elem = f32>>(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 || k == 0 {
+        return;
+    }
+    debug_assert_eq!(c.len() % n, 0);
+    let mut i = i0;
+    for quad in c.chunks_mut(4 * n) {
+        if quad.len() == 4 * n {
+            let (c0, rest) = quad.split_at_mut(n);
+            let (c1, rest) = rest.split_at_mut(n);
+            let (c2, c3) = rest.split_at_mut(n);
+            let (a0, a1, a2, a3) = (
+                &a[i * k..(i + 1) * k],
+                &a[(i + 1) * k..(i + 2) * k],
+                &a[(i + 2) * k..(i + 3) * k],
+                &a[(i + 3) * k..(i + 4) * k],
+            );
+            for kk in 0..k {
+                let dik = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                if S::is_absorbing(dik[0])
+                    && S::is_absorbing(dik[1])
+                    && S::is_absorbing(dik[2])
+                    && S::is_absorbing(dik[3])
+                {
+                    continue;
+                }
+                let row_b = &b[kk * n..(kk + 1) * n];
+                S::relax_rows4(c0, c1, c2, c3, dik, row_b);
+            }
+            i += 4;
+        } else {
+            for row_c in quad.chunks_mut(n) {
+                let row_a = &a[i * k..(i + 1) * k];
+                for (kk, &aik) in row_a.iter().enumerate() {
+                    if S::is_absorbing(aik) {
+                        continue;
+                    }
+                    let row_b = &b[kk * n..(kk + 1) * n];
+                    S::relax_row(row_c, aik, row_b);
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Semiring-generic [`minplus_into_parallel`].
+pub fn product_into_parallel<S: Semiring<Elem = f32>>(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m * n < 64 * 64 {
+        return product_into::<S>(c, a, b, m, k, n);
+    }
+    let workers = threads::num_threads();
+    let rows_per = m.div_ceil(workers * 4).max(8);
+    threads::par_chunks_mut(c, rows_per * n, |chunk_idx, rows| {
+        product_rows::<S>(rows, a, b, chunk_idx * rows_per, k, n);
+    });
+}
+
+/// Semiring-generic [`minplus_into_scalar`]: pinned to the portable
+/// ⊕/⊗ loop (never an instance's SIMD hook) — the per-semiring
+/// reference the generic kernels are property-tested against.
+pub fn product_into_scalar<S: Semiring<Elem = f32>>(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "A dims");
+    assert_eq!(b.len(), k * n, "B dims");
+    assert_eq!(c.len(), m * n, "C dims");
+    if n == 0 {
+        return;
+    }
+    for (i, row_c) in c.chunks_mut(n).enumerate() {
+        let row_a = &a[i * k..(i + 1) * k];
+        for (kk, &aik) in row_a.iter().enumerate() {
+            if S::is_absorbing(aik) {
+                continue;
+            }
+            let row_b = &b[kk * n..(kk + 1) * n];
+            crate::apsp::floyd_warshall::relax_row_scalar_sr::<S>(row_c, aik, row_b);
+        }
+    }
+}
+
+/// Runtime-dispatched accumulating ⊗-product: the MinPlus case routes
+/// to the concrete parallel kernel, every other semiring to the
+/// generic parallel kernel.
+pub fn product_into_dyn(
+    sr: SemiringId,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match sr {
+        SemiringId::MinPlus => minplus_into_parallel(c, a, b, m, k, n),
+        _ => crate::dispatch_semiring!(sr, S => product_into_parallel::<S>(c, a, b, m, k, n)),
+    }
 }
 
 #[cfg(test)]
@@ -290,5 +441,56 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn generic_product_minplus_bit_identical() {
+        use crate::apsp::semiring::MinPlus;
+        let mut rng = Rng::new(31);
+        for &(m, k, n) in &[(5usize, 7usize, 3usize), (16, 16, 16), (33, 20, 29)] {
+            let a = rand_mat(&mut rng, m * k, 0.25);
+            let b = rand_mat(&mut rng, k * n, 0.25);
+            let mut c1 = rand_mat(&mut rng, m * n, 0.5);
+            let mut c2 = c1.clone();
+            minplus_into(&mut c1, &a, &b, m, k, n);
+            product_into::<MinPlus>(&mut c2, &a, &b, m, k, n);
+            let same = c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "({m},{k},{n}): generic MinPlus product diverged");
+        }
+    }
+
+    #[test]
+    fn generic_product_matches_scalar_all_semirings() {
+        use crate::apsp::semiring::ALL_SEMIRINGS;
+        let mut rng = Rng::new(37);
+        for sr in ALL_SEMIRINGS {
+            for &(m, k, n) in &[(6usize, 9usize, 5usize), (17, 12, 20), (64, 70, 64)] {
+                let mk_mat = |rng: &mut Rng, len: usize| -> Vec<f32> {
+                    (0..len)
+                        .map(|_| {
+                            if rng.gen_bool(0.25) {
+                                sr.zero()
+                            } else {
+                                sr.from_weight(rng.gen_f32_range(0.1, 9.0))
+                            }
+                        })
+                        .collect()
+                };
+                let a = mk_mat(&mut rng, m * k);
+                let b = mk_mat(&mut rng, k * n);
+                let mut c1 = vec![sr.zero(); m * n];
+                let mut c2 = c1.clone();
+                let mut c3 = c1.clone();
+                crate::dispatch_semiring!(sr, S => {
+                    product_into::<S>(&mut c1, &a, &b, m, k, n);
+                    product_into_scalar::<S>(&mut c2, &a, &b, m, k, n);
+                    product_into_parallel::<S>(&mut c3, &a, &b, m, k, n);
+                });
+                let same12 = c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits());
+                let same13 = c1.iter().zip(&c3).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same12, "{}: tiled vs scalar diverged", sr.name());
+                assert!(same13, "{}: serial vs parallel diverged", sr.name());
+            }
+        }
     }
 }

@@ -30,6 +30,10 @@
 //! * [`serve`] — serve-side read path: lock-free snapshot publication
 //!   ([`serve::SnapshotCell`]) and the batched source-major query
 //!   executor ([`serve::BatchExec`]).
+//! * [`semiring`] — the element API ([`semiring::Semiring`]) the tile
+//!   kernels are generic over: `(min,+)` APSP plus boolean and-or
+//!   (reachability), max-min (widest path) and max-plus (critical
+//!   path) instances behind one trait and a monomorphizing dispatch.
 //! * [`store`] — content-addressed result store: fingerprinted,
 //!   compressed APSP results persisted to modeled FeNAND so duplicate
 //!   submissions are served instead of re-solved.
@@ -48,6 +52,7 @@ pub mod partitioned;
 pub mod plan;
 pub mod query;
 pub mod recursive;
+pub mod semiring;
 pub mod serve;
 pub mod scheduler;
 pub mod shard;

@@ -18,13 +18,13 @@
 
 use super::backend::TileBackend;
 use super::plan::{ApspPlan, PlanLevel};
+use super::semiring::SemiringId;
 use super::taskgraph;
 use super::trace::Trace;
 use crate::graph::csr::CsrGraph;
 use crate::graph::dense::DistMatrix;
 use crate::util::arena;
 use crate::util::threads;
-use crate::INF;
 use std::sync::Arc;
 
 /// Solution of one level's graph.
@@ -51,6 +51,10 @@ pub struct ApspSolution<'p> {
     pub(crate) top: Option<LevelSolution>,
     /// level-0 vertex -> (component, local index).
     pub(crate) vert_loc: Vec<(u32, u32)>,
+    /// Semiring the numerics were computed in (MinPlus in estimate mode,
+    /// where no numerics exist). Cross-component queries merge with its
+    /// ⊕/⊗ instead of hard-coded min/+.
+    pub(crate) sr: SemiringId,
 }
 
 impl<'p> ApspSolution<'p> {
@@ -75,17 +79,17 @@ impl<'p> ApspSolution<'p> {
                 let gs2 = lvl.group_start[c2 as usize];
                 let d1 = &comp_dist[c1 as usize];
                 let d2 = &comp_dist[c2 as usize];
-                let mut best = INF;
+                let sr = self.sr;
+                let mut best = sr.zero();
                 for i in 0..b1 {
                     let dmi = d1.get(m as usize, i);
-                    if !(dmi < INF) {
+                    if sr.is_absorbing(dmi) {
                         continue;
                     }
                     for j in 0..b2 {
-                        let cand = dmi + db.get(gs1 + i, gs2 + j) + d2.get(j, n as usize);
-                        if cand < best {
-                            best = cand;
-                        }
+                        let through = sr.extend(dmi, db.get(gs1 + i, gs2 + j));
+                        let cand = sr.extend(through, d2.get(j, n as usize));
+                        best = sr.combine(best, cand);
                     }
                 }
                 best
@@ -157,6 +161,7 @@ pub fn solve<'p>(
                 trace,
                 top: Some(top),
                 vert_loc: vert_locations(plan, g),
+                sr: be.semiring(),
             }
         }
     }
@@ -171,6 +176,7 @@ pub fn estimate_solution<'p>(g: &CsrGraph, plan: &'p ApspPlan, trace: Trace) -> 
         trace,
         top: None,
         vert_loc: vert_locations(plan, g),
+        sr: SemiringId::MinPlus,
     }
 }
 
@@ -249,10 +255,11 @@ impl<'a, 'p> Walk<'a, 'p> {
         if nb == 0 {
             // no cross edges at all: components are mutually unreachable
             let comp_dist = std::mem::take(&mut self.d_intra[level]);
+            let sr = self.backend.semiring();
             return LevelSolution::Partitioned {
                 level,
                 comp_dist,
-                db: DistMatrix::new_inf(0),
+                db: DistMatrix::new_full(0, sr.zero()),
             };
         }
         let sub = self.solve_level(level + 1);
@@ -263,6 +270,7 @@ impl<'a, 'p> Walk<'a, 'p> {
         // same set the trace's RerunFw ops name)
         let mut comp_dist = std::mem::take(&mut self.d_intra[level]);
         let lvl = &self.plan.levels[level];
+        let sr = self.backend.semiring();
         for (ci, c) in lvl.cs.components.iter().enumerate() {
             let b = c.n_boundary;
             if b == 0 {
@@ -272,7 +280,7 @@ impl<'a, 'p> Walk<'a, 'p> {
             let dc = &mut comp_dist[ci];
             for i in 0..b {
                 for j in 0..b {
-                    dc.relax(i, j, db.get(gs + i, gs + j));
+                    dc.relax_sr(i, j, db.get(gs + i, gs + j), sr);
                 }
             }
         }
@@ -295,7 +303,8 @@ impl<'a, 'p> Walk<'a, 'p> {
     fn solve_terminal(&mut self, level: usize) -> LevelSolution {
         let n = self.plan.final_n;
         if n == 0 {
-            return LevelSolution::Direct(Arc::new(DistMatrix::new_inf(0)));
+            let sr = self.backend.semiring();
+            return LevelSolution::Direct(Arc::new(DistMatrix::new_full(0, sr.zero())));
         }
         let mut d = self.fill_terminal_dense(level);
         // the terminal boundary graph can exceed one tile (random
@@ -309,10 +318,11 @@ impl<'a, 'p> Walk<'a, 'p> {
     fn fill_level_blocks(&self, level: usize) -> Vec<DistMatrix> {
         let lvl = &self.plan.levels[level];
         let k = lvl.cs.components.len();
+        let sr = self.backend.semiring();
         if level == 0 {
             threads::par_map(k, |ci| {
                 let c = &lvl.cs.components[ci];
-                fill_block_from_graph(self.g, &c.verts, &lvl.cs.comp_of, ci as u32)
+                fill_block_from_graph(self.g, &c.verts, &lvl.cs.comp_of, ci as u32, sr)
             })
         } else {
             let prev = &self.plan.levels[level - 1];
@@ -326,6 +336,7 @@ impl<'a, 'p> Walk<'a, 'p> {
                     &c.verts,
                     &lvl.cs.comp_of,
                     ci as u32,
+                    sr,
                 )
             })
         }
@@ -335,10 +346,11 @@ impl<'a, 'p> Walk<'a, 'p> {
     fn fill_terminal_dense(&self, level: usize) -> DistMatrix {
         let n = self.plan.final_n;
         let all: Vec<u32> = (0..n as u32).collect();
+        let sr = self.backend.semiring();
         if level == 0 {
             // whole original graph in one tile
             let comp_of = vec![0u32; self.g.n()];
-            fill_block_from_graph(self.g, &all, &comp_of, 0)
+            fill_block_from_graph(self.g, &all, &comp_of, 0, sr)
         } else {
             let prev = &self.plan.levels[level - 1];
             let d_prev = &self.d_intra[level - 1];
@@ -350,6 +362,7 @@ impl<'a, 'p> Walk<'a, 'p> {
                 &all,
                 &comp_of,
                 0,
+                sr,
             )
         }
     }
@@ -372,12 +385,13 @@ pub(crate) fn batch_uses_serial_kernel(backend: &dyn TileBackend, batch_len: usi
 
 pub(crate) fn run_fw_batch(backend: &dyn TileBackend, blocks: Vec<&mut DistMatrix>) {
     if batch_uses_serial_kernel(backend, blocks.len()) {
+        let sr = backend.semiring();
         let nblocks = blocks.len();
         let items = std::sync::Mutex::new(blocks);
         threads::par_for(nblocks, |_| {
             let item = items.lock().unwrap().pop();
             if let Some(b) = item {
-                super::floyd_warshall::fw_rowwise(b);
+                super::floyd_warshall::fw_rowwise_dyn(b, sr);
             }
         });
     } else {
@@ -388,23 +402,27 @@ pub(crate) fn run_fw_batch(backend: &dyn TileBackend, blocks: Vec<&mut DistMatri
 }
 
 /// Fill a dense block for a level-0 component from the weighted graph.
+/// Edge weights pass through `sr.from_weight`, the canvas uses the
+/// semiring identities (bit-identical to the historical diag-0/INF fill
+/// for MinPlus).
 pub(crate) fn fill_block_from_graph(
     g: &CsrGraph,
     verts: &[u32],
     comp_of: &[u32],
     ci: u32,
+    sr: SemiringId,
 ) -> DistMatrix {
     let n = verts.len();
     let mut pos = std::collections::HashMap::with_capacity(n);
     for (idx, &v) in verts.iter().enumerate() {
         pos.insert(v, idx as u32);
     }
-    let mut d = DistMatrix::new_diag0_pooled(n);
+    let mut d = DistMatrix::new_ident_sr_pooled(n, sr);
     for (i, &v) in verts.iter().enumerate() {
         for (u, w) in g.neighbors(v as usize) {
             if comp_of[u] == ci {
                 if let Some(&j) = pos.get(&(u as u32)) {
-                    d.relax(i, j as usize, w);
+                    d.relax_sr(i, j as usize, sr.from_weight(w), sr);
                 }
             }
         }
@@ -425,19 +443,20 @@ pub(crate) fn fill_block_from_boundary<'m>(
     verts: &[u32],
     comp_of: &[u32],
     ci: u32,
+    sr: SemiringId,
 ) -> DistMatrix {
     let n = verts.len();
     let mut pos = std::collections::HashMap::with_capacity(n);
     for (idx, &v) in verts.iter().enumerate() {
         pos.insert(v, idx as u32);
     }
-    let mut d = DistMatrix::new_diag0_pooled(n);
-    // cross edges within this component
+    let mut d = DistMatrix::new_ident_sr_pooled(n, sr);
+    // cross edges within this component (raw graph weights: map them)
     for (i, &v) in verts.iter().enumerate() {
         for (u, w) in cross.neighbors(v as usize) {
             if comp_of[u] == ci {
                 if let Some(&j) = pos.get(&(u as u32)) {
-                    d.relax(i, j as usize, w);
+                    d.relax_sr(i, j as usize, sr.from_weight(w), sr);
                 }
             }
         }
@@ -474,7 +493,8 @@ pub(crate) fn fill_block_from_boundary<'m>(
                     continue;
                 }
                 let j = pos[&((gs + bj) as u32)] as usize;
-                d.relax(i, j, dg.get(bi, bj));
+                // virtual edges are already semiring values: no mapping
+                d.relax_sr(i, j, dg.get(bi, bj), sr);
             }
         }
     }
@@ -509,7 +529,9 @@ pub(crate) fn materialize_partitioned<'m>(
 ) -> DistMatrix {
     let lvl = &plan.levels[level];
     let n = lvl.n;
-    let mut out = DistMatrix::new_inf_pooled(n);
+    let sr = backend.semiring();
+    let zero = sr.zero();
+    let mut out = DistMatrix::new_zero_sr_pooled(n, sr);
     // intra entries
     for (ci, c) in lvl.cs.components.iter().enumerate() {
         let dc = comp_dist(ci);
@@ -517,9 +539,7 @@ pub(crate) fn materialize_partitioned<'m>(
             let urow = out.row_mut(u as usize);
             for (j, &v) in c.verts.iter().enumerate() {
                 let val = dc.get(i, j);
-                if val < urow[v as usize] {
-                    urow[v as usize] = val;
-                }
+                urow[v as usize] = sr.combine(urow[v as usize], val);
             }
         }
     }
@@ -537,7 +557,7 @@ pub(crate) fn materialize_partitioned<'m>(
         // arena-leased and recycled, so a steady-state materialization
         // loop performs no heap allocation
         let d1 = comp_dist(c1);
-        let mut a = arena::lease_filled(n1 * b1, INF);
+        let mut a = arena::lease_filled(n1 * b1, zero);
         for i in 0..n1 {
             a[i * b1..(i + 1) * b1].copy_from_slice(&d1.row(i)[..b1]);
         }
@@ -553,7 +573,7 @@ pub(crate) fn materialize_partitioned<'m>(
             let n2 = comp2.n();
             let gs2 = lvl.group_start[c2];
             // DB block (b1 x b2)
-            let mut dbb = arena::lease_filled(b1 * b2, INF);
+            let mut dbb = arena::lease_filled(b1 * b2, zero);
             for i in 0..b1 {
                 for j in 0..b2 {
                     dbb[i * b2 + j] = db.get(gs1 + i, gs2 + j);
@@ -561,23 +581,21 @@ pub(crate) fn materialize_partitioned<'m>(
             }
             // B = D_c2[0..b2, :] (b2 x n2) — boundary rows
             let d2 = comp_dist(c2);
-            let mut bmat = arena::lease_filled(b2 * n2, INF);
+            let mut bmat = arena::lease_filled(b2 * n2, zero);
             for j in 0..b2 {
                 bmat[j * n2..(j + 1) * n2].copy_from_slice(d2.row(j));
             }
             // two-stage merge
-            let mut stage1 = arena::lease_filled(n1 * b2, INF);
+            let mut stage1 = arena::lease_filled(n1 * b2, zero);
             backend.minplus_into(&mut stage1, &a, &dbb, n1, b1, b2);
-            let mut strip = arena::lease_filled(n1 * n2, INF);
+            let mut strip = arena::lease_filled(n1 * n2, zero);
             backend.minplus_into(&mut strip, &stage1, &bmat, n1, b2, n2);
             // scatter into out
             for (i, &u) in comp1.verts.iter().enumerate() {
                 let urow = out.row_mut(u as usize);
                 for (j, &v) in comp2.verts.iter().enumerate() {
                     let val = strip[i * n2 + j];
-                    if val < urow[v as usize] {
-                        urow[v as usize] = val;
-                    }
+                    urow[v as usize] = sr.combine(urow[v as usize], val);
                 }
             }
             for buf in [dbb, bmat, stage1, strip] {

@@ -21,6 +21,7 @@ use super::backend::{fw_any, TileBackend};
 use super::batch::BatchGraph;
 use super::delta::DeltaState;
 use super::plan::ApspPlan;
+use super::semiring::SemiringId;
 use super::shard::ShardGraph;
 use super::recursive::{
     batch_uses_serial_kernel, check_memory_guard, fill_block_from_boundary,
@@ -178,7 +179,7 @@ pub fn execute<'p>(
         });
     }
 
-    assemble(g, plan, tg.to_trace(), &mut slots)
+    assemble(g, plan, tg.to_trace(), &mut slots, backend.semiring())
 }
 
 /// Execute a merged batch of independent graphs ([`BatchGraph`]) with
@@ -241,7 +242,7 @@ pub fn execute_batch<'p>(
         .iter()
         .zip(slots.iter_mut())
         .zip(&batch.per_graph)
-        .map(|((&(g, plan), s), tg)| assemble(g, plan, tg.to_trace(), s))
+        .map(|((&(g, plan), s), tg)| assemble(g, plan, tg.to_trace(), s, backend.semiring()))
         .collect()
 }
 
@@ -425,9 +426,10 @@ pub fn execute_admission_stored<'p>(
                     trace: batch.per_graph[gi].to_trace(),
                     top: Some(LevelSolution::Direct(full)),
                     vert_loc: vert_locations(plan, g),
+                    sr: backend.semiring(),
                 }
             }
-            _ => assemble(g, plan, batch.per_graph[gi].to_trace(), s),
+            _ => assemble(g, plan, batch.per_graph[gi].to_trace(), s, backend.semiring()),
         };
         out[si] = Some(sol);
     }
@@ -478,7 +480,7 @@ pub fn execute_sharded<'p>(
 
     // the reported trace is the solo lowering's — sharding changes the
     // schedule and adds transfers, not the algorithmic work
-    assemble(g, plan, shard.solo.to_trace(), &mut slots)
+    assemble(g, plan, shard.solo.to_trace(), &mut slots, backend.semiring())
 }
 
 /// Per-component snapshot slots used by the retained-solve paths.
@@ -688,6 +690,7 @@ pub fn execute_delta(
                         &c.verts,
                         &lvl.cs.comp_of,
                         comp,
+                        backend.semiring(),
                     );
                     // SAFETY (write): first writer of this slot.
                     unsafe { slots.d[1][comp as usize].put(block) };
@@ -711,6 +714,7 @@ pub fn execute_delta(
                         &all,
                         &comp_of,
                         0,
+                        backend.semiring(),
                     );
                     unsafe { slots.terminal.put(block) };
                 }
@@ -874,6 +878,7 @@ fn assemble<'p>(
     plan: &'p ApspPlan,
     trace: Trace,
     slots: &mut Slots,
+    sr: SemiringId,
 ) -> ApspSolution<'p> {
     let top = if plan.depth() == 0 {
         LevelSolution::Direct(Arc::new(
@@ -901,6 +906,7 @@ fn assemble<'p>(
         trace,
         top: Some(top),
         vert_loc: vert_locations(plan, g),
+        sr,
     }
 }
 
@@ -915,13 +921,14 @@ fn run_task(
     rerun_serial: &[bool],
 ) {
     let depth = plan.depth();
+    let sr = backend.semiring();
     match *kind {
         TaskKind::Load { level, comp } => {
             let (l, ci) = (level as usize, comp as usize);
             let lvl = &plan.levels[l];
             let c = &lvl.cs.components[ci];
             let block = if l == 0 {
-                fill_block_from_graph(g, &c.verts, &lvl.cs.comp_of, comp)
+                fill_block_from_graph(g, &c.verts, &lvl.cs.comp_of, comp, sr)
             } else {
                 let prev = &plan.levels[l - 1];
                 // SAFETY (read): Load(l, c) is ordered behind
@@ -936,6 +943,7 @@ fn run_task(
                     &c.verts,
                     &lvl.cs.comp_of,
                     comp,
+                    sr,
                 )
             };
             // SAFETY (write): Load is the slot's first writer; every
@@ -948,7 +956,7 @@ fn run_task(
             // all readers depend on this task.
             let d = unsafe { slots.d[l][ci].get_mut() };
             if local_serial[l] {
-                floyd_warshall::fw_rowwise(d);
+                floyd_warshall::fw_rowwise_dyn(d, sr);
             } else {
                 fw_any(backend, d);
             }
@@ -967,7 +975,7 @@ fn run_task(
             let dc = unsafe { slots.d[l][ci].get_mut() };
             for i in 0..b {
                 for j in 0..b {
-                    dc.relax(i, j, db.get(gs + i, gs + j));
+                    dc.relax_sr(i, j, db.get(gs + i, gs + j), sr);
                 }
             }
         }
@@ -978,7 +986,7 @@ fn run_task(
             // solution) depend on this task.
             let d = unsafe { slots.d[l][ci].get_mut() };
             if rerun_serial[l] {
-                floyd_warshall::fw_rowwise(d);
+                floyd_warshall::fw_rowwise_dyn(d, sr);
             } else {
                 fw_any(backend, d);
             }
@@ -988,7 +996,7 @@ fn run_task(
             let all: Vec<u32> = (0..n as u32).collect();
             let block = if depth == 0 {
                 let comp_of = vec![0u32; g.n()];
-                fill_block_from_graph(g, &all, &comp_of, 0)
+                fill_block_from_graph(g, &all, &comp_of, 0, sr)
             } else {
                 let prev = &plan.levels[depth - 1];
                 let comp_of = vec![0u32; n];
@@ -1001,6 +1009,7 @@ fn run_task(
                     &all,
                     &comp_of,
                     0,
+                    sr,
                 )
             };
             // SAFETY (write): first writer of the terminal slot.

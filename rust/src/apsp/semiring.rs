@@ -1,0 +1,618 @@
+//! The semiring element API the tile kernels are generic over.
+//!
+//! RAPID-Graph's FW/min-plus pair is `(min, +)`-specific only at the
+//! innermost loop (GenDRAM / GEN-Graph generalize exactly this PIM
+//! architecture to arbitrary graph dynamic programming). This module
+//! abstracts that loop: a [`Semiring`] supplies the two operators —
+//! `combine` (⊕, the reduction across candidate paths) and `extend`
+//! (⊗, the extension of a path by one more hop) — plus their
+//! identities, an absorbing-element early-out, and optional SIMD hooks
+//! for the row microkernels. Everything above the kernels (taskgraph
+//! lowering, list scheduler, arena, store, admission) is element-
+//! agnostic and applies unchanged.
+//!
+//! Shipped instances (all over `f32` storage):
+//!
+//! | instance      | ⊕   | ⊗   | zero  | one  | workload                 |
+//! |---------------|-----|-----|-------|------|--------------------------|
+//! | [`MinPlus`]   | min | +   | +inf  | 0    | APSP (shortest paths)    |
+//! | [`BoolAndOr`] | or  | and | 0     | 1    | reachability / closure   |
+//! | [`MaxMin`]    | max | min | 0     | +inf | widest path (bottleneck) |
+//! | [`MaxPlus`]   | max | +   | -inf  | 0    | critical path (DAG only) |
+//!
+//! # Laws the kernels rely on
+//!
+//! * `combine` is associative, commutative, idempotent, with identity
+//!   `zero`; `extend` is associative with identity `one`.
+//! * `extend` distributes over `combine` and `zero` annihilates:
+//!   `extend(zero, x) = zero` — this is what lets the row sweep skip
+//!   absorbing pivots (`is_absorbing`) and lets the fused 4-row kernel
+//!   process an absorbing lane unconditionally (`combine(c, zero) = c`).
+//! * The closure (fixed point) of the FW recurrence exists on every
+//!   input the workload admits; `MaxPlus` has no fixed point on cyclic
+//!   inputs, so its workload DAG-restricts the graph first (the
+//!   executor orients edges and runs a Kahn cycle guard).
+//!
+//! `MinPlus` is required to be *bit-identical* to the pre-refactor
+//! concrete kernels: its `combine`/`is_absorbing` mirror the exact
+//! comparisons the kernels used (`if b < a`, `!(x < INF)`) and its SIMD
+//! hooks delegate to the unchanged AVX2-dispatching microkernels.
+//! `tests/kernel_properties.rs` pins all of this.
+
+use crate::INF;
+
+/// Runtime tag for a shipped semiring instance. The config/CLI layer
+/// stores this; kernels monomorphize through [`dispatch_semiring!`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SemiringId {
+    /// `(min, +)` — shortest paths (APSP).
+    MinPlus,
+    /// `(or, and)` on {0, 1} — transitive closure / reachability.
+    BoolAndOr,
+    /// `(max, min)` — widest path / bottleneck bandwidth.
+    MaxMin,
+    /// `(max, +)` — critical path; requires DAG-restricted input.
+    MaxPlus,
+}
+
+impl SemiringId {
+    pub fn name(self) -> &'static str {
+        match self {
+            SemiringId::MinPlus => "min-plus",
+            SemiringId::BoolAndOr => "bool-and-or",
+            SemiringId::MaxMin => "max-min",
+            SemiringId::MaxPlus => "max-plus",
+        }
+    }
+
+    /// ⊕-identity (the "no path" element, matrix background fill).
+    #[inline]
+    pub fn zero(self) -> f32 {
+        crate::dispatch_semiring!(self, S => S::zero())
+    }
+
+    /// ⊗-identity (the "empty path" element, matrix diagonal).
+    #[inline]
+    pub fn one(self) -> f32 {
+        crate::dispatch_semiring!(self, S => S::one())
+    }
+
+    /// ⊕ — reduce two path values (runtime-dispatched form).
+    #[inline]
+    pub fn combine(self, a: f32, b: f32) -> f32 {
+        crate::dispatch_semiring!(self, S => S::combine(a, b))
+    }
+
+    /// ⊗ — extend a path value by another (runtime-dispatched form).
+    #[inline]
+    pub fn extend(self, a: f32, b: f32) -> f32 {
+        crate::dispatch_semiring!(self, S => S::extend(a, b))
+    }
+
+    /// `true` iff `x` can never improve any ⊕ (early-out for pivots).
+    #[inline]
+    pub fn is_absorbing(self, x: f32) -> bool {
+        crate::dispatch_semiring!(self, S => S::is_absorbing(x))
+    }
+
+    /// Map a raw edge weight into the element domain.
+    #[inline]
+    pub fn from_weight(self, w: f32) -> f32 {
+        crate::dispatch_semiring!(self, S => S::from_weight(w))
+    }
+
+    /// `true` when ⊕ prefers the numerically larger value (the
+    /// max-style semirings); rank order for the serve loop's k-nearest.
+    #[inline]
+    pub fn prefers_larger(self) -> bool {
+        !matches!(self, SemiringId::MinPlus)
+    }
+}
+
+/// A semiring the tile kernels can run the FW/closure DP over.
+///
+/// The associated `Elem` keeps the door open for wider elements; every
+/// shipped instance uses `f32`, and the kernel layer is generic over
+/// `S: Semiring<Elem = f32>` so [`crate::graph::dense::DistMatrix`]
+/// storage stays a flat `Vec<f32>`.
+pub trait Semiring: Copy + Send + Sync + 'static {
+    /// Element domain of the DP values.
+    type Elem: Copy + PartialEq + Send + Sync + 'static;
+
+    /// The runtime tag for this instance.
+    const ID: SemiringId;
+
+    /// ⊕-identity: combine(x, zero()) == x for all x.
+    fn zero() -> Self::Elem;
+
+    /// ⊗-identity: extend(x, one()) == x for all x.
+    fn one() -> Self::Elem;
+
+    /// ⊕ — reduce two candidate path values.
+    fn combine(a: Self::Elem, b: Self::Elem) -> Self::Elem;
+
+    /// ⊗ — extend a path value by another.
+    fn extend(a: Self::Elem, b: Self::Elem) -> Self::Elem;
+
+    /// `true` iff `x` is the absorbing zero (extend(x, _) == zero()),
+    /// so a row sweep against pivot value `x` is a no-op and may be
+    /// skipped. Must also return `true` for NaN so a poisoned element
+    /// never enters the fast path.
+    fn is_absorbing(x: Self::Elem) -> bool;
+
+    /// Map a raw (finite, non-negative) edge weight into the element
+    /// domain when materializing a graph into a DP matrix.
+    fn from_weight(w: f32) -> Self::Elem;
+
+    /// SIMD hook: one FW row update, `row_i[j] = combine(row_i[j],
+    /// extend(dik, row_k[j]))`. The default is the portable scalar
+    /// loop; instances with an explicit vector kernel (MinPlus → AVX2)
+    /// override it. `dik` is guaranteed non-absorbing by callers.
+    #[inline]
+    fn relax_row(row_i: &mut [Self::Elem], dik: Self::Elem, row_k: &[Self::Elem]) {
+        let m = row_i.len().min(row_k.len());
+        for (x, &b) in row_i[..m].iter_mut().zip(&row_k[..m]) {
+            *x = Self::combine(*x, Self::extend(dik, b));
+        }
+    }
+
+    /// SIMD hook: fused 4-row relax (one pass over `row_k` feeds four
+    /// accumulator rows). `dik` lanes may be absorbing — the zero law
+    /// (`combine(c, extend(zero, b)) = c`) makes processing such a
+    /// lane a no-op, so the fused form stays equal to four sequential
+    /// [`Semiring::relax_row`] calls with absorbing lanes skipped.
+    #[inline]
+    fn relax_rows4(
+        r0: &mut [Self::Elem],
+        r1: &mut [Self::Elem],
+        r2: &mut [Self::Elem],
+        r3: &mut [Self::Elem],
+        dik: [Self::Elem; 4],
+        row_k: &[Self::Elem],
+    ) {
+        let m = row_k
+            .len()
+            .min(r0.len())
+            .min(r1.len())
+            .min(r2.len())
+            .min(r3.len());
+        let rk = &row_k[..m];
+        for j in 0..m {
+            let b = rk[j];
+            r0[j] = Self::combine(r0[j], Self::extend(dik[0], b));
+            r1[j] = Self::combine(r1[j], Self::extend(dik[1], b));
+            r2[j] = Self::combine(r2[j], Self::extend(dik[2], b));
+            r3[j] = Self::combine(r3[j], Self::extend(dik[3], b));
+        }
+    }
+}
+
+/// `(min, +)` — today's APSP. Bit-identical to the pre-refactor
+/// kernels: `combine` keeps the first argument on ties (the exact
+/// `if b < a { b } else { a }` select every kernel merge used, with no
+/// `f32::min` ±0.0 subtleties), `is_absorbing` is the literal
+/// `!(x < INF)` guard, and the SIMD hooks delegate to the unchanged
+/// AVX2-dispatching microkernels.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MinPlus;
+
+impl Semiring for MinPlus {
+    type Elem = f32;
+    const ID: SemiringId = SemiringId::MinPlus;
+
+    #[inline]
+    fn zero() -> f32 {
+        INF
+    }
+
+    #[inline]
+    fn one() -> f32 {
+        0.0
+    }
+
+    #[inline]
+    fn combine(a: f32, b: f32) -> f32 {
+        if b < a {
+            b
+        } else {
+            a
+        }
+    }
+
+    #[inline]
+    fn extend(a: f32, b: f32) -> f32 {
+        a + b
+    }
+
+    #[inline]
+    fn is_absorbing(x: f32) -> bool {
+        !(x < INF)
+    }
+
+    #[inline]
+    fn from_weight(w: f32) -> f32 {
+        w
+    }
+
+    #[inline]
+    fn relax_row(row_i: &mut [f32], dik: f32, row_k: &[f32]) {
+        crate::apsp::floyd_warshall::relax_row(row_i, dik, row_k);
+    }
+
+    #[inline]
+    fn relax_rows4(
+        r0: &mut [f32],
+        r1: &mut [f32],
+        r2: &mut [f32],
+        r3: &mut [f32],
+        dik: [f32; 4],
+        row_k: &[f32],
+    ) {
+        crate::apsp::floyd_warshall::relax_rows4(r0, r1, r2, r3, dik, row_k);
+    }
+}
+
+/// `(or, and)` on {0.0, 1.0} — transitive closure / reachability.
+/// Encoded as max/min over {0, 1} so the element stays `f32` and the
+/// generic kernels apply unchanged; `from_weight` maps every edge to
+/// 1.0 (present).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BoolAndOr;
+
+impl Semiring for BoolAndOr {
+    type Elem = f32;
+    const ID: SemiringId = SemiringId::BoolAndOr;
+
+    #[inline]
+    fn zero() -> f32 {
+        0.0
+    }
+
+    #[inline]
+    fn one() -> f32 {
+        1.0
+    }
+
+    #[inline]
+    fn combine(a: f32, b: f32) -> f32 {
+        // or == max on {0, 1}
+        if b > a {
+            b
+        } else {
+            a
+        }
+    }
+
+    #[inline]
+    fn extend(a: f32, b: f32) -> f32 {
+        // and == min on {0, 1}
+        if b < a {
+            b
+        } else {
+            a
+        }
+    }
+
+    #[inline]
+    fn is_absorbing(x: f32) -> bool {
+        !(x > 0.0)
+    }
+
+    #[inline]
+    fn from_weight(_w: f32) -> f32 {
+        1.0
+    }
+}
+
+/// `(max, min)` — widest path / maximum bottleneck bandwidth. The
+/// value of a path is its narrowest edge; ⊕ picks the widest
+/// alternative. Unreachable is width 0 (the annihilator for min over
+/// non-negative capacities); the self-path has unbounded width (+inf).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MaxMin;
+
+impl Semiring for MaxMin {
+    type Elem = f32;
+    const ID: SemiringId = SemiringId::MaxMin;
+
+    #[inline]
+    fn zero() -> f32 {
+        0.0
+    }
+
+    #[inline]
+    fn one() -> f32 {
+        INF
+    }
+
+    #[inline]
+    fn combine(a: f32, b: f32) -> f32 {
+        if b > a {
+            b
+        } else {
+            a
+        }
+    }
+
+    #[inline]
+    fn extend(a: f32, b: f32) -> f32 {
+        if b < a {
+            b
+        } else {
+            a
+        }
+    }
+
+    #[inline]
+    fn is_absorbing(x: f32) -> bool {
+        !(x > 0.0)
+    }
+
+    #[inline]
+    fn from_weight(w: f32) -> f32 {
+        w
+    }
+}
+
+/// `(max, +)` — longest path / critical path. Only a valid DP on DAGs
+/// (a positive cycle has no fixed point), so the `critical` workload
+/// DAG-orients its input and runs a Kahn cycle guard before solving.
+/// The absorbing zero is `-inf` — the sign-of-infinity hazard the
+/// store compression and validation tolerance checks are audited for.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MaxPlus;
+
+impl Semiring for MaxPlus {
+    type Elem = f32;
+    const ID: SemiringId = SemiringId::MaxPlus;
+
+    #[inline]
+    fn zero() -> f32 {
+        f32::NEG_INFINITY
+    }
+
+    #[inline]
+    fn one() -> f32 {
+        0.0
+    }
+
+    #[inline]
+    fn combine(a: f32, b: f32) -> f32 {
+        if b > a {
+            b
+        } else {
+            a
+        }
+    }
+
+    #[inline]
+    fn extend(a: f32, b: f32) -> f32 {
+        a + b
+    }
+
+    #[inline]
+    fn is_absorbing(x: f32) -> bool {
+        !(x > f32::NEG_INFINITY)
+    }
+
+    #[inline]
+    fn from_weight(w: f32) -> f32 {
+        w
+    }
+}
+
+/// Monomorphize a semiring-generic expression from a runtime
+/// [`SemiringId`]: `dispatch_semiring!(id, S => expr_using_S)`.
+#[macro_export]
+macro_rules! dispatch_semiring {
+    ($id:expr, $S:ident => $body:expr) => {
+        match $id {
+            $crate::apsp::semiring::SemiringId::MinPlus => {
+                type $S = $crate::apsp::semiring::MinPlus;
+                $body
+            }
+            $crate::apsp::semiring::SemiringId::BoolAndOr => {
+                type $S = $crate::apsp::semiring::BoolAndOr;
+                $body
+            }
+            $crate::apsp::semiring::SemiringId::MaxMin => {
+                type $S = $crate::apsp::semiring::MaxMin;
+                $body
+            }
+            $crate::apsp::semiring::SemiringId::MaxPlus => {
+                type $S = $crate::apsp::semiring::MaxPlus;
+                $body
+            }
+        }
+    };
+}
+
+/// All shipped instances, for exhaustive law/property tests.
+pub const ALL_SEMIRINGS: [SemiringId; 4] = [
+    SemiringId::MinPlus,
+    SemiringId::BoolAndOr,
+    SemiringId::MaxMin,
+    SemiringId::MaxPlus,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Representative element sample per semiring (includes the
+    /// identities and the absorbing zero).
+    fn sample(sr: SemiringId) -> Vec<f32> {
+        let mut v = match sr {
+            SemiringId::BoolAndOr => vec![0.0, 1.0],
+            _ => vec![0.5, 1.0, 2.5, 7.0],
+        };
+        v.push(sr.zero());
+        v.push(sr.one());
+        v
+    }
+
+    #[test]
+    fn identity_laws() {
+        for sr in ALL_SEMIRINGS {
+            for &x in &sample(sr) {
+                assert_eq!(
+                    sr.combine(x, sr.zero()).to_bits(),
+                    x.to_bits(),
+                    "{}: combine zero identity at {x}",
+                    sr.name()
+                );
+                assert_eq!(
+                    sr.extend(x, sr.one()).to_bits(),
+                    x.to_bits(),
+                    "{}: extend one identity at {x}",
+                    sr.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_annihilates_extend() {
+        for sr in ALL_SEMIRINGS {
+            assert!(sr.is_absorbing(sr.zero()), "{}", sr.name());
+            for &x in &sample(sr) {
+                let z = sr.extend(sr.zero(), x);
+                assert!(
+                    sr.is_absorbing(z),
+                    "{}: extend(zero, {x}) = {z} not absorbing",
+                    sr.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn combine_assoc_comm_idempotent() {
+        for sr in ALL_SEMIRINGS {
+            let s = sample(sr);
+            for &a in &s {
+                assert_eq!(sr.combine(a, a), a, "{}: idempotence", sr.name());
+                for &b in &s {
+                    assert_eq!(
+                        sr.combine(a, b),
+                        sr.combine(b, a),
+                        "{}: commutativity",
+                        sr.name()
+                    );
+                    for &c in &s {
+                        assert_eq!(
+                            sr.combine(sr.combine(a, b), c),
+                            sr.combine(a, sr.combine(b, c)),
+                            "{}: associativity",
+                            sr.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extend_distributes_over_combine() {
+        for sr in ALL_SEMIRINGS {
+            let s = sample(sr);
+            for &a in &s {
+                for &b in &s {
+                    for &c in &s {
+                        let lhs = sr.extend(a, sr.combine(b, c));
+                        let rhs = sr.combine(sr.extend(a, b), sr.extend(a, c));
+                        // MaxPlus adds reals: compare with a float eps;
+                        // the other instances are exact selections
+                        let ok = lhs == rhs || (lhs - rhs).abs() < 1e-6;
+                        assert!(ok, "{}: distributivity {a} {b} {c}", sr.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn absorbing_matches_pinned_guards() {
+        // MinPlus must use the literal `!(x < INF)` guard the concrete
+        // kernels use, including for NaN
+        assert!(SemiringId::MinPlus.is_absorbing(INF));
+        assert!(SemiringId::MinPlus.is_absorbing(f32::NAN));
+        assert!(!SemiringId::MinPlus.is_absorbing(1e30));
+        assert!(SemiringId::MaxPlus.is_absorbing(f32::NEG_INFINITY));
+        assert!(SemiringId::MaxPlus.is_absorbing(f32::NAN));
+        assert!(!SemiringId::MaxPlus.is_absorbing(-1e30));
+        for sr in [SemiringId::BoolAndOr, SemiringId::MaxMin] {
+            assert!(sr.is_absorbing(0.0));
+            assert!(sr.is_absorbing(-0.0));
+            assert!(sr.is_absorbing(f32::NAN));
+            assert!(!sr.is_absorbing(1.0));
+        }
+    }
+
+    #[test]
+    fn minplus_combine_keeps_first_on_ties() {
+        // the exact select the kernels' merge loops used: ties (and
+        // ±0.0) keep the accumulator bits
+        assert_eq!(MinPlus::combine(0.0, -0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(MinPlus::combine(-0.0, 0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(MinPlus::combine(3.0, 3.0), 3.0);
+        assert_eq!(MinPlus::combine(INF, 5.0), 5.0);
+        assert_eq!(MinPlus::combine(5.0, INF), 5.0);
+    }
+
+    #[test]
+    fn dispatch_macro_reaches_every_instance() {
+        for sr in ALL_SEMIRINGS {
+            let z = crate::dispatch_semiring!(sr, S => S::zero());
+            assert_eq!(z.to_bits(), sr.zero().to_bits());
+        }
+    }
+
+    #[test]
+    fn default_rows4_matches_sequential_relax() {
+        let mut rng = crate::util::rng::Rng::new(29);
+        for sr in ALL_SEMIRINGS {
+            for _ in 0..10 {
+                let n = 1 + rng.gen_range(30);
+                let mk = |rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+                    (0..n)
+                        .map(|_| {
+                            if rng.gen_bool(0.2) {
+                                sr.zero()
+                            } else {
+                                sr.from_weight(rng.gen_f32_range(0.1, 9.0))
+                            }
+                        })
+                        .collect()
+                };
+                let rows: Vec<Vec<f32>> = (0..4).map(|_| mk(&mut rng)).collect();
+                let rk = mk(&mut rng);
+                let dik = [
+                    sr.from_weight(rng.gen_f32_range(0.1, 5.0)),
+                    sr.zero(),
+                    sr.from_weight(rng.gen_f32_range(0.1, 5.0)),
+                    sr.from_weight(rng.gen_f32_range(0.1, 5.0)),
+                ];
+                let mut fused = rows.clone();
+                {
+                    let (a, rest) = fused.split_at_mut(1);
+                    let (b, rest2) = rest.split_at_mut(1);
+                    let (c, e) = rest2.split_at_mut(1);
+                    crate::dispatch_semiring!(sr, S => S::relax_rows4(
+                        &mut a[0], &mut b[0], &mut c[0], &mut e[0], dik, &rk,
+                    ));
+                }
+                let mut seq = rows.clone();
+                for (r, &dk) in seq.iter_mut().zip(&dik) {
+                    if !sr.is_absorbing(dk) {
+                        crate::dispatch_semiring!(sr, S => S::relax_row(r, dk, &rk));
+                    }
+                }
+                for (f, s) in fused.iter().zip(&seq) {
+                    let same = f.iter().zip(s.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "{}: fused diverged from sequential", sr.name());
+                }
+            }
+        }
+    }
+}

@@ -43,6 +43,7 @@
 //! the resident row. Answers come back in request order.
 
 use super::query::{NextHopMatrix, Query, QueryReq};
+use super::semiring::SemiringId;
 use crate::graph::dense::DistMatrix;
 use crate::util::arena;
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
@@ -59,18 +60,37 @@ pub const READER_SLOTS: usize = 64;
 pub struct QuerySnapshot {
     /// Publication epoch (0 = initial solve, +1 per delta repair).
     pub epoch: u64,
+    /// Semiring the distances were computed in: drives the k-nearest
+    /// rank order and the reachability predicate.
+    pub sr: SemiringId,
     pub dist: DistMatrix,
-    pub next: NextHopMatrix,
+    /// Packed path-reconstruction map; `(min, +)` snapshots only — no
+    /// other shipped semiring has a meaningful hop predecessor.
+    pub next: Option<NextHopMatrix>,
     /// Build-time checksum over epoch + sampled payload bits; readers
     /// re-derive it to prove a snapshot was never observed torn.
     check: u64,
 }
 
 impl QuerySnapshot {
+    /// A `(min, +)` snapshot with its next-hop map — the classic APSP
+    /// serve payload.
     pub fn new(epoch: u64, dist: DistMatrix, next: NextHopMatrix) -> Self {
-        let check = Self::fingerprint(epoch, &dist, &next);
+        Self::new_sr(epoch, SemiringId::MinPlus, dist, Some(next))
+    }
+
+    /// A snapshot over any semiring's solved matrix; `next` is `None`
+    /// for every workload without path reconstruction.
+    pub fn new_sr(
+        epoch: u64,
+        sr: SemiringId,
+        dist: DistMatrix,
+        next: Option<NextHopMatrix>,
+    ) -> Self {
+        let check = Self::fingerprint(epoch, sr, &dist, next.as_ref());
         Self {
             epoch,
+            sr,
             dist,
             next,
             check,
@@ -79,13 +99,14 @@ impl QuerySnapshot {
 
     /// FNV-1a over the epoch and a bounded sample of distance bits and
     /// next-hop ids — cheap enough for readers to re-derive per load.
-    fn fingerprint(epoch: u64, dist: &DistMatrix, next: &NextHopMatrix) -> u64 {
+    fn fingerprint(epoch: u64, sr: SemiringId, dist: &DistMatrix, next: Option<&NextHopMatrix>) -> u64 {
         let mut h = 0xcbf29ce484222325u64;
         let mut mix = |x: u64| {
             h ^= x;
             h = h.wrapping_mul(0x100000001b3);
         };
         mix(epoch);
+        mix(sr as u64);
         let n = dist.n();
         mix(n as u64);
         let cells = dist.as_slice();
@@ -93,7 +114,8 @@ impl QuerySnapshot {
         for idx in (0..cells.len()).step_by(stride) {
             mix(cells[idx].to_bits() as u64);
             let (u, v) = (idx / n.max(1), idx % n.max(1));
-            mix(next.next_hop(u, v).map_or(u64::MAX, |hop| hop as u64));
+            let hop = next.and_then(|nh| nh.next_hop(u, v));
+            mix(hop.map_or(u64::MAX, |hop| hop as u64));
         }
         h
     }
@@ -101,12 +123,12 @@ impl QuerySnapshot {
     /// Re-derive the checksum: `true` iff the snapshot's fields are the
     /// ones it was built with (the torn-read probe).
     pub fn verify(&self) -> bool {
-        Self::fingerprint(self.epoch, &self.dist, &self.next) == self.check
+        Self::fingerprint(self.epoch, self.sr, &self.dist, self.next.as_ref()) == self.check
     }
 
     /// Resident bytes of the published payload.
     pub fn bytes(&self) -> usize {
-        self.dist.dense_bytes() + self.next.bytes()
+        self.dist.dense_bytes() + self.next.as_ref().map_or(0, |n| n.bytes())
     }
 }
 
@@ -304,46 +326,63 @@ impl BatchExec {
                     break;
                 }
                 let row = &panel[(u - p0) * n..(u - p0) * n + n];
-                answers[ridx] = Self::answer_one(q, u, row, &snap.next, &mut self.hops, &mut self.cand);
+                answers[ridx] = Self::answer_one(
+                    q,
+                    u,
+                    row,
+                    snap.sr,
+                    snap.next.as_ref(),
+                    &mut self.hops,
+                    &mut self.cand,
+                );
                 at += 1;
             }
         }
         answers
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn answer_one(
         q: Query,
         u: usize,
         row: &[f32],
-        next: &NextHopMatrix,
+        sr: SemiringId,
+        next: Option<&NextHopMatrix>,
         hops: &mut Vec<u32>,
         cand: &mut Vec<(f32, u32)>,
     ) -> Answer {
         match q {
             Query::Dist { v, .. } => Answer::Dist(row[v as usize]),
-            Query::Path { v, .. } => {
-                if next.path_into(u, v as usize, hops) {
-                    Answer::Path {
-                        hops: hops.clone(),
-                        weight: row[v as usize],
-                    }
-                } else {
-                    Answer::Path {
-                        hops: Vec::new(),
-                        weight: f32::INFINITY,
-                    }
-                }
-            }
+            Query::Path { v, .. } => match next {
+                Some(next) if next.path_into(u, v as usize, hops) => Answer::Path {
+                    hops: hops.clone(),
+                    weight: row[v as usize],
+                },
+                // unreachable pair, or a snapshot without a next-hop
+                // map (non-(min,+) workloads reject path queries
+                // upstream; answering the sentinel keeps this total)
+                _ => Answer::Path {
+                    hops: Vec::new(),
+                    weight: f32::INFINITY,
+                },
+            },
             Query::KNearest { k, .. } => {
                 cand.clear();
                 for (j, &d) in row.iter().enumerate() {
-                    if j != u && d.is_finite() {
+                    if j != u && !sr.is_absorbing(d) {
                         cand.push((d, j as u32));
                     }
                 }
                 // partial selection: O(n) split at k, then sort only
-                // the head — the full sort would dominate the drain
-                let cmp = |a: &(f32, u32), b: &(f32, u32)| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1));
+                // the head — the full sort would dominate the drain.
+                // "Nearest" means best under ⊕: ascending for (min,+),
+                // descending for the max-style semirings.
+                let larger = sr.prefers_larger();
+                let cmp = move |a: &(f32, u32), b: &(f32, u32)| {
+                    let ord = a.0.total_cmp(&b.0);
+                    let ord = if larger { ord.reverse() } else { ord };
+                    ord.then(a.1.cmp(&b.1))
+                };
                 let k = (k as usize).min(cand.len());
                 if k > 0 && k < cand.len() {
                     cand.select_nth_unstable_by(k - 1, cmp);
@@ -355,7 +394,7 @@ impl BatchExec {
             Query::Reach { .. } => Answer::Reach(
                 row.iter()
                     .enumerate()
-                    .filter(|&(j, d)| j != u && d.is_finite())
+                    .filter(|&(j, d)| j != u && !sr.is_absorbing(*d))
                     .count() as u32,
             ),
         }
@@ -465,7 +504,7 @@ mod tests {
                     assert_eq!(*d, snap.dist.get(u as usize, v as usize));
                 }
                 (Query::Path { u, v }, Answer::Path { hops, weight }) => {
-                    match snap.next.path(u as usize, v as usize) {
+                    match snap.next.as_ref().unwrap().path(u as usize, v as usize) {
                         Some(p) => {
                             assert_eq!(hops, &p);
                             assert_eq!(*weight, snap.dist.get(u as usize, v as usize));
@@ -494,6 +533,61 @@ mod tests {
                 (q, a) => panic!("answer kind mismatch: {q:?} -> {a:?}"),
             }
         }
+    }
+
+    #[test]
+    fn non_minplus_snapshot_serves_dist_knear_reach() {
+        use crate::apsp::floyd_warshall;
+        let g = generators::random_connected(40, 90, Weights::Uniform(0.5, 6.0), 8);
+        let sr = SemiringId::MaxMin;
+        let mut dist = g.to_dense_sr(sr);
+        floyd_warshall::fw_rowwise_dyn(&mut dist, sr);
+        let snap = QuerySnapshot::new_sr(3, sr, dist, None);
+        assert!(snap.verify());
+        assert_eq!(snap.sr, SemiringId::MaxMin);
+        assert!(snap.next.is_none());
+        let reqs: Vec<QueryReq> = [
+            Query::Dist { u: 0, v: 7 },
+            Query::KNearest { u: 2, k: 5 },
+            Query::Reach { u: 4 },
+        ]
+        .into_iter()
+        .map(|query| QueryReq { tenant: 0, query })
+        .collect();
+        let mut exec = BatchExec::new(4);
+        let answers = exec.run(&snap, &reqs);
+        assert_eq!(answers[0], Answer::Dist(snap.dist.get(0, 7)));
+        // widest-path "nearest" ranks by descending bottleneck capacity
+        match &answers[1] {
+            Answer::KNearest(nn) => {
+                assert_eq!(nn.len(), 5);
+                for w in nn.windows(2) {
+                    assert!(w[0].0 >= w[1].0, "max-min rank must descend: {nn:?}");
+                }
+                for &(d, v) in nn {
+                    assert_eq!(d, snap.dist.get(2, v as usize));
+                    assert!(!sr.is_absorbing(d));
+                }
+            }
+            a => panic!("expected KNearest, got {a:?}"),
+        }
+        // reachability counts non-absorbing entries (0.0 = no path)
+        match &answers[2] {
+            Answer::Reach(c) => {
+                let want = (0..snap.dist.n())
+                    .filter(|&j| j != 4 && !sr.is_absorbing(snap.dist.get(4, j)))
+                    .count();
+                assert_eq!(*c as usize, want);
+            }
+            a => panic!("expected Reach, got {a:?}"),
+        }
+        // a path query against a map-less snapshot answers the
+        // unreachable sentinel instead of panicking
+        let path = exec.run(&snap, &[QueryReq { tenant: 0, query: Query::Path { u: 0, v: 7 } }]);
+        assert_eq!(
+            path[0],
+            Answer::Path { hops: Vec::new(), weight: f32::INFINITY }
+        );
     }
 
     #[test]

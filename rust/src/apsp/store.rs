@@ -64,36 +64,57 @@ pub fn fingerprint(g: &CsrGraph) -> u64 {
 // Compressed payload
 // ---------------------------------------------------------------------
 
-/// Sparse (CSR-style) compression of a dense distance matrix: only the
-/// finite entries are kept, as `(flat index, raw f32 bits)` pairs.
-/// Decompression rebuilds the matrix from an all-`INF` canvas, so the
-/// round trip is bit-exact for every matrix whose non-finite entries
-/// are `+INF` — which is all distance matrices (unreachable pairs).
+/// Sparse (CSR-style) compression of a dense DP matrix: entries whose
+/// raw bits differ from the *background* element are kept as
+/// `(flat index, raw f32 bits)` pairs, and decompression rebuilds the
+/// matrix onto a background-filled canvas — a bit-exact round trip for
+/// any matrix over any semiring.
+///
+/// The background is the semiring's ⊕-identity ("no path"): `+INF` for
+/// `(min, +)`, `-INF` for max-plus, `0.0` for reachability/widest. The
+/// pre-semiring codec kept `is_finite()` entries against a hardwired
+/// `+INF` canvas, which silently corrupted max-plus results: a `-INF`
+/// (unreachable) entry was dropped on compress and resurrected as
+/// `+INF` — the sign-of-infinity hazard pinned by
+/// `compress_roundtrip_negative_infinity_background`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompressedMatrix {
     n: usize,
+    bg_bits: u32,
     idx: Vec<u64>,
     bits: Vec<u32>,
 }
 
 impl CompressedMatrix {
-    /// Compress a dense matrix (keeps finite entries only).
+    /// Compress a `(min, +)` distance matrix (background `+INF`).
     pub fn compress(d: &DistMatrix) -> Self {
+        Self::compress_with_background(d, INF)
+    }
+
+    /// Compress against an explicit background element. Entries are
+    /// compared bitwise, so `-0.0` vs `0.0` backgrounds stay exact.
+    pub fn compress_with_background(d: &DistMatrix, bg: f32) -> Self {
         let n = d.n();
+        let bg_bits = bg.to_bits();
         let mut idx = Vec::new();
         let mut bits = Vec::new();
         for (i, &v) in d.as_slice().iter().enumerate() {
-            if v.is_finite() {
+            if v.to_bits() != bg_bits {
                 idx.push(i as u64);
                 bits.push(v.to_bits());
             }
         }
-        Self { n, idx, bits }
+        Self {
+            n,
+            bg_bits,
+            idx,
+            bits,
+        }
     }
 
-    /// Rebuild the dense matrix.
+    /// Rebuild the dense matrix onto the background canvas.
     pub fn decompress(&self) -> DistMatrix {
-        let mut data = vec![INF; self.n * self.n];
+        let mut data = vec![f32::from_bits(self.bg_bits); self.n * self.n];
         for (&i, &b) in self.idx.iter().zip(&self.bits) {
             data[i as usize] = f32::from_bits(b);
         }
@@ -104,12 +125,17 @@ impl CompressedMatrix {
         self.n
     }
 
-    /// Stored finite entries.
+    /// The background element this payload was compressed against.
+    pub fn background(&self) -> f32 {
+        f32::from_bits(self.bg_bits)
+    }
+
+    /// Stored (non-background) entries.
     pub fn nnz(&self) -> usize {
         self.idx.len()
     }
 
-    /// Payload bytes of the compressed form (8 per finite entry: a
+    /// Payload bytes of the compressed form (8 per stored entry: a
     /// 4-byte column index + 4-byte value, matching the worst-case CSR
     /// model in [`super::taskgraph`]).
     pub fn payload_bytes(&self) -> u64 {
@@ -326,6 +352,40 @@ mod tests {
         assert_eq!(back.max_diff(&d), 0.0);
         assert_eq!(back.as_slice(), d.as_slice());
         assert_eq!(c.nnz(), d.finite_count());
+    }
+
+    #[test]
+    fn compress_roundtrip_negative_infinity_background() {
+        // the MaxPlus sign-of-infinity hazard: -INF unreachable entries
+        // must survive the round trip, not resurrect as +INF
+        use crate::apsp::semiring::SemiringId;
+        let sr = SemiringId::MaxPlus;
+        let mut d = DistMatrix::new_ident_sr(4, sr);
+        d.set(0, 1, 3.5);
+        d.set(1, 2, 0.0);
+        // (3, *) stays -INF (unreachable in the DAG)
+        let c = CompressedMatrix::compress_with_background(&d, sr.zero());
+        assert_eq!(c.background().to_bits(), f32::NEG_INFINITY.to_bits());
+        let back = c.decompress();
+        assert_eq!(back.as_slice(), d.as_slice());
+        assert_eq!(back.max_diff(&d), 0.0);
+        // the old +INF-background codec drops the -INF entries and
+        // rebuilds them with the wrong sign — max_diff now catches it
+        let wrong = CompressedMatrix::compress(&d).decompress();
+        assert!(wrong.max_diff(&d).is_infinite());
+    }
+
+    #[test]
+    fn compress_roundtrip_every_semiring_background() {
+        use crate::apsp::semiring::ALL_SEMIRINGS;
+        for sr in ALL_SEMIRINGS {
+            let mut d = DistMatrix::new_ident_sr(5, sr);
+            d.set(0, 1, sr.from_weight(2.5));
+            d.set(2, 3, sr.from_weight(0.5));
+            let c = CompressedMatrix::compress_with_background(&d, sr.zero());
+            let back = c.decompress();
+            assert_eq!(back.as_slice(), d.as_slice(), "{}", sr.name());
+        }
     }
 
     #[test]

@@ -1,12 +1,22 @@
-//! Cross-implementation validation: every APSP path in the crate can be
-//! checked against repeated Dijkstra, either exhaustively (full matrix)
-//! or by sampling (scalable).
+//! Cross-implementation validation: every DP path in the crate can be
+//! checked against an independent scalar oracle, either exhaustively
+//! (full matrix) or by sampling (scalable).
+//!
+//! Each semiring workload has its own oracle, none of which share code
+//! with the tile kernels:
+//!
+//! * min-plus — repeated Dijkstra ([`super::dijkstra`])
+//! * bool-and-or — breadth-first search
+//! * max-min — modified Dijkstra maximizing the bottleneck edge
+//! * max-plus — longest-path DP over a Kahn topological order (DAGs)
 
 use super::dijkstra;
 use super::recursive::ApspSolution;
+use super::semiring::SemiringId;
 use crate::graph::csr::CsrGraph;
 use crate::graph::dense::DistMatrix;
 use crate::util::rng::Rng;
+use std::collections::VecDeque;
 
 /// Result of a validation pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,6 +32,144 @@ impl Validation {
     }
 }
 
+/// Compare one matrix entry against the oracle. Finite pairs contribute
+/// to the error band; non-finite entries must agree *exactly* — `+INF`
+/// vs `-INF` is a real mismatch (the max-plus background is `-INF`, so
+/// "both infinite" no longer implies "both unreachable").
+fn record(a: f32, b: f32, tol: f32, max_err: &mut f32, mismatches: &mut usize) {
+    match (a.is_finite(), b.is_finite()) {
+        (true, true) => {
+            let e = (a - b).abs();
+            if e > *max_err {
+                *max_err = e;
+            }
+            if e > tol {
+                *mismatches += 1;
+            }
+        }
+        _ => {
+            if a != b {
+                *mismatches += 1;
+            }
+        }
+    }
+}
+
+/// BFS reachability row: 1.0 for every vertex reachable from `src`
+/// (including `src` itself), 0.0 otherwise.
+fn reach_row(g: &CsrGraph, src: usize) -> Vec<f32> {
+    let n = g.n();
+    let mut seen = vec![false; n];
+    let mut queue = VecDeque::new();
+    seen[src] = true;
+    queue.push_back(src);
+    while let Some(u) = queue.pop_front() {
+        for (v, _) in g.neighbors(u) {
+            if !seen[v] {
+                seen[v] = true;
+                queue.push_back(v);
+            }
+        }
+    }
+    seen.iter().map(|&s| if s { 1.0 } else { 0.0 }).collect()
+}
+
+/// Max-heap key with a total order (the oracle graphs contain no NaN).
+#[derive(PartialEq)]
+struct Bottleneck(f32);
+impl Eq for Bottleneck {}
+impl PartialOrd for Bottleneck {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Bottleneck {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Widest-path row: modified Dijkstra maximizing the minimum edge
+/// weight along the path. `src` itself gets `INF` (the max-min
+/// multiplicative identity); unreachable vertices get 0.0.
+fn widest_row(g: &CsrGraph, src: usize) -> Vec<f32> {
+    let n = g.n();
+    let mut best = vec![0f32; n];
+    best[src] = f32::INFINITY;
+    let mut heap = std::collections::BinaryHeap::new();
+    heap.push((Bottleneck(f32::INFINITY), src as u32));
+    while let Some((Bottleneck(w), u)) = heap.pop() {
+        let u = u as usize;
+        if w < best[u] {
+            continue;
+        }
+        for (v, ew) in g.neighbors(u) {
+            let cand = w.min(ew);
+            if cand > best[v] {
+                best[v] = cand;
+                heap.push((Bottleneck(cand), v as u32));
+            }
+        }
+    }
+    best
+}
+
+/// Longest-path rows on a DAG: DP over one shared Kahn topological
+/// order. `src` gets 0.0; unreachable vertices get `-INF`. Panics if
+/// the graph has a cycle (the critical-path workload guards with
+/// [`CsrGraph::assert_acyclic`] before solving).
+fn critical_rows(g: &CsrGraph, srcs: &[usize]) -> Vec<Vec<f32>> {
+    let n = g.n();
+    let mut indeg = vec![0usize; n];
+    for u in 0..n {
+        for (v, _) in g.neighbors(u) {
+            indeg[v] += 1;
+        }
+    }
+    let mut queue: VecDeque<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(u) = queue.pop_front() {
+        order.push(u);
+        for (v, _) in g.neighbors(u) {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push_back(v);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "critical-path oracle requires a DAG");
+    srcs.iter()
+        .map(|&src| {
+            let mut best = vec![f32::NEG_INFINITY; n];
+            best[src] = 0.0;
+            for &u in &order {
+                if best[u] == f32::NEG_INFINITY {
+                    continue;
+                }
+                for (v, w) in g.neighbors(u) {
+                    let cand = best[u] + w;
+                    if cand > best[v] {
+                        best[v] = cand;
+                    }
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Oracle rows for any workload semiring: one independent scalar
+/// algorithm per instance, none of them sharing code with the tile
+/// kernels under test.
+pub fn oracle_rows(g: &CsrGraph, sr: SemiringId, srcs: &[usize]) -> Vec<Vec<f32>> {
+    match sr {
+        SemiringId::MinPlus => dijkstra::sampled_rows(g, srcs),
+        SemiringId::BoolAndOr => srcs.iter().map(|&s| reach_row(g, s)).collect(),
+        SemiringId::MaxMin => srcs.iter().map(|&s| widest_row(g, s)).collect(),
+        SemiringId::MaxPlus => critical_rows(g, srcs),
+    }
+}
+
 /// Exhaustive check of a full matrix against the Dijkstra oracle.
 pub fn validate_full(g: &CsrGraph, got: &DistMatrix, tol: f32) -> Validation {
     let oracle = dijkstra::apsp(g);
@@ -30,21 +178,26 @@ pub fn validate_full(g: &CsrGraph, got: &DistMatrix, tol: f32) -> Validation {
     let mut mismatches = 0usize;
     for i in 0..n {
         for j in 0..n {
-            let a = got.get(i, j);
-            let b = oracle.get(i, j);
-            match (a.is_finite(), b.is_finite()) {
-                (true, true) => {
-                    let e = (a - b).abs();
-                    if e > max_err {
-                        max_err = e;
-                    }
-                    if e > tol {
-                        mismatches += 1;
-                    }
-                }
-                (false, false) => {}
-                _ => mismatches += 1,
-            }
+            record(got.get(i, j), oracle.get(i, j), tol, &mut max_err, &mut mismatches);
+        }
+    }
+    Validation {
+        checked: n * n,
+        max_abs_err: max_err,
+        mismatches,
+    }
+}
+
+/// Exhaustive check of a full matrix against the workload's own oracle.
+pub fn validate_full_sr(g: &CsrGraph, sr: SemiringId, got: &DistMatrix, tol: f32) -> Validation {
+    let n = g.n();
+    let srcs: Vec<usize> = (0..n).collect();
+    let rows = oracle_rows(g, sr, &srcs);
+    let mut max_err = 0f32;
+    let mut mismatches = 0usize;
+    for i in 0..n {
+        for j in 0..n {
+            record(got.get(i, j), rows[i][j], tol, &mut max_err, &mut mismatches);
         }
     }
     Validation {
@@ -65,10 +218,25 @@ pub fn validate_sampled(
     tol: f32,
     seed: u64,
 ) -> Validation {
+    validate_sampled_sr(g, SemiringId::MinPlus, sol, sources, cols_per, tol, seed)
+}
+
+/// [`validate_sampled`] against the workload's own oracle. The random
+/// source/column draws are seed-stable across workloads.
+#[allow(clippy::too_many_arguments)]
+pub fn validate_sampled_sr(
+    g: &CsrGraph,
+    sr: SemiringId,
+    sol: &ApspSolution,
+    sources: usize,
+    cols_per: usize,
+    tol: f32,
+    seed: u64,
+) -> Validation {
     let n = g.n();
     let mut rng = Rng::new(seed);
     let srcs: Vec<usize> = (0..sources.min(n)).map(|_| rng.gen_range(n)).collect();
-    let rows = dijkstra::sampled_rows(g, &srcs);
+    let rows = oracle_rows(g, sr, &srcs);
     let mut max_err = 0f32;
     let mut mismatches = 0usize;
     let mut checked = 0usize;
@@ -78,19 +246,7 @@ pub fn validate_sampled(
             let got = sol.query(src, v);
             let want = rows[si][v];
             checked += 1;
-            match (got.is_finite(), want.is_finite()) {
-                (true, true) => {
-                    let e = (got - want).abs();
-                    if e > max_err {
-                        max_err = e;
-                    }
-                    if e > tol {
-                        mismatches += 1;
-                    }
-                }
-                (false, false) => {}
-                _ => mismatches += 1,
-            }
+            record(got, want, tol, &mut max_err, &mut mismatches);
         }
     }
     Validation {
@@ -104,10 +260,13 @@ pub fn validate_sampled(
 mod tests {
     use super::*;
     use crate::apsp::backend::NativeBackend;
+    use crate::apsp::floyd_warshall::fw_rowwise_dyn;
     use crate::apsp::plan::{build_plan, PlanOptions};
     use crate::apsp::recursive::{solve, SolveOptions};
+    use crate::apsp::semiring::ALL_SEMIRINGS;
     use crate::apsp::{floyd_warshall, partitioned};
     use crate::graph::generators::{self, Weights};
+    use crate::INF;
 
     #[test]
     fn full_validation_passes_for_fw() {
@@ -128,6 +287,54 @@ mod tests {
         let v = validate_full(&g, &d, 1e-3);
         assert!(!v.ok(1e-3));
         assert!(v.mismatches >= 1);
+    }
+
+    #[test]
+    fn validation_distinguishes_infinity_signs() {
+        // two disconnected pairs: the oracle says +INF between them; a
+        // -INF in the candidate (a max-plus background leaking into a
+        // min-plus matrix) must count as a mismatch, not "both infinite"
+        let g = CsrGraph::from_undirected_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        let mut d = g.to_dense();
+        floyd_warshall::fw_rowwise(&mut d);
+        assert!(validate_full(&g, &d, 1e-6).ok(1e-6));
+        d.set(0, 2, f32::NEG_INFINITY);
+        let v = validate_full(&g, &d, 1e-6);
+        assert_eq!(v.mismatches, 1, "{v:?}");
+    }
+
+    #[test]
+    fn every_workload_oracle_agrees_with_generic_fw() {
+        for sr in ALL_SEMIRINGS {
+            let g = generators::newman_watts_strogatz(80, 3, 0.1, Weights::Uniform(1.0, 4.0), 5);
+            let g = if sr == SemiringId::MaxPlus { g.dag_oriented() } else { g };
+            let mut d = g.to_dense_sr(sr);
+            fw_rowwise_dyn(&mut d, sr);
+            let v = validate_full_sr(&g, sr, &d, 1e-3);
+            assert!(v.ok(1e-3), "{}: {v:?}", sr.name());
+        }
+    }
+
+    #[test]
+    fn widest_oracle_on_known_graph() {
+        // 0 -2.0- 1 -5.0- 2 plus direct 0 -3.0- 2: the widest 0->2 path
+        // is the direct edge (bottleneck 3.0) vs min(2.0, 5.0) = 2.0
+        let g = CsrGraph::from_undirected_edges(3, &[(0, 1, 2.0), (1, 2, 5.0), (0, 2, 3.0)]);
+        let rows = oracle_rows(&g, SemiringId::MaxMin, &[0]);
+        assert_eq!(rows[0][2], 3.0);
+        assert_eq!(rows[0][1], 2.0);
+        assert_eq!(rows[0][0], INF);
+    }
+
+    #[test]
+    fn critical_oracle_on_known_dag() {
+        // directed chain 0->1->2 (weights 1, 2) plus shortcut 0->2
+        // (1.5): the *longest* 0->2 path scores 3.0
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0), (0, 2, 1.5)]);
+        let rows = oracle_rows(&g, SemiringId::MaxPlus, &[0, 2]);
+        assert_eq!(rows[0][2], 3.0);
+        assert_eq!(rows[0][0], 0.0);
+        assert_eq!(rows[1][0], f32::NEG_INFINITY);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! System configuration: hardware model + algorithm knobs + run mode,
 //! loadable from a TOML-subset config file with CLI overrides.
 
+use crate::apsp::semiring::SemiringId;
 use crate::sim::params::HwParams;
 use crate::util::cli::Args;
 use crate::util::config::ConfigFile;
@@ -27,6 +28,52 @@ impl Mode {
         match self {
             Mode::Functional => "functional",
             Mode::Estimate => "estimate",
+        }
+    }
+}
+
+/// DP workload: which semiring the tile kernels run in and which scalar
+/// oracle validates the result (`run.workload` / `--workload`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// All-pairs shortest paths over (min, +) — the default, and the
+    /// only workload with next-hop path reconstruction.
+    Apsp,
+    /// Reachability closure over (or, and), validated against BFS.
+    Reach,
+    /// Widest (maximum-bottleneck) paths over (max, min), validated
+    /// against a modified Dijkstra.
+    Widest,
+    /// Critical (longest) paths over (max, +). DAG-restricted: the
+    /// executor reorients the input acyclically and refuses cycles.
+    Critical,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s.to_ascii_lowercase().as_str() {
+            "apsp" | "shortest" | "minplus" => Some(Workload::Apsp),
+            "reach" | "reachability" => Some(Workload::Reach),
+            "widest" | "bottleneck" => Some(Workload::Widest),
+            "critical" | "longest" => Some(Workload::Critical),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Apsp => "apsp",
+            Workload::Reach => "reach",
+            Workload::Widest => "widest",
+            Workload::Critical => "critical",
+        }
+    }
+    /// The semiring instance the kernels run for this workload.
+    pub fn semiring(&self) -> SemiringId {
+        match self {
+            Workload::Apsp => SemiringId::MinPlus,
+            Workload::Reach => SemiringId::BoolAndOr,
+            Workload::Widest => SemiringId::MaxMin,
+            Workload::Critical => SemiringId::MaxPlus,
         }
     }
 }
@@ -95,6 +142,9 @@ pub struct SystemConfig {
     pub max_depth: usize,
     pub seed: u64,
     pub mode: Mode,
+    /// DP workload (`run.workload` / `--workload`): the semiring the
+    /// kernels run in and the oracle that validates the result.
+    pub workload: Workload,
     pub backend: BackendKind,
     /// Tile-work scheduling: dependency-aware DAG (default) or the
     /// legacy step-barrier walk.
@@ -180,6 +230,7 @@ impl Default for SystemConfig {
             max_depth: usize::MAX,
             seed: 0x5241_5049,
             mode: Mode::Functional,
+            workload: Workload::Apsp,
             backend: BackendKind::Native,
             scheduler: SchedulerKind::Dag,
             validate_sources: 16,
@@ -219,6 +270,9 @@ impl SystemConfig {
         self.seed = cf.get_usize("algo.seed", self.seed as usize) as u64;
         if let Some(m) = cf.get("run.mode").and_then(Mode::parse) {
             self.mode = m;
+        }
+        if let Some(w) = cf.get("run.workload").and_then(Workload::parse) {
+            self.workload = w;
         }
         if let Some(b) = cf.get("run.backend").and_then(BackendKind::parse) {
             self.backend = b;
@@ -278,6 +332,12 @@ impl SystemConfig {
         self.seed = args.get_u64("seed", self.seed);
         if let Some(m) = args.get("mode").and_then(Mode::parse) {
             self.mode = m;
+        }
+        if let Some(w) = args.get("workload") {
+            match Workload::parse(w) {
+                Some(w) => self.workload = w,
+                None => panic!("--workload expects apsp|reach|widest|critical, got {w:?}"),
+            }
         }
         if let Some(b) = args.get("backend").and_then(BackendKind::parse) {
             self.backend = b;
@@ -389,62 +449,111 @@ pub enum CliMode {
     Serve,
 }
 
-/// Resolve the `apsp` execution mode from the CLI flags.
-/// `config_stacks` is the config-file `run.num_stacks`, which selects
-/// sharded mode only when no explicit flag overrides it. A bare
-/// `--graphs` list keeps its legacy meaning (batch mode) unless
-/// `--admit` claims it for the admission workload.
-pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
-    let admit = args.flag("admit") || args.get("admit").is_some();
-    let batch_flag = args.flag("batch") || args.get("batch").is_some();
-    let serve_flag = args.flag("serve") || args.get("serve").is_some();
-    let serve = serve_flag || args.get("queries").is_some();
+/// One row of the declarative mode-selection table: probe the CLI for
+/// this selector and, when active, return the flag spelling to name in
+/// conflict errors. Each probe owns its alias/claiming rules (e.g.
+/// `--admit` claims `--graphs`; `--serve` claims `--deltas`), so the
+/// resolver below is a pure table walk.
+struct ModeSelector {
+    mode: CliMode,
+    probe: fn(&Args) -> Option<&'static str>,
+}
+
+fn admit_selected(a: &Args) -> bool {
+    a.flag("admit") || a.get("admit").is_some()
+}
+
+fn serve_selected(a: &Args) -> bool {
+    a.flag("serve") || a.get("serve").is_some() || a.get("queries").is_some()
+}
+
+fn probe_batch(a: &Args) -> Option<&'static str> {
+    if a.flag("batch") || a.get("batch").is_some() {
+        Some("--batch")
+    } else if a.get("graphs").is_some() && !admit_selected(a) {
+        // a bare --graphs list keeps its legacy batch meaning unless
+        // --admit claims it for the admission workload
+        Some("--graphs")
+    } else {
+        None
+    }
+}
+
+fn probe_sharded(a: &Args) -> Option<&'static str> {
+    a.get("stacks").is_some().then_some("--stacks")
+}
+
+fn probe_admit(a: &Args) -> Option<&'static str> {
+    admit_selected(a).then_some("--admit")
+}
+
+fn probe_delta(a: &Args) -> Option<&'static str> {
     // --deltas composes with --serve (the serve loop's mutation feed);
     // alone it selects the delta replay shape
-    let delta = args.get("deltas").is_some() && !serve;
-    let batch = batch_flag || (args.get("graphs").is_some() && !admit);
-    let sharded = args.get("stacks").is_some();
-    let mut picked: Vec<&str> = Vec::new();
-    if batch {
-        picked.push(if batch_flag { "--batch" } else { "--graphs" });
+    (a.get("deltas").is_some() && !serve_selected(a)).then_some("--deltas")
+}
+
+fn probe_serve(a: &Args) -> Option<&'static str> {
+    if a.flag("serve") || a.get("serve").is_some() {
+        Some("--serve")
+    } else if a.get("queries").is_some() {
+        Some("--queries")
+    } else {
+        None
     }
-    if sharded {
-        picked.push("--stacks");
-    }
-    if admit {
-        picked.push("--admit");
-    }
-    if delta {
-        picked.push("--deltas");
-    }
-    if serve {
-        picked.push(if serve_flag { "--serve" } else { "--queries" });
-    }
+}
+
+/// The mode-selection table. Row order fixes the flag order inside
+/// conflict error messages ("--batch and --admit select different
+/// execution modes; pick one").
+const MODE_SELECTORS: [ModeSelector; 5] = [
+    ModeSelector { mode: CliMode::Batch, probe: probe_batch },
+    ModeSelector { mode: CliMode::Sharded, probe: probe_sharded },
+    ModeSelector { mode: CliMode::Admission, probe: probe_admit },
+    ModeSelector { mode: CliMode::Delta, probe: probe_delta },
+    ModeSelector { mode: CliMode::Serve, probe: probe_serve },
+];
+
+/// A non-selector flag that only composes with specific execution
+/// shapes: using it under any other resolved mode is a clean error.
+struct ComboRule {
+    active: fn(&Args) -> bool,
+    allowed: &'static [CliMode],
+    msg: &'static str,
+}
+
+const COMBO_RULES: [ComboRule; 1] = [ComboRule {
+    active: |a| a.get("store-capacity").is_some(),
+    allowed: &[CliMode::Admission, CliMode::Delta],
+    msg: "--store-capacity applies to the admission pipeline or the delta engine; \
+          combine it with --admit or --deltas",
+}];
+
+/// Resolve the `apsp` execution mode from the CLI flags by walking the
+/// declarative [`MODE_SELECTORS`] table: at most one selector may be
+/// active (conflicts are a clean error naming every flag involved,
+/// never a silent priority pick), and [`COMBO_RULES`] then vets the
+/// non-selector flags against the resolved shape. `config_stacks` is
+/// the config-file `run.num_stacks`, which selects sharded mode only
+/// when no explicit flag overrides it.
+pub fn resolve_cli_mode(args: &Args, config_stacks: usize) -> Result<CliMode> {
+    let picked: Vec<(&'static str, CliMode)> = MODE_SELECTORS
+        .iter()
+        .filter_map(|s| (s.probe)(args).map(|flag| (flag, s.mode)))
+        .collect();
     crate::ensure!(
         picked.len() <= 1,
         "{} select different execution modes; pick one",
-        picked.join(" and ")
+        picked.iter().map(|&(f, _)| f).collect::<Vec<_>>().join(" and ")
     );
-    let mode = if batch {
-        CliMode::Batch
-    } else if admit {
-        CliMode::Admission
-    } else if delta {
-        CliMode::Delta
-    } else if serve {
-        CliMode::Serve
-    } else if sharded || config_stacks != 1 {
-        CliMode::Sharded
-    } else {
-        CliMode::Solo
+    let mode = match picked.first() {
+        Some(&(_, m)) => m,
+        None if config_stacks != 1 => CliMode::Sharded,
+        None => CliMode::Solo,
     };
-    crate::ensure!(
-        args.get("store-capacity").is_none()
-            || mode == CliMode::Admission
-            || mode == CliMode::Delta,
-        "--store-capacity applies to the admission pipeline or the delta engine; \
-         combine it with --admit or --deltas"
-    );
+    for rule in &COMBO_RULES {
+        crate::ensure!(!(rule.active)(args) || rule.allowed.contains(&mode), "{}", rule.msg);
+    }
     Ok(mode)
 }
 
@@ -714,6 +823,41 @@ mod tests {
         assert_eq!(c.tile_limit, 128);
         assert_eq!(c.mode, Mode::Estimate);
         assert!(!c.hw.prefetch);
+    }
+
+    #[test]
+    fn workload_knob_parses_and_overrides() {
+        let c = SystemConfig::default();
+        assert_eq!(c.workload, Workload::Apsp);
+        assert_eq!(c.workload.semiring(), SemiringId::MinPlus);
+        for (spelling, want) in [
+            ("apsp", Workload::Apsp),
+            ("REACH", Workload::Reach),
+            ("bottleneck", Workload::Widest),
+            ("longest", Workload::Critical),
+        ] {
+            assert_eq!(Workload::parse(spelling), Some(want));
+        }
+        assert_eq!(Workload::parse("??"), None);
+        let cf = ConfigFile::parse("[run]\nworkload = \"widest\"").unwrap();
+        let mut c = SystemConfig::from_file(&cf);
+        assert_eq!(c.workload, Workload::Widest);
+        assert_eq!(c.workload.semiring(), SemiringId::MaxMin);
+        let args = crate::util::cli::Args::parse(
+            ["--workload", "critical"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.workload, Workload::Critical);
+        assert_eq!(c.workload.name(), "critical");
+    }
+
+    #[test]
+    #[should_panic(expected = "--workload expects")]
+    fn unknown_workload_is_a_hard_error() {
+        let args = crate::util::cli::Args::parse(
+            ["--workload", "speling"].iter().map(|s| s.to_string()),
+        );
+        SystemConfig::default().apply_args(&args);
     }
 
     #[test]

@@ -9,22 +9,24 @@
 //! `Executor::run_serve` call is one query-script drain through the
 //! batched serve loop against lock-free published snapshots.
 
-use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig};
+use super::config::{BackendKind, Mode, SchedulerKind, SystemConfig, Workload};
 use crate::apsp::admission::{AdmissionConfig, AdmissionGraph, StoreOutcome, Verdict};
-use crate::apsp::backend::{NativeBackend, TileBackend};
+use crate::apsp::backend::{DpBackend, TileBackend};
 use crate::apsp::batch::BatchGraph;
 use crate::apsp::delta::{self, DeltaClass, DeltaState};
 use crate::apsp::dijkstra;
 use crate::apsp::plan::{build_plan, ApspPlan};
 use crate::apsp::query::{self, Query};
 use crate::apsp::recursive::{self, solve, ApspSolution, SolveOptions};
+use crate::apsp::semiring::SemiringId;
 use crate::apsp::serve::{Answer, BatchExec, QuerySnapshot, SnapshotCell};
 use crate::apsp::shard::{plan_tiles, ShardGraph};
 use crate::apsp::store::{fingerprint, MemoryStore, ResultStore, StoreEntry};
 use crate::apsp::taskgraph::{csr_bytes_estimate, TaskGraph};
-use crate::apsp::validate::{validate_sampled, Validation};
+use crate::apsp::validate::{validate_sampled_sr, Validation};
 use crate::apsp::{scheduler, taskgraph};
 use crate::graph::csr::CsrGraph;
+use crate::graph::dense::DistMatrix;
 use crate::runtime::{PjrtBackend, PjrtRuntime};
 use crate::sim::engine::{
     simulate, simulate_admission, simulate_batch, simulate_dag, simulate_delta,
@@ -32,6 +34,7 @@ use crate::sim::engine::{
 };
 use crate::util::error::Result;
 use crate::{ensure, err};
+use std::borrow::Cow;
 use std::sync::Arc;
 
 /// Measured drains per query batch in the serve loop: enough samples
@@ -57,6 +60,8 @@ pub struct RunResult {
     pub validate_tolerance: f32,
     /// Which backend executed the numerics.
     pub backend_name: &'static str,
+    /// Which DP workload (semiring) the numerics solved.
+    pub workload: &'static str,
     /// Which scheduler ordered the tile work.
     pub scheduler: SchedulerKind,
     pub mode: Mode,
@@ -83,6 +88,12 @@ pub struct Executor {
 
 impl Executor {
     pub fn new(config: SystemConfig) -> Result<Self> {
+        ensure!(
+            config.backend != BackendKind::Pjrt || config.workload == Workload::Apsp,
+            "the pjrt backend lowers (min,+) tile kernels only; --workload {} needs \
+             --backend native",
+            config.workload.name()
+        );
         let pjrt = match (config.mode, config.backend) {
             (Mode::Functional, BackendKind::Pjrt) => Some(PjrtRuntime::load_default()?),
             _ => None,
@@ -95,10 +106,57 @@ impl Executor {
         build_plan(g, self.config.plan_options())
     }
 
+    /// Semiring the configured workload computes in.
+    fn sr(&self) -> SemiringId {
+        self.config.workload.semiring()
+    }
+
+    /// The native tile backend for the configured workload. `(min, +)`
+    /// routes through the same concrete AVX2/scalar microkernels as the
+    /// pre-semiring `NativeBackend` (bit-identical, asserted in
+    /// `apsp::backend` tests); the other semirings dispatch the generic
+    /// kernels.
+    fn dp_backend(&self) -> DpBackend {
+        DpBackend::native(self.sr())
+    }
+
+    /// Workload-specific input transform. The `critical` (max-plus)
+    /// workload has no fixed point on a cyclic graph: a directed DAG
+    /// input passes through, anything else is restricted to its
+    /// low-to-high orientation ([`CsrGraph::dag_oriented`]), and the
+    /// Kahn guard double-checks before any solve runs.
+    fn workload_graph<'g>(&self, g: &'g CsrGraph) -> Result<Cow<'g, CsrGraph>> {
+        if self.config.workload != Workload::Critical {
+            return Ok(Cow::Borrowed(g));
+        }
+        if g.assert_acyclic().is_ok() {
+            return Ok(Cow::Borrowed(g));
+        }
+        let dag = g.dag_oriented();
+        dag.assert_acyclic()
+            .map_err(|e| err!("--workload critical needs a DAG: {e}"))?;
+        Ok(Cow::Owned(dag))
+    }
+
+    /// [`Executor::workload_graph`] over a whole submission set:
+    /// `Some(transformed)` when the workload rewrites its inputs,
+    /// `None` when the originals serve as-is.
+    fn workload_graphs(&self, graphs: &[CsrGraph]) -> Result<Option<Vec<CsrGraph>>> {
+        if self.config.workload != Workload::Critical {
+            return Ok(None);
+        }
+        graphs
+            .iter()
+            .map(|g| self.workload_graph(g).map(Cow::into_owned))
+            .collect::<Result<_>>()
+            .map(Some)
+    }
+
     /// Run the full pipeline on a graph.
     pub fn run(&self, g: &CsrGraph) -> Result<RunResult> {
-        let plan = self.plan(g);
-        self.run_with_plan(g, &plan)
+        let g = self.workload_graph(g)?;
+        let plan = self.plan(&g);
+        self.run_with_plan(&g, &plan)
     }
 
     /// Run with a pre-built plan (benches reuse plans across configs).
@@ -106,7 +164,7 @@ impl Executor {
         let solve_opts = SolveOptions {
             memory_limit_bytes: self.config.memory_limit_bytes,
         };
-        let native = NativeBackend;
+        let native = self.dp_backend();
         let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
         let backend = self.select_backend(&native, &pjrt_adapter)?;
 
@@ -130,8 +188,9 @@ impl Executor {
         };
 
         let validation = match (self.config.mode, self.config.validate_sources) {
-            (Mode::Functional, s) if s > 0 => Some(validate_sampled(
+            (Mode::Functional, s) if s > 0 => Some(validate_sampled_sr(
                 g,
+                self.sr(),
                 &sol,
                 s,
                 self.config.validate_cols,
@@ -168,6 +227,8 @@ impl Executor {
                 graphs.len()
             );
         }
+        let prepped = self.workload_graphs(graphs)?;
+        let graphs: &[CsrGraph] = prepped.as_deref().unwrap_or(graphs);
         let plans: Vec<ApspPlan> = graphs.iter().map(|g| self.plan(g)).collect();
         let plan_refs: Vec<&ApspPlan> = plans.iter().collect();
         let batch = BatchGraph::build(&plan_refs);
@@ -175,7 +236,7 @@ impl Executor {
         let solve_opts = SolveOptions {
             memory_limit_bytes: self.config.memory_limit_bytes,
         };
-        let native = NativeBackend;
+        let native = self.dp_backend();
         let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
         let backend = self.select_backend(&native, &pjrt_adapter)?;
 
@@ -206,8 +267,9 @@ impl Executor {
                 }
             };
             let validation = match (&sols, self.config.validate_sources) {
-                (Some(sols), s) if s > 0 => Some(validate_sampled(
+                (Some(sols), s) if s > 0 => Some(validate_sampled_sr(
                     g,
+                    self.sr(),
                     &sols[i],
                     s,
                     self.config.validate_cols,
@@ -242,6 +304,8 @@ impl Executor {
             s >= 1,
             "run.num_stacks must be >= 1 (got 0); use --stacks 1 for the solo baseline"
         );
+        let prepped = self.workload_graph(g)?;
+        let g: &CsrGraph = &prepped;
         let plan = self.plan(g);
         let tiles = plan_tiles(&plan);
         ensure!(
@@ -254,7 +318,7 @@ impl Executor {
         let solve_opts = SolveOptions {
             memory_limit_bytes: self.config.memory_limit_bytes,
         };
-        let native = NativeBackend;
+        let native = self.dp_backend();
         let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
         let backend = self.select_backend(&native, &pjrt_adapter)?;
 
@@ -280,8 +344,9 @@ impl Executor {
             simulate_dag(&shard.solo, &self.config.hw)
         };
         let validation = match (&sol, self.config.validate_sources) {
-            (Some(sol), n) if n > 0 => Some(validate_sampled(
+            (Some(sol), n) if n > 0 => Some(validate_sampled_sr(
                 g,
+                self.sr(),
                 sol,
                 n,
                 self.config.validate_cols,
@@ -336,6 +401,8 @@ impl Executor {
             self.config.admission_queue_depth >= 1,
             "run.admission.queue_depth must be >= 1 (got 0)"
         );
+        let prepped = self.workload_graphs(graphs)?;
+        let graphs: &[CsrGraph] = prepped.as_deref().unwrap_or(graphs);
         let plans: Vec<ApspPlan> = graphs.iter().map(|g| self.plan(g)).collect();
         let subs: Vec<(&CsrGraph, &ApspPlan)> = graphs.iter().zip(&plans).collect();
         let adm_cfg = AdmissionConfig {
@@ -361,7 +428,7 @@ impl Executor {
             (adm, none)
         };
 
-        let native = NativeBackend;
+        let native = self.dp_backend();
         let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
         let backend = self.select_backend(&native, &pjrt_adapter)?;
 
@@ -433,8 +500,9 @@ impl Executor {
                     };
                     let validation = match (&sols, self.config.validate_sources) {
                         (Some(sols), s) if s > 0 => sols[si].as_ref().map(|sol| {
-                            validate_sampled(
+                            validate_sampled_sr(
                                 g,
+                                self.sr(),
                                 sol,
                                 s,
                                 self.config.validate_cols,
@@ -496,6 +564,12 @@ impl Executor {
     /// repaired graph's entry; entries for other graphs survive.
     pub fn run_delta(&self, g: &CsrGraph, script: &str) -> Result<DeltaRunResult> {
         ensure!(
+            self.config.workload == Workload::Apsp,
+            "the delta engine repairs (min,+) shortest paths only; --workload {} runs \
+             solo, --batch, --stacks, --admit, and --serve modes",
+            self.config.workload.name()
+        );
+        ensure!(
             g.n() > 0,
             "the delta engine needs a solved base graph — the base graph is \
              empty (0 vertices), so there is no solution to repair"
@@ -505,7 +579,7 @@ impl Executor {
         let solve_opts = SolveOptions {
             memory_limit_bytes: self.config.memory_limit_bytes,
         };
-        let native = NativeBackend;
+        let native = self.dp_backend();
         let pjrt_adapter = self.pjrt.as_ref().map(PjrtBackend::new);
         let backend = self.select_backend(&native, &pjrt_adapter)?;
 
@@ -522,8 +596,9 @@ impl Executor {
             let (trace, st) = scheduler::solve_dag_retained(&cur_g, &plan, be, solve_opts);
             if self.config.validate_sources > 0 {
                 let sol = st.as_solution(&plan, &cur_g, trace);
-                validation = Some(validate_sampled(
+                validation = Some(validate_sampled_sr(
                     &cur_g,
+                    self.sr(),
                     &sol,
                     self.config.validate_sources,
                     self.config.validate_cols,
@@ -718,15 +793,42 @@ impl Executor {
             "the serve loop answers real queries, which needs functional \
              numerics; run.mode = estimate has none"
         );
+        let apsp = self.config.workload == Workload::Apsp;
         let script = query::parse_query_script(query_script)?;
         query::validate_queries(g.n(), &script)?;
+        if !apsp {
+            // path reconstruction walks the packed (min,+) next-hop
+            // map, which no other shipped semiring defines
+            let has_path = script
+                .batches
+                .iter()
+                .any(|b| b.iter().any(|r| matches!(r.query, Query::Path { .. })));
+            ensure!(
+                !has_path,
+                "path queries need the (min,+) next-hop map; --workload {} serves \
+                 dist/knear/reach only",
+                self.config.workload.name()
+            );
+        }
         let delta_batches = match delta_script {
             Some(s) => delta::parse_script(s)?,
             None => Vec::new(),
         };
+        ensure!(
+            delta_batches.is_empty() || apsp,
+            "--deltas with --serve re-solves and swaps (min,+) snapshots; \
+             --workload {} serves a static snapshot",
+            self.config.workload.name()
+        );
+        let prepped = self.workload_graph(g)?;
+        let g: &CsrGraph = &prepped;
         // memory guard: a swap briefly holds two snapshots co-resident
         let n = g.n() as u64;
-        let hop_bytes = if g.n() <= u16::MAX as usize { 2 } else { 4 };
+        let hop_bytes = match (apsp, g.n() <= u16::MAX as usize) {
+            (false, _) => 0,
+            (true, true) => 2,
+            (true, false) => 4,
+        };
         let per_snapshot = n * n * (4 + hop_bytes);
         ensure!(
             2 * per_snapshot <= self.config.memory_limit_bytes,
@@ -738,10 +840,15 @@ impl Executor {
         );
 
         let t0 = std::time::Instant::now();
-        let (dist, next) = query::solve_next_hops(g);
+        let (dist, next) = if apsp {
+            let (dist, next) = query::solve_next_hops(g);
+            (dist, Some(next))
+        } else {
+            (self.solve_workload_dist(g), None)
+        };
         let host_solve_seconds = t0.elapsed().as_secs_f64();
-        let next_hop_bits = next.width_bits();
-        let cell = SnapshotCell::new(Arc::new(QuerySnapshot::new(0, dist, next)));
+        let next_hop_bits = next.as_ref().map_or(0, |nh| nh.width_bits());
+        let cell = SnapshotCell::new(Arc::new(QuerySnapshot::new_sr(0, self.sr(), dist, next)));
         let snapshot_bytes = cell.load().bytes();
 
         let mut exec = BatchExec::new(self.config.serve_panel_rows);
@@ -841,6 +948,7 @@ impl Executor {
             .collect();
 
         Ok(ServeRunResult {
+            workload: self.config.workload.name(),
             graph_n: g.n(),
             graph_m: g.m(),
             host_solve_seconds,
@@ -940,6 +1048,23 @@ impl Executor {
         (loads.into_inner(), torn.into_inner())
     }
 
+    /// Full workload-semiring closure matrix for a static serve
+    /// snapshot: the same recursive engine a solo run uses, with the
+    /// workload backend, materialized dense.
+    fn solve_workload_dist(&self, g: &CsrGraph) -> DistMatrix {
+        let be = self.dp_backend();
+        let plan = self.plan(g);
+        let sol = solve(
+            g,
+            &plan,
+            Some(&be),
+            SolveOptions {
+                memory_limit_bytes: self.config.memory_limit_bytes,
+            },
+        );
+        sol.materialize_full(&be)
+    }
+
     /// Write a solved graph's entry into the result store under its
     /// fingerprint (same costing as the admission write-back path:
     /// modeled result bytes, the solve's madds as the re-solve cost).
@@ -981,6 +1106,7 @@ impl Executor {
             validation,
             validate_tolerance: self.config.validate_tolerance,
             backend_name: self.backend_name(),
+            workload: self.config.workload.name(),
             scheduler: self.config.scheduler,
             mode: self.config.mode,
             graph_n: g.n(),
@@ -993,7 +1119,7 @@ impl Executor {
     /// runtime is a clean error, not a panic.
     fn select_backend<'a>(
         &self,
-        native: &'a NativeBackend,
+        native: &'a DpBackend,
         pjrt: &'a Option<PjrtBackend<'_>>,
     ) -> Result<Option<&'a dyn TileBackend>> {
         Ok(match (self.config.mode, self.config.backend) {
@@ -1272,6 +1398,8 @@ pub struct TenantServeStat {
 
 /// Everything one serve run produces.
 pub struct ServeRunResult {
+    /// Which DP workload (semiring) the snapshot was solved in.
+    pub workload: &'static str,
     pub graph_n: usize,
     pub graph_m: usize,
     /// Wall time of the initial next-hop-threaded solve.
@@ -1298,7 +1426,8 @@ pub struct ServeRunResult {
     /// Per-query wall time of the Dijkstra baseline on the same
     /// sources (None with validation off or no path queries).
     pub dijkstra_seconds_per_query: Option<f64>,
-    /// Packed successor width the graph size selected (16 or 32).
+    /// Packed successor width the graph size selected (16 or 32; 0
+    /// when the workload publishes no next-hop map).
     pub next_hop_bits: usize,
     /// Resident bytes of one published snapshot.
     pub snapshot_bytes: usize,
@@ -1856,6 +1985,105 @@ mod tests {
         // a malformed delta feed is rejected before any serving
         let err = ex.run_serve(&g, "dist 0 1\n", Some("frobnicate 1 2\n")).unwrap_err();
         assert!(format!("{err}").contains("frobnicate"), "{err}");
+    }
+
+    #[test]
+    fn every_workload_runs_solo_and_validates() {
+        use crate::coordinator::config::Workload;
+        let g = graph(500, 17);
+        for w in [
+            Workload::Apsp,
+            Workload::Reach,
+            Workload::Widest,
+            Workload::Critical,
+        ] {
+            let mut cfg = SystemConfig::default();
+            cfg.tile_limit = 96;
+            cfg.workload = w;
+            let ex = Executor::new(cfg).unwrap();
+            let r = ex.run(&g).unwrap();
+            assert_eq!(r.workload, w.name());
+            let v = r.validation.as_ref().expect("validation on");
+            assert!(v.ok(r.validate_tolerance), "{}: {v:?}", w.name());
+            assert!(r.sim.seconds > 0.0);
+            assert!(r.host_solve_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn every_workload_admits_and_validates() {
+        use crate::coordinator::config::Workload;
+        for w in [Workload::Reach, Workload::Widest, Workload::Critical] {
+            let mut cfg = SystemConfig::default();
+            cfg.tile_limit = 96;
+            cfg.workload = w;
+            cfg.admission_interval = 1e-4;
+            let ex = Executor::new(cfg).unwrap();
+            let graphs = vec![graph(350, 31), graph(400, 32)];
+            let a = ex.run_admission(&graphs).unwrap();
+            assert_eq!(a.n_admitted(), 2, "{}", w.name());
+            for (i, r) in a.per_graph.iter().enumerate() {
+                let solo = r.solo.as_ref().expect("admitted");
+                assert_eq!(solo.workload, w.name());
+                let v = solo.validation.as_ref().expect("validation on");
+                assert!(v.ok(solo.validate_tolerance), "{} graph {i}: {v:?}", w.name());
+            }
+        }
+    }
+
+    #[test]
+    fn critical_workload_is_dag_restricted() {
+        use crate::coordinator::config::Workload;
+        // an undirected (symmetric) graph is auto-oriented low -> high
+        let g = graph(300, 35);
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 96;
+        cfg.workload = Workload::Critical;
+        let ex = Executor::new(cfg).unwrap();
+        let r = ex.run(&g).unwrap();
+        assert!(r.graph_m > 0 && r.graph_m < g.m(), "orientation must drop edges");
+        assert!(r.validation.as_ref().unwrap().ok(r.validate_tolerance));
+    }
+
+    #[test]
+    fn non_apsp_serve_answers_dist_knear_reach() {
+        use crate::coordinator::config::Workload;
+        let g = graph(200, 33);
+        let mut cfg = SystemConfig::default();
+        cfg.workload = Workload::Widest;
+        let ex = Executor::new(cfg).unwrap();
+        let r = ex
+            .run_serve(&g, "dist 0 9\nknear 3 4\nreach 5\n", None)
+            .unwrap();
+        assert_eq!(r.workload, "widest");
+        assert_eq!(r.next_hop_bits, 0);
+        assert!(r.total_queries > 0);
+        assert!(r.qps() > 0.0);
+        assert_eq!(r.paths_checked, 0);
+        assert!(r.sample_path.is_none());
+        // path queries and live deltas are (min,+)-pinned layers
+        let err = ex.run_serve(&g, "path 0 9\n", None).unwrap_err();
+        assert!(format!("{err}").contains("next-hop"), "{err}");
+        let err = ex
+            .run_serve(&g, "dist 0 1\n", Some("reweight 0 1 1.0\n"))
+            .unwrap_err();
+        assert!(format!("{err}").contains("static snapshot"), "{err}");
+    }
+
+    #[test]
+    fn delta_and_pjrt_are_minplus_pinned() {
+        use crate::coordinator::config::Workload;
+        let g = graph(200, 34);
+        let mut cfg = SystemConfig::default();
+        cfg.workload = Workload::Reach;
+        let ex = Executor::new(cfg).unwrap();
+        let err = ex.run_delta(&g, "delete 0 1\n").unwrap_err();
+        assert!(format!("{err}").contains("(min,+)"), "{err}");
+        let mut cfg = SystemConfig::default();
+        cfg.workload = Workload::Widest;
+        cfg.backend = crate::coordinator::config::BackendKind::Pjrt;
+        let err = Executor::new(cfg).unwrap_err();
+        assert!(format!("{err}").contains("--backend native"), "{err}");
     }
 
     #[test]

@@ -12,9 +12,10 @@ use crate::util::table::{fmt_count, fmt_energy, fmt_ratio, fmt_time, Table};
 pub fn render(r: &RunResult) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "RAPID-Graph run: n={} m={} mode={} backend={} scheduler={}\n",
+        "RAPID-Graph run: n={} m={} workload={} mode={} backend={} scheduler={}\n",
         fmt_count(r.graph_n),
         fmt_count(r.graph_m),
+        r.workload,
         r.mode.name(),
         r.backend_name,
         r.scheduler.name(),
@@ -93,8 +94,9 @@ pub fn render(r: &RunResult) -> String {
 pub fn render_batch(b: &BatchRunResult) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "RAPID-Graph batch: {} graphs, mode={} backend={}\n",
+        "RAPID-Graph batch: {} graphs, workload={} mode={} backend={}\n",
         b.batch_size(),
+        b.per_graph.first().map(|r| r.workload).unwrap_or("?"),
         b.per_graph.first().map(|r| r.mode.name()).unwrap_or("?"),
         b.per_graph.first().map(|r| r.backend_name).unwrap_or("?"),
     ));
@@ -247,10 +249,11 @@ pub fn render_admission(a: &AdmissionRunResult) -> String {
 pub fn render_sharded(r: &ShardRunResult) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "RAPID-Graph sharded run: n={} m={} stacks={} mode={} backend={}\n",
+        "RAPID-Graph sharded run: n={} m={} stacks={} workload={} mode={} backend={}\n",
         fmt_count(r.solo.graph_n),
         fmt_count(r.solo.graph_m),
         r.num_stacks,
+        r.solo.workload,
         r.solo.mode.name(),
         r.solo.backend_name,
     ));
@@ -415,9 +418,15 @@ pub fn render_serve(s: &ServeRunResult) -> String {
         fmt_count(s.total_queries),
         s.epochs,
     ));
+    let hop_desc = if s.next_hop_bits > 0 {
+        format!("{}-bit next-hop map", s.next_hop_bits)
+    } else {
+        "no next-hop map (non-(min,+) workload)".to_string()
+    };
     out.push_str(&format!(
-        "snapshot: dist + {}-bit next-hop map, {} B resident; initial solve {}\n",
-        s.next_hop_bits,
+        "snapshot: workload={} dist + {}, {} B resident; initial solve {}\n",
+        s.workload,
+        hop_desc,
         fmt_count(s.snapshot_bytes),
         fmt_time(s.host_solve_seconds),
     ));
@@ -609,6 +618,32 @@ mod tests {
         assert!(text.contains(" -> "), "{text}");
         assert!(text.contains("EXACT"), "{text}");
         assert!(!text.contains("FAILED"), "{text}");
+    }
+
+    #[test]
+    fn reports_name_the_workload() {
+        use crate::coordinator::config::Workload;
+        let mut cfg = SystemConfig::default();
+        cfg.tile_limit = 64;
+        cfg.workload = Workload::Reach;
+        let ex = Executor::new(cfg).unwrap();
+        let g = generators::generate(Topology::Nws, 300, 8.0, Weights::Unit, 5);
+        let r = ex.run(&g).unwrap();
+        let text = super::render(&r);
+        assert!(text.contains("workload=reach"), "{text}");
+        assert!(text.contains("EXACT"), "{text}");
+        // a widest serve run reports the map-less snapshot
+        let mut cfg = SystemConfig::default();
+        cfg.workload = Workload::Widest;
+        let ex = Executor::new(cfg).unwrap();
+        let g = generators::generate(Topology::Nws, 200, 8.0, Weights::Uniform(1.0, 4.0), 6);
+        let s = ex
+            .run_serve(&g, "dist 0 5\nknear 1 3\nreach 2\n", None)
+            .unwrap();
+        let text = super::render_serve(&s);
+        assert!(text.contains("workload=widest"), "{text}");
+        assert!(text.contains("no next-hop map"), "{text}");
+        assert!(text.contains("serve_qps"), "{text}");
     }
 
     #[test]

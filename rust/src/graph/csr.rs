@@ -4,6 +4,7 @@
 //! directed internally; the generators emit symmetric edge sets for the
 //! undirected workloads the paper evaluates.
 
+use crate::graph::dense::DistMatrix;
 use crate::INF;
 
 /// A weighted graph in CSR form.
@@ -178,6 +179,63 @@ impl CsrGraph {
         d
     }
 
+    /// Semiring-aware dense materialization: background = ⊕-identity,
+    /// diagonal = ⊗-identity, and each stored edge contributes
+    /// `from_weight(w)` through a ⊕-accumulate (parallel edges were
+    /// already min-deduped at build; the ⊕ here handles the identity
+    /// diagonal vs self-adjacent entries uniformly). For
+    /// `SemiringId::MinPlus` this is bit-identical to [`to_dense`].
+    pub fn to_dense_sr(&self, sr: crate::apsp::semiring::SemiringId) -> DistMatrix {
+        let n = self.n();
+        let mut d = DistMatrix::new_full(n, sr.zero());
+        for v in 0..n {
+            d.set(v, v, sr.one());
+            for (u, w) in self.neighbors(v) {
+                d.relax_sr(v, u, sr.from_weight(w), sr);
+            }
+        }
+        d
+    }
+
+    /// Restrict to the DAG orientation `u -> v` with `u < v`: every
+    /// stored edge whose target id is larger than its source survives,
+    /// the rest are dropped. The result is acyclic by construction —
+    /// the input transform the `critical` (max-plus) workload applies
+    /// before solving, double-checked by [`assert_acyclic`].
+    pub fn dag_oriented(&self) -> CsrGraph {
+        let edges: Vec<(u32, u32, f32)> = self.edges().filter(|&(u, v, _)| u < v).collect();
+        CsrGraph::from_edges(self.n(), &edges)
+    }
+
+    /// Kahn's-algorithm cycle guard: `Ok` iff the directed graph is
+    /// acyclic (max-plus has no fixed point on a cyclic input).
+    pub fn assert_acyclic(&self) -> Result<(), String> {
+        let n = self.n();
+        let mut indeg = vec![0usize; n];
+        for (_, v, _) in self.edges() {
+            indeg[v as usize] += 1;
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(v) = ready.pop() {
+            seen += 1;
+            for (u, _) in self.neighbors(v) {
+                indeg[u] -= 1;
+                if indeg[u] == 0 {
+                    ready.push(u);
+                }
+            }
+        }
+        if seen == n {
+            Ok(())
+        } else {
+            Err(format!(
+                "graph has a cycle: {} of {} vertices topologically ordered",
+                seen, n
+            ))
+        }
+    }
+
     /// Total bytes of the CSR arrays (the paper stores results compressed
     /// in FeNAND; this sizes those transfers).
     pub fn csr_bytes(&self) -> usize {
@@ -323,6 +381,46 @@ mod tests {
         assert_eq!(d.get(0, 1), 3.0);
         assert_eq!(d.get(1, 0), 3.0);
         assert!(d.get(0, 7).is_infinite());
+    }
+
+    #[test]
+    fn to_dense_sr_minplus_bit_identical() {
+        use crate::apsp::semiring::SemiringId;
+        let g = toy();
+        let a = g.to_dense();
+        let b = g.to_dense_sr(SemiringId::MinPlus);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn to_dense_sr_backgrounds() {
+        use crate::apsp::semiring::SemiringId;
+        let g = toy();
+        let r = g.to_dense_sr(SemiringId::BoolAndOr);
+        assert_eq!(r.get(0, 1), 1.0); // edge present
+        assert_eq!(r.get(0, 7), 0.0); // no edge
+        assert_eq!(r.get(0, 0), 1.0); // self reachable
+        let w = g.to_dense_sr(SemiringId::MaxMin);
+        assert_eq!(w.get(0, 1), 3.0);
+        assert_eq!(w.get(0, 7), 0.0);
+        assert!(w.get(0, 0).is_infinite());
+        let c = g.to_dense_sr(SemiringId::MaxPlus);
+        assert_eq!(c.get(0, 1), 3.0);
+        assert_eq!(c.get(0, 7), f32::NEG_INFINITY);
+        assert_eq!(c.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn dag_orientation_is_acyclic() {
+        let g = toy();
+        assert!(g.assert_acyclic().is_err(), "undirected graph has 2-cycles");
+        let dag = g.dag_oriented();
+        dag.validate().unwrap();
+        dag.assert_acyclic().unwrap();
+        // only the u < v direction survives
+        assert_eq!(dag.edge_weight(0, 1), Some(3.0));
+        assert_eq!(dag.edge_weight(1, 0), None);
+        assert_eq!(dag.m(), 8);
     }
 
     #[test]

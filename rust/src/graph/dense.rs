@@ -1,6 +1,8 @@
 //! Dense distance matrix (paper Fig. 1b): the working representation for
-//! FW and MP kernels. Row-major `f32` with `+inf` for "no path".
+//! FW and MP kernels. Row-major `f32` with the semiring's ⊕-identity for
+//! "no path" (`+inf` for the default `(min, +)` instance).
 
+use crate::apsp::semiring::SemiringId;
 use crate::INF;
 
 /// An `n x n` row-major distance matrix.
@@ -53,6 +55,45 @@ impl DistMatrix {
         m
     }
 
+    /// All entries set to `fill` (the generic analogue of `new_inf`).
+    pub fn new_full(n: usize, fill: f32) -> Self {
+        Self {
+            n,
+            data: vec![fill; n * n],
+        }
+    }
+
+    /// The DP identity matrix of semiring `sr`: ⊕-identity background,
+    /// ⊗-identity diagonal (for `(min, +)` this is `new_diag0`).
+    pub fn new_ident_sr(n: usize, sr: SemiringId) -> Self {
+        let mut m = Self::new_full(n, sr.zero());
+        for i in 0..n {
+            m.set(i, i, sr.one());
+        }
+        m
+    }
+
+    /// [`DistMatrix::new_ident_sr`] backed by an arena-leased buffer.
+    pub fn new_ident_sr_pooled(n: usize, sr: SemiringId) -> Self {
+        let mut m = Self {
+            n,
+            data: crate::util::arena::lease_filled(n * n, sr.zero()),
+        };
+        for i in 0..n {
+            m.set(i, i, sr.one());
+        }
+        m
+    }
+
+    /// All entries set to `sr`'s ⊕-identity, arena-leased (the generic
+    /// analogue of `new_inf_pooled`).
+    pub fn new_zero_sr_pooled(n: usize, sr: SemiringId) -> Self {
+        Self {
+            n,
+            data: crate::util::arena::lease_filled(n * n, sr.zero()),
+        }
+    }
+
     #[inline]
     pub fn n(&self) -> usize {
         self.n
@@ -70,13 +111,22 @@ impl DistMatrix {
         self.data[i * self.n + j] = v;
     }
 
-    /// `D[i][j] = min(D[i][j], v)` — the semiring accumulate.
+    /// `D[i][j] = min(D[i][j], v)` — the `(min, +)` accumulate.
     #[inline]
     pub fn relax(&mut self, i: usize, j: usize, v: f32) {
         let slot = &mut self.data[i * self.n + j];
         if v < *slot {
             *slot = v;
         }
+    }
+
+    /// `D[i][j] = D[i][j] ⊕ v` — the semiring accumulate. For
+    /// `SemiringId::MinPlus` this is bit-identical to [`relax`](Self::relax)
+    /// (same tie-keeps-accumulator select).
+    #[inline]
+    pub fn relax_sr(&mut self, i: usize, j: usize, v: f32, sr: SemiringId) {
+        let slot = &mut self.data[i * self.n + j];
+        *slot = sr.combine(*slot, v);
     }
 
     #[inline]
@@ -142,6 +192,18 @@ impl DistMatrix {
         }
     }
 
+    /// Scatter-⊕ `vals` (a `rows.len() x cols.len()` row-major block)
+    /// into this matrix at the given index sets — the semiring
+    /// analogue of [`scatter_min`](Self::scatter_min).
+    pub fn scatter_sr(&mut self, rows: &[usize], cols: &[usize], vals: &[f32], sr: SemiringId) {
+        assert_eq!(vals.len(), rows.len() * cols.len());
+        for (bi, &i) in rows.iter().enumerate() {
+            for (bj, &j) in cols.iter().enumerate() {
+                self.relax_sr(i, j, vals[bi * cols.len() + bj], sr);
+            }
+        }
+    }
+
     /// Pad to `m >= n` with INF off-diagonal, 0 on the new diagonal.
     /// Padding vertices are isolated, so FW/MP results on the top-left
     /// `n x n` corner are unchanged — this is how ragged components map
@@ -149,6 +211,18 @@ impl DistMatrix {
     pub fn pad_to(&self, m: usize) -> DistMatrix {
         assert!(m >= self.n);
         let mut out = DistMatrix::new_diag0(m);
+        for i in 0..self.n {
+            out.row_mut(i)[..self.n].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Semiring-aware [`pad_to`](Self::pad_to): padding vertices are
+    /// isolated in `sr`'s element domain (⊕-identity off-diagonal,
+    /// ⊗-identity on the new diagonal).
+    pub fn pad_to_sr(&self, m: usize, sr: SemiringId) -> DistMatrix {
+        assert!(m >= self.n);
+        let mut out = DistMatrix::new_ident_sr(m, sr);
         for i in 0..self.n {
             out.row_mut(i)[..self.n].copy_from_slice(self.row(i));
         }
@@ -165,16 +239,25 @@ impl DistMatrix {
         out
     }
 
-    /// Max finite absolute difference against another matrix (INF==INF
-    /// counts as equal). Returns INF if one side is finite and the other
-    /// is not.
+    /// Max finite absolute difference against another matrix (equal
+    /// infinities count as equal). Returns INF if one side is finite
+    /// and the other is not, or if the two sides hold infinities of
+    /// opposite sign (`+inf` vs `-inf` is a real mismatch — the
+    /// max-plus semiring uses `-inf` as its "no path" sentinel, so the
+    /// old any-non-finite-pair-is-equal rule would mask corruption).
     pub fn max_diff(&self, other: &DistMatrix) -> f32 {
         assert_eq!(self.n, other.n);
         let mut worst = 0f32;
         for (a, b) in self.data.iter().zip(&other.data) {
             let d = match (a.is_finite(), b.is_finite()) {
                 (true, true) => (a - b).abs(),
-                (false, false) => 0.0,
+                (false, false) => {
+                    if a == b {
+                        0.0
+                    } else {
+                        INF
+                    }
+                }
                 _ => INF,
             };
             if d > worst {
@@ -301,6 +384,57 @@ mod tests {
     fn finite_count() {
         let d = DistMatrix::new_diag0(3);
         assert_eq!(d.finite_count(), 3);
+    }
+
+    #[test]
+    fn max_diff_distinguishes_infinity_signs() {
+        // regression: +inf vs -inf is a mismatch, not "both non-finite
+        // so equal" — max-plus uses -inf as its absorbing zero
+        let mut a = DistMatrix::new_diag0(2);
+        let mut b = DistMatrix::new_diag0(2);
+        a.set(0, 1, INF);
+        b.set(0, 1, f32::NEG_INFINITY);
+        assert!(a.max_diff(&b).is_infinite());
+        b.set(0, 1, INF);
+        assert_eq!(a.max_diff(&b), 0.0);
+        a.set(1, 0, f32::NEG_INFINITY);
+        b.set(1, 0, f32::NEG_INFINITY);
+        assert_eq!(a.max_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn ident_sr_matches_semiring_identities() {
+        use crate::apsp::semiring::ALL_SEMIRINGS;
+        for sr in ALL_SEMIRINGS {
+            let d = DistMatrix::new_ident_sr(3, sr);
+            for i in 0..3 {
+                for j in 0..3 {
+                    let want = if i == j { sr.one() } else { sr.zero() };
+                    assert_eq!(d.get(i, j).to_bits(), want.to_bits(), "{}", sr.name());
+                }
+            }
+        }
+        // MinPlus identity must be bit-identical to the concrete ctor
+        let a = DistMatrix::new_ident_sr(4, SemiringId::MinPlus);
+        let b = DistMatrix::new_diag0(4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn relax_sr_minplus_matches_relax() {
+        let mut a = DistMatrix::new_inf(2);
+        let mut b = DistMatrix::new_inf(2);
+        for v in [5.0, 3.0, 9.0] {
+            a.relax(0, 1, v);
+            b.relax_sr(0, 1, v, SemiringId::MinPlus);
+        }
+        assert_eq!(a, b);
+        // max-min keeps the widest value instead
+        let mut w = DistMatrix::new_full(2, 0.0);
+        for v in [5.0, 3.0, 9.0] {
+            w.relax_sr(0, 1, v, SemiringId::MaxMin);
+        }
+        assert_eq!(w.get(0, 1), 9.0);
     }
 
     #[test]

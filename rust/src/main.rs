@@ -2,8 +2,12 @@
 //!
 //! Subcommands:
 //!   generate   synthesize a workload graph and write it to disk
-//!   apsp       run the full pipeline (partition -> recursive APSP ->
+//!   apsp       run the full pipeline (partition -> recursive DP solve ->
 //!              PIM simulation -> validation) and print the report;
+//!              --workload picks the semiring: apsp (min,+ shortest
+//!              paths, default), reach (transitive closure), widest
+//!              (bottleneck bandwidth), critical (longest path on the
+//!              DAG orientation);
 //!              with --batch, merge N independent graphs into one
 //!              shared-resource schedule and print the batch table;
 //!              with --stacks S, shard one graph across S modeled PIM
@@ -23,6 +27,7 @@
 //!
 //! Examples:
 //!   rapid-graph apsp --topo nws --nodes 20000 --degree 25.25
+//!   rapid-graph apsp --workload widest --topo nws --nodes 5000
 //!   rapid-graph apsp --graph g.bin --mode estimate
 //!   rapid-graph apsp --batch --batch-size 8 --nodes 5000 --mode estimate
 //!   rapid-graph apsp --batch --graphs a.bin,b.bin,c.bin
@@ -67,7 +72,7 @@ fn dispatch(args: &Args) -> Result<()> {
                     "recursive APSP on a simulated processing-in-memory stack",
                     &[
                         ("generate", "--topo nws|er|ogbn|grid --nodes N [--degree D] [--seed S] --out FILE"),
-                        ("apsp", "[--graph FILE | --topo T --nodes N] [--mode functional|estimate] [--backend native|pjrt] [--scheduler dag|barrier] [--tile T] [--max-depth D] [--validate-tolerance TOL] [--config FILE]"),
+                        ("apsp", "[--graph FILE | --topo T --nodes N] [--workload apsp|reach|widest|critical] [--mode functional|estimate] [--backend native|pjrt] [--scheduler dag|barrier] [--tile T] [--max-depth D] [--validate-tolerance TOL] [--config FILE]"),
                         ("apsp --batch", "[--batch-size N] [--graphs F1,F2,.. | --topo T --nodes N] merge N graphs into one shared-resource schedule"),
                         ("apsp --stacks", "S [--graph FILE | --topo T --nodes N] shard one graph across S modeled PIM stacks"),
                         ("apsp --admit", "[N] [--arrivals T1,T2,.. | --admit-interval DT] [--admit-queue Q] [--store-capacity C] admit N graphs into a live schedule; the result store serves duplicate submissions from modeled FeNAND"),

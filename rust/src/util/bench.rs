@@ -4,6 +4,7 @@
 //! window, and reports mean / min / stddev. Used by `benches/*.rs`
 //! (compiled with `harness = false`).
 
+use super::json::{self, Json};
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -134,6 +135,126 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// Builder for the machine-readable `BENCH_*.json` perf-snapshot
+/// artifacts. Every document shares one schema: a `workload` name
+/// tagging which bench wrote it, flat metric keys, and an optional
+/// `thresholds` block carrying the gates CI applies to a fresh artifact
+/// — absolute floors and ceilings (keyed exactly as the validator reads
+/// them, e.g. `qps_min` / `torn_reads_max`) plus relative drift bands
+/// under `thresholds.drift.<metric>` for deterministic modeled numbers.
+/// The admission, delta, serve, host-perf, and per-semiring emitters in
+/// `benches/kernels.rs` all assemble through this type, so a new bench
+/// key set inherits the exact shape the CI validators expect instead of
+/// copy-pasting the key assembly.
+#[derive(Debug, Clone, Default)]
+pub struct BenchDoc {
+    fields: Vec<(String, Json)>,
+    thresholds: Vec<(String, Json)>,
+    drift: Vec<(String, Json)>,
+}
+
+impl BenchDoc {
+    /// Start a document tagged with its schema name (the `workload`
+    /// key CI uses to tell the artifacts apart).
+    pub fn new(schema: &str) -> Self {
+        Self {
+            fields: vec![("workload".to_string(), json::s(schema))],
+            thresholds: Vec::new(),
+            drift: Vec::new(),
+        }
+    }
+
+    /// A floating-point metric.
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        self.fields.push((key.to_string(), json::num(v)));
+        self
+    }
+
+    /// An integer metric (counts, sizes); rendered without a fraction.
+    pub fn count(self, key: &str, v: usize) -> Self {
+        self.num(key, v as f64)
+    }
+
+    /// A string-valued field (kernel names, notes).
+    pub fn text(mut self, key: &str, v: &str) -> Self {
+        self.fields.push((key.to_string(), json::s(v)));
+        self
+    }
+
+    /// An arbitrary pre-built value (nested arrays like `per_graph`).
+    pub fn field(mut self, key: &str, v: Json) -> Self {
+        self.fields.push((key.to_string(), v));
+        self
+    }
+
+    /// Splice in a pre-assembled field list (e.g. the host wall-clock
+    /// keys that ride along on several artifacts).
+    pub fn extend_fields(mut self, kv: Vec<(&str, Json)>) -> Self {
+        for (k, v) in kv {
+            self.fields.push((k.to_string(), v));
+        }
+        self
+    }
+
+    /// Absolute floor gate: the fresh metric must be `>= bound`.
+    /// `threshold_key` is the literal key the CI validator reads from
+    /// the `thresholds` block (e.g. `qps_min`).
+    pub fn floor(mut self, threshold_key: &str, bound: f64) -> Self {
+        self.thresholds.push((threshold_key.to_string(), json::num(bound)));
+        self
+    }
+
+    /// Absolute ceiling gate: the fresh metric must be `<= bound`.
+    /// `threshold_key` is the literal key the CI validator reads
+    /// (e.g. `latency_p99_max_s`, `torn_reads_max`).
+    pub fn ceiling(mut self, threshold_key: &str, bound: f64) -> Self {
+        self.thresholds.push((threshold_key.to_string(), json::num(bound)));
+        self
+    }
+
+    /// Relative drift gate: the fresh `metric_key` may exceed the
+    /// committed baseline value by at most `band` (e.g. 0.25 = +25%).
+    pub fn drift_max_increase(mut self, metric_key: &str, band: f64) -> Self {
+        self.drift
+            .push((metric_key.to_string(), json::obj(vec![("max_increase", json::num(band))])));
+        self
+    }
+
+    /// Relative drift gate: the fresh `metric_key` must stay at or
+    /// above `ratio` times the committed baseline value.
+    pub fn drift_min_ratio(mut self, metric_key: &str, ratio: f64) -> Self {
+        self.drift
+            .push((metric_key.to_string(), json::obj(vec![("min_ratio", json::num(ratio))])));
+        self
+    }
+
+    /// Assemble the final JSON object. The `thresholds` block (with its
+    /// nested `drift` object) is only emitted when gates were declared,
+    /// so purely informational artifacts stay flat.
+    pub fn build(self) -> Json {
+        let BenchDoc {
+            mut fields,
+            thresholds,
+            drift,
+        } = self;
+        if !thresholds.is_empty() || !drift.is_empty() {
+            let mut th: std::collections::BTreeMap<String, Json> =
+                thresholds.into_iter().collect();
+            if !drift.is_empty() {
+                th.insert("drift".to_string(), Json::Obj(drift.into_iter().collect()));
+            }
+            fields.push(("thresholds".to_string(), Json::Obj(th)));
+        }
+        Json::Obj(fields.into_iter().collect())
+    }
+
+    /// Render and write the artifact (newline-terminated, the shape CI
+    /// and `json::parse` both read back).
+    pub fn write(self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.build().render() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +285,43 @@ mod tests {
         let (v, secs) = time_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_doc_assembles_schema_thresholds_and_drift() {
+        let doc = BenchDoc::new("unit_test")
+            .num("qps", 1234.5)
+            .count("graphs", 6)
+            .text("kernel", "avx2")
+            .field("sweep", json::arr(vec![json::num(1.0), json::num(2.0)]))
+            .floor("qps_min", 1000.0)
+            .ceiling("torn_reads_max", 0.0)
+            .drift_max_increase("latency_p50_s", 0.25)
+            .drift_min_ratio("speedup_vs_drain", 0.9)
+            .build();
+        assert_eq!(doc.get("workload").and_then(Json::as_str), Some("unit_test"));
+        assert_eq!(doc.get("qps").and_then(Json::as_f64), Some(1234.5));
+        assert_eq!(doc.get("graphs").and_then(Json::as_usize), Some(6));
+        assert_eq!(doc.get("kernel").and_then(Json::as_str), Some("avx2"));
+        assert_eq!(doc.get("sweep").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        let th = doc.get("thresholds").expect("thresholds block");
+        assert_eq!(th.get("qps_min").and_then(Json::as_f64), Some(1000.0));
+        assert_eq!(th.get("torn_reads_max").and_then(Json::as_f64), Some(0.0));
+        let drift = th.get("drift").expect("drift block");
+        let band = drift.get("latency_p50_s").and_then(|d| d.get("max_increase"));
+        assert_eq!(band.and_then(Json::as_f64), Some(0.25));
+        let ratio = drift.get("speedup_vs_drain").and_then(|d| d.get("min_ratio"));
+        assert_eq!(ratio.and_then(Json::as_f64), Some(0.9));
+        // the artifact round-trips through the parser CI reads it with
+        let back = Json::parse(&doc.render()).expect("parse rendered artifact");
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn bench_doc_without_gates_stays_flat() {
+        let doc = BenchDoc::new("plain").num("x", 1.0).build();
+        assert!(doc.get("thresholds").is_none());
+        assert_eq!(doc.get("workload").and_then(Json::as_str), Some("plain"));
     }
 
     #[test]

@@ -11,15 +11,26 @@
 //! Inputs deliberately avoid NaN and -0.0: weights are non-negative and
 //! unreachable entries are +INF, exactly like the production matrices,
 //! which is the precondition for `vminps`/`f32::min` bit-equality.
+//!
+//! The semiring section extends the same contract to the generic DP
+//! engine: the runtime-dispatched kernels must be bit-identical to a
+//! naive ⊕/⊗ oracle for every shipped instance, reachability must
+//! match a BFS oracle, widest-path a modified-Dijkstra oracle, and the
+//! `MinPlus` instance must reproduce the pre-refactor scalar kernels
+//! (frozen verbatim in this file) bit-for-bit.
 
 use rapid_graph::apsp::backend::{
     fw_blocked, NativeBackend, ScalarBackend, SerialBackend, SimdBackend, TileBackend,
 };
 use rapid_graph::apsp::floyd_warshall::{
-    fw_inplace, fw_panel, fw_panel_scratch, fw_parallel, fw_rowwise, fw_rowwise_scratch,
-    relax_row, relax_row_scalar, relax_rows4,
+    fw_inplace, fw_panel, fw_panel_scratch, fw_parallel, fw_parallel_dyn, fw_rowwise,
+    fw_rowwise_dyn, fw_rowwise_scratch, relax_row, relax_row_scalar, relax_rows4,
 };
-use rapid_graph::apsp::minplus::{minplus_into, minplus_into_parallel, minplus_into_scalar};
+use rapid_graph::apsp::minplus::{
+    minplus_into, minplus_into_parallel, minplus_into_scalar, product_into_dyn,
+};
+use rapid_graph::apsp::semiring::{SemiringId, ALL_SEMIRINGS};
+use rapid_graph::graph::csr::CsrGraph;
 use rapid_graph::apsp::plan::{build_plan, PlanOptions};
 use rapid_graph::apsp::scheduler::plan_tile_census;
 use rapid_graph::graph::dense::DistMatrix;
@@ -416,4 +427,324 @@ fn arena_high_water_bounded_by_plan_census() {
         "second run should be allocation-free (full pool reuse)"
     );
     assert_eq!(arena.stats().live, 0);
+}
+
+// ---- semiring engine properties ----
+
+/// Domain-valid random elements for `sr`: a `zero_frac` share of
+/// ⊕-identity ("no path") cells, the rest mapped from positive edge
+/// weights through `from_weight` — the same path `to_dense_sr` takes.
+fn rand_elems(rng: &mut Rng, sr: SemiringId, len: usize, zero_frac: f64) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if rng.gen_bool(zero_frac) {
+                sr.zero()
+            } else {
+                sr.from_weight(rng.gen_f32_range(0.5, 4.0))
+            }
+        })
+        .collect()
+}
+
+/// Naive ⊕/⊗ accumulating product — the scalar oracle the generic
+/// kernels are held bit-identical to. ⊕ is an exact selection (min /
+/// max / and-or) and ⊗ candidates are computed pairwise, so the
+/// reduction order cannot perturb bits.
+fn naive_product(
+    sr: SemiringId,
+    c0: &[f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut c = c0.to_vec();
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if sr.is_absorbing(aik) {
+                continue;
+            }
+            for j in 0..n {
+                let cand = sr.extend(aik, b[kk * n + j]);
+                c[i * n + j] = sr.combine(c[i * n + j], cand);
+            }
+        }
+    }
+    c
+}
+
+/// Naive in-place ⊕/⊗ FW closure (triple loop) — the per-semiring
+/// scalar oracle for the dispatched row-wise and parallel kernels.
+fn naive_closure(d: &mut DistMatrix, sr: SemiringId) {
+    let n = d.n();
+    for k in 0..n {
+        for i in 0..n {
+            let dik = d.get(i, k);
+            if sr.is_absorbing(dik) {
+                continue;
+            }
+            for j in 0..n {
+                let via = sr.extend(dik, d.get(k, j));
+                d.set(i, j, sr.combine(d.get(i, j), via));
+            }
+        }
+    }
+}
+
+#[test]
+fn semiring_fw_dyn_bit_identical_to_naive_closure() {
+    // all four instances; MaxPlus runs on the DAG orientation (its
+    // closure has no fixed point on cycles)
+    assert_prop(
+        8,
+        |r| {
+            let n = 2 + r.gen_range(60);
+            let m = n + r.gen_range(3 * n);
+            let seed = r.gen_range(1 << 30) as u64;
+            generators::random_connected(n, m, Weights::Uniform(0.5, 4.0), seed)
+        },
+        |g| {
+            let dag = g.dag_oriented();
+            for sr in ALL_SEMIRINGS {
+                let src = if sr == SemiringId::MaxPlus { &dag } else { g };
+                let base = src.to_dense_sr(sr);
+                let n = base.n();
+                let mut oracle = base.clone();
+                naive_closure(&mut oracle, sr);
+                let mut rowwise = base.clone();
+                fw_rowwise_dyn(&mut rowwise, sr);
+                let mut par = base.clone();
+                fw_parallel_dyn(&mut par, sr);
+                if !bits_eq(rowwise.as_slice(), oracle.as_slice()) {
+                    return Err(format!("{} fw_rowwise_dyn != naive closure (n={n})", sr.name()));
+                }
+                if !bits_eq(par.as_slice(), oracle.as_slice()) {
+                    return Err(format!("{} fw_parallel_dyn != naive closure (n={n})", sr.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn semiring_product_dyn_bit_identical_to_naive() {
+    // ragged (m, k, n) per instance, with ⊕-identity cells exercising
+    // the is_absorbing early-out
+    assert_prop(
+        40,
+        |r| {
+            let dims = (1 + r.gen_range(14), 1 + r.gen_range(14), 1 + r.gen_range(14));
+            let sr = ALL_SEMIRINGS[r.gen_range(ALL_SEMIRINGS.len())];
+            let mut rr = r.fork();
+            let a = rand_elems(&mut rr, sr, dims.0 * dims.1, 0.25);
+            let b = rand_elems(&mut rr, sr, dims.1 * dims.2, 0.25);
+            let c0 = rand_elems(&mut rr, sr, dims.0 * dims.2, 0.5);
+            (sr, a, b, c0, dims)
+        },
+        |(sr, a, b, c0, (m, k, n))| {
+            let (sr, m, k, n) = (*sr, *m, *k, *n);
+            let oracle = naive_product(sr, c0, a, b, m, k, n);
+            let mut got = c0.clone();
+            product_into_dyn(sr, &mut got, a, b, m, k, n);
+            if bits_eq(&got, &oracle) {
+                Ok(())
+            } else {
+                Err(format!("{} product_into_dyn != naive ({m}x{k}x{n})", sr.name()))
+            }
+        },
+    );
+}
+
+#[test]
+fn reachability_closure_matches_bfs_oracle() {
+    // sparse random (often disconnected) undirected graphs: the
+    // bool-and-or closure must agree with per-source BFS exactly
+    assert_prop(
+        10,
+        |r| {
+            let n = 3 + r.gen_range(60);
+            let m = r.gen_range(2 * n);
+            let mut rr = r.fork();
+            let edges: Vec<(u32, u32, f32)> = (0..m)
+                .map(|_| {
+                    let u = rr.gen_range(n) as u32;
+                    let v = rr.gen_range(n) as u32;
+                    (u, v, rr.gen_f32_range(0.5, 4.0))
+                })
+                .filter(|&(u, v, _)| u != v)
+                .collect();
+            CsrGraph::from_undirected_edges(n, &edges)
+        },
+        |g| {
+            let sr = SemiringId::BoolAndOr;
+            let mut d = g.to_dense_sr(sr);
+            fw_rowwise_dyn(&mut d, sr);
+            let n = g.n();
+            for s in 0..n {
+                let mut seen = vec![false; n];
+                let mut queue = vec![s];
+                seen[s] = true;
+                while let Some(u) = queue.pop() {
+                    for (v, _) in g.neighbors(u) {
+                        if !seen[v] {
+                            seen[v] = true;
+                            queue.push(v);
+                        }
+                    }
+                }
+                for (t, &reach) in seen.iter().enumerate() {
+                    let got = !sr.is_absorbing(d.get(s, t));
+                    if got != reach {
+                        return Err(format!(
+                            "reach({s},{t}) = {got} but BFS says {reach} (n={n})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Modified Dijkstra for widest path: repeatedly settle the unsettled
+/// vertex of maximum bottleneck width, relaxing `min(width[u], w)`
+/// through `max`. O(n²) selection keeps it heap-free (and therefore
+/// trivially exact — every value is a min/max selection over edge
+/// weights, never arithmetic).
+fn widest_oracle(g: &CsrGraph, s: usize) -> Vec<f32> {
+    let n = g.n();
+    let mut width = vec![0.0f32; n];
+    let mut done = vec![false; n];
+    width[s] = f32::INFINITY;
+    loop {
+        let mut best: Option<usize> = None;
+        for v in 0..n {
+            if !done[v] && width[v] > 0.0 && best.map_or(true, |b| width[v] > width[b]) {
+                best = Some(v);
+            }
+        }
+        let Some(u) = best else { break };
+        done[u] = true;
+        for (v, w) in g.neighbors(u) {
+            let cand = width[u].min(w);
+            if cand > width[v] {
+                width[v] = cand;
+            }
+        }
+    }
+    width
+}
+
+#[test]
+fn widest_path_closure_matches_modified_dijkstra() {
+    assert_prop(
+        8,
+        |r| {
+            let n = 4 + r.gen_range(50);
+            let m = n + r.gen_range(3 * n);
+            let seed = r.gen_range(1 << 30) as u64;
+            generators::random_connected(n, m, Weights::Uniform(0.5, 4.0), seed)
+        },
+        |g| {
+            let sr = SemiringId::MaxMin;
+            let mut d = g.to_dense_sr(sr);
+            fw_parallel_dyn(&mut d, sr);
+            let n = g.n();
+            for s in (0..n).step_by(5) {
+                let width = widest_oracle(g, s);
+                for (t, &w) in width.iter().enumerate() {
+                    if d.get(s, t).to_bits() != w.to_bits() {
+                        return Err(format!(
+                            "widest({s},{t}) = {} but Dijkstra oracle says {w} (n={n})",
+                            d.get(s, t)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Verbatim freeze of the pre-refactor scalar `(min,+)` kernels —
+/// the triple-loop FW and the row-at-a-time min-plus accumulate exactly
+/// as they stood before the semiring generalization. The generic engine
+/// pinned to `SemiringId::MinPlus` must reproduce them bit-for-bit:
+/// this is the ISSUE's "`--workload apsp` is bit-identical" acceptance
+/// pinned at the kernel layer.
+fn frozen_minplus_fw(d: &mut DistMatrix) {
+    let n = d.n();
+    for k in 0..n {
+        for i in 0..n {
+            let dik = d.get(i, k);
+            if !(dik < f32::INFINITY) {
+                continue;
+            }
+            for j in 0..n {
+                let cand = dik + d.get(k, j);
+                if cand < d.get(i, j) {
+                    d.set(i, j, cand);
+                }
+            }
+        }
+    }
+}
+
+fn frozen_minplus_product(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if !(aik < f32::INFINITY) {
+                continue;
+            }
+            for j in 0..n {
+                let cand = aik + b[kk * n + j];
+                if cand < c[i * n + j] {
+                    c[i * n + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn minplus_generic_bit_identical_to_frozen_prerefactor_kernels() {
+    assert_prop(
+        10,
+        |r| {
+            let n = 2 + r.gen_range(60);
+            let m = n + r.gen_range(3 * n);
+            let seed = r.gen_range(1 << 30) as u64;
+            generators::random_connected(n, m, Weights::Uniform(0.5, 4.0), seed)
+        },
+        |g| {
+            // dense materialization must not have drifted either
+            let base = g.to_dense();
+            let base_sr = g.to_dense_sr(SemiringId::MinPlus);
+            if !bits_eq(base_sr.as_slice(), base.as_slice()) {
+                return Err("to_dense_sr(MinPlus) != to_dense".into());
+            }
+            let n = base.n();
+            let mut frozen = base.clone();
+            frozen_minplus_fw(&mut frozen);
+            let mut dyn_fw = base.clone();
+            fw_rowwise_dyn(&mut dyn_fw, SemiringId::MinPlus);
+            if !bits_eq(dyn_fw.as_slice(), frozen.as_slice()) {
+                return Err(format!("fw_rowwise_dyn(MinPlus) != frozen kernel (n={n})"));
+            }
+            // accumulating product on slices of the closed matrix
+            let a = frozen.as_slice().to_vec();
+            let mut c_frozen = base.as_slice().to_vec();
+            frozen_minplus_product(&mut c_frozen, &a, &a, n, n, n);
+            let mut c_dyn = base.as_slice().to_vec();
+            product_into_dyn(SemiringId::MinPlus, &mut c_dyn, &a, &a, n, n, n);
+            if !bits_eq(&c_dyn, &c_frozen) {
+                return Err(format!("product_into_dyn(MinPlus) != frozen kernel (n={n})"));
+            }
+            Ok(())
+        },
+    );
 }

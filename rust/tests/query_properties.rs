@@ -321,7 +321,7 @@ fn batched_answers_match_direct_reads_on_random_workloads() {
                         d.to_bits() == snap.dist.get(u as usize, v as usize).to_bits()
                     }
                     (Query::Path { u, v }, Answer::Path { hops, .. }) => {
-                        match snap.next.path(u as usize, v as usize) {
+                        match snap.next.as_ref().unwrap().path(u as usize, v as usize) {
                             Some(p) => hops == &p,
                             None => hops.is_empty(),
                         }
